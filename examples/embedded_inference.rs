@@ -1,0 +1,126 @@
+//! Embedded-inference scenario (paper Section 4.5): deploy a compressed
+//! model on a small device.
+//!
+//! Loads the checkpoint produced by `lenet_end_to_end` (or trains a quick
+//! one if absent), then:
+//!
+//! * measures dense vs CSR inference wallclock on this machine,
+//! * runs the roofline device model for ARM Mali-T860 and GTX 1080 Ti to
+//!   estimate the paper's Table-3 speedups,
+//! * prints the model-size comparison (paper: 148 KB vs 5.0 MB).
+//!
+//! ```bash
+//! cargo run --release --example embedded_inference
+//! ```
+
+use std::path::Path;
+
+use proxcomp::config::RunConfig;
+use proxcomp::coordinator::sweep;
+use proxcomp::data;
+use proxcomp::device::{estimate_speedup, DeviceModel, GTX_1080TI, MALI_T860};
+use proxcomp::inference::Engine;
+use proxcomp::runtime::{Manifest, ParamBundle, Runtime};
+use proxcomp::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let params = load_or_train()?;
+    let rate = params.compression_rate();
+    println!("model: lenet, compression rate {rate:.4}\n");
+
+    let dense = Engine::from_bundle("lenet", &params, false)?;
+    let sparse = Engine::from_bundle("lenet", &params, true)?;
+
+    // --- model size (paper Table 3: 148 KB vs 5.0 MB for full MNIST LeNet)
+    println!("model size:");
+    println!("  dense       {:>8} KB", dense.model_size_bytes() / 1024);
+    println!("  compressed  {:>8} KB", sparse.model_size_bytes() / 1024);
+
+    // --- measured wallclock on this host (batch 1: the embedded case)
+    let test = data::generate("synth-mnist", 256, 0x7E57_DA7A)?;
+    println!("\nmeasured on this host (CPU engine, batch 1):");
+    for (name, engine) in [("dense", &dense), ("compressed", &sparse)] {
+        let x = Tensor::new(vec![1, 1, 28, 28], test.image(0).to_vec());
+        // warmup
+        engine.forward(&x)?;
+        let t0 = std::time::Instant::now();
+        let reps = 50;
+        for i in 0..reps {
+            let x = Tensor::new(vec![1, 1, 28, 28], test.image(i % test.n).to_vec());
+            engine.forward(&x)?;
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        println!("  {name:<11} {:.3} ms/image", per * 1e3);
+    }
+
+    // --- roofline estimates for the paper's devices (batch 64: the
+    // steady-state regime the paper's whole-test-set timings reflect)
+    println!("\nroofline estimates (device cost model, batch 64):");
+    println!("  device              dense        compressed   speedup");
+    for dev in [&MALI_T860 as &DeviceModel, &GTX_1080TI] {
+        let dense_work = dense.work_profile(64, 1, 28, 28);
+        let sparse_work = sparse.work_profile(64, 1, 28, 28);
+        let est = estimate_speedup(dev, &dense, &sparse, &dense_work, &sparse_work);
+        println!(
+            "  {:<18} {:>9.3} ms {:>9.3} ms   {:.2}×",
+            est.device,
+            est.dense_seconds * 1e3,
+            est.sparse_seconds * 1e3,
+            est.speedup()
+        );
+    }
+    println!(
+        "\npaper Table 3 (Lenet-5/MNIST): GTX 1080 Ti 1.98×, Mali-T860 1.2×\n\
+         (absolute times differ — full MNIST model + their stack — but the\n\
+         shape holds: modest speedup despite ~30× smaller weights, because\n\
+         sparse kernels run at lower efficiency; see DESIGN.md §4)"
+    );
+
+    // --- per-layer timing table (where the time goes)
+    println!("\nper-layer wallclock (batch 64, compressed engine):");
+    let mut xs = Vec::new();
+    for i in 0..64 {
+        xs.extend_from_slice(test.image(i % test.n));
+    }
+    let x = Tensor::new(vec![64, 1, 28, 28], xs);
+    let (_, timings) = sparse.forward_timed(&x)?;
+    for t in timings {
+        println!("  {:<10} {:>10.1} µs", t.name, t.micros);
+    }
+    Ok(())
+}
+
+/// Load the end-to-end checkpoint, or quickly train a compressed LeNet.
+fn load_or_train() -> anyhow::Result<ParamBundle> {
+    let path = Path::new("reports/lenet_end_to_end.pxcp");
+    if path.exists() {
+        println!("using checkpoint {}", path.display());
+        return Ok(proxcomp::checkpoint::load(path)?.params);
+    }
+    println!("no checkpoint found; training a quick compressed LeNet...");
+    let manifest = Manifest::load("artifacts")?;
+    let mut rt = Runtime::cpu()?;
+    let cfg = RunConfig {
+        model: "lenet".into(),
+        lambda: 0.25,
+        lr: 2e-3,
+        steps: 150,
+        retrain_steps: 50,
+        train_examples: 4096,
+        test_examples: 512,
+        ..RunConfig::default()
+    };
+    // Run SpC, then rebuild the params from a fresh trainer pass: the
+    // controller API returns stats; for the engine we need weights, so we
+    // drive the trainer directly here.
+    let mut trainer = proxcomp::coordinator::Trainer::new(&manifest, &cfg)?;
+    let scalars = proxcomp::coordinator::trainer::StepScalars {
+        lambda: cfg.lambda,
+        lr: cfg.lr,
+        mu: 0.0,
+    };
+    trainer.run_steps(&mut rt, "train_prox_adam", cfg.steps, scalars, 0)?;
+    proxcomp::compress::debias::retrain(&mut rt, &mut trainer, cfg.retrain_steps, 2e-4)?;
+    let _ = sweep::run_method; // (see `quickstart` for the high-level API)
+    Ok(trainer.state.params)
+}

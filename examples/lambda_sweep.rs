@@ -1,0 +1,54 @@
+//! λ sweep (a miniature of the paper's Figure 6a): accuracy and
+//! compression rate as functions of the regularization weight.
+//!
+//! ```bash
+//! cargo run --release --example lambda_sweep [-- --model mlp --steps 150]
+//! ```
+
+use proxcomp::config::RunConfig;
+use proxcomp::coordinator::sweep;
+use proxcomp::metrics;
+use proxcomp::runtime::{Manifest, Runtime};
+use proxcomp::util::cli::Args;
+use proxcomp::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let model = args.str_or("model", "mlp");
+    let steps = args.usize_or("steps", 150)?;
+    args.finish()?;
+
+    let manifest = Manifest::load("artifacts")?;
+    let mut rt = Runtime::cpu()?;
+    let cfg = RunConfig {
+        model,
+        steps,
+        lr: 1e-3,
+        train_examples: 2048,
+        test_examples: 512,
+        ..RunConfig::default()
+    };
+    let lambdas = [0.0, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0];
+    let results = sweep::lambda_sweep(&mut rt, &manifest, &cfg, &lambdas)?;
+
+    println!("\nλ sweep on {} ({} steps each):", cfg.model, cfg.steps);
+    println!("{:>6}  {:>9}  {:>9}  {:>10}", "λ", "accuracy", "rate", "nnz");
+    let reference = results[0].accuracy; // λ=0 is the reference model
+    for r in &results {
+        let marker = if r.lambda > 0.0 && r.accuracy >= reference { "  ← ≥ ref" } else { "" };
+        println!(
+            "{:>6}  {:>9.4}  {:>9.4}  {:>10}{}",
+            r.lambda, r.accuracy, r.compression_rate, r.nnz, marker
+        );
+    }
+    println!(
+        "\nreference (λ=0) accuracy: {reference:.4}\n\
+         paper Figure 6a: small λ can *beat* the reference (regularization\n\
+         mitigates overfitting); accuracy decays only at high compression."
+    );
+
+    let arr = Json::Arr(results.iter().map(|r| r.to_json()).collect());
+    let p = metrics::write_json_report(&format!("lambda_sweep_{}.json", cfg.model), &arr)?;
+    println!("wrote {}", p.display());
+    Ok(())
+}

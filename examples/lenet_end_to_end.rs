@@ -1,0 +1,134 @@
+//! End-to-end driver (DESIGN.md §9): the full system on a real workload.
+//!
+//! LeNet-5 at the paper's exact size (430,500 weights) on synth-mnist:
+//!
+//! 1. train several hundred Prox-ADAM steps with ℓ1 sparse coding,
+//!    logging the loss curve and compression rate as they evolve;
+//! 2. debias (retrain the survivors with frozen zeros);
+//! 3. save a compressed CSR checkpoint and report the size reduction;
+//! 4. reload it and serve inference through the rust CSR engine,
+//!    checking logits parity with the XLA `infer` artifact;
+//! 5. report dense vs compressed latency (the Table-3 scenario).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example lenet_end_to_end
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use std::path::Path;
+
+use proxcomp::compress::{debias, spc};
+use proxcomp::config::RunConfig;
+use proxcomp::coordinator::{trainer::StepScalars, Trainer};
+use proxcomp::inference::Engine;
+use proxcomp::runtime::{Manifest, Runtime};
+use proxcomp::tensor::Tensor;
+use proxcomp::util::json::Json;
+use proxcomp::{checkpoint, metrics};
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::var("LENET_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(400);
+    let retrain_steps = steps / 4;
+    let manifest = Manifest::load("artifacts")?;
+    let mut rt = Runtime::cpu()?;
+    let cfg = RunConfig {
+        model: "lenet".into(),
+        lambda: 0.25,
+        lr: 2e-3,
+        steps,
+        train_examples: 8192,
+        test_examples: 1024,
+        eval_every: (steps / 4).max(1),
+        ..RunConfig::default()
+    };
+
+    println!("=== phase 1: SpC training ({} steps, λ={}) ===", cfg.steps, cfg.lambda);
+    let mut trainer = Trainer::new(&manifest, &cfg)?;
+    let scalars = StepScalars { lambda: cfg.lambda, lr: cfg.lr, mu: 0.0 };
+    spc::run_with_evals(&mut rt, &mut trainer, "train_prox_adam", cfg.steps, scalars, cfg.eval_every)?;
+    let eval1 = trainer.evaluate(&mut rt)?;
+    let rate1 = trainer.state.params.compression_rate();
+    println!("after SpC: acc {:.4}, rate {:.4}", eval1.accuracy, rate1);
+
+    println!("\n=== phase 2: debias ({retrain_steps} steps) ===");
+    debias::retrain(&mut rt, &mut trainer, retrain_steps, 2e-4)?;
+    let eval2 = trainer.evaluate(&mut rt)?;
+    let rate2 = trainer.state.params.compression_rate();
+    println!("after debias: acc {:.4}, rate {:.4}", eval2.accuracy, rate2);
+
+    // Loss curve out to reports/ (the §End-to-end record).
+    trainer
+        .history
+        .write_csv(&metrics::report_path("lenet_end_to_end_curve.csv"))?;
+
+    println!("\n=== phase 3: compressed checkpoint ===");
+    let ckpt_path = Path::new("reports/lenet_end_to_end.pxcp");
+    let mut meta = Json::obj();
+    meta.set("model", Json::from("lenet"))
+        .set("dataset", Json::from("synth-mnist"))
+        .set("method", Json::from("SpC(Retrain)"))
+        .set("lambda", Json::from(cfg.lambda as f64))
+        .set("accuracy", Json::from(eval2.accuracy));
+    let payload = checkpoint::save(ckpt_path, &trainer.state.params, &meta)?;
+    let dense_bytes = trainer.state.params.total_params() * 4;
+    println!(
+        "checkpoint: {} KB compressed vs {} KB dense ({:.1}× smaller)",
+        payload / 1024,
+        dense_bytes / 1024,
+        dense_bytes as f64 / payload as f64
+    );
+
+    println!("\n=== phase 4: reload + rust CSR inference ===");
+    let ck = checkpoint::load(ckpt_path)?;
+    assert_eq!(ck.params.values, trainer.state.params.values, "checkpoint roundtrip");
+    let sparse_engine = Engine::from_bundle("lenet", &ck.params, true)?;
+    let dense_engine = Engine::from_bundle("lenet", &ck.params, false)?;
+
+    // Parity vs the XLA infer path on one batch.
+    let artifact = trainer.entry.artifact("infer")?.clone();
+    let batch = artifact.batch;
+    let mut xs = Vec::new();
+    for i in 0..batch {
+        xs.extend_from_slice(trainer.test_data.image(i % trainer.test_data.n));
+    }
+    let mut inputs = trainer.state.params.to_host_values();
+    inputs.push(proxcomp::runtime::HostValue::F32 {
+        shape: vec![batch, 1, 28, 28],
+        data: xs.clone(),
+    });
+    let xla_logits = rt.execute(&artifact.file, &inputs)?[0].as_f32()?.to_vec();
+    let x = Tensor::new(vec![batch, 1, 28, 28], xs);
+    let engine_logits = sparse_engine.forward(&x)?;
+    let max_diff = xla_logits
+        .iter()
+        .zip(&engine_logits.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("engine vs XLA logits: max |Δ| = {max_diff:.2e}");
+    assert!(max_diff < 1e-2, "engine/XLA divergence: {max_diff}");
+
+    println!("\n=== phase 5: dense vs compressed latency ===");
+    let acc_sparse = sparse_engine.accuracy(&trainer.test_data, 64)?;
+    for (name, engine) in [("dense", &dense_engine), ("sparse(CSR)", &sparse_engine)] {
+        let t0 = std::time::Instant::now();
+        let mut total = 0usize;
+        let reps = 3;
+        for _ in 0..reps {
+            engine.accuracy(&trainer.test_data, 64)?;
+            total += trainer.test_data.n;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "  {name:<12} model {:>6} KB, {:.1} examples/s",
+            engine.model_size_bytes() / 1024,
+            total as f64 / dt
+        );
+    }
+    println!("\nCSR-engine accuracy: {acc_sparse:.4} (XLA eval: {:.4})", eval2.accuracy);
+    println!("\nend-to-end OK");
+    Ok(())
+}

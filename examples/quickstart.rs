@@ -1,0 +1,50 @@
+//! Quickstart: compressed learning in ~40 lines.
+//!
+//! Trains the small MLP on synth-mnist with SpC (Prox-ADAM + in-graph
+//! soft thresholding), prints the accuracy / compression trade-off, and
+//! shows the layer table. Run with:
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use proxcomp::config::{Method, RunConfig};
+use proxcomp::coordinator::sweep;
+use proxcomp::runtime::{Manifest, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the AOT artifacts (built once by `make artifacts`).
+    let manifest = Manifest::load("artifacts")?;
+    let mut rt = Runtime::cpu()?;
+
+    // 2. Configure a short SpC run: λ controls compression.
+    let cfg = RunConfig {
+        model: "mlp".into(),
+        method: Method::SpC,
+        lambda: 0.4,
+        lr: 1e-3,
+        steps: 150,
+        train_examples: 2048,
+        test_examples: 512,
+        ..RunConfig::default()
+    };
+
+    // 3. Train (starts from He-initialized random weights — no
+    //    pre-trained model needed, the paper's key property).
+    let result = sweep::run_method(&mut rt, &manifest, &cfg)?;
+
+    // 4. Inspect.
+    println!("\nquickstart: SpC on {}", result.model);
+    println!("  accuracy          {:.4}", result.accuracy);
+    println!(
+        "  compression rate  {:.4}  ({:.0}× smaller)",
+        result.compression_rate,
+        result.times_factor()
+    );
+    println!("  nonzero weights   {} / {}", result.nnz, result.total_weights);
+    println!("\n  layer       nnz / total");
+    for (layer, nnz, total) in &result.layer_stats {
+        println!("  {layer:<10} {nnz:>8} / {total}");
+    }
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile package: L1 Pallas kernels + L2 JAX graphs + AOT.
+
+Nothing in this package is imported at runtime; ``aot.py`` lowers
+everything to HLO text under ``artifacts/`` once (``make artifacts``) and
+the rust coordinator is self-contained afterwards.
+"""

@@ -1,0 +1,145 @@
+"""AOT driver: lower every (model × step) graph to HLO text + manifest.
+
+Run once at build time (``make artifacts``); never imported at runtime.
+
+Interchange is HLO **text** (not ``.serialize()``): jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust ``xla`` crate) rejects; the text parser reassigns
+ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs under ``artifacts/``:
+
+* ``{model}_{step}.hlo.txt`` — one per (model, step) pair.
+* ``manifest.json`` — for every model: the parameter spec (name, kind,
+  shape, prunable, layer), batch sizes, dataset id, and for every
+  artifact the flat input/output role lists in exact HLO argument order.
+
+The rust coordinator re-creates He-initialized parameters itself (from
+the manifest's kind/shape info), so Python is not needed even for
+initialization at runtime.
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        [--models mlp,lenet] [--steps train_prox_adam,eval]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import steps as steps_mod
+from .models import REGISTRY
+
+# Per-model batch sizes, tuned for the CPU-PJRT testbed (DESIGN.md §4).
+TRAIN_BATCH = {"mlp": 128, "lenet": 128, "alexnet_s": 64, "vgg_s": 64, "resnet_s": 64}
+EVAL_BATCH = {"mlp": 256, "lenet": 256, "alexnet_s": 128, "vgg_s": 128, "resnet_s": 128}
+DATASET = {
+    "mlp": "synth-mnist",
+    "lenet": "synth-mnist",
+    "alexnet_s": "synth-cifar",
+    "vgg_s": "synth-cifar",
+    "resnet_s": "synth-cifar",
+}
+
+ALL_STEPS = list(steps_mod.BUILDERS)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(model, spec, step_name: str, batch: int):
+    builder = steps_mod.BUILDERS[step_name]
+    fn, args, in_roles, out_roles = builder(model, spec, batch)
+    # keep_unused=True: jit would otherwise prune arguments that a graph
+    # doesn't touch (e.g. the MM L-step ignores theta/lagrange leaves of
+    # non-prunable parameters), silently breaking the manifest's
+    # input-index ↔ parameter(i) contract with the rust runtime.
+    lowered = jax.jit(fn, keep_unused=True).lower(*args)
+    return to_hlo_text(lowered), in_roles, out_roles
+
+
+def build_manifest_entry(name, model, spec):
+    return {
+        "model": name,
+        "dataset": DATASET[name],
+        "input_shape": list(model.INPUT_SHAPE),
+        "num_classes": model.NUM_CLASSES,
+        "train_batch": TRAIN_BATCH[name],
+        "eval_batch": EVAL_BATCH[name],
+        "params": spec,
+        "num_weights": sum(
+            _numel(s["shape"]) for s in spec if s["prunable"]
+        ),
+        "num_params": sum(_numel(s["shape"]) for s in spec),
+        "artifacts": {},
+    }
+
+
+def _numel(shape):
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(REGISTRY))
+    ap.add_argument("--steps", default=",".join(ALL_STEPS))
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    model_names = [m for m in args.models.split(",") if m]
+    step_names = [s for s in args.steps.split(",") if s]
+
+    manifest = {"version": 1, "generated_unix": int(time.time()), "models": {}}
+    t0 = time.time()
+    for name in model_names:
+        model = REGISTRY[name]
+        _, spec = model.init(seed=0)
+        entry = build_manifest_entry(name, model, spec)
+        for step in step_names:
+            batch = EVAL_BATCH[name] if step in ("eval", "infer") else TRAIN_BATCH[name]
+            t1 = time.time()
+            hlo, in_roles, out_roles = lower_one(model, spec, step, batch)
+            fname = f"{name}_{step}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(hlo)
+            entry["artifacts"][step] = {
+                "file": fname,
+                "batch": batch,
+                "inputs": in_roles,
+                "outputs": out_roles,
+                "sha256": hashlib.sha256(hlo.encode()).hexdigest()[:16],
+                "bytes": len(hlo),
+            }
+            print(
+                f"[aot] {fname:44s} {len(hlo)/1e6:7.2f} MB  {time.time()-t1:6.1f}s",
+                flush=True,
+            )
+        manifest["models"][name] = entry
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {mpath}; total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

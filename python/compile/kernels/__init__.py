@@ -1,0 +1,3 @@
+"""L1 Pallas kernels: prox soft-threshold, compressed matmuls, oracles."""
+
+from . import prox, ref, spmm  # noqa: F401

@@ -1,0 +1,101 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the ground truth against which the Pallas kernels are checked in
+``python/tests/test_kernels.py`` (assert_allclose, hypothesis shape/value
+sweeps). Keep them dead simple: no tiling, no tricks — just the math.
+
+The three operations mirror the paper's three OpenCL kernels:
+
+* :func:`soft_threshold` — Figure 4, the elementwise proximal operator of
+  ``lambda * ||w||_1``.
+* :func:`dense_x_compressed_t` — Figure 2, ``X_T = X_B @ W'`` (forward).
+* :func:`dense_x_compressed` — Figure 3, ``dL/dX_B = dL/dX_T @ W``
+  (backward).
+
+In the reference the "compressed" operand is simply a dense array that
+happens to contain zeros; the compressed *storage* formats live on the
+rust side (``rust/src/sparse``) and in the block-sparse Pallas kernel
+(:mod:`.spmm`).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def soft_threshold(x: jnp.ndarray, thresh) -> jnp.ndarray:
+    """Proximal operator of ``thresh * ||.||_1`` (soft thresholding).
+
+    ``[prox(x)]_i = sgn(x_i) * max(|x_i| - thresh, 0)``.
+
+    ``thresh`` may be a python float or a rank-0 array; it is typically
+    ``learning_rate * lambda`` (see Algorithms 1-2 in the paper).
+    """
+    return jnp.sign(x) * jnp.maximum(jnp.abs(x) - thresh, 0.0)
+
+
+def soft_threshold_clip_form(x: jnp.ndarray, thresh) -> jnp.ndarray:
+    """The paper's Figure-4 formulation of the same operator.
+
+    ``min(max(x - t, 0), x + t)`` — algebraically identical to
+    :func:`soft_threshold`; kept as an independent oracle so the tests can
+    cross-check the two formulations against each other.
+    """
+    return jnp.minimum(jnp.maximum(x - thresh, 0.0), x + thresh)
+
+
+def dense_x_compressed_t(dmat: jnp.ndarray, cmat: jnp.ndarray) -> jnp.ndarray:
+    """Forward-pass product ``Dmat @ Cmat'`` (paper Figure 2).
+
+    ``dmat``: dense activations, shape ``(B, K)``.
+    ``cmat``: (conceptually compressed) weight matrix, shape ``(N, K)``
+    stored row-wise as in Caffe; the product contracts over ``K``.
+    Result shape ``(B, N)``.
+    """
+    return dmat @ cmat.T
+
+
+def dense_x_compressed(dmat: jnp.ndarray, cmat: jnp.ndarray) -> jnp.ndarray:
+    """Backward-pass product ``Dmat @ Cmat`` (paper Figure 3).
+
+    ``dmat``: upstream gradient ``dL/dX_T``, shape ``(B, N)``.
+    ``cmat``: weight matrix, shape ``(N, K)``.
+    Result ``dL/dX_B``, shape ``(B, K)``.
+    """
+    return dmat @ cmat
+
+
+def masked_update(w: jnp.ndarray, step: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Debias / retrain update: apply ``step`` only where ``mask`` is 1.
+
+    Zero-valued (pruned) weights stay exactly zero — the paper's
+    retraining rule (Section 2.4): "the weights at the zero value are
+    fixed and not updated during retraining".
+    """
+    return (w - step) * mask
+
+
+def bsr_to_dense(values, col_idx, n_block_cols: int) -> jnp.ndarray:
+    """Expand a Block-ELL matrix back to dense (oracle for the BSR kernel).
+
+    ``values``: ``(n_block_rows, max_blocks, bh, bw)`` nonzero tiles.
+    ``col_idx``: ``(n_block_rows, max_blocks)`` int32 block-column index of
+    each tile; ``-1`` marks a padding slot (contributes nothing).
+    Returns dense ``(n_block_rows * bh, n_block_cols * bw)``.
+    """
+    n_br, max_b, bh, bw = values.shape
+    dense = jnp.zeros((n_br * bh, n_block_cols * bw), values.dtype)
+    for i in range(n_br):
+        for s in range(max_b):
+            j = int(col_idx[i, s])
+            if j >= 0:
+                dense = dense.at[i * bh : (i + 1) * bh, j * bw : (j + 1) * bw].add(
+                    values[i, s]
+                )
+    return dense
+
+
+def bsr_matmul_ref(dmat, values, col_idx, n_block_cols: int) -> jnp.ndarray:
+    """Oracle for the Block-ELL ``Dmat @ Cmat'`` kernel: densify then matmul."""
+    dense = bsr_to_dense(values, col_idx, n_block_cols)
+    return dmat @ dense.T

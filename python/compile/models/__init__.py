@@ -1,0 +1,17 @@
+"""L2 model zoo registry.
+
+Every model module exposes ``NAME``, ``INPUT_SHAPE`` (C, H, W),
+``NUM_CLASSES``, ``init(seed) -> (params, spec)`` and
+``apply(params, x) -> logits``. ``REGISTRY`` maps name → module; the AOT
+driver and the tests iterate it.
+"""
+
+from . import alexnet, lenet, mlp, resnet, vgg  # noqa: F401
+
+REGISTRY = {m.NAME: m for m in (mlp, lenet, alexnet, vgg, resnet)}
+
+
+def get(name: str):
+    if name not in REGISTRY:
+        raise KeyError(f"unknown model {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]

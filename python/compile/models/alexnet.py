@@ -1,0 +1,51 @@
+"""AlexNet-S: width-scaled CIFAR AlexNet (DESIGN.md §4 substitution).
+
+Preserves the paper network's depth structure (5 conv + 3 fc, pools after
+conv1/conv2/conv5) with channel widths scaled for the CPU-PJRT testbed.
+The paper's full-width CIFAR variant (Table A2, 7,558,176 weights) is
+recorded in ``FULL_WIDTHS`` for reporting; default runs use ``WIDTHS``.
+"""
+
+from __future__ import annotations
+
+from . import common as C
+
+NAME = "alexnet_s"
+INPUT_SHAPE = (3, 32, 32)
+NUM_CLASSES = 10
+
+# (conv1..conv5 channels), (fc1, fc2 widths)
+WIDTHS = ((32, 64, 96, 96, 64), (256, 128))
+FULL_WIDTHS = ((96, 128, 768, 96, 256), (1024, 1024))  # paper Table A2 shapes
+
+
+def init(seed: int = 0):
+    (c1, c2, c3, c4, c5), (f1, f2) = WIDTHS
+    b = C.ParamBuilder(seed)
+    b.conv("conv1", 3, c1, 5, 5)
+    b.conv("conv2", c1, c2, 5, 5)
+    b.conv("conv3", c2, c3, 3, 3)
+    b.conv("conv4", c3, c4, 3, 3)
+    b.conv("conv5", c4, c5, 3, 3)
+    # 32 →(pool)16 →(pool)8 →(pool)4 spatial
+    b.fc("fc1", c5 * 4 * 4, f1)
+    b.fc("fc2", f1, f2)
+    b.fc("fc3", f2, NUM_CLASSES)
+    return b.build()
+
+
+def apply(params, x):
+    (c1w, c1b, c2w, c2b, c3w, c3b, c4w, c4b, c5w, c5b,
+     f1w, f1b, f2w, f2b, f3w, f3b) = params
+    h = C.relu(C.conv2d(x, c1w, c1b, pad=2))
+    h = C.max_pool(h)  # 16
+    h = C.relu(C.conv2d(h, c2w, c2b, pad=2))
+    h = C.max_pool(h)  # 8
+    h = C.relu(C.conv2d(h, c3w, c3b, pad=1))
+    h = C.relu(C.conv2d(h, c4w, c4b, pad=1))
+    h = C.relu(C.conv2d(h, c5w, c5b, pad=1))
+    h = C.max_pool(h)  # 4
+    h = C.flatten(h)
+    h = C.relu(C.fc(h, f1w, f1b))
+    h = C.relu(C.fc(h, f2w, f2b))
+    return C.fc(h, f3w, f3b)

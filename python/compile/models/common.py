@@ -1,0 +1,188 @@
+"""Shared building blocks for the L2 model zoo.
+
+All models are purely functional: ``init(seed) -> (params, spec)`` and
+``apply(params, x) -> logits`` where ``params`` is a flat *list* of
+arrays (flattening order = spec order = the artifact argument order the
+rust coordinator relies on) and ``spec`` is a list of dicts describing
+each leaf (name, kind, shape, prunable flag, layer name).
+
+Fully-connected layers run through the L1 Pallas kernels with a custom
+VJP that mirrors the paper exactly (Section 3.2):
+
+    forward : ``X_T = X_B @ W'``      — Figure-2 kernel (``spmm.dxct``)
+    backward: ``dL/dX_B = dL/dX_T @ W`` — Figure-3 kernel (``spmm.dxc``)
+
+so both paper kernels lower into every training artifact. Convolutions
+use ``lax.conv_general_dilated`` (NCHW); the element-level CSR conv path
+lives in the rust inference engine (im2col + CSR), per DESIGN.md §3.
+
+Weight initialization is He et al. 2015 (the paper Section 4 uses it for
+its ReLU networks). Biases start at zero and are *not* prunable — the
+paper's layer-wise tables (A1-A4) count weights only.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..kernels import spmm
+
+
+# ---------------------------------------------------------------------------
+# Fully-connected layer through the Pallas kernels (paper Figs. 2-3)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def fc_apply(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """``x (B,K) @ w' (K,N) -> (B,N)`` with Caffe row-major weights (N,K)."""
+    return spmm.dxct(x, w)
+
+
+def _fc_fwd(x, w):
+    return spmm.dxct(x, w), (x, w)
+
+
+def _fc_bwd(res, g):
+    x, w = res
+    dx = spmm.dxc(g, w)  # paper Figure 3: dense-gradient × compressed
+    dw = jnp.dot(g.T, x, preferred_element_type=jnp.float32)  # (N,K) dense
+    return dx, dw
+
+
+fc_apply.defvjp(_fc_fwd, _fc_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def he_normal(rng: np.random.Generator, shape, fan_in: int) -> np.ndarray:
+    """He et al. 2015 normal init: std = sqrt(2 / fan_in)."""
+    std = np.sqrt(2.0 / fan_in)
+    return (rng.standard_normal(shape) * std).astype(np.float32)
+
+
+class ParamBuilder:
+    """Accumulates (params, spec) pairs in a fixed flattening order."""
+
+    def __init__(self, seed: int):
+        self.rng = np.random.default_rng(seed)
+        self.params: list[np.ndarray] = []
+        self.spec: list[dict] = []
+
+    def _add(self, name, kind, arr, prunable, layer):
+        self.params.append(arr)
+        self.spec.append(
+            {
+                "name": name,
+                "kind": kind,
+                "shape": list(arr.shape),
+                "prunable": bool(prunable),
+                "layer": layer,
+            }
+        )
+        return len(self.params) - 1
+
+    def conv(self, layer: str, cin: int, cout: int, kh: int, kw: int):
+        fan_in = cin * kh * kw
+        self._add(f"{layer}_w", "conv_w", he_normal(self.rng, (cout, cin, kh, kw), fan_in), True, layer)
+        self._add(f"{layer}_b", "conv_b", np.zeros((cout,), np.float32), False, layer)
+
+    def fc(self, layer: str, nin: int, nout: int):
+        # Caffe row-major layout (N_out, N_in) — what the CSR kernels expect.
+        self._add(f"{layer}_w", "fc_w", he_normal(self.rng, (nout, nin), nin), True, layer)
+        self._add(f"{layer}_b", "fc_b", np.zeros((nout,), np.float32), False, layer)
+
+    def bn(self, layer: str, c: int):
+        self._add(f"{layer}_scale", "bn_scale", np.ones((c,), np.float32), False, layer)
+        self._add(f"{layer}_bias", "bn_bias", np.zeros((c,), np.float32), False, layer)
+
+    def build(self):
+        return self.params, self.spec
+
+
+# ---------------------------------------------------------------------------
+# Layer ops (NCHW)
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, w, b, stride=1, pad=0):
+    """NCHW conv with OIHW weights + per-channel bias.
+
+    ``pad`` is an explicit symmetric padding amount (PyTorch-style), NOT
+    "SAME": jax's SAME pads *asymmetrically* for stride-2 windows, which
+    the rust inference engine (symmetric im2col padding) could not mirror
+    bit-for-bit. Explicit symmetric padding keeps the two backends
+    numerically identical — the parity tests depend on it.
+    """
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b.reshape(1, -1, 1, 1)
+
+
+def max_pool(x, size=2, stride=2):
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, 1, size, size),
+        window_strides=(1, 1, stride, stride),
+        padding="VALID",
+    )
+
+
+def avg_pool_global(x):
+    """Global average pool NCHW -> (B, C)."""
+    return jnp.mean(x, axis=(2, 3))
+
+
+def batch_norm(x, scale, bias, eps=1e-5):
+    """Batch-statistics normalization over (N, H, W) per channel.
+
+    No running averages: eval batches are large enough on this testbed
+    and it keeps the artifact state stateless (DESIGN.md §4).
+    """
+    mean = jnp.mean(x, axis=(0, 2, 3), keepdims=True)
+    var = jnp.var(x, axis=(0, 2, 3), keepdims=True)
+    xn = (x - mean) * lax.rsqrt(var + eps)
+    return xn * scale.reshape(1, -1, 1, 1) + bias.reshape(1, -1, 1, 1)
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def flatten(x):
+    return x.reshape(x.shape[0], -1)
+
+
+def fc(x, w, b):
+    """Fully-connected layer via the paper's kernels + bias."""
+    return fc_apply(x, w) + b.reshape(1, -1)
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics used by steps.py
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits, labels):
+    """Mean softmax CE; ``labels`` int32 class ids ``(B,)``."""
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logz, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def correct_count(logits, labels):
+    return jnp.sum((jnp.argmax(logits, axis=-1) == labels).astype(jnp.int32))

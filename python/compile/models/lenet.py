@@ -1,0 +1,35 @@
+"""LeNet-5 (Caffe variant) — kept at the paper's exact layer sizes.
+
+Matches Table A1 of the paper: conv1 5×5×1×20 (500 weights), conv2
+5×5×20×50 (25,000), fc1 800×500 (400,000), fc2 500×10 (5,000); total
+430,500 prunable weights. Input 28×28 grey (MNIST-shaped), valid-padding
+convs with 2×2 max pools: 28→24→12→8→4.
+"""
+
+from __future__ import annotations
+
+from . import common as C
+
+NAME = "lenet"
+INPUT_SHAPE = (1, 28, 28)
+NUM_CLASSES = 10
+
+
+def init(seed: int = 0):
+    b = C.ParamBuilder(seed)
+    b.conv("conv1", 1, 20, 5, 5)
+    b.conv("conv2", 20, 50, 5, 5)
+    b.fc("fc1", 50 * 4 * 4, 500)
+    b.fc("fc2", 500, NUM_CLASSES)
+    return b.build()
+
+
+def apply(params, x):
+    c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b = params
+    h = C.conv2d(x, c1w, c1b, pad=0)  # (B,20,24,24)
+    h = C.max_pool(h)  # (B,20,12,12)
+    h = C.conv2d(h, c2w, c2b, pad=0)  # (B,50,8,8)
+    h = C.max_pool(h)  # (B,50,4,4)
+    h = C.flatten(h)
+    h = C.relu(C.fc(h, f1w, f1b))
+    return C.fc(h, f2w, f2b)

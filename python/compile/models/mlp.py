@@ -1,0 +1,32 @@
+"""3-layer MLP for the quickstart path (synth-mnist, flattened input).
+
+Small enough that a full SpC train/debias/compress cycle runs in seconds
+on the CPU PJRT client; the FC layers exercise both paper kernels.
+"""
+
+from __future__ import annotations
+
+from . import common as C
+
+NAME = "mlp"
+INPUT_SHAPE = (1, 28, 28)
+NUM_CLASSES = 10
+HIDDEN = (256, 128)
+
+
+def init(seed: int = 0):
+    b = C.ParamBuilder(seed)
+    nin = 28 * 28
+    b.fc("fc1", nin, HIDDEN[0])
+    b.fc("fc2", HIDDEN[0], HIDDEN[1])
+    b.fc("fc3", HIDDEN[1], NUM_CLASSES)
+    return b.build()
+
+
+def apply(params, x):
+    """``x``: (B, 1, 28, 28) NCHW (flattened internally)."""
+    fc1_w, fc1_b, fc2_w, fc2_b, fc3_w, fc3_b = params
+    h = C.flatten(x)
+    h = C.relu(C.fc(h, fc1_w, fc1_b))
+    h = C.relu(C.fc(h, fc2_w, fc2_b))
+    return C.fc(h, fc3_w, fc3_b)

@@ -1,0 +1,68 @@
+"""ResNet-S: depth-scaled CIFAR ResNet (DESIGN.md §4 substitution).
+
+The paper uses ResNet-32 = conv1 + 3 stages × 5 basic blocks (2 convs
+each) at widths 16/32/64 + fc (Table A4, 464,432 weights). We keep the
+exact stage widths and block structure but default to ``N_BLOCKS = 2``
+blocks per stage (ResNet-14) for the CPU-PJRT testbed; stage-2/3 first
+blocks use 1×1 projection shortcuts exactly as Table A4's ``conv*-proj``
+rows. BatchNorm uses batch statistics (stateless; DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from . import common as C
+
+NAME = "resnet_s"
+INPUT_SHAPE = (3, 32, 32)
+NUM_CLASSES = 10
+
+WIDTHS = (16, 32, 64)
+N_BLOCKS = 2  # paper: 5 (ResNet-32); ours: 2 (ResNet-14)
+
+
+def init(seed: int = 0):
+    b = C.ParamBuilder(seed)
+    b.conv("conv1", 3, WIDTHS[0], 3, 3)
+    b.bn("bn1", WIDTHS[0])
+    cin = WIDTHS[0]
+    for si, w in enumerate(WIDTHS, start=1):
+        for bi in range(1, N_BLOCKS + 1):
+            b.conv(f"conv{si}-{bi}-1", cin, w, 3, 3)
+            b.bn(f"bn{si}-{bi}-1", w)
+            b.conv(f"conv{si}-{bi}-2", w, w, 3, 3)
+            b.bn(f"bn{si}-{bi}-2", w)
+            if bi == 1 and cin != w:
+                b.conv(f"conv{si}-{bi}-proj", cin, w, 1, 1)
+            cin = w
+    b.fc("fc1", WIDTHS[-1], NUM_CLASSES)
+    return b.build()
+
+
+def apply(params, x):
+    i = 0
+
+    def take(n):
+        nonlocal i
+        out = params[i : i + n]
+        i += n
+        return out
+
+    c1w, c1b, s1, b1 = take(4)
+    h = C.relu(C.batch_norm(C.conv2d(x, c1w, c1b, pad=1), s1, b1))
+    cin = WIDTHS[0]
+    for si, w in enumerate(WIDTHS, start=1):
+        for bi in range(1, N_BLOCKS + 1):
+            stride = 2 if (bi == 1 and si > 1) else 1
+            cw1, cb1, sc1, sb1 = take(4)
+            cw2, cb2, sc2, sb2 = take(4)
+            y = C.relu(C.batch_norm(C.conv2d(h, cw1, cb1, stride=stride, pad=1), sc1, sb1))
+            y = C.batch_norm(C.conv2d(y, cw2, cb2, pad=1), sc2, sb2)
+            if bi == 1 and cin != w:
+                # 1x1 projection shortcut (Table A4's conv*-proj rows).
+                pw, pb = take(2)
+                h = C.conv2d(h, pw, pb, stride=stride, pad=0)
+            h = C.relu(h + y)
+            cin = w
+    h = C.avg_pool_global(h)
+    fw, fb = take(2)
+    return C.fc(h, fw, fb)

@@ -1,0 +1,55 @@
+"""VGG-S: width-scaled VGG16 for CIFAR (DESIGN.md §4 substitution).
+
+Keeps VGG16's 13-conv/3-fc depth and the 5-stage 2× pooling schedule
+(32→16→8→4→2→1) with channel widths at 1/4 of the paper's (Table A3
+shapes in ``FULL_WIDTHS`` for reporting).
+"""
+
+from __future__ import annotations
+
+from . import common as C
+
+NAME = "vgg_s"
+INPUT_SHAPE = (3, 32, 32)
+NUM_CLASSES = 10
+
+# conv widths per stage (VGG16 = 2,2,3,3,3 convs per stage), then fc widths
+STAGES = ((16, 2), (32, 2), (64, 3), (128, 3), (128, 3))
+FCS = (256, 256)
+FULL_STAGES = ((64, 2), (128, 2), (256, 3), (512, 3), (512, 3))  # paper Table A3
+FULL_FCS = (1024, 1024)
+
+
+def _conv_names():
+    names = []
+    for si, (_, n) in enumerate(STAGES, start=1):
+        for ci in range(1, n + 1):
+            names.append(f"conv{si}-{ci}")
+    return names
+
+
+def init(seed: int = 0):
+    b = C.ParamBuilder(seed)
+    cin = 3
+    for si, (w, n) in enumerate(STAGES, start=1):
+        for ci in range(1, n + 1):
+            b.conv(f"conv{si}-{ci}", cin, w, 3, 3)
+            cin = w
+    b.fc("fc1", STAGES[-1][0] * 1 * 1, FCS[0])
+    b.fc("fc2", FCS[0], FCS[1])
+    b.fc("fc3", FCS[1], NUM_CLASSES)
+    return b.build()
+
+
+def apply(params, x):
+    i = 0
+    h = x
+    for w, n in STAGES:
+        for _ in range(n):
+            h = C.relu(C.conv2d(h, params[i], params[i + 1], pad=1))
+            i += 2
+        h = C.max_pool(h)
+    h = C.flatten(h)
+    h = C.relu(C.fc(h, params[i], params[i + 1])); i += 2
+    h = C.relu(C.fc(h, params[i], params[i + 1])); i += 2
+    return C.fc(h, params[i], params[i + 1])

@@ -1,0 +1,130 @@
+"""L2 optimizers: proximal minibatch algorithms from the paper + baselines.
+
+Implements, over flat lists of parameter leaves:
+
+* :func:`prox_sgd` — proximal stochastic gradient (paper Eq. 2).
+* :func:`prox_rmsprop` — **Algorithm 1** (Prox-RMSProp).
+* :func:`prox_adam` — **Algorithm 2** (Prox-ADAM).
+* :func:`masked_adam` — debias / retraining step (Section 2.4): ADAM with
+  λ=0 and a 0/1 mask freezing pruned weights at exactly zero. Also used
+  for the Pru baseline's retraining phase (Han et al. 2015).
+* :func:`mm_lstep` — the L-step of the MM baseline (Carreira-Perpiñán &
+  Idelbayev 2018): SGD-with-momentum on the augmented Lagrangian
+  ``L(w) + μ/2 ‖w − θ − λ/μ‖²``. The C-step (soft-threshold of
+  ``w − λ/μ``) and the multiplier ascent run host-side in the rust
+  coordinator (`rust/src/compress/mm.rs`) every few thousand steps, as in
+  the paper.
+
+The proximal operator is the L1 Pallas kernel
+(:func:`..kernels.prox.soft_threshold`), so it lowers into the same HLO
+artifact as the update — there is no separate "prox pass" at runtime.
+
+Only leaves flagged ``prunable`` in the model spec receive the prox /
+mask treatment (weights); biases and BN parameters follow the plain
+update, matching the paper's layer tables which count weights only.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import prox
+
+# Paper-standard hyperparameters (Hinton lecture 6e / Kingma & Ba 2015).
+RMSPROP_BETA = 0.9
+ADAM_BETA1 = 0.9
+ADAM_BETA2 = 0.999
+EPS = 1e-8
+MM_MOMENTUM = 0.9
+
+
+def _maybe_prox(w, prunable: bool, thresh):
+    return prox.soft_threshold(w, thresh) if prunable else w
+
+
+def prox_sgd(params, grads, prunable, lam, lr):
+    """``w ← prox_{η λ ‖·‖₁}(w − η g)`` (paper Eq. 2)."""
+    new_params = []
+    for p, g, pr in zip(params, grads, prunable):
+        w = p - lr * g
+        new_params.append(_maybe_prox(w, pr, lr * lam))
+    return new_params
+
+
+def prox_rmsprop(params, grads, v, prunable, lam, lr, beta=RMSPROP_BETA, eps=EPS):
+    """Algorithm 1 (Prox-RMSProp). Returns ``(params', v')``."""
+    new_params, new_v = [], []
+    for p, g, vi, pr in zip(params, grads, v, prunable):
+        vi2 = beta * vi + (1.0 - beta) * g * g
+        w = p - lr * g / (jnp.sqrt(vi2) + eps)
+        new_params.append(_maybe_prox(w, pr, lr * lam))
+        new_v.append(vi2)
+    return new_params, new_v
+
+
+def prox_adam(
+    params, grads, m, v, t, prunable, lam, lr,
+    beta1=ADAM_BETA1, beta2=ADAM_BETA2, eps=EPS,
+):
+    """Algorithm 2 (Prox-ADAM). ``t`` is the f32 rank-0 timestep *before*
+    this update. Returns ``(params', m', v', t+1)``."""
+    t2 = t + 1.0
+    bc1 = 1.0 - jnp.power(beta1, t2)
+    bc2 = 1.0 - jnp.power(beta2, t2)
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi, pr in zip(params, grads, m, v, prunable):
+        mi2 = beta1 * mi + (1.0 - beta1) * g
+        vi2 = beta2 * vi + (1.0 - beta2) * g * g
+        mhat = mi2 / bc1
+        vhat = vi2 / bc2
+        w = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+        new_params.append(_maybe_prox(w, pr, lr * lam))
+        new_m.append(mi2)
+        new_v.append(vi2)
+    return new_params, new_m, new_v, t2
+
+
+def masked_adam(
+    params, grads, m, v, t, masks, lr,
+    beta1=ADAM_BETA1, beta2=ADAM_BETA2, eps=EPS,
+):
+    """Debias / retrain step: ADAM restricted to surviving weights.
+
+    ``masks`` has one 0/1 array per leaf (all-ones for non-prunable
+    leaves). Gradients are masked *before* entering the moments so frozen
+    weights accumulate no momentum, and parameters are masked after the
+    update — pruned weights remain exactly 0.0 (Section 2.4).
+    """
+    t2 = t + 1.0
+    bc1 = 1.0 - jnp.power(beta1, t2)
+    bc2 = 1.0 - jnp.power(beta2, t2)
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi, mk in zip(params, grads, m, v, masks):
+        g = g * mk
+        mi2 = beta1 * mi + (1.0 - beta1) * g
+        vi2 = beta2 * vi + (1.0 - beta2) * g * g
+        mhat = mi2 / bc1
+        vhat = vi2 / bc2
+        w = (p - lr * mhat / (jnp.sqrt(vhat) + eps)) * mk
+        new_params.append(w)
+        new_m.append(mi2)
+        new_v.append(vi2)
+    return new_params, new_m, new_v, t2
+
+
+def mm_lstep(params, grads, mom, theta, lag, prunable, mu, lr, momentum=MM_MOMENTUM):
+    """MM baseline L-step: SGD-momentum on the augmented Lagrangian.
+
+    Gradient of ``L(w) + μ/2‖w − θ‖² − λᵀ(w − θ)`` w.r.t. ``w`` is
+    ``∇L(w) + μ(w − θ) − λ``; the quadratic pull applies to prunable
+    leaves only (θ/λ are zero-shaped copies for the others but unused).
+    Returns ``(params', mom')``.
+    """
+    new_params, new_mom = [], []
+    for p, g, mo, th, lg, pr in zip(params, grads, mom, theta, lag, prunable):
+        if pr:
+            g = g + mu * (p - th) - lg
+        mo2 = momentum * mo + g
+        new_params.append(p - lr * mo2)
+        new_mom.append(mo2)
+    return new_params, new_mom

@@ -1,0 +1,229 @@
+"""L2 step builders: the jittable graphs that ``aot.py`` lowers.
+
+Each builder returns ``(fn, example_args, input_roles, output_roles)``:
+
+* ``fn`` — a pure function over (nested tuples of) arrays; ``jax.jit``
+  flattens arguments depth-first, so the manifest's flat role lists line
+  up exactly with the lowered HLO parameter order the rust runtime feeds.
+* ``example_args`` — ShapeDtypeStructs for ``.lower()``.
+* roles — one ``{"role", "name", "shape", "dtype"}`` dict per flat leaf.
+
+Step inventory (DESIGN.md §7): ``train_prox_adam``,
+``train_prox_rmsprop``, ``train_prox_sgd``, ``train_masked``,
+``train_mm``, ``eval``, ``infer``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import optim
+from .models import common as C
+
+
+def _loss_fn(model, params, x, y):
+    logits = model.apply(list(params), x)
+    return C.softmax_cross_entropy(logits, y)
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _param_structs(spec):
+    return tuple(_sds(s["shape"]) for s in spec)
+
+
+def _roles(spec, role, prefix=""):
+    return [
+        {"role": role, "name": prefix + s["name"], "shape": list(s["shape"]), "dtype": "f32"}
+        for s in spec
+    ]
+
+
+def _scalar_role(role):
+    return [{"role": role, "name": role, "shape": [], "dtype": "f32"}]
+
+
+def _batch_roles(model, batch):
+    c, h, w = model.INPUT_SHAPE
+    return (
+        [{"role": "x", "name": "x", "shape": [batch, c, h, w], "dtype": "f32"}],
+        [{"role": "y", "name": "y", "shape": [batch], "dtype": "i32"}],
+    )
+
+
+def _batch_structs(model, batch):
+    c, h, w = model.INPUT_SHAPE
+    return _sds((batch, c, h, w)), _sds((batch,), jnp.int32)
+
+
+def build_train_prox_adam(model, spec, batch):
+    prunable = tuple(s["prunable"] for s in spec)
+
+    def fn(params, m, v, t, x, y, lam, lr):
+        loss, grads = jax.value_and_grad(lambda p: _loss_fn(model, p, x, y))(params)
+        p2, m2, v2, t2 = optim.prox_adam(params, grads, m, v, t, prunable, lam, lr)
+        return tuple(p2), tuple(m2), tuple(v2), t2, loss
+
+    ps = _param_structs(spec)
+    xs, ys = _batch_structs(model, batch)
+    args = (ps, ps, ps, _sds(()), xs, ys, _sds(()), _sds(()))
+    xr, yr = _batch_roles(model, batch)
+    in_roles = (
+        _roles(spec, "param")
+        + _roles(spec, "opt_m", "m:")
+        + _roles(spec, "opt_v", "v:")
+        + _scalar_role("opt_t")
+        + xr + yr
+        + _scalar_role("lambda")
+        + _scalar_role("lr")
+    )
+    out_roles = (
+        _roles(spec, "param")
+        + _roles(spec, "opt_m", "m:")
+        + _roles(spec, "opt_v", "v:")
+        + _scalar_role("opt_t")
+        + _scalar_role("loss")
+    )
+    return fn, args, in_roles, out_roles
+
+
+def build_train_prox_rmsprop(model, spec, batch):
+    prunable = tuple(s["prunable"] for s in spec)
+
+    def fn(params, v, x, y, lam, lr):
+        loss, grads = jax.value_and_grad(lambda p: _loss_fn(model, p, x, y))(params)
+        p2, v2 = optim.prox_rmsprop(params, grads, v, prunable, lam, lr)
+        return tuple(p2), tuple(v2), loss
+
+    ps = _param_structs(spec)
+    xs, ys = _batch_structs(model, batch)
+    args = (ps, ps, xs, ys, _sds(()), _sds(()))
+    xr, yr = _batch_roles(model, batch)
+    in_roles = (
+        _roles(spec, "param") + _roles(spec, "opt_v", "v:")
+        + xr + yr + _scalar_role("lambda") + _scalar_role("lr")
+    )
+    out_roles = _roles(spec, "param") + _roles(spec, "opt_v", "v:") + _scalar_role("loss")
+    return fn, args, in_roles, out_roles
+
+
+def build_train_prox_sgd(model, spec, batch):
+    prunable = tuple(s["prunable"] for s in spec)
+
+    def fn(params, x, y, lam, lr):
+        loss, grads = jax.value_and_grad(lambda p: _loss_fn(model, p, x, y))(params)
+        p2 = optim.prox_sgd(params, grads, prunable, lam, lr)
+        return tuple(p2), loss
+
+    ps = _param_structs(spec)
+    xs, ys = _batch_structs(model, batch)
+    args = (ps, xs, ys, _sds(()), _sds(()))
+    xr, yr = _batch_roles(model, batch)
+    in_roles = _roles(spec, "param") + xr + yr + _scalar_role("lambda") + _scalar_role("lr")
+    out_roles = _roles(spec, "param") + _scalar_role("loss")
+    return fn, args, in_roles, out_roles
+
+
+def build_train_masked(model, spec, batch):
+    def fn(params, m, v, t, masks, x, y, lr):
+        loss, grads = jax.value_and_grad(lambda p: _loss_fn(model, p, x, y))(params)
+        p2, m2, v2, t2 = optim.masked_adam(params, grads, m, v, t, masks, lr)
+        return tuple(p2), tuple(m2), tuple(v2), t2, loss
+
+    ps = _param_structs(spec)
+    xs, ys = _batch_structs(model, batch)
+    args = (ps, ps, ps, _sds(()), ps, xs, ys, _sds(()))
+    xr, yr = _batch_roles(model, batch)
+    in_roles = (
+        _roles(spec, "param")
+        + _roles(spec, "opt_m", "m:")
+        + _roles(spec, "opt_v", "v:")
+        + _scalar_role("opt_t")
+        + _roles(spec, "mask", "mask:")
+        + xr + yr + _scalar_role("lr")
+    )
+    out_roles = (
+        _roles(spec, "param")
+        + _roles(spec, "opt_m", "m:")
+        + _roles(spec, "opt_v", "v:")
+        + _scalar_role("opt_t")
+        + _scalar_role("loss")
+    )
+    return fn, args, in_roles, out_roles
+
+
+def build_train_mm(model, spec, batch):
+    prunable = tuple(s["prunable"] for s in spec)
+
+    def fn(params, mom, theta, lag, x, y, mu, lr):
+        loss, grads = jax.value_and_grad(lambda p: _loss_fn(model, p, x, y))(params)
+        p2, mo2 = optim.mm_lstep(params, grads, mom, theta, lag, prunable, mu, lr)
+        return tuple(p2), tuple(mo2), loss
+
+    ps = _param_structs(spec)
+    xs, ys = _batch_structs(model, batch)
+    args = (ps, ps, ps, ps, xs, ys, _sds(()), _sds(()))
+    xr, yr = _batch_roles(model, batch)
+    in_roles = (
+        _roles(spec, "param")
+        + _roles(spec, "opt_m", "mom:")
+        + _roles(spec, "theta", "theta:")
+        + _roles(spec, "lagrange", "lag:")
+        + xr + yr + _scalar_role("mu") + _scalar_role("lr")
+    )
+    out_roles = (
+        _roles(spec, "param") + _roles(spec, "opt_m", "mom:") + _scalar_role("loss")
+    )
+    return fn, args, in_roles, out_roles
+
+
+def build_eval(model, spec, batch):
+    def fn(params, x, y):
+        logits = model.apply(list(params), x)
+        loss = C.softmax_cross_entropy(logits, y)
+        correct = C.correct_count(logits, y)
+        return loss, correct
+
+    ps = _param_structs(spec)
+    xs, ys = _batch_structs(model, batch)
+    args = (ps, xs, ys)
+    xr, yr = _batch_roles(model, batch)
+    in_roles = _roles(spec, "param") + xr + yr
+    out_roles = _scalar_role("loss") + [
+        {"role": "correct", "name": "correct", "shape": [], "dtype": "i32"}
+    ]
+    return fn, args, in_roles, out_roles
+
+
+def build_infer(model, spec, batch):
+    def fn(params, x):
+        return model.apply(list(params), x)
+
+    ps = _param_structs(spec)
+    xs, _ = _batch_structs(model, batch)
+    args = (ps, xs)
+    xr, _ = _batch_roles(model, batch)
+    in_roles = _roles(spec, "param") + xr
+    out_roles = [
+        {
+            "role": "logits",
+            "name": "logits",
+            "shape": [batch, model.NUM_CLASSES],
+            "dtype": "f32",
+        }
+    ]
+    return fn, args, in_roles, out_roles
+
+
+BUILDERS = {
+    "train_prox_adam": build_train_prox_adam,
+    "train_prox_rmsprop": build_train_prox_rmsprop,
+    "train_prox_sgd": build_train_prox_sgd,
+    "train_masked": build_train_masked,
+    "train_mm": build_train_mm,
+    "eval": build_eval,
+    "infer": build_infer,
+}

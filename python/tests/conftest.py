@@ -1,0 +1,15 @@
+"""Shared pytest fixtures for the compile-path test suite."""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+# Make `compile` importable when pytest is invoked from python/ or repo root.
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)

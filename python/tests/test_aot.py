@@ -1,0 +1,162 @@
+"""AOT path: lowering produces valid HLO text, manifests are consistent,
+and the training graphs decrease loss / create exact zeros when executed.
+"""
+
+import json
+from pathlib import Path
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import aot, steps as steps_mod
+from compile.models import REGISTRY
+
+F32 = np.float32
+ARTIFACTS = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def _entry_param_count(hlo: str) -> int:
+    """Count ``parameter(i)`` instructions inside the ENTRY computation.
+
+    ``parameter(i)`` index ``i`` equals the flat argument position — the
+    identity the rust runtime relies on (textual order is arbitrary).
+    """
+    lines = hlo.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    n = 0
+    for l in lines[start + 1 :]:
+        if l.startswith("}"):
+            break
+        if " parameter(" in l:
+            n += 1
+    return n
+
+
+class TestLowering:
+    @pytest.mark.parametrize("step", sorted(steps_mod.BUILDERS))
+    def test_mlp_all_steps_lower(self, step):
+        model = REGISTRY["mlp"]
+        _, spec = model.init(0)
+        hlo, in_roles, out_roles = aot.lower_one(model, spec, step, batch=8)
+        assert hlo.startswith("HloModule"), hlo[:50]
+        assert len(in_roles) > 0 and len(out_roles) > 0
+
+    def test_role_count_matches_hlo_params(self):
+        """Flat role list must line up 1:1 with lowered HLO parameters —
+        this is the contract the rust runtime depends on."""
+        model = REGISTRY["mlp"]
+        _, spec = model.init(0)
+        hlo, in_roles, _ = aot.lower_one(model, spec, "train_prox_adam", batch=8)
+        assert _entry_param_count(hlo) == len(in_roles)
+
+    def test_scalar_roles_are_rank0(self):
+        model = REGISTRY["mlp"]
+        _, spec = model.init(0)
+        _, in_roles, out_roles = aot.lower_one(model, spec, "train_prox_adam", batch=8)
+        for r in in_roles:
+            if r["role"] in ("lambda", "lr", "opt_t"):
+                assert r["shape"] == []
+        assert out_roles[-1]["role"] == "loss" and out_roles[-1]["shape"] == []
+
+
+class TestTrainingBehaviour:
+    def test_prox_adam_loss_decreases_and_sparsifies(self, rng):
+        model = REGISTRY["mlp"]
+        params, spec = model.init(0)
+        fn, _, _, _ = steps_mod.build_train_prox_adam(model, spec, 32)
+        jfn = jax.jit(fn)
+        x = jnp.asarray(rng.standard_normal((32, 1, 28, 28)).astype(F32))
+        y = jnp.asarray(rng.integers(0, 10, 32).astype(np.int32))
+        ps = tuple(jnp.asarray(p) for p in params)
+        zs = tuple(jnp.zeros_like(p) for p in params)
+        m, v, t = zs, zs, jnp.float32(0)
+        losses = []
+        for _ in range(12):
+            ps, m, v, t, loss = jfn(ps, m, v, t, x, y, jnp.float32(5.0), jnp.float32(5e-3))
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]
+        zeros = sum(int((np.asarray(p) == 0).sum()) for p in ps)
+        assert zeros > 1000  # prox writes exact zeros while training
+
+    def test_rmsprop_runs(self, rng):
+        model = REGISTRY["mlp"]
+        params, spec = model.init(0)
+        fn, _, _, _ = steps_mod.build_train_prox_rmsprop(model, spec, 16)
+        jfn = jax.jit(fn)
+        x = jnp.asarray(rng.standard_normal((16, 1, 28, 28)).astype(F32))
+        y = jnp.asarray(rng.integers(0, 10, 16).astype(np.int32))
+        ps = tuple(jnp.asarray(p) for p in params)
+        v = tuple(jnp.zeros_like(p) for p in params)
+        ps, v, loss = jfn(ps, v, x, y, jnp.float32(0.01), jnp.float32(1e-3))
+        assert np.isfinite(float(loss))
+
+    def test_masked_step_never_resurrects_zeros(self, rng):
+        model = REGISTRY["mlp"]
+        params, spec = model.init(0)
+        fn, _, _, _ = steps_mod.build_train_masked(model, spec, 16)
+        jfn = jax.jit(fn)
+        x = jnp.asarray(rng.standard_normal((16, 1, 28, 28)).astype(F32))
+        y = jnp.asarray(rng.integers(0, 10, 16).astype(np.int32))
+        masks = []
+        ps = []
+        for p, s in zip(params, spec):
+            if s["prunable"]:
+                mk = (rng.random(p.shape) < 0.3).astype(F32)
+            else:
+                mk = np.ones(p.shape, F32)
+            masks.append(jnp.asarray(mk))
+            ps.append(jnp.asarray(p * mk))
+        ps = tuple(ps)
+        masks = tuple(masks)
+        zs = tuple(jnp.zeros_like(p) for p in params)
+        m, v, t = zs, zs, jnp.float32(0)
+        for _ in range(5):
+            ps, m, v, t, loss = jfn(ps, m, v, t, masks, x, y, jnp.float32(1e-3))
+        for p, mk in zip(ps, masks):
+            dead = np.asarray(mk) == 0
+            assert (np.asarray(p)[dead] == 0).all()
+
+    def test_eval_counts(self, rng):
+        model = REGISTRY["mlp"]
+        params, spec = model.init(0)
+        fn, _, _, _ = steps_mod.build_eval(model, spec, 16)
+        x = jnp.asarray(rng.standard_normal((16, 1, 28, 28)).astype(F32))
+        y = jnp.asarray(rng.integers(0, 10, 16).astype(np.int32))
+        loss, correct = jax.jit(fn)(tuple(jnp.asarray(p) for p in params), x, y)
+        assert 0 <= int(correct) <= 16
+        assert np.isfinite(float(loss))
+
+
+@pytest.mark.skipif(not (ARTIFACTS / "manifest.json").exists(), reason="run `make artifacts` first")
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        return json.loads((ARTIFACTS / "manifest.json").read_text())
+
+    def test_all_models_listed(self, manifest):
+        assert set(manifest["models"]) == set(REGISTRY)
+
+    def test_artifact_files_exist(self, manifest):
+        for entry in manifest["models"].values():
+            for art in entry["artifacts"].values():
+                assert (ARTIFACTS / art["file"]).exists(), art["file"]
+
+    def test_param_counts(self, manifest):
+        for name, entry in manifest["models"].items():
+            params, spec = REGISTRY[name].init(0)
+            assert entry["num_params"] == sum(p.size for p in params)
+            assert entry["num_weights"] == sum(
+                p.size for p, s in zip(params, spec) if s["prunable"]
+            )
+
+    def test_lenet_matches_paper_total(self, manifest):
+        assert manifest["models"]["lenet"]["num_weights"] == 430_500
+
+    def test_input_roles_match_hlo_arity(self, manifest):
+        """Every artifact's input role list matches its HLO entry arity."""
+        for entry in manifest["models"].values():
+            for art in entry["artifacts"].values():
+                text = (ARTIFACTS / art["file"]).read_text()
+                assert _entry_param_count(text) == len(art["inputs"]), art["file"]

@@ -1,0 +1,291 @@
+"""L1 Pallas kernels vs the pure-jnp oracles in ref.py.
+
+This is the CORE correctness signal for the compute layer: every kernel
+that lowers into the AOT artifacts is pinned here, including hypothesis
+sweeps over shapes, thresholds, and sparsity patterns.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import prox, ref, spmm
+
+F32 = np.float32
+
+
+def _arr(rng, *shape, scale=1.0):
+    return jnp.asarray((rng.standard_normal(shape) * scale).astype(F32))
+
+
+# ---------------------------------------------------------------------------
+# prox soft-threshold kernel (paper Figure 4)
+# ---------------------------------------------------------------------------
+
+
+class TestProxKernel:
+    def test_matches_oracle_2d(self, rng):
+        x = _arr(rng, 37, 53)
+        np.testing.assert_allclose(
+            prox.soft_threshold(x, 0.3), ref.soft_threshold(x, 0.3), rtol=1e-6
+        )
+
+    def test_matches_clip_formulation(self, rng):
+        """sign·max form == the paper's Figure-4 min/max clip form."""
+        x = _arr(rng, 64, 64)
+        np.testing.assert_allclose(
+            ref.soft_threshold(x, 0.2),
+            ref.soft_threshold_clip_form(x, 0.2),
+            rtol=1e-6,
+        )
+
+    @pytest.mark.parametrize("shape", [(1,), (7,), (5, 3), (20, 1, 5, 5), (128, 800)])
+    def test_any_rank(self, rng, shape):
+        x = _arr(rng, *shape)
+        np.testing.assert_allclose(
+            prox.soft_threshold(x, 0.1), ref.soft_threshold(x, 0.1), rtol=1e-6
+        )
+
+    def test_zero_threshold_is_identity(self, rng):
+        x = _arr(rng, 16, 16)
+        np.testing.assert_allclose(prox.soft_threshold(x, 0.0), x, rtol=1e-7)
+
+    def test_large_threshold_kills_everything(self, rng):
+        x = _arr(rng, 16, 16)
+        out = np.asarray(prox.soft_threshold(x, 1e6))
+        assert (out == 0).all()
+
+    def test_produces_exact_zeros(self, rng):
+        """Values inside the threshold band become EXACT zeros (the whole
+        point of the proximal mechanism — Section 2.2)."""
+        x = _arr(rng, 32, 32, scale=0.1)
+        out = np.asarray(prox.soft_threshold(x, 0.15))
+        inside = np.abs(np.asarray(x)) <= 0.15
+        assert inside.any()
+        assert (out[inside] == 0.0).all()
+
+    def test_sign_preservation(self, rng):
+        x = _arr(rng, 64, 64)
+        out = np.asarray(prox.soft_threshold(x, 0.2))
+        nz = out != 0
+        assert (np.sign(out[nz]) == np.sign(np.asarray(x)[nz])).all()
+
+    def test_shrinkage_magnitude(self, rng):
+        """|prox(x)| = max(|x| - t, 0) elementwise."""
+        x = _arr(rng, 40, 40)
+        out = np.asarray(prox.soft_threshold(x, 0.25))
+        want = np.maximum(np.abs(np.asarray(x)) - 0.25, 0.0)
+        np.testing.assert_allclose(np.abs(out), want, rtol=1e-6, atol=1e-7)
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        rows=st.integers(1, 300),
+        cols=st.integers(1, 70),
+        thresh=st.floats(0.0, 2.0),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes(self, rows, cols, thresh, seed):
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(r.standard_normal((rows, cols)).astype(F32))
+        np.testing.assert_allclose(
+            prox.soft_threshold(x, thresh),
+            ref.soft_threshold(x, thresh),
+            rtol=1e-5,
+            atol=1e-6,
+        )
+
+    def test_nonexpansive(self, rng):
+        """prox of a convex function is 1-Lipschitz: |prox(a)-prox(b)| <= |a-b|."""
+        a, b = _arr(rng, 50, 50), _arr(rng, 50, 50)
+        pa = np.asarray(prox.soft_threshold(a, 0.3))
+        pb = np.asarray(prox.soft_threshold(b, 0.3))
+        assert np.linalg.norm(pa - pb) <= np.linalg.norm(np.asarray(a - b)) + 1e-5
+
+    def test_idempotent_on_fixed_points(self, rng):
+        """Thresholding an already-thresholded array shrinks further by t —
+        but prox with t=0 of a sparse array is the array (fixed point)."""
+        x = _arr(rng, 30, 30)
+        once = prox.soft_threshold(x, 0.5)
+        np.testing.assert_allclose(prox.soft_threshold(once, 0.0), once, rtol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# dense × compressed' and dense × compressed (paper Figures 2-3)
+# ---------------------------------------------------------------------------
+
+
+class TestMatmulKernels:
+    @pytest.mark.parametrize(
+        "b,n,k",
+        [(1, 1, 1), (4, 7, 9), (33, 41, 70), (128, 500, 800), (16, 10, 784), (64, 256, 1024)],
+    )
+    def test_dxct(self, rng, b, n, k):
+        d, c = _arr(rng, b, k), _arr(rng, n, k)
+        np.testing.assert_allclose(
+            spmm.dxct(d, c), ref.dense_x_compressed_t(d, c), rtol=2e-4, atol=2e-4
+        )
+
+    @pytest.mark.parametrize(
+        "b,n,k", [(1, 1, 1), (4, 7, 9), (33, 41, 70), (128, 500, 800), (64, 256, 1024)]
+    )
+    def test_dxc(self, rng, b, n, k):
+        g, c = _arr(rng, b, n), _arr(rng, n, k)
+        np.testing.assert_allclose(
+            spmm.dxc(g, c), ref.dense_x_compressed(g, c), rtol=2e-4, atol=2e-4
+        )
+
+    def test_transpose_identity(self, rng):
+        """(D×C')' == C×D' — the ViennaCL workaround the paper replaces."""
+        d, c = _arr(rng, 24, 48), _arr(rng, 12, 48)
+        lhs = np.asarray(spmm.dxct(d, c)).T
+        rhs = np.asarray(c @ d.T)
+        np.testing.assert_allclose(lhs, rhs, rtol=2e-4, atol=2e-4)
+
+    def test_sparse_operand(self, rng):
+        """Kernels are exact when the compressed operand is mostly zeros
+        (the production regime: prox-trained weights)."""
+        d = _arr(rng, 32, 200)
+        c = np.asarray(_arr(rng, 60, 200)).copy()
+        c[np.abs(c) < 1.2] = 0.0  # ~77% zeros
+        c = jnp.asarray(c)
+        np.testing.assert_allclose(
+            spmm.dxct(d, c), ref.dense_x_compressed_t(d, c), rtol=2e-4, atol=2e-4
+        )
+
+    def test_zero_matrix(self, rng):
+        d = _arr(rng, 8, 16)
+        c = jnp.zeros((4, 16), F32)
+        assert (np.asarray(spmm.dxct(d, c)) == 0).all()
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 40),
+        n=st.integers(1, 40),
+        k=st.integers(1, 600),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_dxct(self, b, n, k, seed):
+        r = np.random.default_rng(seed)
+        d = jnp.asarray(r.standard_normal((b, k)).astype(F32))
+        c = jnp.asarray(r.standard_normal((n, k)).astype(F32))
+        np.testing.assert_allclose(
+            spmm.dxct(d, c), ref.dense_x_compressed_t(d, c), rtol=5e-4, atol=5e-4
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        b=st.integers(1, 40),
+        n=st.integers(1, 600),
+        k=st.integers(1, 40),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_dxc(self, b, n, k, seed):
+        r = np.random.default_rng(seed)
+        g = jnp.asarray(r.standard_normal((b, n)).astype(F32))
+        c = jnp.asarray(r.standard_normal((n, k)).astype(F32))
+        np.testing.assert_allclose(
+            spmm.dxc(g, c), ref.dense_x_compressed(g, c), rtol=5e-4, atol=5e-4
+        )
+
+    def test_custom_block_sizes(self, rng):
+        d, c = _arr(rng, 100, 300), _arr(rng, 90, 300)
+        for bm, bn, bk in [(32, 32, 64), (128, 128, 512), (8, 16, 300)]:
+            np.testing.assert_allclose(
+                spmm.dxct(d, c, bm=bm, bn=bn, bk=bk),
+                ref.dense_x_compressed_t(d, c),
+                rtol=2e-4,
+                atol=2e-4,
+            )
+
+
+# ---------------------------------------------------------------------------
+# Block-ELL compressed kernel
+# ---------------------------------------------------------------------------
+
+
+def _sparse_blocks(rng, n, k, bh, bw, keep=0.3):
+    """Dense matrix whose nonzeros come in whole (bh, bw) blocks."""
+    n_br, n_bc = n // bh, k // bw
+    w = np.zeros((n, k), F32)
+    for i in range(n_br):
+        for j in range(n_bc):
+            if rng.random() < keep:
+                w[i * bh : (i + 1) * bh, j * bw : (j + 1) * bw] = rng.standard_normal(
+                    (bh, bw)
+                )
+    return w
+
+
+class TestBlockEllKernel:
+    @pytest.mark.parametrize("bh,bw", [(8, 16), (16, 16), (4, 32)])
+    def test_roundtrip_to_dense(self, rng, bh, bw):
+        w = _sparse_blocks(rng, 64, 128, bh, bw)
+        vals, idx, density = spmm.dense_to_blockell(w, bh, bw)
+        back = np.asarray(ref.bsr_to_dense(vals, idx, 128 // bw))
+        np.testing.assert_allclose(back, w, rtol=1e-6)
+        assert 0.0 <= density <= 1.0
+
+    def test_matmul_matches_dense(self, rng):
+        w = _sparse_blocks(rng, 64, 128, 8, 16, keep=0.4)
+        vals, idx, _ = spmm.dense_to_blockell(w, 8, 16)
+        d = _arr(rng, 24, 128)
+        got = spmm.bsr_dxct(d, vals, idx)
+        want = np.asarray(d) @ w.T
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_all_zero_matrix(self, rng):
+        w = np.zeros((32, 64), F32)
+        vals, idx, density = spmm.dense_to_blockell(w, 8, 16)
+        assert density == 0.0
+        d = _arr(rng, 8, 64)
+        assert (np.asarray(spmm.bsr_dxct(d, vals, idx)) == 0).all()
+
+    def test_padding_slots_ignored(self, rng):
+        """Rows with fewer blocks than max_blocks must not pollute output."""
+        w = np.zeros((16, 64), F32)
+        w[0:8, 0:16] = 1.0  # block-row 0: 1 block; block-row 1: 3 blocks
+        w[8:16, 0:48] = 2.0
+        vals, idx, _ = spmm.dense_to_blockell(w, 8, 16)
+        assert (np.asarray(idx)[0, 1:] == -1).all()
+        d = _arr(rng, 4, 64)
+        np.testing.assert_allclose(
+            spmm.bsr_dxct(d, vals, idx), np.asarray(d) @ w.T, rtol=2e-4, atol=2e-4
+        )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n_br=st.integers(1, 6),
+        n_bc=st.integers(1, 6),
+        keep=st.floats(0.1, 0.9),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_blocks(self, n_br, n_bc, keep, seed):
+        r = np.random.default_rng(seed)
+        bh, bw = 8, 16
+        w = _sparse_blocks(r, n_br * bh, n_bc * bw, bh, bw, keep)
+        vals, idx, _ = spmm.dense_to_blockell(w, bh, bw)
+        d = jnp.asarray(r.standard_normal((8, n_bc * bw)).astype(F32))
+        np.testing.assert_allclose(
+            spmm.bsr_dxct(d, vals, idx), np.asarray(d) @ w.T, rtol=5e-4, atol=5e-4
+        )
+
+
+# ---------------------------------------------------------------------------
+# masked update oracle (used by the debias/retrain artifacts)
+# ---------------------------------------------------------------------------
+
+
+class TestMaskedUpdate:
+    def test_mask_freezes_zeros(self, rng):
+        w = _arr(rng, 10, 10)
+        step = _arr(rng, 10, 10, scale=0.1)
+        mask = jnp.asarray((rng.random((10, 10)) < 0.5).astype(F32))
+        out = np.asarray(ref.masked_update(w, step, mask))
+        assert (out[np.asarray(mask) == 0] == 0).all()
+
+    def test_unmasked_positions_update(self, rng):
+        w = _arr(rng, 10, 10)
+        step = _arr(rng, 10, 10, scale=0.1)
+        mask = jnp.ones((10, 10), F32)
+        np.testing.assert_allclose(ref.masked_update(w, step, mask), w - step, rtol=1e-6)

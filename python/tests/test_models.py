@@ -1,0 +1,180 @@
+"""Model zoo: shapes, parameter counts, init statistics, gradient checks."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile.models import REGISTRY, get
+from compile.models import common as C
+
+F32 = np.float32
+
+
+def _batch(rng, model, b=4):
+    c, h, w = model.INPUT_SHAPE
+    x = jnp.asarray(rng.standard_normal((b, c, h, w)).astype(F32))
+    y = jnp.asarray(rng.integers(0, model.NUM_CLASSES, b).astype(np.int32))
+    return x, y
+
+
+class TestRegistry:
+    def test_all_models_present(self):
+        assert set(REGISTRY) == {"mlp", "lenet", "alexnet_s", "vgg_s", "resnet_s"}
+
+    def test_get_unknown_raises(self):
+        with pytest.raises(KeyError):
+            get("inception_v9")
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+class TestEveryModel:
+    def test_spec_matches_params(self, name):
+        model = REGISTRY[name]
+        params, spec = model.init(0)
+        assert len(params) == len(spec)
+        for p, s in zip(params, spec):
+            assert list(p.shape) == s["shape"], s["name"]
+            assert p.dtype == np.float32
+
+    def test_logits_shape(self, name, rng):
+        model = REGISTRY[name]
+        params, _ = model.init(0)
+        x, _ = _batch(rng, model)
+        logits = model.apply([jnp.asarray(p) for p in params], x)
+        assert logits.shape == (4, model.NUM_CLASSES)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_deterministic_init(self, name):
+        model = REGISTRY[name]
+        p1, _ = model.init(7)
+        p2, _ = model.init(7)
+        for a, b in zip(p1, p2):
+            np.testing.assert_array_equal(a, b)
+
+    def test_seed_changes_init(self, name):
+        model = REGISTRY[name]
+        p1, _ = model.init(0)
+        p2, _ = model.init(1)
+        assert any(not np.array_equal(a, b) for a, b in zip(p1, p2))
+
+    def test_biases_zero_and_nonprunable(self, name):
+        model = REGISTRY[name]
+        params, spec = model.init(0)
+        for p, s in zip(params, spec):
+            if s["kind"] in ("conv_b", "fc_b", "bn_bias"):
+                assert not s["prunable"]
+                assert (p == 0).all()
+
+    def test_he_init_std(self, name):
+        """Weight std ≈ sqrt(2/fan_in) for large leaves."""
+        model = REGISTRY[name]
+        params, spec = model.init(0)
+        for p, s in zip(params, spec):
+            if not s["prunable"] or p.size < 5000:
+                continue
+            if s["kind"] == "conv_w":
+                fan_in = p.shape[1] * p.shape[2] * p.shape[3]
+            else:
+                fan_in = p.shape[1]
+            want = np.sqrt(2.0 / fan_in)
+            assert abs(p.std() - want) / want < 0.1, s["name"]
+
+    def test_loss_grad_finite(self, name, rng):
+        model = REGISTRY[name]
+        params, _ = model.init(0)
+        x, y = _batch(rng, model)
+        ps = tuple(jnp.asarray(p) for p in params)
+
+        def loss_fn(p):
+            return C.softmax_cross_entropy(model.apply(list(p), x), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(ps)
+        assert np.isfinite(float(loss))
+        for g in grads:
+            assert np.isfinite(np.asarray(g)).all()
+
+    def test_initial_loss_near_uniform(self, name, rng):
+        """Fresh net ⇒ CE ≈ ln(num_classes)."""
+        model = REGISTRY[name]
+        params, _ = model.init(0)
+        x, y = _batch(rng, model, b=8)
+        loss = float(
+            C.softmax_cross_entropy(model.apply([jnp.asarray(p) for p in params], x), y)
+        )
+        assert loss < 3 * np.log(model.NUM_CLASSES) + 1.0
+
+
+class TestLeNetPaperSizes:
+    """LeNet-5 must match the paper's Table A1 exactly."""
+
+    def test_layer_weight_counts(self):
+        _, spec = REGISTRY["lenet"].init(0)
+        counts = {s["name"]: int(np.prod(s["shape"])) for s in spec if s["prunable"]}
+        assert counts == {
+            "conv1_w": 500,
+            "conv2_w": 25_000,
+            "fc1_w": 400_000,
+            "fc2_w": 5_000,
+        }
+
+    def test_total_prunable(self):
+        _, spec = REGISTRY["lenet"].init(0)
+        total = sum(int(np.prod(s["shape"])) for s in spec if s["prunable"])
+        assert total == 430_500  # Table A1 "Total Weights"
+
+
+class TestFCThroughPaperKernels:
+    def test_fc_gradient_check(self, rng):
+        """Finite differences through the custom VJP (Figs. 2-3 kernels)."""
+        x = jnp.asarray(rng.standard_normal((3, 5)).astype(F32))
+        w = jnp.asarray(rng.standard_normal((4, 5)).astype(F32))
+
+        def f(w_):
+            return jnp.sum(C.fc_apply(x, w_) ** 2)
+
+        g = np.asarray(jax.grad(f)(w))
+        eps = 1e-3
+        for idx in [(0, 0), (1, 3), (3, 4)]:
+            wp = np.asarray(w).copy(); wp[idx] += eps
+            wm = np.asarray(w).copy(); wm[idx] -= eps
+            fd = (float(f(jnp.asarray(wp))) - float(f(jnp.asarray(wm)))) / (2 * eps)
+            assert abs(fd - g[idx]) < 2e-1 * max(1.0, abs(fd)), idx
+
+    def test_fc_x_gradient(self, rng):
+        x = jnp.asarray(rng.standard_normal((2, 6)).astype(F32))
+        w = jnp.asarray(rng.standard_normal((3, 6)).astype(F32))
+
+        def f(x_):
+            return jnp.sum(jnp.sin(C.fc_apply(x_, w)))
+
+        g = np.asarray(jax.grad(f)(x))
+        eps = 1e-3
+        for idx in [(0, 0), (1, 5)]:
+            xp = np.asarray(x).copy(); xp[idx] += eps
+            xm = np.asarray(x).copy(); xm[idx] -= eps
+            fd = (float(f(jnp.asarray(xp))) - float(f(jnp.asarray(xm)))) / (2 * eps)
+            assert abs(fd - g[idx]) < 2e-1 * max(1.0, abs(fd)), idx
+
+
+class TestCommonOps:
+    def test_max_pool(self, rng):
+        x = jnp.arange(16, dtype=jnp.float32).reshape(1, 1, 4, 4)
+        out = np.asarray(C.max_pool(x))
+        np.testing.assert_array_equal(out[0, 0], [[5, 7], [13, 15]])
+
+    def test_batch_norm_normalizes(self, rng):
+        x = jnp.asarray(rng.standard_normal((8, 3, 5, 5)).astype(F32) * 4 + 2)
+        out = np.asarray(C.batch_norm(x, jnp.ones(3), jnp.zeros(3)))
+        assert abs(out.mean()) < 1e-3
+        assert abs(out.std() - 1.0) < 1e-2
+
+    def test_softmax_ce_uniform(self):
+        logits = jnp.zeros((4, 10), jnp.float32)
+        y = jnp.asarray([0, 1, 2, 3], dtype=jnp.int32)
+        assert abs(float(C.softmax_cross_entropy(logits, y)) - np.log(10)) < 1e-5
+
+    def test_correct_count(self):
+        logits = jnp.asarray(np.eye(4, 10, dtype=F32) * 5)
+        y = jnp.asarray([0, 1, 2, 0], dtype=np.int32)
+        assert int(C.correct_count(logits, y)) == 3

@@ -1,0 +1,219 @@
+"""Optimizer math vs hand-rolled numpy references.
+
+Validates Algorithms 1-2 from the paper (Prox-RMSProp, Prox-ADAM) and the
+baseline updates (masked ADAM for debias/retrain, MM L-step) against
+independent numpy implementations written straight from the paper's
+pseudocode.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import optim
+
+F32 = np.float32
+
+
+def np_soft_threshold(x, t):
+    return np.sign(x) * np.maximum(np.abs(x) - t, 0.0)
+
+
+def np_prox_rmsprop(w, g, v, lam, lr, beta=optim.RMSPROP_BETA, eps=optim.EPS):
+    """Algorithm 1, transcribed from the paper."""
+    v2 = beta * v + (1 - beta) * g * g
+    w2 = w - lr * g / (np.sqrt(v2) + eps)
+    return np_soft_threshold(w2, lr * lam), v2
+
+
+def np_prox_adam(w, g, m, v, t, lam, lr, b1=optim.ADAM_BETA1, b2=optim.ADAM_BETA2, eps=optim.EPS):
+    """Algorithm 2, transcribed from the paper."""
+    t2 = t + 1
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * g * g
+    mhat = m2 / (1 - b1**t2)
+    vhat = v2 / (1 - b2**t2)
+    w2 = w - lr * mhat / (np.sqrt(vhat) + eps)
+    return np_soft_threshold(w2, lr * lam), m2, v2, t2
+
+
+def _leaves(rng, shapes, scale=1.0):
+    return [jnp.asarray((rng.standard_normal(s) * scale).astype(F32)) for s in shapes]
+
+
+SHAPES = [(5, 7), (20,), (3, 4, 2, 2)]
+
+
+class TestProxSGD:
+    def test_matches_reference(self, rng):
+        w = _leaves(rng, SHAPES)
+        g = _leaves(rng, SHAPES, 0.1)
+        out = optim.prox_sgd(w, g, [True] * 3, 0.05, 0.1)
+        for wi, gi, oi in zip(w, g, out):
+            want = np_soft_threshold(np.asarray(wi) - 0.1 * np.asarray(gi), 0.1 * 0.05)
+            np.testing.assert_allclose(oi, want, rtol=1e-5, atol=1e-6)
+
+    def test_nonprunable_skips_prox(self, rng):
+        w = _leaves(rng, [(6, 6)])
+        g = _leaves(rng, [(6, 6)], 0.1)
+        out = optim.prox_sgd(w, g, [False], 10.0, 0.1)  # huge lambda
+        want = np.asarray(w[0]) - 0.1 * np.asarray(g[0])
+        np.testing.assert_allclose(out[0], want, rtol=1e-6)
+
+
+class TestProxRMSProp:
+    def test_matches_reference(self, rng):
+        w = _leaves(rng, SHAPES)
+        g = _leaves(rng, SHAPES, 0.5)
+        v = _leaves(rng, SHAPES, 0.0)
+        p2, v2 = optim.prox_rmsprop(w, g, v, [True] * 3, 0.02, 0.01)
+        for wi, gi, vi, pi, v2i in zip(w, g, v, p2, v2):
+            pw, vw = np_prox_rmsprop(np.asarray(wi), np.asarray(gi), np.asarray(vi), 0.02, 0.01)
+            np.testing.assert_allclose(pi, pw, rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(v2i, vw, rtol=1e-5, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        lam=st.floats(0.0, 1.0),
+        lr=st.floats(1e-5, 0.5),
+        steps=st.integers(1, 5),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_multi_step(self, lam, lr, steps, seed):
+        r = np.random.default_rng(seed)
+        w = [jnp.asarray(r.standard_normal((4, 6)).astype(F32))]
+        v = [jnp.zeros((4, 6), F32)]
+        wn, vn = np.asarray(w[0]).copy(), np.zeros((4, 6), F32)
+        for _ in range(steps):
+            g = [jnp.asarray(r.standard_normal((4, 6)).astype(F32))]
+            w, v = optim.prox_rmsprop(w, g, v, [True], lam, lr)
+            wn, vn = np_prox_rmsprop(wn, np.asarray(g[0]), vn, lam, lr)
+        np.testing.assert_allclose(w[0], wn, rtol=1e-4, atol=1e-5)
+
+
+class TestProxAdam:
+    def test_matches_reference_multistep(self, rng):
+        shapes = SHAPES
+        w = _leaves(rng, shapes)
+        m = [jnp.zeros(s, F32) for s in shapes]
+        v = [jnp.zeros(s, F32) for s in shapes]
+        t = jnp.float32(0.0)
+        wn = [np.asarray(x).copy() for x in w]
+        mn = [np.zeros(s, F32) for s in shapes]
+        vn = [np.zeros(s, F32) for s in shapes]
+        tn = 0
+        for _ in range(4):
+            g = _leaves(rng, shapes, 0.3)
+            w, m, v, t = optim.prox_adam(w, g, m, v, t, [True] * 3, 0.03, 0.002)
+            for i in range(3):
+                wn[i], mn[i], vn[i], _ = np_prox_adam(
+                    wn[i], np.asarray(g[i]), mn[i], vn[i], tn, 0.03, 0.002
+                )
+            tn += 1
+        assert float(t) == 4.0
+        for i in range(3):
+            np.testing.assert_allclose(w[i], wn[i], rtol=1e-4, atol=1e-5)
+
+    def test_produces_exact_zeros(self, rng):
+        w = _leaves(rng, [(50, 50)], scale=0.01)
+        g = _leaves(rng, [(50, 50)], scale=0.01)
+        m = [jnp.zeros((50, 50), F32)]
+        v = [jnp.zeros((50, 50), F32)]
+        p2, *_ = optim.prox_adam(w, g, m, v, jnp.float32(0), [True], 5.0, 0.01)
+        out = np.asarray(p2[0])
+        assert (out == 0).mean() > 0.5  # lam*lr = 0.05 >> weight scale 0.01
+
+    def test_lambda_zero_is_plain_adam(self, rng):
+        """λ=0 ⇒ no weight is zeroed (prox is identity)."""
+        w = _leaves(rng, [(30, 30)])
+        g = _leaves(rng, [(30, 30)], 0.1)
+        m = [jnp.zeros((30, 30), F32)]
+        v = [jnp.zeros((30, 30), F32)]
+        p2, *_ = optim.prox_adam(w, g, m, v, jnp.float32(0), [True], 0.0, 0.01)
+        assert (np.asarray(p2[0]) == 0).sum() == 0
+
+    def test_monotone_compression_in_lambda(self, rng):
+        """Higher λ ⇒ at least as many zeros after one step (Section 4.2)."""
+        w = _leaves(rng, [(100, 100)], scale=0.05)
+        g = _leaves(rng, [(100, 100)], scale=0.05)
+        m = [jnp.zeros((100, 100), F32)]
+        v = [jnp.zeros((100, 100), F32)]
+        zeros = []
+        for lam in [0.1, 1.0, 10.0]:
+            p2, *_ = optim.prox_adam(w, g, m, v, jnp.float32(0), [True], lam, 0.01)
+            zeros.append(int((np.asarray(p2[0]) == 0).sum()))
+        assert zeros[0] <= zeros[1] <= zeros[2]
+
+
+class TestMaskedAdam:
+    def test_zeros_stay_zero(self, rng):
+        shapes = [(20, 20)]
+        w0 = _leaves(rng, shapes)
+        mask = [jnp.asarray((rng.random(shapes[0]) < 0.4).astype(F32))]
+        w = [w0[0] * mask[0]]
+        m = [jnp.zeros(shapes[0], F32)]
+        v = [jnp.zeros(shapes[0], F32)]
+        t = jnp.float32(0)
+        for _ in range(3):
+            g = _leaves(rng, shapes, 0.5)
+            w, m, v, t = optim.masked_adam(w, g, m, v, t, mask, 0.01)
+        out = np.asarray(w[0])
+        assert (out[np.asarray(mask[0]) == 0] == 0.0).all()
+
+    def test_all_ones_mask_equals_adam_with_zero_lambda(self, rng):
+        shapes = [(10, 10)]
+        w = _leaves(rng, shapes)
+        g = _leaves(rng, shapes, 0.2)
+        m = [jnp.zeros(shapes[0], F32)]
+        v = [jnp.zeros(shapes[0], F32)]
+        ones = [jnp.ones(shapes[0], F32)]
+        a, am, av, _ = optim.masked_adam(w, g, m, v, jnp.float32(0), ones, 0.01)
+        b, bm, bv, _ = optim.prox_adam(w, g, m, v, jnp.float32(0), [True], 0.0, 0.01)
+        np.testing.assert_allclose(a[0], b[0], rtol=1e-6)
+        np.testing.assert_allclose(av[0], bv[0], rtol=1e-6)
+
+    def test_masked_gradients_accumulate_no_momentum(self, rng):
+        shapes = [(8, 8)]
+        w = _leaves(rng, shapes)
+        g = _leaves(rng, shapes, 1.0)
+        m = [jnp.zeros(shapes[0], F32)]
+        v = [jnp.zeros(shapes[0], F32)]
+        zeros_mask = [jnp.zeros(shapes[0], F32)]
+        _, m2, v2, _ = optim.masked_adam(w, g, m, v, jnp.float32(0), zeros_mask, 0.01)
+        assert (np.asarray(m2[0]) == 0).all() and (np.asarray(v2[0]) == 0).all()
+
+
+class TestMMLStep:
+    def test_pull_toward_theta(self, rng):
+        """With zero loss-gradient and λ=0, the L-step pulls w toward θ."""
+        w = [jnp.ones((6, 6), F32) * 2.0]
+        g = [jnp.zeros((6, 6), F32)]
+        mom = [jnp.zeros((6, 6), F32)]
+        theta = [jnp.zeros((6, 6), F32)]
+        lag = [jnp.zeros((6, 6), F32)]
+        w2, _ = optim.mm_lstep(w, g, mom, theta, lag, [True], mu=1.0, lr=0.1)
+        assert (np.asarray(w2[0]) < 2.0).all()
+
+    def test_matches_reference(self, rng):
+        w = _leaves(rng, [(5, 5)])
+        g = _leaves(rng, [(5, 5)], 0.3)
+        mom = _leaves(rng, [(5, 5)], 0.1)
+        theta = _leaves(rng, [(5, 5)])
+        lag = _leaves(rng, [(5, 5)], 0.05)
+        mu, lr = 0.7, 0.02
+        w2, mo2 = optim.mm_lstep(w, g, mom, theta, lag, [True], mu, lr)
+        g_aug = np.asarray(g[0]) + mu * (np.asarray(w[0]) - np.asarray(theta[0])) - np.asarray(lag[0])
+        mo_want = optim.MM_MOMENTUM * np.asarray(mom[0]) + g_aug
+        w_want = np.asarray(w[0]) - lr * mo_want
+        np.testing.assert_allclose(mo2[0], mo_want, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(w2[0], w_want, rtol=1e-5, atol=1e-6)
+
+    def test_nonprunable_gets_plain_sgd(self, rng):
+        w = _leaves(rng, [(4, 4)])
+        g = _leaves(rng, [(4, 4)], 0.2)
+        mom = [jnp.zeros((4, 4), F32)]
+        theta = [jnp.ones((4, 4), F32) * 100]  # would dominate if applied
+        lag = [jnp.zeros((4, 4), F32)]
+        w2, _ = optim.mm_lstep(w, g, mom, theta, lag, [False], 1.0, 0.1)
+        want = np.asarray(w[0]) - 0.1 * np.asarray(g[0])
+        np.testing.assert_allclose(w2[0], want, rtol=1e-5)

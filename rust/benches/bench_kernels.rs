@@ -1,0 +1,158 @@
+//! Kernel micro-benchmarks (§Perf substrate): the rust CSR kernels, the
+//! dense baselines, the Block-ELL kernel, prox, im2col — plus the
+//! Figure-1 storage-format comparison on realistic prox-trained-style
+//! weight matrices.
+//!
+//! This is the harness the L3 performance pass iterates against
+//! (EXPERIMENTS.md §Perf). Sizes mirror the hot layers: LeNet fc1
+//! (500×800) and a VGG-ish conv-as-matmul (128×1152).
+
+#[path = "common.rs"]
+mod common;
+
+use proxcomp::sparse::{ops, prox, BlockEllMatrix, CooMatrix, CsrMatrix, DiaMatrix, EllMatrix};
+use proxcomp::tensor::{self, ConvSpec, Tensor};
+use proxcomp::util::rng::Rng;
+
+fn sparse_matrix(rng: &mut Rng, n: usize, k: usize, rate: f64) -> (Vec<f32>, CsrMatrix) {
+    let mut dense = rng.normal_vec(n * k, 0.05);
+    let t = prox::magnitude_quantile(&dense, rate);
+    prox::hard_threshold_inplace(&mut dense, t);
+    let csr = CsrMatrix::from_dense(&dense, n, k);
+    (dense, csr)
+}
+
+fn gflops(flops: f64, us: f64) -> f64 {
+    flops / (us * 1e-6) / 1e9
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0);
+    let reps = 20;
+
+    common::section("kernel micro-benchmarks (median of 20 reps)");
+
+    // --- D×C' and D×C at LeNet-fc1 shape across sparsity levels
+    let (b, n, k) = (128, 500, 800);
+    let d = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
+    let g = Tensor::new(vec![b, n], rng.normal_vec(b * n, 1.0));
+    println!("\nD×C' forward (B={b}, N={n}, K={k}) — paper Figure 2 kernel:");
+    println!("{:<22} {:>10} {:>10} {:>9}", "variant", "µs", "GFLOP/s", "vs dense");
+    let dense_w = Tensor::new(vec![n, k], rng.normal_vec(n * k, 1.0));
+    let dense_us = common::time_median_us(reps, || {
+        tensor::matmul_nt(&d, &dense_w);
+    });
+    let dense_flops = 2.0 * (b * n * k) as f64;
+    println!("{:<22} {:>10.0} {:>10.1} {:>9}", "dense matmul_nt", dense_us, gflops(dense_flops, dense_us), "1.00×");
+    for rate in [0.5, 0.9, 0.97] {
+        let (_, csr) = sparse_matrix(&mut rng, n, k, rate);
+        // §Perf before/after: scalar (Figure-2 port) vs column-major SpMM.
+        let us_scalar = common::time_median_us(reps, || {
+            ops::dxct_scalar(&d, &csr);
+        });
+        let us = common::time_median_us(reps, || {
+            ops::dxct(&d, &csr);
+        });
+        let flops = 2.0 * (b * csr.nnz()) as f64;
+        println!(
+            "{:<22} {:>10.0} {:>10.1} {:>8.2}×   (scalar form: {:.0} µs, SpMM {:.1}× faster)",
+            format!("CSR dxct @ {:.0}%", rate * 100.0),
+            us,
+            gflops(flops, us),
+            dense_us / us,
+            us_scalar,
+            us_scalar / us,
+        );
+    }
+
+    println!("\nD×C backward (B={b}, N={n}, K={k}) — paper Figure 3 kernel:");
+    for rate in [0.9, 0.97] {
+        let (_, csr) = sparse_matrix(&mut rng, n, k, rate);
+        let us_scalar = common::time_median_us(reps, || {
+            ops::dxc_scalar(&g, &csr);
+        });
+        let us = common::time_median_us(reps, || {
+            ops::dxc(&g, &csr);
+        });
+        println!(
+            "  CSR dxc @ {:>3.0}%: {:>8.0} µs ({:.2}× vs dense fwd; scalar form {:.0} µs, SpMM {:.1}× faster)",
+            rate * 100.0,
+            us,
+            dense_us / us,
+            us_scalar,
+            us_scalar / us
+        );
+    }
+
+    // --- Block-ELL kernel (the TPU-format mirror)
+    println!("\nBlock-ELL dxct (block 8×16):");
+    for rate in [0.9, 0.97] {
+        let (dense, _) = sparse_matrix(&mut rng, 512, 768, rate);
+        let bell = BlockEllMatrix::from_dense(&dense, 512, 768, 8, 16);
+        let d2 = Tensor::new(vec![64, 768], rng.normal_vec(64 * 768, 1.0));
+        let us = common::time_median_us(reps, || {
+            bell.dxct(&d2);
+        });
+        println!(
+            "  @ {:>3.0}% element-sparsity: {:>8.0} µs (block density {:.2}, pad overhead {:.2})",
+            rate * 100.0,
+            us,
+            bell.block_density(),
+            bell.padding_overhead()
+        );
+    }
+
+    // --- prox kernel
+    println!("\nprox soft-threshold (400k elements — LeNet fc1):");
+    let xs = rng.normal_vec(400_000, 0.05);
+    for (name, parallel) in [("serial", false), ("parallel", true)] {
+        let mut buf = xs.clone();
+        let us = common::time_median_us(reps, || {
+            if parallel {
+                prox::soft_threshold_parallel(&mut buf, 0.01);
+            } else {
+                prox::soft_threshold_inplace(&mut buf, 0.01);
+            }
+        });
+        println!("  {name:<9} {us:>8.1} µs ({:.1} Gelem/s)", 400_000.0 / us / 1e3);
+    }
+
+    // --- im2col + conv
+    println!("\nconv2d via im2col (LeNet conv2: 20→50 ch, 5×5, 12×12 input, B=64):");
+    let x = Tensor::new(vec![64, 20, 12, 12], rng.normal_vec(64 * 20 * 144, 1.0));
+    let w = Tensor::new(vec![50, 20, 5, 5], rng.normal_vec(25_000, 0.1));
+    let us = common::time_median_us(reps, || {
+        tensor::conv2d(&x, &w, &[0.0; 50], ConvSpec { stride: 1, pad: 0 });
+    });
+    println!("  dense: {us:.0} µs");
+
+    // --- Figure-1 format storage comparison on a prox-trained-style matrix
+    common::section("Figure 1 formats: storage on a 97%-sparse 500×800 weight matrix");
+    let (dense, csr) = sparse_matrix(&mut rng, 500, 800, 0.97);
+    let coo = CooMatrix::from_dense(&dense, 500, 800);
+    let ell = EllMatrix::from_dense(&dense, 500, 800);
+    let dia = DiaMatrix::from_dense(&dense, 500, 800);
+    println!("{:<8} {:>12} {:>10}", "format", "bytes", "vs dense");
+    let dense_bytes = 500 * 800 * 4;
+    for (name, bytes) in [
+        ("dense", dense_bytes),
+        ("CSR", csr.storage_bytes()),
+        ("COO", coo.storage_bytes()),
+        ("ELL", ell.storage_bytes()),
+        ("DIA", dia.storage_bytes()),
+    ] {
+        println!("{:<8} {:>12} {:>9.2}×", name, bytes, dense_bytes as f64 / bytes as f64);
+    }
+    println!(
+        "\npaper Section 3.1 ordering (CSR < COO ≪ ELL/DIA for unstructured): {}",
+        if csr.storage_bytes() < coo.storage_bytes()
+            && coo.storage_bytes() < ell.storage_bytes()
+            && coo.storage_bytes() < dia.storage_bytes()
+        {
+            "HOLDS"
+        } else {
+            "DOES NOT HOLD"
+        }
+    );
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! Table 3 — inference speedups by model compression (Lenet-5).
+//!
+//! The paper reports, for Lenet-5/MNIST:
+//!
+//! | GPU            | GTX 1080 Ti       | ARM Mali-T860      |
+//! | Compression    | Yes    | No       | Yes     | No       |
+//! | Model size     | 148 KB | 5.0 MB   | 148 KB  | 5.0 MB   |
+//! | Inference time | 8572ms | 16977ms  | 506067ms| 606699ms |
+//! | Speedup        | 1.98×  |          | 1.20×   |          |
+//!
+//! We regenerate the table twice (DESIGN.md §4 substitution):
+//! 1. **measured** — the rust CSR engine vs the dense engine on this
+//!    host (real wallclock, the honest number), and
+//! 2. **modeled** — the roofline device model with Mali-T860 and
+//!    GTX 1080 Ti parameters (the paper's devices).
+//!
+//! The shape to reproduce: compressed model ~30× smaller but only
+//! ~1.2-2× faster, because irregular sparsity runs at low efficiency.
+
+#[path = "common.rs"]
+mod common;
+
+use proxcomp::config::RunConfig;
+use proxcomp::coordinator::{trainer::StepScalars, Trainer};
+use proxcomp::data;
+use proxcomp::device::{estimate_speedup, DeviceModel, GTX_1080TI, MALI_T860};
+use proxcomp::inference::Engine;
+use proxcomp::runtime::{Manifest, ParamBundle, Runtime};
+use proxcomp::tensor::Tensor;
+
+fn train_compressed_lenet(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<ParamBundle> {
+    // SpC + debias to the paper's Table-3 operating point: λ high enough
+    // that the *conv* layers also compress hard (paper Table A1: conv1
+    // ~70%, conv2 ~93%) — the Mali-T860 balance depends on it.
+    let cfg = RunConfig {
+        model: "lenet".into(),
+        lambda: 0.8,
+        lr: 2e-3,
+        steps: common::scaled(250),
+        train_examples: 4096,
+        test_examples: 512,
+        ..RunConfig::default()
+    };
+    let mut trainer = Trainer::new(manifest, &cfg)?;
+    let scalars = StepScalars { lambda: cfg.lambda, lr: cfg.lr, mu: 0.0 };
+    trainer.run_steps(rt, "train_prox_adam", cfg.steps, scalars, 0)?;
+    proxcomp::compress::debias::retrain(rt, &mut trainer, common::scaled(60), 2e-4)?;
+    for (layer, nnz, total) in trainer.state.params.layer_stats() {
+        println!("  {layer:<8} {:.1}% compressed", 100.0 * (1.0 - nnz as f64 / total as f64));
+    }
+    Ok(trainer.state.params)
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let mut rt = Runtime::cpu()?;
+
+    common::section("Table 3: inference speedups by model compression (Lenet-5)");
+    let params = train_compressed_lenet(&mut rt, &manifest)?;
+    println!("trained LeNet-5 at compression rate {:.4}", params.compression_rate());
+
+    let dense = Engine::from_bundle("lenet", &params, false)?;
+    let sparse = Engine::from_bundle("lenet", &params, true)?;
+
+    // --- model size row
+    println!("\nmodel size:");
+    println!("  compressed {:>7.1} KB   dense {:>7.1} KB   ({:.0}× smaller)",
+        sparse.model_size_bytes() as f64 / 1024.0,
+        dense.model_size_bytes() as f64 / 1024.0,
+        dense.model_size_bytes() as f64 / sparse.model_size_bytes() as f64,
+    );
+    println!("  paper:     148 KB vs 5.0 MB (34×)");
+
+    // --- measured on this host
+    let test = data::generate("synth-mnist", 512, 99)?;
+    println!("\nmeasured (rust engines, this host), batched inference over {} images:", test.n);
+    println!("{:<14} {:>12} {:>14}", "engine", "total ms", "images/s");
+    let mut times = [0.0f64; 2];
+    for (i, (name, engine)) in [("dense", &dense), ("compressed", &sparse)].iter().enumerate() {
+        // Warmup + 3 reps, take the best (steady-state cache behaviour).
+        let mut xs = Vec::with_capacity(test.n * 784);
+        for j in 0..test.n {
+            xs.extend_from_slice(test.image(j));
+        }
+        let x = Tensor::new(vec![test.n, 1, 28, 28], xs);
+        engine.forward(&x)?;
+        let us = common::time_median_us(3, || {
+            engine.forward(&x).unwrap();
+        });
+        times[i] = us / 1e3;
+        println!("{:<14} {:>12.1} {:>14.0}", name, us / 1e3, test.n as f64 / (us / 1e6));
+    }
+    println!("measured speedup: {:.2}×   (paper: 1.98× desktop, 1.20× embedded)", times[0] / times[1]);
+
+    // --- modeled on the paper's devices (batch 64, the steady-state
+    // regime the paper's whole-test-set timings reflect)
+    println!("\nmodeled (roofline device model, batch 64):");
+    println!("{:<20} {:>13} {:>13} {:>9}", "device", "dense ms", "compressed ms", "speedup");
+    let dense_work = dense.work_profile(64, 1, 28, 28);
+    let sparse_work = sparse.work_profile(64, 1, 28, 28);
+    for dev in [&GTX_1080TI as &DeviceModel, &MALI_T860] {
+        let est = estimate_speedup(dev, &dense, &sparse, &dense_work, &sparse_work);
+        println!(
+            "{:<20} {:>13.4} {:>13.4} {:>8.2}×",
+            est.device,
+            est.dense_seconds * 1e3,
+            est.sparse_seconds * 1e3,
+            est.speedup()
+        );
+    }
+    println!("\npaper speedups: GTX 1080 Ti 1.98×, Mali-T860 1.20×");
+    println!(
+        "shape check: speedup far below the ~{:.0}× size reduction on every\n\
+         device (irregular sparsity runs at low kernel efficiency) — the\n\
+         paper's closing observation.",
+        dense.model_size_bytes() as f64 / sparse.model_size_bytes() as f64
+    );
+
+    // Accuracy parity (compression must not corrupt the model).
+    let acc_d = dense.accuracy(&test, 128)?;
+    let acc_s = sparse.accuracy(&test, 128)?;
+    println!("\naccuracy parity: dense {acc_d:.4} vs compressed {acc_s:.4}");
+    assert!((acc_d - acc_s).abs() < 1e-9, "CSR engine must be numerically identical");
+    Ok(())
+}

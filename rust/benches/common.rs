@@ -1,0 +1,124 @@
+//! Shared helpers for the bench harness (no criterion offline — each
+//! bench is a `harness = false` binary that prints the paper's rows and
+//! writes JSON/CSV under `reports/`).
+//!
+//! Scaling: benches default to testbed-sized runs (minutes, not hours).
+//! `PROXCOMP_BENCH_SCALE` multiplies step counts (e.g. `=4` for longer,
+//! more paper-faithful curves); `PROXCOMP_BENCH_MODELS` overrides the
+//! model list (e.g. `=lenet,vgg_s`).
+
+#![allow(dead_code)]
+
+use proxcomp::config::RunConfig;
+use proxcomp::metrics::RunResult;
+use proxcomp::util::json::Json;
+
+/// Step-count multiplier from the environment.
+pub fn scale() -> f64 {
+    std::env::var("PROXCOMP_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse::<f64>().ok())
+        .unwrap_or(1.0)
+        .max(0.05)
+}
+
+pub fn scaled(steps: usize) -> usize {
+    ((steps as f64 * scale()).round() as usize).max(10)
+}
+
+/// Models to bench (default: the fast pair; set
+/// `PROXCOMP_BENCH_MODELS=mlp,lenet,alexnet_s,vgg_s,resnet_s` for all).
+pub fn bench_models(default: &[&str]) -> Vec<String> {
+    match std::env::var("PROXCOMP_BENCH_MODELS") {
+        Ok(v) => v.split(',').filter(|s| !s.is_empty()).map(String::from).collect(),
+        Err(_) => default.iter().map(|s| s.to_string()).collect(),
+    }
+}
+
+/// Baseline per-model run configuration tuned for the CPU testbed: short
+/// but long enough that SpC separates from Pru and curves are non-trivial.
+pub fn base_config(model: &str) -> RunConfig {
+    let mut cfg = RunConfig {
+        model: model.to_string(),
+        train_examples: 2048,
+        test_examples: 512,
+        ..RunConfig::default()
+    };
+    match model {
+        "mlp" => {
+            cfg.steps = scaled(150);
+            cfg.lr = 1e-3;
+            cfg.lambda = 0.4;
+        }
+        "lenet" => {
+            cfg.steps = scaled(150);
+            cfg.lr = 2e-3;
+            cfg.lambda = 0.4;
+        }
+        "alexnet_s" | "vgg_s" | "resnet_s" => {
+            cfg.steps = scaled(80);
+            cfg.lr = 1e-3;
+            cfg.lambda = 0.1;
+            cfg.train_examples = 1024;
+            cfg.test_examples = 256;
+        }
+        _ => {}
+    }
+    cfg.retrain_lr = cfg.lr * 0.1;
+    cfg
+}
+
+/// λ grid per model (paper Figure 6 sweeps λ around the accuracy knee).
+pub fn lambda_grid(model: &str) -> Vec<f32> {
+    match model {
+        "mlp" => vec![0.0, 0.05, 0.1, 0.2, 0.4, 0.8],
+        "lenet" => vec![0.0, 0.1, 0.2, 0.4, 0.8, 1.2],
+        _ => vec![0.0, 0.025, 0.05, 0.1, 0.25, 0.5],
+    }
+}
+
+/// MM hyperparameters (ℓ0-constraint C-step; the target rate plays the
+/// role of the paper's κ). μ ramps ×1.5 per C-step with the L-step rate
+/// decaying as 1/(1+lr·μ) — the LC reference schedule.
+pub fn mm_config(cfg: &mut RunConfig) {
+    cfg.pru_target_rate = 0.9;
+    cfg.mm_mu0 = 0.1;
+    cfg.mm_mu_growth = 1.5;
+    cfg.mm_compress_every = (cfg.steps / 16).max(5);
+    cfg.lr = 0.02; // SGD-momentum L-step rate
+}
+
+/// Pretty separator + section header.
+pub fn section(title: &str) {
+    println!("\n{}", "=".repeat(74));
+    println!("{title}");
+    println!("{}", "=".repeat(74));
+}
+
+/// One result row in the shared table format.
+pub fn result_row(r: &RunResult) {
+    println!(
+        "{:<14} {:<10} λ/rate {:<8.3} acc {:<7.4} comp {:<7.4} ({:>4.0}×) nnz {:>9} [{:.0}s]",
+        r.method, r.model, r.lambda, r.accuracy, r.compression_rate, r.times_factor(), r.nnz, r.wall_secs
+    );
+}
+
+/// Write results as a JSON report.
+pub fn write_results(name: &str, results: &[RunResult]) {
+    let arr = Json::Arr(results.iter().map(|r| r.to_json()).collect());
+    match proxcomp::metrics::write_json_report(name, &arr) {
+        Ok(p) => println!("[report] wrote {}", p.display()),
+        Err(e) => eprintln!("[report] failed: {e}"),
+    }
+}
+
+/// Simple wallclock measurement helper: median of `reps` runs in µs.
+pub fn time_median_us<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    proxcomp::util::stats::median(&samples)
+}

@@ -1,0 +1,323 @@
+//! Compressed checkpoints: the on-disk model format.
+//!
+//! Binary layout:
+//!
+//! ```text
+//! magic "PXCP" | u32 version | u64 header_len | header JSON (UTF-8)
+//! then per leaf, in spec order:
+//!   u8 encoding (0 = dense, 1 = CSR)
+//!   dense: u64 n, then n × f32 (LE)
+//!   csr:   u64 rows, u64 cols, u64 nnz,
+//!          (rows+1) × u32 ptr, nnz × u32 indices, nnz × f32 data
+//! ```
+//!
+//! Prunable 2-D-viewable leaves whose zero fraction exceeds
+//! `CSR_THRESHOLD` are stored CSR (conv weights view as (O, I·KH·KW),
+//! exactly the im2col layout the inference engine multiplies against);
+//! everything else is dense. `model_size_bytes` on the result is the
+//! paper's Table-3 "Model Size" quantity.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::runtime::{ParamBundle, ParamSpec};
+use crate::sparse::CsrMatrix;
+use crate::util::json::{self, Json};
+
+const MAGIC: &[u8; 4] = b"PXCP";
+const VERSION: u32 = 1;
+/// Store CSR when at least this fraction of a leaf is zero (below this
+/// the index overhead exceeds the dense payload).
+pub const CSR_THRESHOLD: f64 = 0.5;
+
+/// Loaded checkpoint: parameters + metadata.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub params: ParamBundle,
+    pub meta: Json,
+    /// Bytes of the serialized parameter payload (excl. header).
+    pub payload_bytes: usize,
+}
+
+/// Serialize a bundle; `meta` carries run provenance (model, method, λ…).
+pub fn save(path: &Path, params: &ParamBundle, meta: &Json) -> anyhow::Result<usize> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+
+    // Header: spec + meta (everything needed to reload without a manifest).
+    let mut header = Json::obj();
+    header.set("meta", meta.clone());
+    let specs: Vec<Json> = params
+        .specs
+        .iter()
+        .map(|s| {
+            let mut j = Json::obj();
+            j.set("name", Json::from(s.name.as_str()))
+                .set("kind", Json::from(s.kind.as_str()))
+                .set("shape", Json::from(s.shape.clone()))
+                .set("prunable", Json::from(s.prunable))
+                .set("layer", Json::from(s.layer.as_str()));
+            j
+        })
+        .collect();
+    header.set("specs", Json::Arr(specs));
+    let header_text = header.to_string_compact();
+    f.write_all(&(header_text.len() as u64).to_le_bytes())?;
+    f.write_all(header_text.as_bytes())?;
+
+    let mut payload = 0usize;
+    for (spec, values) in params.specs.iter().zip(&params.values) {
+        let zero_frac =
+            values.iter().filter(|&&v| v == 0.0).count() as f64 / values.len().max(1) as f64;
+        let (rows, cols) = matrix_view(spec);
+        if spec.prunable && zero_frac >= CSR_THRESHOLD && rows > 0 {
+            let csr = CsrMatrix::from_dense(values, rows, cols);
+            f.write_all(&[1u8])?;
+            f.write_all(&(csr.rows as u64).to_le_bytes())?;
+            f.write_all(&(csr.cols as u64).to_le_bytes())?;
+            f.write_all(&(csr.nnz() as u64).to_le_bytes())?;
+            for &p in &csr.ptr {
+                f.write_all(&(p as u32).to_le_bytes())?;
+            }
+            for &i in &csr.indices {
+                f.write_all(&i.to_le_bytes())?;
+            }
+            for &v in &csr.data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+            payload += 1 + 24 + csr.storage_bytes();
+        } else {
+            f.write_all(&[0u8])?;
+            f.write_all(&(values.len() as u64).to_le_bytes())?;
+            for &v in values {
+                f.write_all(&v.to_le_bytes())?;
+            }
+            payload += 1 + 8 + values.len() * 4;
+        }
+    }
+    f.flush()?;
+    Ok(payload)
+}
+
+/// Load a checkpoint back into a dense `ParamBundle`.
+pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "not a proxcomp checkpoint (bad magic)");
+    let version = read_u32(&mut f)?;
+    anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+    let header_len = read_u64(&mut f)? as usize;
+    let mut header_bytes = vec![0u8; header_len];
+    f.read_exact(&mut header_bytes)?;
+    let header = json::parse(std::str::from_utf8(&header_bytes)?)?;
+    let meta = header.req("meta")?.clone();
+    let specs: Vec<ParamSpec> = header
+        .req("specs")?
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(|j| {
+            Ok(ParamSpec {
+                name: j.req("name")?.as_str().unwrap_or("").to_string(),
+                kind: j.req("kind")?.as_str().unwrap_or("").to_string(),
+                shape: j.req("shape")?.as_usize_vec().unwrap_or_default(),
+                prunable: j.req("prunable")?.as_bool().unwrap_or(false),
+                layer: j.req("layer")?.as_str().unwrap_or("").to_string(),
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+
+    let mut values = Vec::with_capacity(specs.len());
+    let mut payload = 0usize;
+    for spec in &specs {
+        let mut enc = [0u8; 1];
+        f.read_exact(&mut enc)?;
+        match enc[0] {
+            0 => {
+                let n = read_u64(&mut f)? as usize;
+                anyhow::ensure!(n == spec.numel(), "dense leaf size mismatch for {}", spec.name);
+                let mut data = vec![0.0f32; n];
+                read_f32s(&mut f, &mut data)?;
+                payload += 1 + 8 + n * 4;
+                values.push(data);
+            }
+            1 => {
+                let rows = read_u64(&mut f)? as usize;
+                let cols = read_u64(&mut f)? as usize;
+                let nnz = read_u64(&mut f)? as usize;
+                anyhow::ensure!(rows * cols == spec.numel(), "csr leaf shape mismatch for {}", spec.name);
+                let mut ptr = vec![0u32; rows + 1];
+                read_u32s(&mut f, &mut ptr)?;
+                let mut indices = vec![0u32; nnz];
+                read_u32s(&mut f, &mut indices)?;
+                let mut data = vec![0.0f32; nnz];
+                read_f32s(&mut f, &mut data)?;
+                let csr = CsrMatrix {
+                    rows,
+                    cols,
+                    ptr: ptr.iter().map(|&p| p as usize).collect(),
+                    indices,
+                    data,
+                };
+                csr.validate()?;
+                payload += 1 + 24 + csr.storage_bytes();
+                values.push(csr.to_dense());
+            }
+            other => anyhow::bail!("unknown leaf encoding {other}"),
+        }
+    }
+    Ok(Checkpoint {
+        params: ParamBundle { specs, values },
+        meta,
+        payload_bytes: payload,
+    })
+}
+
+/// 2-D view used for CSR storage: fc (N, K); conv (O, I·KH·KW).
+pub fn matrix_view(spec: &ParamSpec) -> (usize, usize) {
+    match spec.shape.len() {
+        2 => (spec.shape[0], spec.shape[1]),
+        4 => (spec.shape[0], spec.shape[1] * spec.shape[2] * spec.shape[3]),
+        _ => (0, 0),
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(f: &mut impl Read) -> anyhow::Result<u64> {
+    let mut b = [0u8; 8];
+    f.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32s(f: &mut impl Read, out: &mut [u32]) -> anyhow::Result<()> {
+    let mut bytes = vec![0u8; out.len() * 4];
+    f.read_exact(&mut bytes)?;
+    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+        out[i] = u32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    Ok(())
+}
+
+fn read_f32s(f: &mut impl Read, out: &mut [f32]) -> anyhow::Result<()> {
+    let mut bytes = vec![0u8; out.len() * 4];
+    f.read_exact(&mut bytes)?;
+    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+        out[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_bundle(sparse: bool) -> ParamBundle {
+        let mut rng = crate::util::rng::Rng::new(40);
+        let specs = vec![
+            ParamSpec {
+                name: "conv1_w".into(),
+                kind: "conv_w".into(),
+                shape: vec![4, 2, 3, 3],
+                prunable: true,
+                layer: "conv1".into(),
+            },
+            ParamSpec {
+                name: "conv1_b".into(),
+                kind: "conv_b".into(),
+                shape: vec![4],
+                prunable: false,
+                layer: "conv1".into(),
+            },
+            ParamSpec {
+                name: "fc1_w".into(),
+                kind: "fc_w".into(),
+                shape: vec![10, 72],
+                prunable: true,
+                layer: "fc1".into(),
+            },
+        ];
+        let mut values: Vec<Vec<f32>> = specs
+            .iter()
+            .map(|s| rng.normal_vec(s.numel(), 1.0))
+            .collect();
+        if sparse {
+            for v in values[2].iter_mut() {
+                if v.abs() < 1.5 {
+                    *v = 0.0;
+                }
+            }
+        }
+        ParamBundle { specs, values }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("proxcomp_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let b = test_bundle(false);
+        let path = tmp("dense.pxcp");
+        let mut meta = Json::obj();
+        meta.set("model", Json::from("test"));
+        save(&path, &b, &meta).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.params.values, b.values);
+        assert_eq!(ck.meta.get("model").unwrap().as_str(), Some("test"));
+        assert_eq!(ck.params.specs.len(), 3);
+        assert_eq!(ck.params.specs[0].shape, vec![4, 2, 3, 3]);
+    }
+
+    #[test]
+    fn sparse_roundtrip_uses_csr() {
+        let b = test_bundle(true);
+        let path = tmp("sparse.pxcp");
+        let bytes = save(&path, &b, &Json::obj()).unwrap();
+        let ck = load(&path).unwrap();
+        assert_eq!(ck.params.values, b.values);
+        // fc1_w (~87% zeros) stored CSR ⇒ payload much smaller than dense.
+        let dense_bytes: usize = b.values.iter().map(|v| v.len() * 4).sum();
+        assert!(bytes < dense_bytes, "{bytes} vs {dense_bytes}");
+        assert_eq!(ck.payload_bytes, bytes);
+    }
+
+    #[test]
+    fn compression_reduces_file_size() {
+        let dense = test_bundle(false);
+        let sparse = test_bundle(true);
+        let pd = tmp("size_dense.pxcp");
+        let ps = tmp("size_sparse.pxcp");
+        save(&pd, &dense, &Json::obj()).unwrap();
+        save(&ps, &sparse, &Json::obj()).unwrap();
+        let sd = std::fs::metadata(&pd).unwrap().len();
+        let ss = std::fs::metadata(&ps).unwrap().len();
+        assert!(ss < sd, "sparse file {ss} >= dense file {sd}");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = tmp("garbage.pxcp");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+    }
+
+    #[test]
+    fn matrix_views() {
+        let b = test_bundle(false);
+        assert_eq!(matrix_view(&b.specs[0]), (4, 18));
+        assert_eq!(matrix_view(&b.specs[1]), (0, 0)); // 1-D → no CSR view
+        assert_eq!(matrix_view(&b.specs[2]), (10, 72));
+    }
+}

@@ -1,0 +1,34 @@
+//! Debiasing / retraining (paper Section 2.4).
+//!
+//! "Train the weights again without any regularization, starting from the
+//! previously trained weight values, while excluding the zero-valued
+//! weights from training." Implemented with the `train_masked` artifact:
+//! 0/1 masks freeze pruned weights at exactly zero; the optimizer is a
+//! fresh ADAM (moments reset — the sparse phase's moments belong to a
+//! different objective).
+
+use crate::coordinator::{trainer::StepScalars, Trainer};
+use crate::info;
+use crate::runtime::Runtime;
+
+/// Retrain the surviving weights for `steps` steps at `lr`.
+pub fn retrain(
+    rt: &mut Runtime,
+    trainer: &mut Trainer,
+    steps: usize,
+    lr: f32,
+) -> anyhow::Result<()> {
+    let rate_before = trainer.state.params.compression_rate();
+    trainer.state.masks = Some(trainer.state.params.nonzero_masks());
+    trainer.state.reset_optimizer();
+    info!("[debias] retraining {steps} steps at lr {lr} (rate {rate_before:.4})");
+    let scalars = StepScalars { lambda: 0.0, lr, mu: 0.0 };
+    trainer.run_steps(rt, "train_masked", steps, scalars, super::spc::RECORD_EVERY)?;
+    // Invariant: masked training never resurrects zeros.
+    let rate_after = trainer.state.params.compression_rate();
+    anyhow::ensure!(
+        rate_after >= rate_before - 1e-12,
+        "debias resurrected zeros: {rate_before} -> {rate_after}"
+    );
+    Ok(())
+}

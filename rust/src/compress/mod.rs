@@ -1,0 +1,52 @@
+//! Compression controllers — the paper's methods and baselines.
+//!
+//! * `spc` — **SpC**: sparse coding with proximal optimizers (the
+//!   paper's contribution, Sections 2.1-2.3).
+//! * `debias` — retraining with frozen zeros (Section 2.4); used as
+//!   SpC(Retrain) and as Pru's retraining phase.
+//! * `pruning` — **Pru**: magnitude pruning + retraining (Han et al.
+//!   2015).
+//! * `mm` — **MM**: learning-compression via the method of multipliers
+//!   (Carreira-Perpiñán & Idelbayev 2018).
+//!
+//! Each controller drives a `Trainer` through artifact steps and returns
+//! a `RunResult` with accuracy / compression-rate / per-layer stats.
+
+pub mod debias;
+pub mod mm;
+pub mod pruning;
+pub mod spc;
+
+use crate::coordinator::Trainer;
+use crate::metrics::RunResult;
+use crate::runtime::Runtime;
+
+/// Assemble a `RunResult` from the trainer's current state.
+pub fn finish_run(
+    rt: &mut Runtime,
+    trainer: &mut Trainer,
+    method: &str,
+    lambda: f64,
+    t0: std::time::Instant,
+) -> anyhow::Result<RunResult> {
+    let eval = trainer.evaluate(rt)?;
+    let rate = trainer.state.params.compression_rate();
+    let total = trainer.state.params.total_weights();
+    let nnz = total - trainer.state.params.zero_weights();
+    let step = trainer.history.next_step();
+    trainer.history.record_eval(step, eval.loss, rate, eval.accuracy);
+    Ok(RunResult {
+        method: method.to_string(),
+        model: trainer.entry.name.clone(),
+        lambda,
+        seed: trainer.seed(),
+        accuracy: eval.accuracy,
+        loss: eval.loss,
+        compression_rate: rate,
+        nnz,
+        total_weights: total,
+        layer_stats: trainer.state.params.layer_stats(),
+        history: std::mem::take(&mut trainer.history),
+        wall_secs: t0.elapsed().as_secs_f64(),
+    })
+}

@@ -1,0 +1,68 @@
+//! Pru — magnitude pruning with retraining (Han et al. 2015).
+//!
+//! The baseline the paper compares against in Figures 6-7 / Table 1:
+//! (1) train the dense reference model, (2) remove connections whose
+//! weight magnitude falls below a threshold (chosen here as the global
+//! magnitude quantile hitting `pru_target_rate`), (3) optionally retrain
+//! the survivors (`Pru(Retrain)`).
+
+use crate::compress::{debias, finish_run};
+use crate::config::RunConfig;
+use crate::coordinator::{trainer::StepScalars, Trainer};
+use crate::info;
+use crate::metrics::RunResult;
+use crate::runtime::{Manifest, Runtime};
+use crate::sparse::prox::{hard_threshold_inplace, magnitude_quantile};
+
+/// Run Pru end to end. `cfg.steps` trains the dense model; the threshold
+/// targets `cfg.pru_target_rate`; `cfg.retrain_steps > 0` = Pru(Retrain).
+pub fn run(rt: &mut Runtime, manifest: &Manifest, cfg: &RunConfig) -> anyhow::Result<RunResult> {
+    let t0 = std::time::Instant::now();
+    let mut trainer = Trainer::new(manifest, cfg)?;
+    info!(
+        "[Pru] {} dense-train {} steps, target rate {}",
+        cfg.model, cfg.steps, cfg.pru_target_rate
+    );
+    // Phase 1: dense training (λ=0 ⇒ the prox is the identity).
+    let scalars = StepScalars { lambda: 0.0, lr: cfg.lr, mu: 0.0 };
+    trainer.run_steps(rt, cfg.optimizer.step_name(), cfg.steps, scalars, super::spc::RECORD_EVERY)?;
+
+    // Phase 2: magnitude pruning at the global quantile.
+    prune_to_rate(&mut trainer, cfg.pru_target_rate);
+    let rate = trainer.state.params.compression_rate();
+    info!("[Pru] pruned to rate {rate:.4}");
+
+    // Phase 3: optional retraining of the survivors.
+    let mut method = "Pru".to_string();
+    if cfg.retrain_steps > 0 {
+        debias::retrain(rt, &mut trainer, cfg.retrain_steps, cfg.retrain_lr)?;
+        method = "Pru(Retrain)".to_string();
+    }
+    let result = finish_run(rt, &mut trainer, &method, cfg.pru_target_rate, t0)?;
+    info!(
+        "[Pru] done: acc {:.4} rate {:.4} in {:.1}s",
+        result.accuracy, result.compression_rate, result.wall_secs
+    );
+    Ok(result)
+}
+
+/// Hard-threshold all prunable leaves at the global magnitude quantile
+/// that achieves `target_rate` zeros.
+pub fn prune_to_rate(trainer: &mut Trainer, target_rate: f64) {
+    let params = &mut trainer.state.params;
+    // Pool all prunable magnitudes for a global threshold (Han et al. use
+    // a per-layer quality parameter; global quantile reaches the same
+    // target rate without per-layer tuning).
+    let mut pooled: Vec<f32> = Vec::new();
+    for (spec, values) in params.specs.iter().zip(&params.values) {
+        if spec.prunable {
+            pooled.extend_from_slice(values);
+        }
+    }
+    let thresh = magnitude_quantile(&pooled, target_rate);
+    for (spec, values) in params.specs.iter().zip(params.values.iter_mut()) {
+        if spec.prunable {
+            hard_threshold_inplace(values, thresh);
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! SpC — sparse coding with proximal optimizers (the paper's method).
+//!
+//! Training **starts from random weights** (no pre-trained model — the
+//! paper's headline advantage over Pru/MM) and applies the proximal
+//! operator inside every update via the Prox-ADAM / Prox-RMSProp
+//! artifacts. Optionally followed by debiasing (SpC(Retrain)).
+
+use crate::compress::{debias, finish_run};
+use crate::config::RunConfig;
+use crate::coordinator::{trainer::StepScalars, Trainer};
+use crate::info;
+use crate::metrics::RunResult;
+use crate::runtime::{Manifest, Runtime};
+
+/// Steps between history records during training.
+pub const RECORD_EVERY: usize = 10;
+
+/// Run SpC end to end per `cfg`; `cfg.retrain_steps > 0` adds debiasing.
+pub fn run(rt: &mut Runtime, manifest: &Manifest, cfg: &RunConfig) -> anyhow::Result<RunResult> {
+    let t0 = std::time::Instant::now();
+    let mut trainer = Trainer::new(manifest, cfg)?;
+    let step_name = cfg.optimizer.step_name();
+    info!(
+        "[SpC] {} λ={} lr={} steps={} seed={} ({})",
+        cfg.model, cfg.lambda, cfg.lr, cfg.steps, cfg.seed, step_name
+    );
+    let scalars = StepScalars { lambda: cfg.lambda, lr: cfg.lr, mu: 0.0 };
+    run_with_evals(rt, &mut trainer, step_name, cfg.steps, scalars, cfg.eval_every)?;
+
+    let mut method = "SpC".to_string();
+    if cfg.retrain_steps > 0 {
+        debias::retrain(rt, &mut trainer, cfg.retrain_steps, cfg.retrain_lr)?;
+        method = "SpC(Retrain)".to_string();
+    }
+    let result = finish_run(rt, &mut trainer, &method, cfg.lambda as f64, t0)?;
+    info!(
+        "[SpC] done: acc {:.4} rate {:.4} ({:.0}×) in {:.1}s",
+        result.accuracy,
+        result.compression_rate,
+        result.times_factor(),
+        result.wall_secs
+    );
+    Ok(result)
+}
+
+/// Train with periodic full evaluations recorded into history (the
+/// Figure-8 convergence curves need both loss and test accuracy).
+pub fn run_with_evals(
+    rt: &mut Runtime,
+    trainer: &mut Trainer,
+    step_name: &str,
+    steps: usize,
+    scalars: StepScalars,
+    eval_every: usize,
+) -> anyhow::Result<()> {
+    let mut done = 0;
+    while done < steps {
+        let chunk = if eval_every > 0 {
+            eval_every.min(steps - done)
+        } else {
+            steps - done
+        };
+        let loss = trainer.run_steps(rt, step_name, chunk, scalars, RECORD_EVERY)?;
+        done += chunk;
+        if eval_every > 0 {
+            let eval = trainer.evaluate(rt)?;
+            let rate = trainer.state.params.compression_rate();
+            let step = trainer.history.next_step();
+            trainer.history.record_eval(step, eval.loss, rate, eval.accuracy);
+            info!(
+                "  step {done}/{steps}: loss {loss:.4} acc {:.4} rate {:.4}",
+                eval.accuracy, rate
+            );
+        }
+    }
+    Ok(())
+}

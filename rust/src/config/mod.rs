@@ -1,0 +1,299 @@
+//! Typed run configuration: model, optimizer, compression, dataset, run.
+//!
+//! Configs load from JSON files (`--config run.json`) with CLI overrides
+//! (`--model lenet --lambda 1.2 ...`); `validate()` catches inconsistent
+//! combinations before any artifact is compiled.
+
+use crate::util::cli::Args;
+use crate::util::json::{self, Json};
+
+/// Which compression method drives training (paper Section 4 notation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// Sparse coding with proximal optimizers (the paper's contribution).
+    SpC,
+    /// Magnitude pruning + retraining (Han et al. 2015).
+    Pru,
+    /// Learning-compression via method of multipliers (CP & Idelbayev 2018).
+    MM,
+    /// No compression — the reference model.
+    Reference,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> anyhow::Result<Method> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "spc" => Method::SpC,
+            "pru" | "prune" | "pruning" => Method::Pru,
+            "mm" => Method::MM,
+            "ref" | "reference" | "none" => Method::Reference,
+            other => anyhow::bail!("unknown method {other:?} (spc|pru|mm|ref)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::SpC => "SpC",
+            Method::Pru => "Pru",
+            Method::MM => "MM",
+            Method::Reference => "Ref",
+        }
+    }
+}
+
+/// Which proximal optimizer (paper Algorithms 1-2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Optimizer {
+    ProxAdam,
+    ProxRmsprop,
+    ProxSgd,
+}
+
+impl Optimizer {
+    pub fn parse(s: &str) -> anyhow::Result<Optimizer> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "prox-adam" | "prox_adam" | "adam" => Optimizer::ProxAdam,
+            "prox-rmsprop" | "prox_rmsprop" | "rmsprop" => Optimizer::ProxRmsprop,
+            "prox-sgd" | "prox_sgd" | "sgd" => Optimizer::ProxSgd,
+            other => anyhow::bail!("unknown optimizer {other:?}"),
+        })
+    }
+
+    /// Artifact step name in the manifest.
+    pub fn step_name(&self) -> &'static str {
+        match self {
+            Optimizer::ProxAdam => "train_prox_adam",
+            Optimizer::ProxRmsprop => "train_prox_rmsprop",
+            Optimizer::ProxSgd => "train_prox_sgd",
+        }
+    }
+}
+
+/// Full run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: String,
+    pub method: Method,
+    pub optimizer: Optimizer,
+    /// ℓ1 regularization weight λ (the compression knob).
+    pub lambda: f32,
+    pub lr: f32,
+    pub steps: usize,
+    /// Debias / retraining steps after the sparse phase (0 = off).
+    pub retrain_steps: usize,
+    pub retrain_lr: f32,
+    pub seed: u64,
+    pub train_examples: usize,
+    pub test_examples: usize,
+    /// Evaluate every `eval_every` steps (0 = only at the end).
+    pub eval_every: usize,
+    /// MM hyperparameters (paper Table 2).
+    pub mm_mu0: f32,
+    pub mm_mu_growth: f32,
+    pub mm_compress_every: usize,
+    /// Pru: target compression rate for threshold selection.
+    pub pru_target_rate: f64,
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: "lenet".into(),
+            method: Method::SpC,
+            optimizer: Optimizer::ProxAdam,
+            lambda: 1.0,
+            lr: 1e-3,
+            steps: 600,
+            retrain_steps: 0,
+            retrain_lr: 1e-4,
+            seed: 0,
+            train_examples: 4096,
+            test_examples: 1024,
+            eval_every: 0,
+            mm_mu0: 9.76e-5,
+            mm_mu_growth: 1.1,
+            mm_compress_every: 200,
+            pru_target_rate: 0.9,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Apply CLI overrides on top of this config.
+    pub fn apply_args(&mut self, args: &Args) -> anyhow::Result<()> {
+        if let Some(m) = args.get_str("model") {
+            self.model = m;
+        }
+        if let Some(m) = args.get_str("method") {
+            self.method = Method::parse(&m)?;
+        }
+        if let Some(o) = args.get_str("optimizer") {
+            self.optimizer = Optimizer::parse(&o)?;
+        }
+        self.lambda = args.f32_or("lambda", self.lambda)?;
+        self.lr = args.f32_or("lr", self.lr)?;
+        self.steps = args.usize_or("steps", self.steps)?;
+        self.retrain_steps = args.usize_or("retrain-steps", self.retrain_steps)?;
+        self.retrain_lr = args.f32_or("retrain-lr", self.retrain_lr)?;
+        self.seed = args.u64_or("seed", self.seed)?;
+        self.train_examples = args.usize_or("train-examples", self.train_examples)?;
+        self.test_examples = args.usize_or("test-examples", self.test_examples)?;
+        self.eval_every = args.usize_or("eval-every", self.eval_every)?;
+        self.mm_mu0 = args.f32_or("mm-mu0", self.mm_mu0)?;
+        self.mm_mu_growth = args.f32_or("mm-mu-growth", self.mm_mu_growth)?;
+        self.mm_compress_every = args.usize_or("mm-compress-every", self.mm_compress_every)?;
+        self.pru_target_rate = args.f64_or("pru-target-rate", self.pru_target_rate)?;
+        if let Some(d) = args.get_str("artifacts-dir") {
+            self.artifacts_dir = d;
+        }
+        Ok(())
+    }
+
+    /// Load a JSON config file (all keys optional).
+    pub fn from_json_file(path: &str) -> anyhow::Result<RunConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = json::parse(&text)?;
+        let mut c = RunConfig::default();
+        if let Some(v) = j.get("model").and_then(Json::as_str) {
+            c.model = v.to_string();
+        }
+        if let Some(v) = j.get("method").and_then(Json::as_str) {
+            c.method = Method::parse(v)?;
+        }
+        if let Some(v) = j.get("optimizer").and_then(Json::as_str) {
+            c.optimizer = Optimizer::parse(v)?;
+        }
+        let f32_of = |key: &str, d: f32| j.get(key).and_then(Json::as_f64).map(|v| v as f32).unwrap_or(d);
+        let usize_of = |key: &str, d: usize| j.get(key).and_then(Json::as_usize).unwrap_or(d);
+        c.lambda = f32_of("lambda", c.lambda);
+        c.lr = f32_of("lr", c.lr);
+        c.steps = usize_of("steps", c.steps);
+        c.retrain_steps = usize_of("retrain_steps", c.retrain_steps);
+        c.retrain_lr = f32_of("retrain_lr", c.retrain_lr);
+        c.seed = j.get("seed").and_then(Json::as_i64).map(|v| v as u64).unwrap_or(c.seed);
+        c.train_examples = usize_of("train_examples", c.train_examples);
+        c.test_examples = usize_of("test_examples", c.test_examples);
+        c.eval_every = usize_of("eval_every", c.eval_every);
+        c.mm_mu0 = f32_of("mm_mu0", c.mm_mu0);
+        c.mm_mu_growth = f32_of("mm_mu_growth", c.mm_mu_growth);
+        c.mm_compress_every = usize_of("mm_compress_every", c.mm_compress_every);
+        c.pru_target_rate = j.get("pru_target_rate").and_then(Json::as_f64).unwrap_or(c.pru_target_rate);
+        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
+            c.artifacts_dir = v.to_string();
+        }
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.lambda < 0.0 {
+            anyhow::bail!("lambda must be >= 0, got {}", self.lambda);
+        }
+        if self.lr <= 0.0 {
+            anyhow::bail!("lr must be > 0");
+        }
+        if self.steps == 0 {
+            anyhow::bail!("steps must be > 0");
+        }
+        if self.method == Method::MM && self.mm_mu0 <= 0.0 {
+            anyhow::bail!("MM requires mm_mu0 > 0");
+        }
+        if !(0.0..1.0).contains(&self.pru_target_rate) {
+            anyhow::bail!("pru_target_rate must be in [0,1)");
+        }
+        if self.train_examples == 0 || self.test_examples == 0 {
+            anyhow::bail!("need nonzero train/test examples");
+        }
+        Ok(())
+    }
+
+    /// Serialize for run records.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("model", Json::from(self.model.as_str()))
+            .set("method", Json::from(self.method.name()))
+            .set("optimizer", Json::from(self.optimizer.step_name()))
+            .set("lambda", Json::from(self.lambda as f64))
+            .set("lr", Json::from(self.lr as f64))
+            .set("steps", Json::from(self.steps))
+            .set("retrain_steps", Json::from(self.retrain_steps))
+            .set("seed", Json::from(self.seed as i64))
+            .set("train_examples", Json::from(self.train_examples))
+            .set("test_examples", Json::from(self.test_examples));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(Method::parse("spc").unwrap(), Method::SpC);
+        assert_eq!(Method::parse("Pru").unwrap(), Method::Pru);
+        assert_eq!(Method::parse("MM").unwrap(), Method::MM);
+        assert_eq!(Method::parse("ref").unwrap(), Method::Reference);
+        assert!(Method::parse("magic").is_err());
+    }
+
+    #[test]
+    fn optimizer_step_names() {
+        assert_eq!(Optimizer::parse("adam").unwrap().step_name(), "train_prox_adam");
+        assert_eq!(Optimizer::parse("rmsprop").unwrap().step_name(), "train_prox_rmsprop");
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let args = Args::parse(
+            ["--model", "mlp", "--lambda", "2.5", "--steps", "42", "--method", "pru"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        let mut c = RunConfig::default();
+        c.apply_args(&args).unwrap();
+        assert_eq!(c.model, "mlp");
+        assert_eq!(c.method, Method::Pru);
+        assert!((c.lambda - 2.5).abs() < 1e-9);
+        assert_eq!(c.steps, 42);
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = RunConfig::default();
+        c.lambda = -1.0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.steps = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.pru_target_rate = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_file_roundtrip() {
+        let dir = std::env::temp_dir().join("proxcomp_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.json");
+        std::fs::write(
+            &path,
+            r#"{"model": "vgg_s", "method": "mm", "lambda": 0.5, "steps": 99, "seed": 7}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.model, "vgg_s");
+        assert_eq!(c.method, Method::MM);
+        assert_eq!(c.steps, 99);
+        assert_eq!(c.seed, 7);
+        // untouched keys keep defaults
+        assert_eq!(c.test_examples, RunConfig::default().test_examples);
+    }
+}

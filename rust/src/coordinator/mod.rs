@@ -1,0 +1,10 @@
+//! Training coordinator — the L3 leader loop.
+//!
+//! `trainer::Trainer` owns model state + data and drives the AOT training
+//! artifacts step by step; `sweep` provides the λ-grid and multi-seed
+//! drivers behind Figures 5-7.
+
+pub mod sweep;
+pub mod trainer;
+
+pub use trainer::{EvalResult, StepState, Trainer};

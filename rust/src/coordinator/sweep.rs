@@ -1,0 +1,83 @@
+//! Sweep drivers: λ grids (Figure 6) and multi-seed variance (Figure 5).
+//!
+//! Sweeps share one `Runtime` so each artifact compiles once; λ and the
+//! seed are runtime inputs, not compile-time constants.
+
+use crate::compress;
+use crate::config::{Method, RunConfig};
+use crate::info;
+use crate::metrics::RunResult;
+use crate::runtime::{Manifest, Runtime};
+
+/// Run one configured method end to end.
+pub fn run_method(rt: &mut Runtime, manifest: &Manifest, cfg: &RunConfig) -> anyhow::Result<RunResult> {
+    cfg.validate()?;
+    match cfg.method {
+        Method::SpC => compress::spc::run(rt, manifest, cfg),
+        Method::Pru => compress::pruning::run(rt, manifest, cfg),
+        Method::MM => compress::mm::run(rt, manifest, cfg),
+        Method::Reference => {
+            // Reference model = SpC with λ=0 (plain Prox-ADAM degenerates
+            // to ADAM) and no retraining.
+            let mut c = cfg.clone();
+            c.lambda = 0.0;
+            c.retrain_steps = 0;
+            let mut r = compress::spc::run(rt, manifest, &c)?;
+            r.method = "Ref".into();
+            Ok(r)
+        }
+    }
+}
+
+/// λ-grid sweep (Figure 6): one result per λ, same seed.
+pub fn lambda_sweep(
+    rt: &mut Runtime,
+    manifest: &Manifest,
+    base: &RunConfig,
+    lambdas: &[f32],
+) -> anyhow::Result<Vec<RunResult>> {
+    let mut out = Vec::with_capacity(lambdas.len());
+    for &lam in lambdas {
+        let mut cfg = base.clone();
+        cfg.lambda = lam;
+        cfg.pru_target_rate = cfg.pru_target_rate.min(0.995);
+        info!("[sweep] λ = {lam}");
+        out.push(run_method(rt, manifest, &cfg)?);
+    }
+    Ok(out)
+}
+
+/// Multi-seed variance study (Figure 5): one result per seed.
+pub fn seed_sweep(
+    rt: &mut Runtime,
+    manifest: &Manifest,
+    base: &RunConfig,
+    seeds: &[u64],
+) -> anyhow::Result<Vec<RunResult>> {
+    let mut out = Vec::with_capacity(seeds.len());
+    for &seed in seeds {
+        let mut cfg = base.clone();
+        cfg.seed = seed;
+        info!("[sweep] seed = {seed}");
+        out.push(run_method(rt, manifest, &cfg)?);
+    }
+    Ok(out)
+}
+
+/// Pru rate sweep (Figure 6b): one result per target compression rate.
+pub fn pru_rate_sweep(
+    rt: &mut Runtime,
+    manifest: &Manifest,
+    base: &RunConfig,
+    rates: &[f64],
+) -> anyhow::Result<Vec<RunResult>> {
+    let mut out = Vec::with_capacity(rates.len());
+    for &rate in rates {
+        let mut cfg = base.clone();
+        cfg.method = Method::Pru;
+        cfg.pru_target_rate = rate;
+        info!("[sweep] pru target rate = {rate}");
+        out.push(run_method(rt, manifest, &cfg)?);
+    }
+    Ok(out)
+}

@@ -1,0 +1,350 @@
+//! The training loop: role-driven execution of AOT train/eval artifacts.
+//!
+//! All training state lives host-side in `StepState` (parameter bundle +
+//! optimizer moments + optional masks/θ/λ for the baselines); each step
+//! assembles the artifact's input list by role, executes on PJRT, and
+//! scatters outputs back by role. The same machinery drives every step
+//! kind (`train_prox_*`, `train_masked`, `train_mm`) because the manifest
+//! describes the signature.
+
+use crate::config::RunConfig;
+use crate::data::{self, Batcher, Dataset};
+use crate::metrics::History;
+use crate::runtime::client;
+use crate::runtime::{HostValue, Manifest, ModelEntry, ParamBundle, Role, Runtime};
+use crate::util::logger;
+
+/// Host-side training state, role-addressable.
+#[derive(Debug, Clone)]
+pub struct StepState {
+    pub params: ParamBundle,
+    pub opt_m: ParamBundle,
+    pub opt_v: ParamBundle,
+    pub t: f32,
+    /// Debias/retrain masks (one per leaf), set by the compression
+    /// controllers before masked training.
+    pub masks: Option<Vec<Vec<f32>>>,
+    /// MM auxiliaries (θ, Lagrange multipliers).
+    pub theta: Option<ParamBundle>,
+    pub lagrange: Option<ParamBundle>,
+}
+
+impl StepState {
+    pub fn fresh(entry: &ModelEntry, seed: u64) -> StepState {
+        StepState {
+            params: ParamBundle::he_init(&entry.params, seed),
+            opt_m: ParamBundle::zeros_like(&entry.params),
+            opt_v: ParamBundle::zeros_like(&entry.params),
+            t: 0.0,
+            masks: None,
+            theta: None,
+            lagrange: None,
+        }
+    }
+
+    /// Reset optimizer moments (used between phases, e.g. before debias).
+    pub fn reset_optimizer(&mut self) {
+        self.opt_m = ParamBundle::zeros_like(&self.params.specs);
+        self.opt_v = ParamBundle::zeros_like(&self.params.specs);
+        self.t = 0.0;
+    }
+}
+
+/// Scalar knobs consumed by the step artifacts.
+#[derive(Debug, Clone, Copy)]
+pub struct StepScalars {
+    pub lambda: f32,
+    pub lr: f32,
+    pub mu: f32,
+}
+
+/// Evaluation result over the test set.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+/// Trainer: model entry + datasets + state + history.
+pub struct Trainer {
+    pub entry: ModelEntry,
+    pub state: StepState,
+    pub train_data: Dataset,
+    pub test_data: Dataset,
+    pub history: History,
+    batcher: Batcher,
+    seed: u64,
+}
+
+impl Trainer {
+    pub fn new(manifest: &Manifest, cfg: &RunConfig) -> anyhow::Result<Trainer> {
+        let entry = manifest.model(&cfg.model)?.clone();
+        let train_data = data::generate(&entry.dataset, cfg.train_examples, cfg.seed)?;
+        // Disjoint test stream: same textures/templates, different examples.
+        let test_data = data::generate(&entry.dataset, cfg.test_examples, cfg.seed ^ 0x7E57_DA7A)?;
+        let batcher = Batcher::new(train_data.n, cfg.seed);
+        Ok(Trainer {
+            state: StepState::fresh(&entry, cfg.seed),
+            entry,
+            train_data,
+            test_data,
+            history: History::new(),
+            batcher,
+            seed: cfg.seed,
+        })
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Run one training step of `step_name` on the next minibatch;
+    /// returns the minibatch loss.
+    pub fn step(
+        &mut self,
+        rt: &mut Runtime,
+        step_name: &str,
+        scalars: StepScalars,
+    ) -> anyhow::Result<f32> {
+        // Disjoint borrows: `entry` is read-only metadata, `state` is
+        // mutated after execution (avoids cloning the Artifact per step —
+        // a measurable §Perf cost on the small-model hot path).
+        let Trainer { entry, state, train_data, batcher, .. } = self;
+        let artifact = entry.artifact(step_name)?;
+        let (xs, ys) = batcher.next_batch(train_data, artifact.batch);
+        let x_shape = batch_shape(entry, artifact.batch);
+
+        // Assemble input literals by role directly from borrowed state
+        // slices (§Perf: no intermediate HostValue vector clones).
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(artifact.inputs.len());
+        let (mut ip, mut im, mut iv, mut imask, mut ith, mut ilag) = (0, 0, 0, 0, 0, 0);
+        for slot in &artifact.inputs {
+            let lit = match slot.role {
+                Role::Param => {
+                    let i = next(&mut ip);
+                    leaf_literal(&state.params, i)?
+                }
+                Role::OptM => {
+                    let i = next(&mut im);
+                    leaf_literal(&state.opt_m, i)?
+                }
+                Role::OptV => {
+                    let i = next(&mut iv);
+                    leaf_literal(&state.opt_v, i)?
+                }
+                Role::OptT => client::literal_f32(&[], &[state.t])?,
+                Role::Mask => {
+                    let i = next(&mut imask);
+                    let masks = state
+                        .masks
+                        .as_ref()
+                        .ok_or_else(|| anyhow::anyhow!("masked step without masks set"))?;
+                    client::literal_f32(&slot.shape, &masks[i])?
+                }
+                Role::Theta => {
+                    let i = next(&mut ith);
+                    let th = state
+                        .theta
+                        .as_ref()
+                        .ok_or_else(|| anyhow::anyhow!("MM step without theta set"))?;
+                    leaf_literal(th, i)?
+                }
+                Role::Lagrange => {
+                    let i = next(&mut ilag);
+                    let lg = state
+                        .lagrange
+                        .as_ref()
+                        .ok_or_else(|| anyhow::anyhow!("MM step without lagrange set"))?;
+                    leaf_literal(lg, i)?
+                }
+                Role::X => client::literal_f32(&x_shape, &xs)?,
+                Role::Y => client::literal_i32(&[artifact.batch], &ys)?,
+                Role::Lambda => client::literal_f32(&[], &[scalars.lambda])?,
+                Role::Lr => client::literal_f32(&[], &[scalars.lr])?,
+                Role::Mu => client::literal_f32(&[], &[scalars.mu])?,
+                other => anyhow::bail!("unexpected input role {other:?}"),
+            };
+            inputs.push(lit);
+        }
+
+        let outputs = rt.execute_literals(&artifact.file, &inputs)?;
+        anyhow::ensure!(
+            outputs.len() == artifact.outputs.len(),
+            "artifact returned {} outputs, manifest says {}",
+            outputs.len(),
+            artifact.outputs.len()
+        );
+
+        // Scatter outputs back into state by role.
+        let (mut op, mut om, mut ov) = (0, 0, 0);
+        let mut loss = f32::NAN;
+        for (slot, value) in artifact.outputs.iter().zip(outputs) {
+            match slot.role {
+                Role::Param => {
+                    let i = next(&mut op);
+                    state.params.values[i] = value.as_f32()?.to_vec();
+                }
+                Role::OptM => {
+                    let i = next(&mut om);
+                    state.opt_m.values[i] = value.as_f32()?.to_vec();
+                }
+                Role::OptV => {
+                    let i = next(&mut ov);
+                    state.opt_v.values[i] = value.as_f32()?.to_vec();
+                }
+                Role::OptT => state.t = value.scalar()?,
+                Role::Loss => loss = value.scalar()?,
+                other => anyhow::bail!("unexpected output role {other:?}"),
+            }
+        }
+        anyhow::ensure!(loss.is_finite(), "non-finite loss {loss} (diverged?)");
+        Ok(loss)
+    }
+
+    /// Run `n` steps, recording history every `record_every` (0 = never).
+    pub fn run_steps(
+        &mut self,
+        rt: &mut Runtime,
+        step_name: &str,
+        n: usize,
+        scalars: StepScalars,
+        record_every: usize,
+    ) -> anyhow::Result<f32> {
+        let mut last = 0.0;
+        for k in 0..n {
+            last = self.step(rt, step_name, scalars)?;
+            if record_every > 0 && (k + 1) % record_every == 0 {
+                let rate = self.state.params.compression_rate();
+                let step = self.history.next_step();
+                self.history.record_step(step, last as f64, rate);
+                logger::log(
+                    logger::Level::Debug,
+                    &format!("step {k}: loss {last:.4} rate {rate:.4}"),
+                );
+            }
+        }
+        Ok(last)
+    }
+
+    /// Exact test-set evaluation via the `infer` artifact (argmax +
+    /// cross-entropy computed host-side on the fresh portion of each
+    /// batch, so wrap-around padding never biases the metric).
+    pub fn evaluate(&mut self, rt: &mut Runtime) -> anyhow::Result<EvalResult> {
+        let artifact = self.entry.artifact("infer")?.clone();
+        let param_values = self.state.params.to_host_values();
+        let x_shape = batch_shape(&self.entry, artifact.batch);
+        let mut correct = 0usize;
+        let mut loss_sum = 0.0f64;
+        let mut n = 0usize;
+        for (xs, ys, fresh) in Batcher::eval_batches(&self.test_data, artifact.batch) {
+            let mut inputs = param_values.clone();
+            inputs.push(HostValue::F32 { shape: x_shape.clone(), data: xs });
+            let out = rt.execute(&artifact.file, &inputs)?;
+            let logits = out[0].as_f32()?;
+            let ncls = self.entry.num_classes;
+            for i in 0..fresh {
+                let row = &logits[i * ncls..(i + 1) * ncls];
+                // log-softmax CE for this example
+                let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let z: f32 = row.iter().map(|v| (v - m).exp()).sum();
+                let label = ys[i] as usize;
+                loss_sum += (-(row[label] - m) + z.ln()) as f64;
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap();
+                if pred == label {
+                    correct += 1;
+                }
+            }
+            n += fresh;
+        }
+        Ok(EvalResult {
+            loss: loss_sum / n as f64,
+            accuracy: correct as f64 / n as f64,
+            n,
+        })
+    }
+}
+
+fn next(cursor: &mut usize) -> usize {
+    let i = *cursor;
+    *cursor += 1;
+    i
+}
+
+fn leaf_literal(bundle: &ParamBundle, i: usize) -> anyhow::Result<xla::Literal> {
+    client::literal_f32(&bundle.specs[i].shape, &bundle.values[i])
+}
+
+fn batch_shape(entry: &ModelEntry, batch: usize) -> Vec<usize> {
+    let mut s = vec![batch];
+    s.extend_from_slice(&entry.input_shape);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_state_shapes() {
+        // Pure-state test (no artifacts needed).
+        let spec = crate::runtime::ParamSpec {
+            name: "w".into(),
+            kind: "fc_w".into(),
+            shape: vec![4, 3],
+            prunable: true,
+            layer: "fc".into(),
+        };
+        let entry = ModelEntry {
+            name: "t".into(),
+            dataset: "synth-mnist".into(),
+            input_shape: vec![1, 28, 28],
+            num_classes: 10,
+            train_batch: 8,
+            eval_batch: 8,
+            params: vec![spec],
+            num_weights: 12,
+            num_params: 12,
+            artifacts: Default::default(),
+        };
+        let st = StepState::fresh(&entry, 0);
+        assert_eq!(st.params.values[0].len(), 12);
+        assert_eq!(st.opt_m.values[0], vec![0.0; 12]);
+        assert_eq!(st.t, 0.0);
+        assert!(st.masks.is_none());
+    }
+
+    #[test]
+    fn reset_optimizer_clears_moments() {
+        let spec = crate::runtime::ParamSpec {
+            name: "w".into(),
+            kind: "fc_w".into(),
+            shape: vec![2, 2],
+            prunable: true,
+            layer: "fc".into(),
+        };
+        let entry = ModelEntry {
+            name: "t".into(),
+            dataset: "synth-mnist".into(),
+            input_shape: vec![1, 28, 28],
+            num_classes: 10,
+            train_batch: 8,
+            eval_batch: 8,
+            params: vec![spec],
+            num_weights: 4,
+            num_params: 4,
+            artifacts: Default::default(),
+        };
+        let mut st = StepState::fresh(&entry, 0);
+        st.opt_m.values[0][0] = 3.0;
+        st.t = 10.0;
+        st.reset_optimizer();
+        assert_eq!(st.opt_m.values[0][0], 0.0);
+        assert_eq!(st.t, 0.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Embedded-device simulator: roofline cost model for Table 3.
+//!
+//! The paper measures Lenet-5 inference on an ARM Mali-T860 (embedded,
+//! OpenCL 1.2) and an NVIDIA GTX 1080 Ti. Neither GPU exists on this
+//! testbed (DESIGN.md §4), so we model each device as a roofline:
+//!
+//! ```text
+//! t_layer = max(flops / (peak_flops · eff), bytes / (peak_bw · eff))
+//!           + launch_overhead
+//! ```
+//!
+//! with a *sparse efficiency* discount on the compressed path capturing
+//! what the paper observed ("the compressed convolution filters have
+//! irregular nonzero patterns for which full GPU acceleration is
+//! difficult") — sparse kernels run far below peak. The model's point is
+//! Table 3's *shape*: at ~97% sparsity the op is bandwidth-bound, so
+//! compressed inference wins by ~1.2-2×, not by the 30× parameter
+//! reduction. Parameters are public datasheet numbers.
+
+use crate::inference::Engine;
+
+/// Roofline parameters for one device.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceModel {
+    pub name: &'static str,
+    /// Peak f32 throughput (FLOP/s).
+    pub peak_flops: f64,
+    /// Peak memory bandwidth (bytes/s).
+    pub peak_bw: f64,
+    /// Fraction of peak a tuned *dense* kernel reaches.
+    pub dense_eff: f64,
+    /// Fraction of peak a *sparse* (CSR) kernel reaches — low, per the
+    /// paper's own observation about irregular access.
+    pub sparse_eff: f64,
+    /// Fixed per-kernel-launch overhead (seconds).
+    pub launch_overhead: f64,
+}
+
+/// ARM Mali-T860 MP4 (the paper's embedded target): ~23.8 GFLOPS fp32,
+/// LPDDR3 ~12.8 GB/s shared with the CPU. `sparse_eff` is *calibrated*
+/// against the paper's own Table-3 measurement: 1.20× total speedup at
+/// their Table-A1 layer densities implies the CSR kernels ran at ~12% of
+/// the dense kernels' pace (0.55 × 0.124 ≈ 0.068 of peak) — the paper's
+/// "full GPU acceleration is difficult" observation made quantitative.
+pub const MALI_T860: DeviceModel = DeviceModel {
+    name: "ARM Mali-T860",
+    peak_flops: 23.8e9,
+    peak_bw: 12.8e9,
+    dense_eff: 0.55,
+    sparse_eff: 0.068,
+    launch_overhead: 120e-6,
+};
+
+/// NVIDIA GTX 1080 Ti: ~11.3 TFLOPS fp32, 484 GB/s GDDR5X. `sparse_eff`
+/// calibrated to the paper's measured 1.98× Table-3 speedup at their
+/// layer densities (≈20% of the dense pace; see MALI_T860 docs).
+pub const GTX_1080TI: DeviceModel = DeviceModel {
+    name: "NVIDIA GTX 1080 Ti",
+    peak_flops: 11.3e12,
+    peak_bw: 484e9,
+    dense_eff: 0.6,
+    sparse_eff: 0.12,
+    launch_overhead: 8e-6,
+};
+
+/// Generic laptop-class CPU reference (for sanity checks vs. measured —
+/// CPUs tolerate irregular access far better than GPUs, hence the much
+/// higher sparse efficiency; our measured rust-engine speedups confirm).
+pub const CPU_REF: DeviceModel = DeviceModel {
+    name: "generic CPU",
+    peak_flops: 150e9,
+    peak_bw: 40e9,
+    dense_eff: 0.4,
+    sparse_eff: 0.15,
+    launch_overhead: 1e-6,
+};
+
+/// Cost of one layer evaluation.
+#[derive(Debug, Clone)]
+pub struct LayerCost {
+    pub name: String,
+    pub flops: f64,
+    pub bytes: f64,
+    pub seconds: f64,
+    pub bound: &'static str,
+}
+
+impl DeviceModel {
+    /// Roofline time for one kernel with the given work.
+    ///
+    /// Irregular (CSR) access mostly wastes *ALU utilization/occupancy*
+    /// (divergent lanes, gather latency), not raw DRAM bandwidth — the
+    /// streaming parts of the kernel (activations, CSR arrays) remain
+    /// coalesced. So `sparse_eff` discounts the compute term only.
+    pub fn kernel_time(&self, flops: f64, bytes: f64, sparse: bool) -> (f64, &'static str) {
+        let comp_eff = if sparse { self.sparse_eff } else { self.dense_eff };
+        let t_comp = flops / (self.peak_flops * comp_eff);
+        let t_mem = bytes / (self.peak_bw * self.dense_eff);
+        let t = t_comp.max(t_mem) + self.launch_overhead;
+        (t, if t_comp >= t_mem { "compute" } else { "memory" })
+    }
+
+    /// Estimate total inference time for an engine's weight layers at a
+    /// given batch size, from per-layer FLOP and byte counts.
+    pub fn estimate_engine(&self, engine: &Engine, work: &[LayerWork]) -> Vec<LayerCost> {
+        work.iter()
+            .map(|w| {
+                let (seconds, bound) = self.kernel_time(w.flops, w.bytes, engine.sparse);
+                LayerCost {
+                    name: w.name.clone(),
+                    flops: w.flops,
+                    bytes: w.bytes,
+                    seconds,
+                    bound,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Work description of one weight layer. Produced by
+/// `Engine::work_profile` (FLOPs = 2·B·positions·nnz; bytes = weight
+/// storage touched + activations in/out).
+#[derive(Debug, Clone)]
+pub struct LayerWork {
+    pub name: String,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+/// Table-3 style summary: dense vs compressed on one device.
+#[derive(Debug, Clone)]
+pub struct SpeedupEstimate {
+    pub device: &'static str,
+    pub dense_seconds: f64,
+    pub sparse_seconds: f64,
+}
+
+impl SpeedupEstimate {
+    pub fn speedup(&self) -> f64 {
+        self.dense_seconds / self.sparse_seconds
+    }
+}
+
+/// Estimate the paper's Table 3 for a pair of engines (dense + sparse)
+/// with identical architecture.
+pub fn estimate_speedup(
+    device: &DeviceModel,
+    dense: &Engine,
+    sparse: &Engine,
+    dense_work: &[LayerWork],
+    sparse_work: &[LayerWork],
+) -> SpeedupEstimate {
+    let d: f64 = device
+        .estimate_engine(dense, dense_work)
+        .iter()
+        .map(|c| c.seconds)
+        .sum();
+    let s: f64 = device
+        .estimate_engine(sparse, sparse_work)
+        .iter()
+        .map(|c| c.seconds)
+        .sum();
+    SpeedupEstimate { device: device.name, dense_seconds: d, sparse_seconds: s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roofline_picks_binding_constraint() {
+        let d = MALI_T860;
+        // Huge flops, tiny bytes → compute bound.
+        let (t1, b1) = d.kernel_time(1e12, 1e3, false);
+        assert_eq!(b1, "compute");
+        // Tiny flops, huge bytes → memory bound.
+        let (t2, b2) = d.kernel_time(1e3, 1e12, false);
+        assert_eq!(b2, "memory");
+        assert!(t1 > 0.0 && t2 > 0.0);
+    }
+
+    #[test]
+    fn sparse_efficiency_penalty() {
+        let d = MALI_T860;
+        let (td, _) = d.kernel_time(1e9, 1e6, false);
+        let (ts, _) = d.kernel_time(1e9, 1e6, true);
+        assert!(ts > td, "sparse kernels run below dense efficiency");
+    }
+
+    #[test]
+    fn embedded_much_slower_than_desktop() {
+        // Table 3's 506,067 ms vs 8,572 ms gap in shape: Mali ≫ 1080 Ti.
+        let flops = 1e9;
+        let bytes = 1e7;
+        let (tm, _) = MALI_T860.kernel_time(flops, bytes, false);
+        let (tg, _) = GTX_1080TI.kernel_time(flops, bytes, false);
+        assert!(tm / tg > 20.0, "mali/gtx ratio {}", tm / tg);
+    }
+
+    #[test]
+    fn sparsity_wins_modestly_at_table3_operating_point() {
+        // LeNet fc1 at 97% sparsity, batch 64 (the Table-3 regime): the
+        // ~30× FLOP reduction is mostly eaten by the ~27× lower sparse
+        // kernel efficiency, leaving the paper's modest 1.1-2× win.
+        let batch = 64.0;
+        let dense_flops = 2.0 * batch * 400_000.0;
+        let sparse_flops = 2.0 * batch * 13_000.0;
+        let dense_bytes = 400_000.0 * 4.0 + batch * (800.0 + 500.0) * 4.0;
+        let sparse_bytes = 13_000.0 * 8.0 + batch * (800.0 + 500.0) * 4.0;
+        for d in [MALI_T860, GTX_1080TI] {
+            let (td, _) = d.kernel_time(dense_flops, dense_bytes, false);
+            let (ts, _) = d.kernel_time(sparse_flops, sparse_bytes, true);
+            let speedup = td / ts;
+            assert!(
+                speedup > 1.0 && speedup < 4.0,
+                "{}: speedup {speedup}",
+                d.name
+            );
+        }
+    }
+}

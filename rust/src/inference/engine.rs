@@ -1,0 +1,462 @@
+//! Layer-graph forward execution with dense or CSR weights.
+//!
+//! The graphs mirror `python/compile/models/*.py` exactly (the
+//! integration tests assert logits parity against the XLA `infer`
+//! artifacts). Architectures are reconstructed from the checkpoint /
+//! manifest parameter spec — layer kinds and names drive the wiring, so
+//! any width scaling flows through automatically.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::runtime::{ParamBundle, ParamSpec};
+use crate::sparse::{ops, CsrMatrix};
+use crate::tensor::{self, ConvSpec, Tensor};
+
+/// A weight matrix in the engine: dense (reference path) or CSR
+/// (compressed path). Both are (N, K) row-major views.
+#[derive(Debug, Clone)]
+pub enum WeightStore {
+    Dense(Tensor),
+    Csr(CsrMatrix),
+}
+
+impl WeightStore {
+    fn matmul_nt(&self, x: &Tensor) -> Tensor {
+        match self {
+            WeightStore::Dense(w) => tensor::matmul_nt(x, w),
+            WeightStore::Csr(w) => ops::dxct(x, w),
+        }
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            WeightStore::Dense(w) => w.numel() * 4,
+            WeightStore::Csr(w) => w.storage_bytes(),
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        match self {
+            WeightStore::Dense(w) => w.data.iter().filter(|&&v| v != 0.0).count(),
+            WeightStore::Csr(w) => w.nnz(),
+        }
+    }
+
+    pub fn logical_shape(&self) -> (usize, usize) {
+        match self {
+            WeightStore::Dense(w) => (w.shape[0], w.shape[1]),
+            WeightStore::Csr(w) => (w.rows, w.cols),
+        }
+    }
+}
+
+/// One executable layer.
+#[derive(Debug, Clone)]
+enum Layer {
+    /// Conv (weights as (O, I·KH·KW) matrix for im2col) + bias + conv geometry.
+    Conv { name: String, w: WeightStore, bias: Vec<f32>, ci: usize, kh: usize, kw: usize, spec: ConvSpec, relu: bool },
+    Fc { name: String, w: WeightStore, bias: Vec<f32>, relu: bool },
+    MaxPool { size: usize, stride: usize },
+    GlobalAvgPool,
+    Flatten,
+    Relu,
+    BatchNorm { scale: Vec<f32>, bias: Vec<f32> },
+    /// Residual block marker ops.
+    SaveResidual,
+    AddResidual { relu: bool },
+    /// Projection conv applied to the saved residual (stride-2 shortcut).
+    ProjectResidual { w: WeightStore, bias: Vec<f32>, ci: usize, spec: ConvSpec },
+}
+
+/// Per-layer timing record.
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    pub name: String,
+    pub micros: f64,
+}
+
+/// The engine: an ordered layer list + metadata.
+pub struct Engine {
+    pub model: String,
+    pub sparse: bool,
+    layers: Vec<Layer>,
+    pub num_classes: usize,
+}
+
+impl Engine {
+    /// Build from a parameter bundle. `sparse = true` stores prunable
+    /// weights CSR (compressed deployment); `false` keeps dense.
+    pub fn from_bundle(model: &str, bundle: &ParamBundle, sparse: bool) -> anyhow::Result<Engine> {
+        let leaves: HashMap<&str, (usize, &ParamSpec)> = bundle
+            .specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (s.name.as_str(), (i, s)))
+            .collect();
+        let value = |name: &str| -> anyhow::Result<(&ParamSpec, &Vec<f32>)> {
+            let (i, s) = leaves
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("missing leaf {name}"))?;
+            Ok((s, &bundle.values[*i]))
+        };
+        let store = |name: &str| -> anyhow::Result<WeightStore> {
+            let (s, v) = value(name)?;
+            let (rows, cols) = crate::checkpoint::matrix_view(s);
+            Ok(if sparse && s.prunable {
+                WeightStore::Csr(CsrMatrix::from_dense(v, rows, cols))
+            } else {
+                WeightStore::Dense(Tensor::new(vec![rows, cols], v.clone()))
+            })
+        };
+
+        let mut layers = Vec::new();
+        let conv = |layers: &mut Vec<Layer>, name: &str, stride: usize, pad: usize, relu: bool| -> anyhow::Result<()> {
+            let (s, _) = value(&format!("{name}_w"))?;
+            let (_, b) = value(&format!("{name}_b"))?;
+            layers.push(Layer::Conv {
+                name: name.to_string(),
+                w: store(&format!("{name}_w"))?,
+                bias: b.clone(),
+                ci: s.shape[1],
+                kh: s.shape[2],
+                kw: s.shape[3],
+                spec: ConvSpec { stride, pad },
+                relu,
+            });
+            Ok(())
+        };
+        let fc = |layers: &mut Vec<Layer>, name: &str, relu: bool| -> anyhow::Result<()> {
+            let (_, b) = value(&format!("{name}_b"))?;
+            layers.push(Layer::Fc {
+                name: name.to_string(),
+                w: store(&format!("{name}_w"))?,
+                bias: b.clone(),
+                relu,
+            });
+            Ok(())
+        };
+        let bn = |layers: &mut Vec<Layer>, name: &str| -> anyhow::Result<()> {
+            let (_, s) = value(&format!("{name}_scale"))?;
+            let (_, b) = value(&format!("{name}_bias"))?;
+            layers.push(Layer::BatchNorm { scale: s.clone(), bias: b.clone() });
+            Ok(())
+        };
+
+        match model {
+            "mlp" => {
+                layers.push(Layer::Flatten);
+                fc(&mut layers, "fc1", true)?;
+                fc(&mut layers, "fc2", true)?;
+                fc(&mut layers, "fc3", false)?;
+            }
+            "lenet" => {
+                conv(&mut layers, "conv1", 1, 0, false)?;
+                layers.push(Layer::MaxPool { size: 2, stride: 2 });
+                conv(&mut layers, "conv2", 1, 0, false)?;
+                layers.push(Layer::MaxPool { size: 2, stride: 2 });
+                layers.push(Layer::Flatten);
+                fc(&mut layers, "fc1", true)?;
+                fc(&mut layers, "fc2", false)?;
+            }
+            "alexnet_s" => {
+                conv(&mut layers, "conv1", 1, 2, true)?;
+                layers.push(Layer::MaxPool { size: 2, stride: 2 });
+                conv(&mut layers, "conv2", 1, 2, true)?;
+                layers.push(Layer::MaxPool { size: 2, stride: 2 });
+                conv(&mut layers, "conv3", 1, 1, true)?;
+                conv(&mut layers, "conv4", 1, 1, true)?;
+                conv(&mut layers, "conv5", 1, 1, true)?;
+                layers.push(Layer::MaxPool { size: 2, stride: 2 });
+                layers.push(Layer::Flatten);
+                fc(&mut layers, "fc1", true)?;
+                fc(&mut layers, "fc2", true)?;
+                fc(&mut layers, "fc3", false)?;
+            }
+            "vgg_s" => {
+                // Reconstruct stage structure from the leaf names conv{s}-{i}.
+                let mut stage = 1;
+                loop {
+                    let mut i = 1;
+                    let mut any = false;
+                    while leaves.contains_key(format!("conv{stage}-{i}_w").as_str()) {
+                        conv(&mut layers, &format!("conv{stage}-{i}"), 1, 1, true)?;
+                        any = true;
+                        i += 1;
+                    }
+                    if !any {
+                        break;
+                    }
+                    layers.push(Layer::MaxPool { size: 2, stride: 2 });
+                    stage += 1;
+                }
+                layers.push(Layer::Flatten);
+                fc(&mut layers, "fc1", true)?;
+                fc(&mut layers, "fc2", true)?;
+                fc(&mut layers, "fc3", false)?;
+            }
+            "resnet_s" => {
+                conv(&mut layers, "conv1", 1, 1, false)?;
+                bn(&mut layers, "bn1")?;
+                layers.push(Layer::Relu);
+                let mut si = 1;
+                while leaves.contains_key(format!("conv{si}-1-1_w").as_str()) {
+                    let mut bi = 1;
+                    while leaves.contains_key(format!("conv{si}-{bi}-1_w").as_str()) {
+                        let stride = if bi == 1 && si > 1 { 2 } else { 1 };
+                        layers.push(Layer::SaveResidual);
+                        conv(&mut layers, &format!("conv{si}-{bi}-1"), stride, 1, false)?;
+                        bn(&mut layers, &format!("bn{si}-{bi}-1"))?;
+                        layers.push(Layer::Relu);
+                        conv(&mut layers, &format!("conv{si}-{bi}-2"), 1, 1, false)?;
+                        bn(&mut layers, &format!("bn{si}-{bi}-2"))?;
+                        if leaves.contains_key(format!("conv{si}-{bi}-proj_w").as_str()) {
+                            let (ps, _) = value(&format!("conv{si}-{bi}-proj_w"))?;
+                            let (_, pb) = value(&format!("conv{si}-{bi}-proj_b"))?;
+                            layers.push(Layer::ProjectResidual {
+                                w: store(&format!("conv{si}-{bi}-proj_w"))?,
+                                bias: pb.clone(),
+                                ci: ps.shape[1],
+                                spec: ConvSpec { stride, pad: 0 },
+                            });
+                        }
+                        layers.push(Layer::AddResidual { relu: true });
+                        bi += 1;
+                    }
+                    si += 1;
+                }
+                layers.push(Layer::GlobalAvgPool);
+                fc(&mut layers, "fc1", false)?;
+            }
+            other => anyhow::bail!("engine does not know model {other:?}"),
+        }
+
+        let num_classes = match layers.iter().rev().find_map(|l| match l {
+            Layer::Fc { w, .. } => Some(w.logical_shape().0),
+            _ => None,
+        }) {
+            Some(n) => n,
+            None => anyhow::bail!("no FC head found"),
+        };
+        Ok(Engine { model: model.to_string(), sparse, layers, num_classes })
+    }
+
+    /// Total weight storage (paper Table 3 "Model Size").
+    pub fn model_size_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Conv { w, bias, .. } | Layer::Fc { w, bias, .. } => {
+                    w.storage_bytes() + bias.len() * 4
+                }
+                Layer::ProjectResidual { w, bias, .. } => w.storage_bytes() + bias.len() * 4,
+                Layer::BatchNorm { scale, bias } => (scale.len() + bias.len()) * 4,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Forward pass; returns (logits, per-layer timings).
+    pub fn forward_timed(&self, x: &Tensor) -> anyhow::Result<(Tensor, Vec<LayerTiming>)> {
+        let mut h = x.clone();
+        let mut residual: Option<Tensor> = None;
+        let mut timings = Vec::new();
+        for layer in &self.layers {
+            let t0 = Instant::now();
+            let name;
+            match layer {
+                Layer::Conv { name: n, w, bias, ci, kh, kw, spec, relu } => {
+                    name = n.clone();
+                    h = conv_via_csr(&h, w, bias, *ci, *kh, *kw, *spec)?;
+                    if *relu {
+                        tensor::relu_inplace(&mut h);
+                    }
+                }
+                Layer::Fc { name: n, w, bias, relu } => {
+                    name = n.clone();
+                    let mut y = w.matmul_nt(&h);
+                    tensor::add_bias_rows(&mut y, bias);
+                    if *relu {
+                        tensor::relu_inplace(&mut y);
+                    }
+                    h = y;
+                }
+                Layer::MaxPool { size, stride } => {
+                    name = "maxpool".into();
+                    h = tensor::max_pool(&h, *size, *stride);
+                }
+                Layer::GlobalAvgPool => {
+                    name = "avgpool".into();
+                    h = tensor::global_avg_pool(&h);
+                }
+                Layer::Flatten => {
+                    name = "flatten".into();
+                    let b = h.shape[0];
+                    let rest: usize = h.shape[1..].iter().product();
+                    h = h.reshape(vec![b, rest]);
+                }
+                Layer::Relu => {
+                    name = "relu".into();
+                    tensor::relu_inplace(&mut h);
+                }
+                Layer::BatchNorm { scale, bias } => {
+                    name = "bn".into();
+                    h = tensor::batch_norm(&h, scale, bias, 1e-5);
+                }
+                Layer::SaveResidual => {
+                    name = "save".into();
+                    residual = Some(h.clone());
+                }
+                Layer::ProjectResidual { w, bias, ci, spec } => {
+                    name = "proj".into();
+                    let r = residual
+                        .take()
+                        .ok_or_else(|| anyhow::anyhow!("proj without residual"))?;
+                    residual = Some(conv_via_csr(&r, w, bias, *ci, 1, 1, *spec)?);
+                }
+                Layer::AddResidual { relu } => {
+                    name = "add".into();
+                    let r = residual
+                        .take()
+                        .ok_or_else(|| anyhow::anyhow!("add without residual"))?;
+                    anyhow::ensure!(r.shape == h.shape, "residual shape {:?} vs {:?}", r.shape, h.shape);
+                    for (a, b) in h.data.iter_mut().zip(&r.data) {
+                        *a += b;
+                    }
+                    if *relu {
+                        tensor::relu_inplace(&mut h);
+                    }
+                }
+            }
+            timings.push(LayerTiming { name, micros: t0.elapsed().as_secs_f64() * 1e6 });
+        }
+        Ok((h, timings))
+    }
+
+    pub fn forward(&self, x: &Tensor) -> anyhow::Result<Tensor> {
+        Ok(self.forward_timed(x)?.0)
+    }
+
+    /// Per-weight-layer work profile for the device cost model: walks the
+    /// graph tracking spatial shape, counting FLOPs against *stored
+    /// nonzeros* (compressed kernels skip zeros) and bytes as weight
+    /// storage + activation traffic.
+    pub fn work_profile(
+        &self,
+        batch: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+    ) -> Vec<crate::device::LayerWork> {
+        let b = batch as f64;
+        let (mut ch, mut hh, mut ww) = (c, h, w);
+        // A dense kernel cannot skip zeros: effective multiplies = nnz
+        // only on the compressed path, full numel on the dense path.
+        let eff_elems = |ws: &WeightStore| {
+            if self.sparse {
+                ws.nnz() as f64
+            } else {
+                let (r, c) = ws.logical_shape();
+                (r * c) as f64
+            }
+        };
+        let mut out = Vec::new();
+        for layer in &self.layers {
+            match layer {
+                Layer::Conv { name, w: ws, bias, kh, kw, spec, .. } => {
+                    let o = ws.logical_shape().0;
+                    let oh = tensor::out_dim(hh, *kh, spec.stride, spec.pad);
+                    let ow = tensor::out_dim(ww, *kw, spec.stride, spec.pad);
+                    let positions = (oh * ow) as f64;
+                    let flops = 2.0 * b * positions * eff_elems(ws);
+                    let bytes = ws.storage_bytes() as f64
+                        + bias.len() as f64 * 4.0
+                        + 4.0 * b * (ch * hh * ww + o * oh * ow) as f64;
+                    out.push(crate::device::LayerWork { name: name.clone(), flops, bytes });
+                    ch = o;
+                    hh = oh;
+                    ww = ow;
+                }
+                Layer::ProjectResidual { w: ws, bias, spec, .. } => {
+                    let oh = tensor::out_dim(hh, 1, spec.stride, spec.pad).max(1);
+                    let positions = (oh * oh) as f64;
+                    let flops = 2.0 * b * positions * eff_elems(ws);
+                    let bytes = ws.storage_bytes() as f64 + bias.len() as f64 * 4.0;
+                    out.push(crate::device::LayerWork { name: "proj".into(), flops, bytes });
+                }
+                Layer::Fc { name, w: ws, bias, .. } => {
+                    let (n, k) = ws.logical_shape();
+                    let flops = 2.0 * b * eff_elems(ws);
+                    let bytes = ws.storage_bytes() as f64
+                        + bias.len() as f64 * 4.0
+                        + 4.0 * b * (k + n) as f64;
+                    out.push(crate::device::LayerWork { name: name.clone(), flops, bytes });
+                }
+                Layer::MaxPool { size, stride } => {
+                    hh = tensor::out_dim(hh, *size, *stride, 0);
+                    ww = tensor::out_dim(ww, *size, *stride, 0);
+                }
+                Layer::GlobalAvgPool => {
+                    hh = 1;
+                    ww = 1;
+                }
+                Layer::Flatten => {}
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Accuracy over a dataset, batched.
+    pub fn accuracy(&self, data: &crate::data::Dataset, batch: usize) -> anyhow::Result<f64> {
+        let mut correct = 0usize;
+        let mut i = 0;
+        while i < data.n {
+            let take = batch.min(data.n - i);
+            let mut xs = Vec::with_capacity(take * data.example_size());
+            for j in 0..take {
+                xs.extend_from_slice(data.image(i + j));
+            }
+            let x = Tensor::new(vec![take, data.c, data.h, data.w], xs);
+            let logits = self.forward(&x)?;
+            for (j, pred) in tensor::argmax_rows(&logits).into_iter().enumerate() {
+                if pred == data.labels[i + j] as usize {
+                    correct += 1;
+                }
+            }
+            i += take;
+        }
+        Ok(correct as f64 / data.n as f64)
+    }
+}
+
+/// Conv through the CSR path: im2col then `Dmat × Cmat'` (paper Fig. 2).
+fn conv_via_csr(
+    x: &Tensor,
+    w: &WeightStore,
+    bias: &[f32],
+    _ci: usize,
+    kh: usize,
+    kw: usize,
+    spec: ConvSpec,
+) -> anyhow::Result<Tensor> {
+    let (batch, _c, hdim, wdim) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (o, _k) = w.logical_shape();
+    let oh = tensor::out_dim(hdim, kh, spec.stride, spec.pad);
+    let ow = tensor::out_dim(wdim, kw, spec.stride, spec.pad);
+    let cols = tensor::im2col(x, kh, kw, spec); // (B*OH*OW, C*KH*KW)
+    let y = w.matmul_nt(&cols); // (B*OH*OW, O)
+    // Back to NCHW with bias.
+    let mut out = vec![0.0f32; batch * o * oh * ow];
+    for bi in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (bi * oh + oy) * ow + ox;
+                for oc in 0..o {
+                    out[((bi * o + oc) * oh + oy) * ow + ox] = y.data[row * o + oc] + bias[oc];
+                }
+            }
+        }
+    }
+    Ok(Tensor::new(vec![batch, o, oh, ow], out))
+}

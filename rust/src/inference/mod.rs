@@ -1,0 +1,12 @@
+//! Compressed inference engine — the "embedded device" execution path.
+//!
+//! Runs a trained model forward entirely in Rust with weights stored
+//! either dense or CSR (the paper's deployment scenario, Section 4.5):
+//! fully-connected layers multiply activations against CSR weights with
+//! the Figure-2 `dense×compressed'` kernel; conv layers run im2col and
+//! then the same kernel against the (O, I·KH·KW) CSR view. Per-layer
+//! timings feed the Table-3 bench and the device cost model.
+
+pub mod engine;
+
+pub use engine::{Engine, LayerTiming, WeightStore};

@@ -1,0 +1,34 @@
+//! # proxcomp — compressed learning of deep neural networks
+//!
+//! Reproduction of Lee & Lee, *"Compressed Learning of Deep Neural
+//! Networks for OpenCL-Capable Embedded Systems"* (Applied Sciences 9(8),
+//! 2019) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — training coordinator, compression controllers
+//!   (SpC / Pru / MM / debias), compressed sparse matrix substrate (DIA /
+//!   ELL / CSR / COO + the paper's dense×compressed kernels), compressed
+//!   inference engine, embedded-device cost model, checkpoints, metrics,
+//!   CLI.
+//! * **L2 (python/compile)** — JAX model zoo + Prox-RMSProp / Prox-ADAM /
+//!   masked / MM training graphs, AOT-lowered to HLO text once at build
+//!   time (`make artifacts`).
+//! * **L1 (python/compile/kernels)** — Pallas kernels (prox
+//!   soft-threshold, dense×compressed matmuls) that lower *into* the L2
+//!   artifacts.
+//!
+//! At runtime only this crate runs: it loads `artifacts/*.hlo.txt` via
+//! the PJRT C API (`xla` crate) and drives everything from Rust. See
+//! DESIGN.md for the paper↔module map and EXPERIMENTS.md for results.
+
+pub mod checkpoint;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod inference;
+pub mod metrics;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,266 @@
+//! proxcomp CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! proxcomp train   --model lenet --method spc --lambda 1.2 --steps 600 \
+//!                  [--retrain-steps 200]
+//! proxcomp sweep   --model lenet --lambdas 0.5,1.0,2.0 [--method spc]
+//! proxcomp seeds   --model lenet --seeds 0,1,2 --optimizer rmsprop
+//! proxcomp infer   --checkpoint ckpt.pxcp [--sparse] [--batch 64]
+//! proxcomp report  --checkpoint ckpt.pxcp        # layer table + size
+//! proxcomp info                                  # manifest summary
+//! ```
+//!
+//! Every subcommand shares the manifest + PJRT runtime; results land in
+//! `reports/` as JSON/CSV.
+
+use anyhow::Result;
+use proxcomp::checkpoint;
+use proxcomp::config::RunConfig;
+use proxcomp::coordinator::sweep;
+use proxcomp::data;
+use proxcomp::inference::Engine;
+use proxcomp::info;
+use proxcomp::metrics::{self, RunResult};
+use proxcomp::runtime::{Manifest, Runtime};
+use proxcomp::util::cli::Args;
+use proxcomp::util::json::Json;
+use proxcomp::util::logger;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    if args.flag("verbose") {
+        logger::set_level(logger::Level::Debug);
+    }
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "train" => cmd_train(&args),
+        "sweep" => cmd_sweep(&args),
+        "seeds" => cmd_seeds(&args),
+        "infer" => cmd_infer(&args),
+        "report" => cmd_report(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let mut cfg = match args.get_str("config") {
+        Some(path) => RunConfig::from_json_file(&path)?,
+        None => RunConfig::default(),
+    };
+    cfg.apply_args(args)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn print_result(r: &RunResult) {
+    println!("\n== {} on {} (λ={}, seed={}) ==", r.method, r.model, r.lambda, r.seed);
+    println!("  test accuracy    : {:.4}", r.accuracy);
+    println!("  test loss        : {:.4}", r.loss);
+    println!(
+        "  compression rate : {:.4} ({:.0}×), nnz {} / {}",
+        r.compression_rate,
+        r.times_factor(),
+        r.nnz,
+        r.total_weights
+    );
+    println!("  wall time        : {:.1}s", r.wall_secs);
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    args.finish()?;
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let mut rt = Runtime::cpu()?;
+    let result = sweep::run_method(&mut rt, &manifest, &cfg)?;
+    print_result(&result);
+    result.history.write_csv(&metrics::report_path(&format!(
+        "train_{}_{}_{}.csv",
+        result.model, result.method, cfg.seed
+    )))?;
+    let p = metrics::write_json_report(
+        &format!("train_{}_{}_{}.json", result.model, result.method, cfg.seed),
+        &result.to_json(),
+    )?;
+    info!("wrote {}", p.display());
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let lambdas: Vec<f32> = args
+        .list_or("lambdas", &["0.25", "0.5", "1.0", "2.0", "4.0"])
+        .iter()
+        .map(|s| s.parse::<f32>().map_err(|_| anyhow::anyhow!("bad lambda {s:?}")))
+        .collect::<Result<Vec<_>>>()?;
+    args.finish()?;
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let mut rt = Runtime::cpu()?;
+    let results = sweep::lambda_sweep(&mut rt, &manifest, &cfg, &lambdas)?;
+    println!("\nλ        accuracy  rate     nnz");
+    for r in &results {
+        println!("{:<8} {:.4}    {:.4}   {}", r.lambda, r.accuracy, r.compression_rate, r.nnz);
+    }
+    let arr = Json::Arr(results.iter().map(|r| r.to_json()).collect());
+    let p = metrics::write_json_report(
+        &format!("sweep_{}_{}.json", cfg.model, cfg.method.name()),
+        &arr,
+    )?;
+    info!("wrote {}", p.display());
+    Ok(())
+}
+
+fn cmd_seeds(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let seeds: Vec<u64> = args
+        .list_or("seeds", &["0", "1", "2", "3"])
+        .iter()
+        .map(|s| s.parse::<u64>().map_err(|_| anyhow::anyhow!("bad seed {s:?}")))
+        .collect::<Result<Vec<_>>>()?;
+    args.finish()?;
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let mut rt = Runtime::cpu()?;
+    let results = sweep::seed_sweep(&mut rt, &manifest, &cfg, &seeds)?;
+    println!("\nseed   accuracy  rate");
+    for r in &results {
+        println!("{:<6} {:.4}    {:.4}", r.seed, r.accuracy, r.compression_rate);
+    }
+    let accs: Vec<f64> = results.iter().map(|r| r.accuracy).collect();
+    let rates: Vec<f64> = results.iter().map(|r| r.compression_rate).collect();
+    println!(
+        "acc  mean {:.4} std {:.4} | rate mean {:.4} std {:.4}",
+        proxcomp::util::stats::mean(&accs),
+        proxcomp::util::stats::std_dev(&accs),
+        proxcomp::util::stats::mean(&rates),
+        proxcomp::util::stats::std_dev(&rates)
+    );
+    let arr = Json::Arr(results.iter().map(|r| r.to_json()).collect());
+    metrics::write_json_report(
+        &format!("seeds_{}_{}.json", cfg.model, cfg.optimizer.step_name()),
+        &arr,
+    )?;
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let path = args
+        .get_str("checkpoint")
+        .ok_or_else(|| anyhow::anyhow!("--checkpoint required"))?;
+    let sparse = args.flag("sparse");
+    let batch = args.usize_or("batch", 64)?;
+    let examples = args.usize_or("examples", 512)?;
+    args.finish()?;
+    let ck = checkpoint::load(std::path::Path::new(&path))?;
+    let model = ck
+        .meta
+        .get("model")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint meta lacks model name"))?
+        .to_string();
+    let dataset_name = ck
+        .meta
+        .get("dataset")
+        .and_then(Json::as_str)
+        .unwrap_or("synth-mnist")
+        .to_string();
+    let engine = Engine::from_bundle(&model, &ck.params, sparse)?;
+    let dataset = data::generate(&dataset_name, examples, 0x7E57_DA7A)?;
+    info!(
+        "engine: {model} ({}), model size {} KB",
+        if sparse { "CSR" } else { "dense" },
+        engine.model_size_bytes() / 1024
+    );
+    let t0 = std::time::Instant::now();
+    let acc = engine.accuracy(&dataset, batch)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "accuracy {acc:.4} over {} examples in {dt:.2}s ({:.1} ex/s)",
+        dataset.n,
+        dataset.n as f64 / dt
+    );
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let path = args
+        .get_str("checkpoint")
+        .ok_or_else(|| anyhow::anyhow!("--checkpoint required"))?;
+    args.finish()?;
+    let ck = checkpoint::load(std::path::Path::new(&path))?;
+    println!("checkpoint: {path}");
+    println!("meta: {}", ck.meta.to_string_compact());
+    println!("payload: {} KB", ck.payload_bytes / 1024);
+    println!("\nlayer            nnz / total        rate");
+    for (layer, nnz, total) in ck.params.layer_stats() {
+        let rate = 1.0 - nnz as f64 / total as f64;
+        let factor = if nnz > 0 { total as f64 / nnz as f64 } else { f64::INFINITY };
+        println!("{layer:<16} {nnz:>9} / {total:<9} {:.2}% ({factor:.0}×)", rate * 100.0);
+    }
+    let p = &ck.params;
+    println!(
+        "\ntotal: {} / {} = {:.2}% compression",
+        p.total_weights() - p.zero_weights(),
+        p.total_weights(),
+        p.compression_rate() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts-dir", "artifacts");
+    args.finish()?;
+    let manifest = Manifest::load(&dir)?;
+    println!("manifest: {}/manifest.json", dir);
+    for (name, m) in &manifest.models {
+        println!(
+            "\n{name}: {} → {} classes, {} leaves, {} weights ({} params), dataset {}",
+            m.input_shape.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("×"),
+            m.num_classes,
+            m.params.len(),
+            m.num_weights,
+            m.num_params,
+            m.dataset
+        );
+        for (step, a) in &m.artifacts {
+            println!(
+                "  {step:<20} batch {:<4} {} inputs, {} outputs",
+                a.batch,
+                a.inputs.len(),
+                a.outputs.len()
+            );
+        }
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "proxcomp — compressed learning of DNNs (Lee & Lee 2019 reproduction)
+
+USAGE: proxcomp <subcommand> [options]
+
+SUBCOMMANDS
+  train    run one compression method end to end
+           --model mlp|lenet|alexnet_s|vgg_s|resnet_s
+           --method spc|pru|mm|ref   --optimizer adam|rmsprop|sgd
+           --lambda F --lr F --steps N --retrain-steps N --seed N
+  sweep    λ-grid sweep           --lambdas 0.5,1.0,2.0
+  seeds    multi-seed variance    --seeds 0,1,2,3
+  infer    run a checkpoint through the rust inference engine
+           --checkpoint F [--sparse] [--batch N]
+  report   layer-wise compression table for a checkpoint
+  info     manifest summary
+
+Shared: --config run.json --artifacts-dir artifacts --verbose"
+    );
+}

@@ -1,0 +1,245 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile once, execute.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO *text* is the interchange
+//! format (the text parser reassigns instruction ids, sidestepping the
+//! 64-bit-id protos jax ≥ 0.5 emits that xla_extension 0.5.1 rejects).
+//! Compiled executables are cached per path, so sweeps over λ/seeds reuse
+//! one compilation.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::util::logger;
+
+/// Host-side value passed to / returned from an executable.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostValue {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostValue {
+    pub fn scalar_f32(v: f32) -> HostValue {
+        HostValue::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> HostValue {
+        let n = shape.iter().product();
+        HostValue::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn ones_f32(shape: Vec<usize>) -> HostValue {
+        let n = shape.iter().product();
+        HostValue::F32 { shape, data: vec![1.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            HostValue::F32 { data, .. } => data.len(),
+            HostValue::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostValue::F32 { shape, .. } => shape,
+            HostValue::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            HostValue::F32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("HostValue is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> anyhow::Result<&mut Vec<f32>> {
+        match self {
+            HostValue::F32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("HostValue is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> anyhow::Result<&[i32]> {
+        match self {
+            HostValue::I32 { data, .. } => Ok(data),
+            _ => anyhow::bail!("HostValue is not i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> anyhow::Result<f32> {
+        match self {
+            HostValue::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            HostValue::I32 { data, .. } if data.len() == 1 => Ok(data[0] as f32),
+            _ => anyhow::bail!("HostValue is not a scalar"),
+        }
+    }
+
+    fn to_literal(&self) -> anyhow::Result<xla::Literal> {
+        let lit = match self {
+            HostValue::F32 { shape, data } => {
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    shape,
+                    bytes,
+                )?
+            }
+            HostValue::I32 { shape, data } => {
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    bytes,
+                )?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> anyhow::Result<HostValue> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match lit.ty()? {
+            xla::ElementType::F32 => Ok(HostValue::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(HostValue::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => anyhow::bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+/// Build an f32 literal directly from a borrowed slice (§Perf: skips the
+/// intermediate `HostValue` vector clone on the training hot path — the
+/// literal constructor copies the bytes once, which is unavoidable).
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> anyhow::Result<xla::Literal> {
+    let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// As [`literal_f32`] for i32.
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> anyhow::Result<xla::Literal> {
+    let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// PJRT CPU runtime with a per-path executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        logger::log(
+            logger::Level::Debug,
+            &format!(
+                "PJRT client: platform={} devices={}",
+                client.platform_name(),
+                client.device_count()
+            ),
+        );
+        Ok(Runtime { client, cache: HashMap::new() })
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn load(&mut self, path: &Path) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        let key = path.to_string_lossy().to_string();
+        if !self.cache.contains_key(&key) {
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&key)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            logger::log(
+                logger::Level::Debug,
+                &format!("compiled {key} in {:.2}s", t0.elapsed().as_secs_f64()),
+            );
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(&self.cache[&key])
+    }
+
+    /// Execute an artifact with host values; returns the output tuple as
+    /// host values (the AOT path lowers with `return_tuple=True`).
+    pub fn execute(&mut self, path: &Path, inputs: &[HostValue]) -> anyhow::Result<Vec<HostValue>> {
+        let literals = inputs
+            .iter()
+            .map(HostValue::to_literal)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        self.execute_literals(path, &literals)
+    }
+
+    /// Execute with pre-built literals (the training hot path builds them
+    /// straight from borrowed state slices via [`literal_f32`]).
+    pub fn execute_literals(
+        &mut self,
+        path: &Path,
+        literals: &[xla::Literal],
+    ) -> anyhow::Result<Vec<HostValue>> {
+        let exe = self.load(path)?;
+        let result = exe.execute::<xla::Literal>(literals)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        parts.iter().map(HostValue::from_literal).collect()
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_value_constructors() {
+        let z = HostValue::zeros_f32(vec![2, 3]);
+        assert_eq!(z.numel(), 6);
+        assert_eq!(z.as_f32().unwrap(), &[0.0; 6]);
+        let o = HostValue::ones_f32(vec![4]);
+        assert_eq!(o.as_f32().unwrap(), &[1.0; 4]);
+        let s = HostValue::scalar_f32(2.5);
+        assert_eq!(s.scalar().unwrap(), 2.5);
+        assert!(z.scalar().is_err());
+        assert!(z.as_i32().is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let v = HostValue::F32 { shape: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] };
+        let lit = v.to_literal().unwrap();
+        let back = HostValue::from_literal(&lit).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let v = HostValue::I32 { shape: vec![3], data: vec![7, -1, 0] };
+        let lit = v.to_literal().unwrap();
+        let back = HostValue::from_literal(&lit).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let v = HostValue::scalar_f32(3.25);
+        let lit = v.to_literal().unwrap();
+        let back = HostValue::from_literal(&lit).unwrap();
+        assert_eq!(back.scalar().unwrap(), 3.25);
+        assert_eq!(back.shape(), &[] as &[usize]);
+    }
+}

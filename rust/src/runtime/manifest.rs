@@ -1,0 +1,275 @@
+//! Typed view of `artifacts/manifest.json` — the contract with `aot.py`.
+//!
+//! The manifest pins, for every artifact, the flat input/output role
+//! lists in exact HLO `parameter(i)` order; the trainer's generic state
+//! machine is driven entirely by these roles.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Json};
+
+/// One parameter leaf of a model (order = flattening order).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    /// "conv_w" | "conv_b" | "fc_w" | "fc_b" | "bn_scale" | "bn_bias".
+    pub kind: String,
+    pub shape: Vec<usize>,
+    pub prunable: bool,
+    pub layer: String,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Fan-in for He initialization (He et al. 2015), derived from kind.
+    pub fn fan_in(&self) -> usize {
+        match self.kind.as_str() {
+            "conv_w" => self.shape[1] * self.shape[2] * self.shape[3],
+            "fc_w" => self.shape[1],
+            _ => 1,
+        }
+    }
+}
+
+/// Semantic role of one artifact input/output (see steps.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    Param,
+    OptM,
+    OptV,
+    OptT,
+    Mask,
+    Theta,
+    Lagrange,
+    X,
+    Y,
+    Lambda,
+    Lr,
+    Mu,
+    Loss,
+    Correct,
+    Logits,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> anyhow::Result<Role> {
+        Ok(match s {
+            "param" => Role::Param,
+            "opt_m" => Role::OptM,
+            "opt_v" => Role::OptV,
+            "opt_t" => Role::OptT,
+            "mask" => Role::Mask,
+            "theta" => Role::Theta,
+            "lagrange" => Role::Lagrange,
+            "x" => Role::X,
+            "y" => Role::Y,
+            "lambda" => Role::Lambda,
+            "lr" => Role::Lr,
+            "mu" => Role::Mu,
+            "loss" => Role::Loss,
+            "correct" => Role::Correct,
+            "logits" => Role::Logits,
+            other => anyhow::bail!("unknown role {other:?}"),
+        })
+    }
+}
+
+/// One typed slot of an artifact signature.
+#[derive(Debug, Clone)]
+pub struct Slot {
+    pub role: Role,
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" | "i32".
+    pub dtype: String,
+}
+
+/// One lowered artifact (model × step).
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    pub file: PathBuf,
+    pub batch: usize,
+    pub inputs: Vec<Slot>,
+    pub outputs: Vec<Slot>,
+}
+
+/// One model entry.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub dataset: String,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub params: Vec<ParamSpec>,
+    pub num_weights: usize,
+    pub num_params: usize,
+    pub artifacts: BTreeMap<String, Artifact>,
+}
+
+impl ModelEntry {
+    pub fn artifact(&self, step: &str) -> anyhow::Result<&Artifact> {
+        self.artifacts
+            .get(step)
+            .ok_or_else(|| anyhow::anyhow!("model {} has no artifact {step:?}", self.name))
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> anyhow::Result<Manifest> {
+        let dir = PathBuf::from(dir);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?}: {e}; run `make artifacts`"))?;
+        let j = json::parse(&text)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj().unwrap_or(&[]) {
+            models.insert(name.clone(), parse_model(name, m, &dir)?);
+        }
+        if models.is_empty() {
+            anyhow::bail!("manifest has no models");
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> anyhow::Result<&ModelEntry> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown model {name:?}; manifest has {:?}",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+fn parse_model(name: &str, j: &Json, dir: &Path) -> anyhow::Result<ModelEntry> {
+    let params = j
+        .req("params")?
+        .as_arr()
+        .unwrap_or(&[])
+        .iter()
+        .map(parse_param)
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let mut artifacts = BTreeMap::new();
+    for (step, a) in j.req("artifacts")?.as_obj().unwrap_or(&[]) {
+        artifacts.insert(step.clone(), parse_artifact(a, dir)?);
+    }
+    Ok(ModelEntry {
+        name: name.to_string(),
+        dataset: j.req("dataset")?.as_str().unwrap_or("").to_string(),
+        input_shape: j.req("input_shape")?.as_usize_vec().unwrap_or_default(),
+        num_classes: j.req("num_classes")?.as_usize().unwrap_or(0),
+        train_batch: j.req("train_batch")?.as_usize().unwrap_or(0),
+        eval_batch: j.req("eval_batch")?.as_usize().unwrap_or(0),
+        num_weights: j.req("num_weights")?.as_usize().unwrap_or(0),
+        num_params: j.req("num_params")?.as_usize().unwrap_or(0),
+        params,
+        artifacts,
+    })
+}
+
+fn parse_param(j: &Json) -> anyhow::Result<ParamSpec> {
+    Ok(ParamSpec {
+        name: j.req("name")?.as_str().unwrap_or("").to_string(),
+        kind: j.req("kind")?.as_str().unwrap_or("").to_string(),
+        shape: j.req("shape")?.as_usize_vec().unwrap_or_default(),
+        prunable: j.req("prunable")?.as_bool().unwrap_or(false),
+        layer: j.req("layer")?.as_str().unwrap_or("").to_string(),
+    })
+}
+
+fn parse_artifact(j: &Json, dir: &Path) -> anyhow::Result<Artifact> {
+    let parse_slots = |key: &str| -> anyhow::Result<Vec<Slot>> {
+        j.req(key)?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|s| {
+                Ok(Slot {
+                    role: Role::parse(s.req("role")?.as_str().unwrap_or(""))?,
+                    name: s.req("name")?.as_str().unwrap_or("").to_string(),
+                    shape: s.req("shape")?.as_usize_vec().unwrap_or_default(),
+                    dtype: s.req("dtype")?.as_str().unwrap_or("f32").to_string(),
+                })
+            })
+            .collect()
+    };
+    Ok(Artifact {
+        file: dir.join(j.req("file")?.as_str().unwrap_or("")),
+        batch: j.req("batch")?.as_usize().unwrap_or(0),
+        inputs: parse_slots("inputs")?,
+        outputs: parse_slots("outputs")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests run against the real generated manifest when present
+    /// (integration tests in rust/tests enforce it exists).
+    fn manifest() -> Option<Manifest> {
+        Manifest::load("artifacts").ok()
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let Some(m) = manifest() else { return };
+        assert!(m.models.contains_key("lenet"));
+        let lenet = m.model("lenet").unwrap();
+        assert_eq!(lenet.num_weights, 430_500); // paper Table A1
+        assert_eq!(lenet.input_shape, vec![1, 28, 28]);
+        let art = lenet.artifact("train_prox_adam").unwrap();
+        assert!(art.file.exists());
+        // params, m, v, t, x, y, lambda, lr
+        let n_leaves = lenet.params.len();
+        assert_eq!(art.inputs.len(), 3 * n_leaves + 1 + 2 + 2);
+        assert_eq!(art.inputs.last().unwrap().role, Role::Lr);
+    }
+
+    #[test]
+    fn fan_in_rules() {
+        let conv = ParamSpec {
+            name: "c".into(),
+            kind: "conv_w".into(),
+            shape: vec![20, 1, 5, 5],
+            prunable: true,
+            layer: "c".into(),
+        };
+        assert_eq!(conv.fan_in(), 25);
+        assert_eq!(conv.numel(), 500);
+        let fc = ParamSpec {
+            name: "f".into(),
+            kind: "fc_w".into(),
+            shape: vec![500, 800],
+            prunable: true,
+            layer: "f".into(),
+        };
+        assert_eq!(fc.fan_in(), 800);
+    }
+
+    #[test]
+    fn role_parsing() {
+        assert_eq!(Role::parse("param").unwrap(), Role::Param);
+        assert_eq!(Role::parse("lambda").unwrap(), Role::Lambda);
+        assert!(Role::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load("/nonexistent_dir_xyz").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Runtime layer: PJRT client + manifest + parameter bundles.
+//!
+//! `client` loads and executes the AOT artifacts (HLO text → compile →
+//! execute, see /opt/xla-example/load_hlo); `manifest` is the typed
+//! contract with `python/compile/aot.py`; `params` owns host-side model
+//! state and reproduces He initialization from the manifest alone.
+
+pub mod client;
+pub mod manifest;
+pub mod params;
+
+pub use client::{HostValue, Runtime};
+pub use manifest::{Artifact, Manifest, ModelEntry, ParamSpec, Role, Slot};
+pub use params::ParamBundle;

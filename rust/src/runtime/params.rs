@@ -1,0 +1,212 @@
+//! Parameter bundles: host-side model state, He init, compression stats.
+//!
+//! The coordinator owns parameters as host vectors (one per leaf, in the
+//! manifest's flattening order) and materializes XLA literals per step.
+//! Initialization reproduces `models/common.py::ParamBuilder` semantics
+//! from the manifest spec alone — Python is never needed at runtime, and
+//! multi-seed experiments (Figure 5) fork the rust PRNG.
+
+use crate::runtime::client::HostValue;
+use crate::runtime::manifest::ParamSpec;
+use crate::util::rng::Rng;
+
+/// Model parameters as host vectors, aligned with the manifest spec.
+#[derive(Debug, Clone)]
+pub struct ParamBundle {
+    pub specs: Vec<ParamSpec>,
+    pub values: Vec<Vec<f32>>,
+}
+
+impl ParamBundle {
+    /// He-initialize weights (zero biases, unit BN scales) from the spec.
+    pub fn he_init(specs: &[ParamSpec], seed: u64) -> ParamBundle {
+        let mut rng = Rng::new(seed ^ 0x4865_496e_6974); // "HeInit" salt
+        let values = specs
+            .iter()
+            .map(|s| match s.kind.as_str() {
+                "conv_w" | "fc_w" => rng.he_normal(s.numel(), s.fan_in()),
+                "bn_scale" => vec![1.0; s.numel()],
+                _ => vec![0.0; s.numel()],
+            })
+            .collect();
+        ParamBundle { specs: specs.to_vec(), values }
+    }
+
+    pub fn zeros_like(specs: &[ParamSpec]) -> ParamBundle {
+        ParamBundle {
+            specs: specs.to_vec(),
+            values: specs.iter().map(|s| vec![0.0; s.numel()]).collect(),
+        }
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.values.iter().map(Vec::len).sum()
+    }
+
+    /// Total prunable weights (the denominator of the paper's
+    /// compression rate — biases/BN excluded, per Tables A1-A4).
+    pub fn total_weights(&self) -> usize {
+        self.specs
+            .iter()
+            .filter(|s| s.prunable)
+            .map(ParamSpec::numel)
+            .sum()
+    }
+
+    /// Exact zeros among prunable weights.
+    pub fn zero_weights(&self) -> usize {
+        self.specs
+            .iter()
+            .zip(&self.values)
+            .filter(|(s, _)| s.prunable)
+            .map(|(_, v)| v.iter().filter(|&&x| x == 0.0).count())
+            .sum()
+    }
+
+    /// The paper's compression rate: zeros / total prunable weights.
+    pub fn compression_rate(&self) -> f64 {
+        let total = self.total_weights();
+        if total == 0 {
+            return 0.0;
+        }
+        self.zero_weights() as f64 / total as f64
+    }
+
+    /// Per-layer (name, nnz, total) rows — the Tables A1-A4 payload.
+    pub fn layer_stats(&self) -> Vec<(String, usize, usize)> {
+        self.specs
+            .iter()
+            .zip(&self.values)
+            .filter(|(s, _)| s.prunable)
+            .map(|(s, v)| {
+                let nnz = v.iter().filter(|&&x| x != 0.0).count();
+                (s.layer.clone(), nnz, v.len())
+            })
+            .collect()
+    }
+
+    /// Convert each leaf into an f32 HostValue with its manifest shape.
+    pub fn to_host_values(&self) -> Vec<HostValue> {
+        self.specs
+            .iter()
+            .zip(&self.values)
+            .map(|(s, v)| HostValue::F32 { shape: s.shape.clone(), data: v.clone() })
+            .collect()
+    }
+
+    /// 0/1 masks of current nonzeros for prunable leaves (all-ones for
+    /// non-prunable) — the debias/retraining mask (Section 2.4).
+    pub fn nonzero_masks(&self) -> Vec<Vec<f32>> {
+        self.specs
+            .iter()
+            .zip(&self.values)
+            .map(|(s, v)| {
+                if s.prunable {
+                    v.iter().map(|&x| if x != 0.0 { 1.0 } else { 0.0 }).collect()
+                } else {
+                    vec![1.0; v.len()]
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lenet_like_specs() -> Vec<ParamSpec> {
+        let p = |name: &str, kind: &str, shape: Vec<usize>, prunable: bool| ParamSpec {
+            name: name.into(),
+            kind: kind.into(),
+            shape,
+            prunable,
+            layer: name.trim_end_matches("_w").trim_end_matches("_b").into(),
+        };
+        vec![
+            p("conv1_w", "conv_w", vec![20, 1, 5, 5], true),
+            p("conv1_b", "conv_b", vec![20], false),
+            p("fc1_w", "fc_w", vec![500, 800], true),
+            p("fc1_b", "fc_b", vec![500], false),
+        ]
+    }
+
+    #[test]
+    fn he_init_statistics() {
+        let specs = lenet_like_specs();
+        let b = ParamBundle::he_init(&specs, 0);
+        // conv1_w: fan_in 25 → std sqrt(2/25) = 0.283
+        let w = &b.values[0];
+        let mean: f32 = w.iter().sum::<f32>() / w.len() as f32;
+        let std: f32 =
+            (w.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / w.len() as f32).sqrt();
+        assert!((std - (2.0f32 / 25.0).sqrt()).abs() < 0.05, "std {std}");
+        // biases zero
+        assert!(b.values[1].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let specs = lenet_like_specs();
+        let a = ParamBundle::he_init(&specs, 5);
+        let b = ParamBundle::he_init(&specs, 5);
+        let c = ParamBundle::he_init(&specs, 6);
+        assert_eq!(a.values, b.values);
+        assert_ne!(a.values, c.values);
+    }
+
+    #[test]
+    fn compression_accounting() {
+        let specs = lenet_like_specs();
+        let mut b = ParamBundle::he_init(&specs, 0);
+        assert_eq!(b.total_weights(), 500 + 400_000);
+        assert_eq!(b.total_params(), 500 + 20 + 400_000 + 500);
+        // Zero half of fc1_w.
+        for v in b.values[2].iter_mut().take(200_000) {
+            *v = 0.0;
+        }
+        assert_eq!(b.zero_weights(), 200_000);
+        let want = 200_000.0 / 400_500.0;
+        assert!((b.compression_rate() - want).abs() < 1e-9);
+        // Bias zeros never count.
+        assert!(b.values[1].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn masks_match_zeros() {
+        let specs = lenet_like_specs();
+        let mut b = ParamBundle::he_init(&specs, 0);
+        b.values[0][7] = 0.0;
+        let masks = b.nonzero_masks();
+        assert_eq!(masks[0][7], 0.0);
+        assert_eq!(masks[0][6], 1.0);
+        // Non-prunable leaves get all-ones masks even though biases are 0.
+        assert!(masks[1].iter().all(|&m| m == 1.0));
+    }
+
+    #[test]
+    fn layer_stats_rows() {
+        let specs = lenet_like_specs();
+        let mut b = ParamBundle::he_init(&specs, 0);
+        for v in b.values[2].iter_mut().take(100) {
+            *v = 0.0;
+        }
+        let stats = b.layer_stats();
+        assert_eq!(stats.len(), 2); // prunable leaves only
+        assert_eq!(stats[0].0, "conv1");
+        assert_eq!(stats[1], ("fc1".to_string(), 400_000 - 100, 400_000));
+    }
+
+    #[test]
+    fn host_values_shapes() {
+        let specs = lenet_like_specs();
+        let b = ParamBundle::he_init(&specs, 0);
+        let hv = b.to_host_values();
+        assert_eq!(hv[0].shape(), &[20, 1, 5, 5]);
+        assert_eq!(hv[0].numel(), 500);
+    }
+}

@@ -1,0 +1,265 @@
+//! Compressed Sparse Row format — the paper's production format.
+//!
+//! Matches the paper's Figure 1(iii): `ptr` holds the index where each row
+//! begins (`rows + 1` entries), `indices` the column of each nonzero, and
+//! `data` the values, row-major. "This format can store variable numbers
+//! of nonzeros in rows efficiently" — and it is what the ViennaCL
+//! `compressed_matrix` class the paper adapted stores.
+
+/// CSR matrix over f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointers, len == rows + 1 (`Cmat_row_ptrs` in the paper kernel).
+    pub ptr: Vec<usize>,
+    /// Column index per nonzero (`Cmat_col_indices`).
+    pub indices: Vec<u32>,
+    /// Nonzero values (`Cmat_elements`).
+    pub data: Vec<f32>,
+}
+
+impl CsrMatrix {
+    /// Build from a dense row-major matrix, dropping exact zeros.
+    pub fn from_dense(dense: &[f32], rows: usize, cols: usize) -> CsrMatrix {
+        assert_eq!(dense.len(), rows * cols);
+        let mut ptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        ptr.push(0);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = dense[r * cols + c];
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    data.push(v);
+                }
+            }
+            ptr.push(indices.len());
+        }
+        CsrMatrix { rows, cols, ptr, indices, data }
+    }
+
+    /// Expand back to a dense row-major matrix.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for k in self.ptr[r]..self.ptr[r + 1] {
+                out[r * self.cols + self.indices[k] as usize] = self.data[k];
+            }
+        }
+        out
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Fraction of entries that are zero (the paper's "compression rate").
+    pub fn compression_rate(&self) -> f64 {
+        let total = self.rows * self.cols;
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.nnz() as f64 / total as f64
+    }
+
+    /// Storage footprint in bytes: values (f32) + column indices (u32) +
+    /// row pointers (u32 on device) — the quantity behind the paper's
+    /// Table-3 "Model Size" column.
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() * 4 + self.indices.len() * 4 + self.ptr.len() * 4
+    }
+
+    /// Nonzeros of one row as (col, value) pairs.
+    pub fn row(&self, r: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let lo = self.ptr[r];
+        let hi = self.ptr[r + 1];
+        self.indices[lo..hi]
+            .iter()
+            .zip(&self.data[lo..hi])
+            .map(|(&c, &v)| (c as usize, v))
+    }
+
+    /// Transpose (CSR -> CSR of the transposed matrix). The operation
+    /// ViennaCL lacked ("the transpose operation for compressed sparse
+    /// matrices (C') is not available") — counting sort over columns.
+    pub fn transpose(&self) -> CsrMatrix {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 1..counts.len() {
+            counts[i] += counts[i - 1];
+        }
+        let ptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0u32; self.nnz()];
+        let mut data = vec![0.0f32; self.nnz()];
+        for r in 0..self.rows {
+            for k in self.ptr[r]..self.ptr[r + 1] {
+                let c = self.indices[k] as usize;
+                let dst = cursor[c];
+                cursor[c] += 1;
+                indices[dst] = r as u32;
+                data[dst] = self.data[k];
+            }
+        }
+        CsrMatrix { rows: self.cols, cols: self.rows, ptr, indices, data }
+    }
+
+    /// Validate structural invariants (used by checkpoint loading).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.ptr.len() != self.rows + 1 {
+            anyhow::bail!("ptr len {} != rows+1 {}", self.ptr.len(), self.rows + 1);
+        }
+        if self.ptr[0] != 0 || *self.ptr.last().unwrap() != self.data.len() {
+            anyhow::bail!("ptr endpoints invalid");
+        }
+        if self.indices.len() != self.data.len() {
+            anyhow::bail!("indices/data length mismatch");
+        }
+        for w in self.ptr.windows(2) {
+            if w[1] < w[0] {
+                anyhow::bail!("ptr not monotone");
+            }
+        }
+        for r in 0..self.rows {
+            let row = &self.indices[self.ptr[r]..self.ptr[r + 1]];
+            for pair in row.windows(2) {
+                if pair[1] <= pair[0] {
+                    anyhow::bail!("row {r} columns not strictly increasing");
+                }
+            }
+            if let Some(&last) = row.last() {
+                if last as usize >= self.cols {
+                    anyhow::bail!("row {r} column {} out of bounds", last);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Figure-1 example matrix.
+    pub fn paper_matrix() -> (Vec<f32>, usize, usize) {
+        #[rustfmt::skip]
+        let dense = vec![
+            1., 7., 0., 0.,
+            0., 2., 8., 0.,
+            5., 0., 3., 9.,
+            0., 6., 0., 4.,
+        ];
+        (dense, 4, 4)
+    }
+
+    #[test]
+    fn figure1_csr_layout() {
+        let (dense, r, c) = paper_matrix();
+        let m = CsrMatrix::from_dense(&dense, r, c);
+        // Paper Figure 1(iii): ptr = [0 2 4 7 9]
+        assert_eq!(m.ptr, vec![0, 2, 4, 7, 9]);
+        assert_eq!(m.indices, vec![0, 1, 1, 2, 0, 2, 3, 1, 3]);
+        assert_eq!(m.data, vec![1., 7., 2., 8., 5., 3., 9., 6., 4.]);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let (dense, r, c) = paper_matrix();
+        let m = CsrMatrix::from_dense(&dense, r, c);
+        assert_eq!(m.to_dense(), dense);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn random_roundtrip() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        for _ in 0..20 {
+            let rows = 1 + rng.below(30);
+            let cols = 1 + rng.below(30);
+            let mut dense = vec![0.0f32; rows * cols];
+            for v in &mut dense {
+                if rng.uniform() < 0.2 {
+                    *v = rng.normal() as f32;
+                }
+            }
+            let m = CsrMatrix::from_dense(&dense, rows, cols);
+            assert_eq!(m.to_dense(), dense);
+            m.validate().unwrap();
+            assert_eq!(m.nnz(), dense.iter().filter(|&&v| v != 0.0).count());
+        }
+    }
+
+    #[test]
+    fn compression_rate() {
+        let (dense, r, c) = paper_matrix();
+        let m = CsrMatrix::from_dense(&dense, r, c);
+        assert!((m.compression_rate() - (16.0 - 9.0) / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = CsrMatrix::from_dense(&vec![0.0; 12], 3, 4);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.to_dense(), vec![0.0; 12]);
+        assert_eq!(m.compression_rate(), 1.0);
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn transpose_matches_dense() {
+        let (dense, r, c) = paper_matrix();
+        let m = CsrMatrix::from_dense(&dense, r, c);
+        let t = m.transpose();
+        t.validate().unwrap();
+        let mut want = vec![0.0f32; 16];
+        for i in 0..4 {
+            for j in 0..4 {
+                want[j * 4 + i] = dense[i * 4 + j];
+            }
+        }
+        assert_eq!(t.to_dense(), want);
+    }
+
+    #[test]
+    fn transpose_twice_is_identity() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let mut dense = vec![0.0f32; 15 * 9];
+        for v in &mut dense {
+            if rng.uniform() < 0.3 {
+                *v = rng.normal() as f32;
+            }
+        }
+        let m = CsrMatrix::from_dense(&dense, 15, 9);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn row_iterator() {
+        let (dense, r, c) = paper_matrix();
+        let m = CsrMatrix::from_dense(&dense, r, c);
+        let row2: Vec<(usize, f32)> = m.row(2).collect();
+        assert_eq!(row2, vec![(0, 5.0), (2, 3.0), (3, 9.0)]);
+    }
+
+    #[test]
+    fn storage_smaller_than_dense_when_sparse() {
+        let mut dense = vec![0.0f32; 100 * 100];
+        dense[5] = 1.0;
+        dense[9999] = 2.0;
+        let m = CsrMatrix::from_dense(&dense, 100, 100);
+        assert!(m.storage_bytes() < 100 * 100 * 4);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let (dense, r, c) = paper_matrix();
+        let mut m = CsrMatrix::from_dense(&dense, r, c);
+        m.indices[0] = 99; // out of bounds column
+        assert!(m.validate().is_err());
+    }
+}

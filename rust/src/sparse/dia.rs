@@ -1,0 +1,152 @@
+//! Diagonal (DIA) format — paper Figure 1(i).
+//!
+//! Stores whole diagonals; "suitable for the case when nonzero values are
+//! at a small number of diagonals" (banded systems), which prox-trained
+//! weight matrices are not — the comparison test quantifies the blow-up.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiaMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Diagonal offsets (col - row), ascending.
+    pub offsets: Vec<i64>,
+    /// (num_diags × rows) values; slot (d, r) = element (r, r + offset_d),
+    /// 0.0 where the diagonal leaves the matrix.
+    pub data: Vec<f32>,
+}
+
+impl DiaMatrix {
+    pub fn from_dense(dense: &[f32], rows: usize, cols: usize) -> DiaMatrix {
+        assert_eq!(dense.len(), rows * cols);
+        let mut offsets: Vec<i64> = Vec::new();
+        for r in 0..rows {
+            for c in 0..cols {
+                if dense[r * cols + c] != 0.0 {
+                    let off = c as i64 - r as i64;
+                    if let Err(pos) = offsets.binary_search(&off) {
+                        offsets.insert(pos, off);
+                    }
+                }
+            }
+        }
+        let mut data = vec![0.0f32; offsets.len() * rows];
+        for (d, &off) in offsets.iter().enumerate() {
+            for r in 0..rows {
+                let c = r as i64 + off;
+                if c >= 0 && (c as usize) < cols {
+                    data[d * rows + r] = dense[r * cols + c as usize];
+                }
+            }
+        }
+        DiaMatrix { rows, cols, offsets, data }
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for (d, &off) in self.offsets.iter().enumerate() {
+            for r in 0..self.rows {
+                let c = r as i64 + off;
+                if c >= 0 && (c as usize) < self.cols {
+                    out[r * self.cols + c as usize] = self.data[d * self.rows + r];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn num_diagonals(&self) -> usize {
+        self.offsets.len()
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() * 4 + self.offsets.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::csr::CsrMatrix;
+
+    fn paper_matrix() -> (Vec<f32>, usize, usize) {
+        #[rustfmt::skip]
+        let dense = vec![
+            1., 7., 0., 0.,
+            0., 2., 8., 0.,
+            5., 0., 3., 9.,
+            0., 6., 0., 4.,
+        ];
+        (dense, 4, 4)
+    }
+
+    #[test]
+    fn figure1_dia_layout() {
+        let (dense, r, c) = paper_matrix();
+        let m = DiaMatrix::from_dense(&dense, r, c);
+        // Paper Figure 1(i): offsets = [-2, 0, 1].
+        assert_eq!(m.offsets, vec![-2, 0, 1]);
+        // Diagonal 0 (main): [1, 2, 3, 4].
+        assert_eq!(&m.data[4..8], &[1., 2., 3., 4.]);
+        // Diagonal -2: [*, *, 5, 6] (padding stored as 0).
+        assert_eq!(&m.data[0..4], &[0., 0., 5., 6.]);
+        // Diagonal +1: [7, 8, 9, *].
+        assert_eq!(&m.data[8..12], &[7., 8., 9., 0.]);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let (dense, r, c) = paper_matrix();
+        assert_eq!(DiaMatrix::from_dense(&dense, r, c).to_dense(), dense);
+    }
+
+    #[test]
+    fn banded_is_compact() {
+        // Tridiagonal 50×50: 3 diagonals, storage ≈ 3 rows worth.
+        let n = 50;
+        let mut dense = vec![0.0f32; n * n];
+        for i in 0..n {
+            dense[i * n + i] = 2.0;
+            if i + 1 < n {
+                dense[i * n + i + 1] = -1.0;
+                dense[(i + 1) * n + i] = -1.0;
+            }
+        }
+        let m = DiaMatrix::from_dense(&dense, n, n);
+        assert_eq!(m.num_diagonals(), 3);
+        let csr = CsrMatrix::from_dense(&dense, n, n);
+        assert!(m.storage_bytes() < csr.storage_bytes());
+    }
+
+    #[test]
+    fn unstructured_blows_up() {
+        // Random scatter activates many diagonals: the paper's reason to
+        // reject DIA for sparse-coded weights.
+        let mut rng = crate::util::rng::Rng::new(7);
+        let n = 40;
+        let mut dense = vec![0.0f32; n * n];
+        for _ in 0..60 {
+            let idx = rng.below(n * n);
+            dense[idx] = 1.0;
+        }
+        let m = DiaMatrix::from_dense(&dense, n, n);
+        assert!(m.num_diagonals() > 30);
+        let csr = CsrMatrix::from_dense(&dense, n, n);
+        assert!(m.storage_bytes() > 3 * csr.storage_bytes());
+    }
+
+    #[test]
+    fn random_roundtrip() {
+        let mut rng = crate::util::rng::Rng::new(8);
+        for _ in 0..10 {
+            let rows = 1 + rng.below(12);
+            let cols = 1 + rng.below(12);
+            let mut dense = vec![0.0f32; rows * cols];
+            for v in &mut dense {
+                if rng.uniform() < 0.3 {
+                    *v = rng.normal() as f32;
+                }
+            }
+            assert_eq!(DiaMatrix::from_dense(&dense, rows, cols).to_dense(), dense);
+        }
+    }
+}

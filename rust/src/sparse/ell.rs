@@ -1,0 +1,152 @@
+//! ELLPACK (ELL) format — paper Figure 1(ii).
+//!
+//! Pads every row to the maximum per-row nonzero count. The paper rejects
+//! it for prox-trained weights ("matrix rows have similar numbers of
+//! nonzero entries" is violated by unstructured sparsity) — the
+//! `padding_overhead` helper quantifies that argument and is used by the
+//! format-comparison bench.
+
+use super::csr::CsrMatrix;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct EllMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Max nonzeros per row (row stride of `data`/`indices`).
+    pub width: usize,
+    /// (rows × width) column indices, `u32::MAX` marks padding.
+    pub indices: Vec<u32>,
+    /// (rows × width) values, 0.0 in padding slots.
+    pub data: Vec<f32>,
+}
+
+pub const ELL_PAD: u32 = u32::MAX;
+
+impl EllMatrix {
+    pub fn from_dense(dense: &[f32], rows: usize, cols: usize) -> EllMatrix {
+        let csr = CsrMatrix::from_dense(dense, rows, cols);
+        Self::from_csr(&csr)
+    }
+
+    pub fn from_csr(csr: &CsrMatrix) -> EllMatrix {
+        let width = (0..csr.rows)
+            .map(|r| csr.ptr[r + 1] - csr.ptr[r])
+            .max()
+            .unwrap_or(0);
+        let mut indices = vec![ELL_PAD; csr.rows * width];
+        let mut data = vec![0.0f32; csr.rows * width];
+        for r in 0..csr.rows {
+            for (slot, k) in (csr.ptr[r]..csr.ptr[r + 1]).enumerate() {
+                indices[r * width + slot] = csr.indices[k];
+                data[r * width + slot] = csr.data[k];
+            }
+        }
+        EllMatrix { rows: csr.rows, cols: csr.cols, width, indices, data }
+    }
+
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for s in 0..self.width {
+                let c = self.indices[r * self.width + s];
+                if c != ELL_PAD {
+                    out[r * self.cols + c as usize] = self.data[r * self.width + s];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.indices.iter().filter(|&&c| c != ELL_PAD).count()
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.data.len() * 4 + self.indices.len() * 4
+    }
+
+    /// Fraction of stored slots that are padding — the waste the paper's
+    /// Section 3.1 objects to for unstructured sparsity.
+    pub fn padding_overhead(&self) -> f64 {
+        let slots = self.rows * self.width;
+        if slots == 0 {
+            return 0.0;
+        }
+        1.0 - self.nnz() as f64 / slots as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_matrix() -> (Vec<f32>, usize, usize) {
+        #[rustfmt::skip]
+        let dense = vec![
+            1., 7., 0., 0.,
+            0., 2., 8., 0.,
+            5., 0., 3., 9.,
+            0., 6., 0., 4.,
+        ];
+        (dense, 4, 4)
+    }
+
+    #[test]
+    fn figure1_ell_layout() {
+        let (dense, r, c) = paper_matrix();
+        let m = EllMatrix::from_dense(&dense, r, c);
+        assert_eq!(m.width, 3);
+        // Paper Figure 1(ii), * = padding.
+        assert_eq!(m.data[0..3], [1., 7., 0.]);
+        assert_eq!(m.indices[0..2], [0, 1]);
+        assert_eq!(m.indices[2], ELL_PAD);
+        assert_eq!(m.data[6..9], [5., 3., 9.]);
+        assert_eq!(m.indices[6..9], [0, 2, 3]);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let (dense, r, c) = paper_matrix();
+        assert_eq!(EllMatrix::from_dense(&dense, r, c).to_dense(), dense);
+    }
+
+    #[test]
+    fn skewed_rows_waste_storage() {
+        // One dense row forces every row to its width: the paper's
+        // argument against ELL for unstructured prox sparsity.
+        let mut dense = vec![0.0f32; 10 * 100];
+        for c in 0..100 {
+            dense[c] = 1.0; // row 0 fully dense
+        }
+        dense[5 * 100 + 3] = 2.0; // row 5: single nonzero
+        let m = EllMatrix::from_dense(&dense, 10, 100);
+        assert_eq!(m.width, 100);
+        assert!(m.padding_overhead() > 0.85);
+        let csr = CsrMatrix::from_dense(&dense, 10, 100);
+        assert!(m.storage_bytes() > 5 * csr.storage_bytes());
+    }
+
+    #[test]
+    fn empty() {
+        let m = EllMatrix::from_dense(&vec![0.0; 6], 2, 3);
+        assert_eq!(m.width, 0);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.to_dense(), vec![0.0; 6]);
+    }
+
+    #[test]
+    fn random_roundtrip() {
+        let mut rng = crate::util::rng::Rng::new(6);
+        for _ in 0..10 {
+            let rows = 1 + rng.below(15);
+            let cols = 1 + rng.below(15);
+            let mut dense = vec![0.0f32; rows * cols];
+            for v in &mut dense {
+                if rng.uniform() < 0.3 {
+                    *v = rng.normal() as f32;
+                }
+            }
+            assert_eq!(EllMatrix::from_dense(&dense, rows, cols).to_dense(), dense);
+        }
+    }
+}

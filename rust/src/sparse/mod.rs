@@ -1,0 +1,22 @@
+//! Compressed sparse matrix substrate — the paper's Section 3.
+//!
+//! Implements every format the paper compares in Figure 1 (DIA, ELL, CSR,
+//! COO), the two dense×compressed kernels it contributes (Figures 2-3),
+//! and the elementwise proximal operator (Figure 4), as multithreaded
+//! cache-blocked CPU kernels. CSR is the production format (the paper's
+//! conclusion); DIA/ELL/COO exist for the format-comparison study and as
+//! conversion targets with round-trip tests.
+
+pub mod blockell;
+pub mod coo;
+pub mod csr;
+pub mod dia;
+pub mod ell;
+pub mod ops;
+pub mod prox;
+
+pub use blockell::BlockEllMatrix;
+pub use coo::CooMatrix;
+pub use csr::CsrMatrix;
+pub use dia::DiaMatrix;
+pub use ell::EllMatrix;

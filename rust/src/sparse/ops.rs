@@ -1,0 +1,330 @@
+//! The paper's dense×compressed kernels (Figures 2-3) as CPU kernels.
+//!
+//! * `dxct` — `result = Dmat @ Cmat'` (forward pass). One inner product
+//!   per (row, col) output element, enumerating the nonzeros of `Cmat`
+//!   row `col` — a direct port of the Figure-2 OpenCL kernel with the
+//!   thread-group/row split replaced by a thread-per-row-chunk split.
+//! * `dxc` — `result = Dmat @ Cmat` (backward pass). As in the paper the
+//!   access pattern is the transpose-unfriendly one; the CPU port walks
+//!   `Cmat` rows and scatters into the output (row-major accumulation),
+//!   which is the cache-friendly CPU equivalent.
+//! * `cxd` — `Cmat @ Dmat` for completeness (the ViennaCL op the paper
+//!   worked around).
+//!
+//! All kernels parallelize over disjoint output row chunks.
+
+use super::csr::CsrMatrix;
+use crate::tensor::Tensor;
+use crate::util::pool;
+
+/// Transpose a (r, c) row-major buffer into (c, r).
+fn transpose_buf(src: &[f32], r: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; r * c];
+    // Block the transpose for cache locality.
+    const TB: usize = 32;
+    for i0 in (0..r).step_by(TB) {
+        for j0 in (0..c).step_by(TB) {
+            for i in i0..(i0 + TB).min(r) {
+                for j in j0..(j0 + TB).min(c) {
+                    out[j * r + i] = src[i * c + j];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Forward: `dmat (B, K) @ csr' -> (B, N)` with `csr` shaped (N, K).
+/// Paper Figure 2: "the column memory access of Cmat' equals the row
+/// access of Cmat", so each output column walks one CSR row.
+///
+/// §Perf: for multi-row batches the kernel runs in *column-major SpMM*
+/// form — transpose D to (K, B) once, then each CSR nonzero performs a
+/// contiguous length-B axpy (`out_t[col] += v · dt[j]`). This walks the
+/// CSR arrays exactly once (the scalar form re-walked them per batch
+/// row: B× the index traffic) and the unit-stride inner loop
+/// auto-vectorizes. Scalar fallback below `SPMM_MIN_BATCH`.
+pub fn dxct(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
+    let (b, k) = (dmat.shape[0], dmat.shape[1]);
+    assert_eq!(k, csr.cols, "dxct: K mismatch ({k} vs {})", csr.cols);
+    let n = csr.rows;
+    if b < SPMM_MIN_BATCH {
+        return dxct_scalar(dmat, csr);
+    }
+    let dt = transpose_buf(&dmat.data, b, k); // (K, B)
+    let mut out_t = vec![0.0f32; n * b]; // (N, B)
+    let ptr = pool::SharedMut::new(&mut out_t);
+    pool::parallel_chunks(n, pool::max_threads(), |c0, c1| {
+        let out_t = unsafe { ptr.slice() };
+        for col in c0..c1 {
+            let orow = &mut out_t[col * b..(col + 1) * b];
+            for idx in csr.ptr[col]..csr.ptr[col + 1] {
+                let j = csr.indices[idx] as usize;
+                let v = csr.data[idx];
+                let drow = &dt[j * b..(j + 1) * b];
+                for (o, d) in orow.iter_mut().zip(drow) {
+                    *o += v * d;
+                }
+            }
+        }
+    });
+    Tensor::new(vec![b, n], transpose_buf(&out_t, n, b))
+}
+
+/// Minimum batch for the column-major SpMM path (transposes amortize).
+pub const SPMM_MIN_BATCH: usize = 8;
+
+/// Scalar-form dxct: the direct port of the Figure-2 OpenCL kernel (one
+/// inner product per output element). Used for small batches and as the
+/// §Perf "before" reference in `bench_kernels`.
+pub fn dxct_scalar(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
+    let (b, k) = (dmat.shape[0], dmat.shape[1]);
+    assert_eq!(k, csr.cols, "dxct: K mismatch ({k} vs {})", csr.cols);
+    let n = csr.rows;
+    let mut out = vec![0.0f32; b * n];
+    let out_ptr = pool::SharedMut::new(&mut out);
+    pool::parallel_chunks(b, pool::max_threads(), |r0, r1| {
+        let out = unsafe { out_ptr.slice() };
+        for row in r0..r1 {
+            let drow = &dmat.data[row * k..(row + 1) * k];
+            let orow = &mut out[row * n..(row + 1) * n];
+            for col in 0..n {
+                let lo = csr.ptr[col];
+                let hi = csr.ptr[col + 1];
+                let mut acc = 0.0f32;
+                for idx in lo..hi {
+                    // Coalesced walk over the CSR row: indices/data are
+                    // consecutive, exactly as in the OpenCL kernel.
+                    acc += drow[csr.indices[idx] as usize] * csr.data[idx];
+                }
+                orow[col] = acc;
+            }
+        }
+    });
+    Tensor::new(vec![b, n], out)
+}
+
+/// Backward: `dmat (B, N) @ csr -> (B, K)` with `csr` shaped (N, K).
+/// Paper Figure 3. The OpenCL kernel suffers un-coalesced columnwise
+/// walks; on CPU we instead iterate CSR rows (j) and scatter
+/// `dmat[row, j] * csr_row_j` into the output row — sequential reads of
+/// the CSR arrays and sequential writes within the output row.
+pub fn dxc(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
+    let (b, n) = (dmat.shape[0], dmat.shape[1]);
+    assert_eq!(n, csr.rows, "dxc: N mismatch ({n} vs {})", csr.rows);
+    let k = csr.cols;
+    if b < SPMM_MIN_BATCH {
+        return dxc_scalar(dmat, csr);
+    }
+    // §Perf column-major form (see dxct): gt (N, B), out_t (K, B);
+    // each nonzero (j → cidx, v) does out_t[cidx] += v · gt[j], a
+    // contiguous length-B axpy. Parallelism over K needs a transposed
+    // *scatter*, so instead parallelize over batch-column blocks: every
+    // thread owns a disjoint slice of the B dimension across all of
+    // out_t, walking the whole CSR once per thread.
+    let gt = transpose_buf(&dmat.data, b, n); // (N, B)
+    let mut out_t = vec![0.0f32; k * b]; // (K, B)
+    let threads = pool::max_threads().min(b / 4).max(1);
+    let ptr = pool::SharedMut::new(&mut out_t);
+    pool::parallel_chunks(b, threads, |b0, b1| {
+        let out_t = unsafe { ptr.slice() };
+        for j in 0..n {
+            let grow = &gt[j * b..(j + 1) * b];
+            for idx in csr.ptr[j]..csr.ptr[j + 1] {
+                let cidx = csr.indices[idx] as usize;
+                let v = csr.data[idx];
+                let orow = &mut out_t[cidx * b + b0..cidx * b + b1];
+                for (o, g) in orow.iter_mut().zip(&grow[b0..b1]) {
+                    *o += v * g;
+                }
+            }
+        }
+    });
+    Tensor::new(vec![b, k], transpose_buf(&out_t, k, b))
+}
+
+/// Scalar-form dxc (direct Figure-3 port; small-batch fallback and
+/// §Perf "before" reference).
+pub fn dxc_scalar(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
+    let (b, n) = (dmat.shape[0], dmat.shape[1]);
+    assert_eq!(n, csr.rows, "dxc: N mismatch ({n} vs {})", csr.rows);
+    let k = csr.cols;
+    let mut out = vec![0.0f32; b * k];
+    let out_ptr = pool::SharedMut::new(&mut out);
+    pool::parallel_chunks(b, pool::max_threads(), |r0, r1| {
+        let out = unsafe { out_ptr.slice() };
+        for row in r0..r1 {
+            let drow = &dmat.data[row * n..(row + 1) * n];
+            let orow = &mut out[row * k..(row + 1) * k];
+            for j in 0..n {
+                let dv = drow[j];
+                if dv == 0.0 {
+                    continue;
+                }
+                for idx in csr.ptr[j]..csr.ptr[j + 1] {
+                    orow[csr.indices[idx] as usize] += dv * csr.data[idx];
+                }
+            }
+        }
+    });
+    Tensor::new(vec![b, k], out)
+}
+
+/// `csr (N, K) @ dmat (K, M) -> (N, M)` — the C×D op ViennaCL provides;
+/// kept for the `(C×D')' == D×C'` equivalence tests and format benches.
+pub fn cxd(csr: &CsrMatrix, dmat: &Tensor) -> Tensor {
+    let (k, m) = (dmat.shape[0], dmat.shape[1]);
+    assert_eq!(k, csr.cols, "cxd: K mismatch");
+    let n = csr.rows;
+    let mut out = vec![0.0f32; n * m];
+    let out_ptr = pool::SharedMut::new(&mut out);
+    pool::parallel_chunks(n, pool::max_threads(), |r0, r1| {
+        let out = unsafe { out_ptr.slice() };
+        for row in r0..r1 {
+            let orow = &mut out[row * m..(row + 1) * m];
+            for idx in csr.ptr[row]..csr.ptr[row + 1] {
+                let col = csr.indices[idx] as usize;
+                let v = csr.data[idx];
+                let drow = &dmat.data[col * m..(col + 1) * m];
+                for j in 0..m {
+                    orow[j] += v * drow[j];
+                }
+            }
+        }
+    });
+    Tensor::new(vec![n, m], out)
+}
+
+/// Sparse matrix-vector product `csr (N, K) @ x (K) -> (N)` — used by the
+/// format-comparison bench (Bell & Garland's canonical SpMV).
+pub fn spmv(csr: &CsrMatrix, x: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), csr.cols);
+    let mut out = vec![0.0f32; csr.rows];
+    for r in 0..csr.rows {
+        let mut acc = 0.0f32;
+        for idx in csr.ptr[r]..csr.ptr[r + 1] {
+            acc += csr.data[idx] * x[csr.indices[idx] as usize];
+        }
+        out[r] = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul, matmul_nt};
+    use crate::util::rng::Rng;
+
+    fn random_sparse(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> (Vec<f32>, CsrMatrix) {
+        let mut dense = vec![0.0f32; rows * cols];
+        for v in &mut dense {
+            if rng.uniform() < density {
+                *v = rng.normal() as f32;
+            }
+        }
+        let csr = CsrMatrix::from_dense(&dense, rows, cols);
+        (dense, csr)
+    }
+
+    #[test]
+    fn dxct_matches_dense() {
+        let mut rng = Rng::new(10);
+        for &(b, n, k) in &[(1, 1, 1), (3, 5, 7), (16, 50, 80), (4, 500, 800)] {
+            let (wd, csr) = random_sparse(&mut rng, n, k, 0.2);
+            let d = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
+            let got = dxct(&d, &csr);
+            let want = matmul_nt(&d, &Tensor::new(vec![n, k], wd));
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn dxc_matches_dense() {
+        let mut rng = Rng::new(11);
+        for &(b, n, k) in &[(1, 1, 1), (3, 5, 7), (16, 50, 80), (4, 500, 800)] {
+            let (wd, csr) = random_sparse(&mut rng, n, k, 0.2);
+            let g = Tensor::new(vec![b, n], rng.normal_vec(b * n, 1.0));
+            let got = dxc(&g, &csr);
+            let want = matmul(&g, &Tensor::new(vec![n, k], wd));
+            for (a, w) in got.data.iter().zip(&want.data) {
+                assert!((a - w).abs() < 1e-3, "{a} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn cxd_matches_dense() {
+        let mut rng = Rng::new(12);
+        let (wd, csr) = random_sparse(&mut rng, 20, 30, 0.25);
+        let d = Tensor::new(vec![30, 8], rng.normal_vec(240, 1.0));
+        let got = cxd(&csr, &d);
+        let want = matmul(&Tensor::new(vec![20, 30], wd), &d);
+        for (a, w) in got.data.iter().zip(&want.data) {
+            assert!((a - w).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn paper_workaround_identity() {
+        // (C×D')' == D×C' — the ViennaCL workaround the paper describes in
+        // Section 3.2; our dxct must equal the transpose composition.
+        let mut rng = Rng::new(13);
+        let (_, csr) = random_sparse(&mut rng, 12, 18, 0.3);
+        let d = Tensor::new(vec![6, 18], rng.normal_vec(108, 1.0));
+        // D×C'
+        let direct = dxct(&d, &csr);
+        // C×D': cxd with D transposed -> (12, 6), then transpose -> (6, 12)
+        let mut dt = vec![0.0f32; 18 * 6];
+        for i in 0..6 {
+            for j in 0..18 {
+                dt[j * 6 + i] = d.data[i * 18 + j];
+            }
+        }
+        let cxdt = cxd(&csr, &Tensor::new(vec![18, 6], dt));
+        for i in 0..6 {
+            for j in 0..12 {
+                let a = direct.data[i * 12 + j];
+                let b = cxdt.data[j * 6 + i];
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_weight() {
+        // W = I (N=K): dxct(d, I) == d and dxc(d, I) == d.
+        let n = 9;
+        let mut dense = vec![0.0f32; n * n];
+        for i in 0..n {
+            dense[i * n + i] = 1.0;
+        }
+        let csr = CsrMatrix::from_dense(&dense, n, n);
+        let mut rng = Rng::new(14);
+        let d = Tensor::new(vec![4, n], rng.normal_vec(4 * n, 1.0));
+        assert_eq!(dxct(&d, &csr).data, d.data);
+        assert_eq!(dxc(&d, &csr).data, d.data);
+    }
+
+    #[test]
+    fn empty_rows_give_zero_columns() {
+        let dense = vec![0.0f32; 3 * 4]; // all-zero W (3,4)
+        let csr = CsrMatrix::from_dense(&dense, 3, 4);
+        let d = Tensor::new(vec![2, 4], vec![1.0; 8]);
+        assert_eq!(dxct(&d, &csr).data, vec![0.0; 6]);
+    }
+
+    #[test]
+    fn spmv_matches() {
+        let mut rng = Rng::new(15);
+        let (wd, csr) = random_sparse(&mut rng, 25, 40, 0.2);
+        let x: Vec<f32> = rng.normal_vec(40, 1.0);
+        let got = spmv(&csr, &x);
+        for r in 0..25 {
+            let want: f32 = (0..40).map(|c| wd[r * 40 + c] * x[c]).sum();
+            assert!((got[r] - want).abs() < 1e-4);
+        }
+    }
+}

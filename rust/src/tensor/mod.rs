@@ -1,0 +1,504 @@
+//! Dense f32 tensor substrate (NCHW) for the rust-side inference engine.
+//!
+//! This is the "Caffe blob" analogue the compressed inference path builds
+//! on: conv via im2col + matmul (so the CSR kernels drop in for compressed
+//! weights — the paper's formulation), pooling, activations, softmax.
+//! Deliberately f32-only and row-major; the training path runs in XLA, so
+//! this module only needs forward ops.
+
+use crate::util::pool;
+
+/// Row-major dense tensor with an explicit shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Reshape without copying (must preserve element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// 2-D accessor helpers.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2);
+        self.shape[1]
+    }
+
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.shape[1] + c]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dense matmul (used by the dense inference baseline and as test reference)
+// ---------------------------------------------------------------------------
+
+/// `a (M,K) @ b' (K,N)` where `b` is stored `(N,K)` row-major — the same
+/// contraction as the paper's forward `Dmat × Cmat'`, dense version.
+/// Multithreaded over rows of `a`.
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (n, k2) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul_nt contraction mismatch");
+    let mut out = vec![0.0f32; m * n];
+    let threads = pool::max_threads();
+    // Parallel over row-chunks of the output; each chunk is disjoint.
+    let out_ptr = pool::SharedMut::new(&mut out);
+    pool::parallel_chunks(m, threads, |r0, r1| {
+        let out = unsafe { out_ptr.slice() };
+        for r in r0..r1 {
+            let arow = &a.data[r * k..(r + 1) * k];
+            for c in 0..n {
+                let brow = &b.data[c * k..(c + 1) * k];
+                // §Perf: 8 independent accumulators break the serial FP
+                // dependence chain so the loop auto-vectorizes (a single
+                // `acc +=` forces strict ordering and stays scalar).
+                let mut acc = [0.0f32; 8];
+                let chunks = k / 8;
+                for i in 0..chunks {
+                    for l in 0..8 {
+                        acc[l] += arow[i * 8 + l] * brow[i * 8 + l];
+                    }
+                }
+                let mut tail = 0.0f32;
+                for i in chunks * 8..k {
+                    tail += arow[i] * brow[i];
+                }
+                out[r * n + c] = acc.iter().sum::<f32>() + tail;
+            }
+        }
+    });
+    Tensor::new(vec![m, n], out)
+}
+
+/// `a (M,N) @ b (N,K)` plain matmul (dense version of `Dmat × Cmat`).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, n) = (a.shape[0], a.shape[1]);
+    let (n2, k) = (b.shape[0], b.shape[1]);
+    assert_eq!(n, n2, "matmul contraction mismatch");
+    let mut out = vec![0.0f32; m * k];
+    for r in 0..m {
+        for j in 0..n {
+            let av = a.data[r * n + j];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[j * k..(j + 1) * k];
+            let orow = &mut out[r * k..(r + 1) * k];
+            for i in 0..k {
+                orow[i] += av * brow[i];
+            }
+        }
+    }
+    Tensor::new(vec![m, k], out)
+}
+
+// ---------------------------------------------------------------------------
+// im2col convolution (NCHW, OIHW weights)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+pub struct ConvSpec {
+    pub stride: usize,
+    /// Symmetric zero padding.
+    pub pad: usize,
+}
+
+/// Output spatial size for a conv/pool window.
+pub fn out_dim(input: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (input + 2 * pad - k) / stride + 1
+}
+
+/// Unfold `x (B,C,H,W)` into the im2col matrix `(B*OH*OW, C*KH*KW)`.
+///
+/// Each output row is the receptive field of one output pixel; the conv
+/// then becomes `im2col @ W'` with `W (O, C*KH*KW)` — exactly the
+/// dense×compressed' product the paper's Figure-2 kernel computes when
+/// `W` is stored CSR.
+pub fn im2col(x: &Tensor, kh: usize, kw: usize, spec: ConvSpec) -> Tensor {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = out_dim(h, kh, spec.stride, spec.pad);
+    let ow = out_dim(w, kw, spec.stride, spec.pad);
+    let cols = c * kh * kw;
+    let rows = b * oh * ow;
+    let mut out = vec![0.0f32; rows * cols];
+    let out_ptr = pool::SharedMut::new(&mut out);
+    pool::parallel_chunks(b, pool::max_threads(), |b0, b1| {
+        let out = unsafe { out_ptr.slice() };
+        for bi in b0..b1 {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let row = (bi * oh + oy) * ow + ox;
+                    let base = row * cols;
+                    for ci in 0..c {
+                        for ky in 0..kh {
+                            let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                            for kx in 0..kw {
+                                let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                                let col = (ci * kh + ky) * kw + kx;
+                                out[base + col] = if iy >= 0
+                                    && ix >= 0
+                                    && (iy as usize) < h
+                                    && (ix as usize) < w
+                                {
+                                    x.data[((bi * c + ci) * h + iy as usize) * w + ix as usize]
+                                } else {
+                                    0.0
+                                };
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+    Tensor::new(vec![rows, cols], out)
+}
+
+/// Dense conv2d: im2col + matmul_nt + bias. `w (O,C,KH,KW)`, `b (O)`.
+pub fn conv2d(x: &Tensor, w: &Tensor, bias: &[f32], spec: ConvSpec) -> Tensor {
+    let (batch, _c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let (o, ci, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+    assert_eq!(bias.len(), o);
+    let oh = out_dim(h, kh, spec.stride, spec.pad);
+    let ow = out_dim(wd, kw, spec.stride, spec.pad);
+    let cols = im2col(x, kh, kw, spec); // (B*OH*OW, C*KH*KW)
+    let wmat = Tensor::new(vec![o, ci * kh * kw], w.data.clone());
+    let y = matmul_nt(&cols, &wmat); // (B*OH*OW, O)
+    // Transpose (B*OH*OW, O) -> (B, O, OH, OW) with bias.
+    let mut out = vec![0.0f32; batch * o * oh * ow];
+    for bi in 0..batch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (bi * oh + oy) * ow + ox;
+                for oc in 0..o {
+                    out[((bi * o + oc) * oh + oy) * ow + ox] = y.data[row * o + oc] + bias[oc];
+                }
+            }
+        }
+    }
+    Tensor::new(vec![batch, o, oh, ow], out)
+}
+
+// ---------------------------------------------------------------------------
+// Pooling / activations / heads
+// ---------------------------------------------------------------------------
+
+pub fn max_pool(x: &Tensor, size: usize, stride: usize) -> Tensor {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = out_dim(h, size, stride, 0);
+    let ow = out_dim(w, size, stride, 0);
+    let mut out = vec![f32::NEG_INFINITY; b * c * oh * ow];
+    for bi in 0..b {
+        for ci in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut m = f32::NEG_INFINITY;
+                    for ky in 0..size {
+                        for kx in 0..size {
+                            let v = x.data
+                                [((bi * c + ci) * h + oy * stride + ky) * w + ox * stride + kx];
+                            if v > m {
+                                m = v;
+                            }
+                        }
+                    }
+                    out[((bi * c + ci) * oh + oy) * ow + ox] = m;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![b, c, oh, ow], out)
+}
+
+pub fn global_avg_pool(x: &Tensor) -> Tensor {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let mut out = vec![0.0f32; b * c];
+    for bi in 0..b {
+        for ci in 0..c {
+            let plane = &x.data[(bi * c + ci) * h * w..(bi * c + ci + 1) * h * w];
+            out[bi * c + ci] = plane.iter().sum::<f32>() / (h * w) as f32;
+        }
+    }
+    Tensor::new(vec![b, c], out)
+}
+
+pub fn relu_inplace(x: &mut Tensor) {
+    for v in &mut x.data {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// Batch-statistics batch norm (matches `models/common.py::batch_norm`).
+pub fn batch_norm(x: &Tensor, scale: &[f32], bias: &[f32], eps: f32) -> Tensor {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    assert_eq!(scale.len(), c);
+    let n = (b * h * w) as f32;
+    let mut out = x.clone();
+    for ci in 0..c {
+        let mut sum = 0.0f64;
+        let mut sq = 0.0f64;
+        for bi in 0..b {
+            for i in 0..h * w {
+                let v = x.data[(bi * c + ci) * h * w + i] as f64;
+                sum += v;
+                sq += v * v;
+            }
+        }
+        let mean = (sum / n as f64) as f32;
+        let var = (sq / n as f64) as f32 - mean * mean;
+        let inv = (var + eps).sqrt().recip();
+        for bi in 0..b {
+            for i in 0..h * w {
+                let idx = (bi * c + ci) * h * w + i;
+                out.data[idx] = (x.data[idx] - mean) * inv * scale[ci] + bias[ci];
+            }
+        }
+    }
+    out
+}
+
+/// Per-row softmax of a (B, N) tensor.
+pub fn softmax(x: &Tensor) -> Tensor {
+    let (b, n) = (x.shape[0], x.shape[1]);
+    let mut out = x.clone();
+    for r in 0..b {
+        let row = &mut out.data[r * n..(r + 1) * n];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            z += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= z;
+        }
+    }
+    out
+}
+
+/// Row argmax of a (B, N) tensor.
+pub fn argmax_rows(x: &Tensor) -> Vec<usize> {
+    let (b, n) = (x.shape[0], x.shape[1]);
+    (0..b)
+        .map(|r| {
+            let row = &x.data[r * n..(r + 1) * n];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Add a broadcast bias to each row of a (B, N) tensor, in place.
+pub fn add_bias_rows(x: &mut Tensor, bias: &[f32]) {
+    let (b, n) = (x.shape[0], x.shape[1]);
+    assert_eq!(bias.len(), n);
+    for r in 0..b {
+        for c in 0..n {
+            x.data[r * n + c] += bias[c];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(rows: usize, cols: usize, data: &[f32]) -> Tensor {
+        Tensor::new(vec![rows, cols], data.to_vec())
+    }
+
+    #[test]
+    fn matmul_nt_small() {
+        // a (2,3) @ b'(3,2) with b stored (2,3)
+        let a = t2(2, 3, &[1., 2., 3., 4., 5., 6.]);
+        let b = t2(2, 3, &[1., 0., 1., 0., 1., 0.]);
+        let y = matmul_nt(&a, &b);
+        assert_eq!(y.data, vec![4., 2., 10., 5.]);
+    }
+
+    #[test]
+    fn matmul_plain_small() {
+        let a = t2(2, 2, &[1., 2., 3., 4.]);
+        let b = t2(2, 3, &[1., 0., 2., 0., 1., 1.]);
+        let y = matmul(&a, &b);
+        assert_eq!(y.data, vec![1., 2., 4., 3., 4., 10.]);
+    }
+
+    #[test]
+    fn matmul_agree_with_transposed() {
+        // matmul(a, b) == matmul_nt(a, b^T)
+        let mut rng = crate::util::rng::Rng::new(1);
+        let a = Tensor::new(vec![5, 7], rng.normal_vec(35, 1.0));
+        let b = Tensor::new(vec![7, 4], rng.normal_vec(28, 1.0));
+        // transpose b into (4,7)
+        let mut bt = vec![0.0; 28];
+        for i in 0..7 {
+            for j in 0..4 {
+                bt[j * 7 + i] = b.data[i * 4 + j];
+            }
+        }
+        let y1 = matmul(&a, &b);
+        let y2 = matmul_nt(&a, &Tensor::new(vec![4, 7], bt));
+        for (u, v) in y1.data.iter().zip(&y2.data) {
+            assert!((u - v).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn im2col_identity_kernel() {
+        // 1x1 kernel, stride 1, no pad: im2col == channel-major reshuffle.
+        let x = Tensor::new(vec![1, 2, 2, 2], (0..8).map(|i| i as f32).collect());
+        let cols = im2col(&x, 1, 1, ConvSpec { stride: 1, pad: 0 });
+        assert_eq!(cols.shape, vec![4, 2]);
+        // row (oy,ox) = [c0(y,x), c1(y,x)]
+        assert_eq!(cols.data, vec![0., 4., 1., 5., 2., 6., 3., 7.]);
+    }
+
+    #[test]
+    fn conv2d_hand_computed() {
+        // 3x3 input, 2x2 kernel of ones, valid: each output = window sum.
+        let x = Tensor::new(vec![1, 1, 3, 3], (1..=9).map(|i| i as f32).collect());
+        let w = Tensor::new(vec![1, 1, 2, 2], vec![1.0; 4]);
+        let y = conv2d(&x, &w, &[0.0], ConvSpec { stride: 1, pad: 0 });
+        assert_eq!(y.shape, vec![1, 1, 2, 2]);
+        assert_eq!(y.data, vec![12., 16., 24., 28.]);
+    }
+
+    #[test]
+    fn conv2d_same_padding() {
+        let x = Tensor::new(vec![1, 1, 3, 3], vec![0., 0., 0., 0., 1., 0., 0., 0., 0.]);
+        let w = Tensor::new(vec![1, 1, 3, 3], (1..=9).map(|i| i as f32).collect());
+        let y = conv2d(&x, &w, &[0.0], ConvSpec { stride: 1, pad: 1 });
+        assert_eq!(y.shape, vec![1, 1, 3, 3]);
+        // Correlation (no flip) with an impulse at (1,1): out[oy][ox] =
+        // w[2-oy][2-ox], i.e. the kernel reversed.
+        assert_eq!(y.data, vec![9., 8., 7., 6., 5., 4., 3., 2., 1.]);
+    }
+
+    #[test]
+    fn conv2d_stride() {
+        let x = Tensor::new(vec![1, 1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let w = Tensor::new(vec![1, 1, 2, 2], vec![1., 0., 0., 0.]);
+        let y = conv2d(&x, &w, &[0.0], ConvSpec { stride: 2, pad: 0 });
+        assert_eq!(y.shape, vec![1, 1, 2, 2]);
+        assert_eq!(y.data, vec![0., 2., 8., 10.]);
+    }
+
+    #[test]
+    fn conv2d_bias() {
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![0.0; 4]);
+        let w = Tensor::new(vec![2, 1, 1, 1], vec![1.0, 1.0]);
+        let y = conv2d(&x, &w, &[3.0, -1.0], ConvSpec { stride: 1, pad: 0 });
+        assert_eq!(y.data, vec![3., 3., 3., 3., -1., -1., -1., -1.]);
+    }
+
+    #[test]
+    fn max_pool_2x2() {
+        let x = Tensor::new(vec![1, 1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let y = max_pool(&x, 2, 2);
+        assert_eq!(y.data, vec![5., 7., 13., 15.]);
+    }
+
+    #[test]
+    fn global_pool() {
+        let x = Tensor::new(vec![1, 2, 2, 2], vec![1., 1., 1., 1., 2., 2., 2., 2.]);
+        let y = global_avg_pool(&x);
+        assert_eq!(y.data, vec![1., 2.]);
+    }
+
+    #[test]
+    fn relu() {
+        let mut x = Tensor::new(vec![1, 4], vec![-1., 0., 2., -0.5]);
+        relu_inplace(&mut x);
+        assert_eq!(x.data, vec![0., 0., 2., 0.]);
+    }
+
+    #[test]
+    fn batch_norm_normalizes() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let x = Tensor::new(vec![4, 3, 5, 5], rng.normal_vec(300, 3.0));
+        let y = batch_norm(&x, &[1.0; 3], &[0.0; 3], 1e-5);
+        // Per-channel mean ≈ 0, var ≈ 1.
+        for c in 0..3 {
+            let mut vals = Vec::new();
+            for b in 0..4 {
+                vals.extend_from_slice(&y.data[(b * 3 + c) * 25..(b * 3 + c + 1) * 25]);
+            }
+            let mean: f32 = vals.iter().sum::<f32>() / vals.len() as f32;
+            let var: f32 =
+                vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / vals.len() as f32;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = t2(2, 3, &[1., 2., 3., -1., 0., 1.]);
+        let y = softmax(&x);
+        for r in 0..2 {
+            let s: f32 = y.data[r * 3..(r + 1) * 3].iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+        assert!(y.data[2] > y.data[1] && y.data[1] > y.data[0]);
+    }
+
+    #[test]
+    fn argmax() {
+        let x = t2(2, 3, &[0.1, 0.9, 0.0, 5.0, -1.0, 2.0]);
+        assert_eq!(argmax_rows(&x), vec![1, 0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn out_dim_formula() {
+        assert_eq!(out_dim(28, 5, 1, 0), 24);
+        assert_eq!(out_dim(24, 2, 2, 0), 12);
+        assert_eq!(out_dim(32, 3, 1, 1), 32);
+        assert_eq!(out_dim(32, 3, 2, 1), 16);
+    }
+}

@@ -1,0 +1,180 @@
+//! Hand-rolled CLI argument parser (no `clap` in the offline crate set).
+//!
+//! Grammar: `proxcomp <subcommand> [--key value]... [--flag]...`.
+//! Values parse lazily with typed getters; unknown keys are rejected at
+//! `finish()` so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (exclusive of argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> anyhow::Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --key, got {a:?}"))?
+                .to_string();
+            if key.is_empty() {
+                anyhow::bail!("empty option name");
+            }
+            // `--key=value` or `--key value` or bare flag.
+            if let Some((k, v)) = key.split_once('=') {
+                args.kv.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                args.kv.insert(key, it.next().unwrap());
+            } else {
+                args.flags.push(key);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> anyhow::Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.kv.get(key).cloned()
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get_str(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>> {
+        self.mark(key);
+        match self.kv.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        Ok(self.get_parsed::<usize>(key)?.unwrap_or(default))
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        Ok(self.get_parsed::<u64>(key)?.unwrap_or(default))
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> anyhow::Result<f32> {
+        Ok(self.get_parsed::<f32>(key)?.unwrap_or(default))
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        Ok(self.get_parsed::<f64>(key)?.unwrap_or(default))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get_str(key) {
+            Some(v) => v.split(',').filter(|s| !s.is_empty()).map(String::from).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    /// Error on any option that no getter ever looked at.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .kv
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown option(s): {unknown:?}")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["train", "--model", "lenet", "--steps", "500", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str_or("model", "mlp"), "lenet");
+        assert_eq!(a.usize_or("steps", 0).unwrap(), 500);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse(&["--lr=0.01", "--lambda=1.5"]);
+        assert!((a.f32_or("lr", 0.0).unwrap() - 0.01).abs() < 1e-9);
+        assert!((a.f32_or("lambda", 0.0).unwrap() - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["train"]);
+        assert_eq!(a.usize_or("steps", 100).unwrap(), 100);
+        assert_eq!(a.str_or("model", "mlp"), "mlp");
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["--models", "lenet,mlp,vgg_s"]);
+        assert_eq!(a.list_or("models", &[]), vec!["lenet", "mlp", "vgg_s"]);
+        let b = parse(&[]);
+        assert_eq!(b.list_or("models", &["mlp"]), vec!["mlp"]);
+    }
+
+    #[test]
+    fn bad_parse_errors() {
+        let a = parse(&["--steps", "abc"]);
+        assert!(a.usize_or("steps", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        let a = parse(&["train", "--oops", "1"]);
+        let _ = a.str_or("model", "mlp");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["--shift", "-3"]);
+        assert_eq!(a.get_parsed::<i64>("shift").unwrap(), Some(-3));
+    }
+}

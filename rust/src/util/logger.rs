@@ -1,0 +1,75 @@
+//! Leveled stdout logger with elapsed-time stamps.
+//!
+//! Intentionally tiny: the coordinator logs progress lines that double as
+//! the experiment record (EXPERIMENTS.md quotes them directly).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn elapsed_secs() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+pub fn log(level: Level, msg: &str) {
+    if (level as u8) < LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    let tag = match level {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+        Level::Error => "ERR",
+    };
+    println!("[{:9.2}s {tag}] {msg}", elapsed_secs());
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Info, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Debug, &format!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::util::logger::log($crate::util::logger::Level::Warn, &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn elapsed_monotonic() {
+        let a = elapsed_secs();
+        let b = elapsed_secs();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn level_filtering_does_not_panic() {
+        set_level(Level::Warn);
+        log(Level::Debug, "hidden");
+        log(Level::Error, "shown");
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,12 @@
+//! Substrate utilities: JSON, PRNG, CLI, logging, stats, thread helpers.
+//!
+//! These exist because the offline crate set contains only `xla` +
+//! `anyhow`; everything else the coordinator needs is built here
+//! (DESIGN.md §5).
+
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod pool;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,150 @@
+//! Scoped data-parallel helpers over `std::thread` (no rayon offline).
+//!
+//! The CSR kernels and data generators parallelize over contiguous row /
+//! item ranges; `parallel_chunks` splits `0..n` across up to
+//! `max_threads()` scoped threads and runs `f(range)` on each. Threads are
+//! per-call (no persistent pool): the hot kernels amortize spawn cost over
+//! millions of FLOPs, and per-call scoping keeps borrows simple and safe.
+
+/// Wrapper asserting that threads write *disjoint ranges* through this
+/// pointer. Access goes through `slice()` (a method, so closures capture
+/// the whole wrapper — edition-2021 disjoint capture would otherwise
+/// capture the raw pointer field, which is not `Sync`).
+pub struct SharedMut<T>(*mut T, usize);
+
+unsafe impl<T: Send> Send for SharedMut<T> {}
+unsafe impl<T: Send> Sync for SharedMut<T> {}
+
+impl<T> SharedMut<T> {
+    pub fn new(data: &mut [T]) -> SharedMut<T> {
+        SharedMut(data.as_mut_ptr(), data.len())
+    }
+
+    /// # Safety
+    /// Callers on different threads must touch disjoint index ranges.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self) -> &mut [T] {
+        std::slice::from_raw_parts_mut(self.0, self.1)
+    }
+}
+
+/// Number of worker threads to use (env override `PROXCOMP_THREADS`).
+pub fn max_threads() -> usize {
+    if let Ok(v) = std::env::var("PROXCOMP_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Run `f` over disjoint chunks of `0..n` on up to `threads` scoped threads.
+/// `f` receives `(start, end)` half-open ranges. Falls back to a single
+/// inline call when `n` is small or one thread is requested.
+pub fn parallel_chunks<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let threads = threads.min(n).max(1);
+    if threads == 1 || n < 2 {
+        if n > 0 {
+            f(0, n);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let start = t * chunk;
+            let end = ((t + 1) * chunk).min(n);
+            if start >= end {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Map `0..n` in parallel into a pre-allocated output vector, where each
+/// index writes exactly one result slot. `f(i) -> T`.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    // Split the output into disjoint chunks, one per thread.
+    let threads = threads.min(n).max(1);
+    if threads <= 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = f(i);
+        }
+        return out;
+    }
+    let chunk = n.div_ceil(threads);
+    let mut rest: &mut [T] = &mut out;
+    std::thread::scope(|scope| {
+        let mut start = 0usize;
+        while start < n {
+            let take = chunk.min(n - start);
+            let (head, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let f = &f;
+            let base = start;
+            scope.spawn(move || {
+                for (j, slot) in head.iter_mut().enumerate() {
+                    *slot = f(base + j);
+                }
+            });
+            start += take;
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_everything_once() {
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        parallel_chunks(1000, 7, |a, b| {
+            for i in a..b {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_and_single() {
+        parallel_chunks(0, 4, |_, _| panic!("should not run"));
+        let ran = AtomicUsize::new(0);
+        parallel_chunks(1, 4, |a, b| {
+            assert_eq!((a, b), (0, 1));
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn map_matches_serial() {
+        let got = parallel_map(100, 5, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn map_single_thread_path() {
+        let got = parallel_map(10, 1, |i| i + 1);
+        assert_eq!(got, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn max_threads_positive() {
+        assert!(max_threads() >= 1);
+    }
+}

@@ -1,0 +1,313 @@
+//! Property-based tests (hand-rolled generator loops on our PRNG — no
+//! proptest crate in the offline set): randomized invariants over the
+//! sparse formats, kernels, prox operators, checkpoints, and data
+//! pipeline. Each property runs against many random instances.
+
+use proxcomp::runtime::{ParamBundle, ParamSpec};
+use proxcomp::sparse::{ops, prox, BlockEllMatrix, CooMatrix, CsrMatrix, DiaMatrix, EllMatrix};
+use proxcomp::tensor::{matmul, matmul_nt, Tensor};
+use proxcomp::util::rng::Rng;
+
+const CASES: usize = 40;
+
+fn random_dense(rng: &mut Rng, rows: usize, cols: usize, density: f64) -> Vec<f32> {
+    (0..rows * cols)
+        .map(|_| {
+            if rng.uniform() < density {
+                rng.normal() as f32
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_all_formats_roundtrip_dense() {
+    let mut rng = Rng::new(100);
+    for case in 0..CASES {
+        let rows = 1 + rng.below(24);
+        let cols = 1 + rng.below(24);
+        let density = rng.uniform();
+        let dense = random_dense(&mut rng, rows, cols, density);
+        assert_eq!(CsrMatrix::from_dense(&dense, rows, cols).to_dense(), dense, "csr case {case}");
+        assert_eq!(CooMatrix::from_dense(&dense, rows, cols).to_dense(), dense, "coo case {case}");
+        assert_eq!(EllMatrix::from_dense(&dense, rows, cols).to_dense(), dense, "ell case {case}");
+        assert_eq!(DiaMatrix::from_dense(&dense, rows, cols).to_dense(), dense, "dia case {case}");
+    }
+}
+
+#[test]
+fn prop_format_conversions_commute() {
+    let mut rng = Rng::new(101);
+    for _ in 0..CASES {
+        let rows = 1 + rng.below(16);
+        let cols = 1 + rng.below(16);
+        let dense = random_dense(&mut rng, rows, cols, 0.3);
+        let csr = CsrMatrix::from_dense(&dense, rows, cols);
+        // csr -> coo -> csr is the identity.
+        assert_eq!(CooMatrix::from_csr(&csr).to_csr(), csr);
+        // ell built from csr or dense agree.
+        assert_eq!(EllMatrix::from_csr(&csr), EllMatrix::from_dense(&dense, rows, cols));
+    }
+}
+
+#[test]
+fn prop_csr_transpose_involution_and_validity() {
+    let mut rng = Rng::new(102);
+    for _ in 0..CASES {
+        let rows = 1 + rng.below(20);
+        let cols = 1 + rng.below(20);
+        let dense = random_dense(&mut rng, rows, cols, 0.25);
+        let csr = CsrMatrix::from_dense(&dense, rows, cols);
+        let t = csr.transpose();
+        t.validate().unwrap();
+        assert_eq!(t.transpose(), csr);
+        assert_eq!(t.nnz(), csr.nnz());
+    }
+}
+
+#[test]
+fn prop_dxct_equals_dense_matmul() {
+    let mut rng = Rng::new(103);
+    for _ in 0..CASES {
+        let b = 1 + rng.below(12);
+        let n = 1 + rng.below(30);
+        let k = 1 + rng.below(40);
+        let wd = random_dense(&mut rng, n, k, 0.3);
+        let csr = CsrMatrix::from_dense(&wd, n, k);
+        let d = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
+        let got = ops::dxct(&d, &csr);
+        let want = matmul_nt(&d, &Tensor::new(vec![n, k], wd));
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn prop_dxc_equals_dense_matmul() {
+    let mut rng = Rng::new(104);
+    for _ in 0..CASES {
+        let b = 1 + rng.below(12);
+        let n = 1 + rng.below(30);
+        let k = 1 + rng.below(40);
+        let wd = random_dense(&mut rng, n, k, 0.3);
+        let csr = CsrMatrix::from_dense(&wd, n, k);
+        let g = Tensor::new(vec![b, n], rng.normal_vec(b * n, 1.0));
+        let got = ops::dxc(&g, &csr);
+        let want = matmul(&g, &Tensor::new(vec![n, k], wd));
+        for (a, w) in got.data.iter().zip(&want.data) {
+            assert!((a - w).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn prop_forward_backward_adjoint() {
+    // <dxct(x, W), g> == <x, dxc(g, W)> — the VJP identity that makes the
+    // Figure-2/Figure-3 pair a valid forward/backward couple.
+    let mut rng = Rng::new(105);
+    for _ in 0..CASES {
+        let b = 1 + rng.below(8);
+        let n = 1 + rng.below(20);
+        let k = 1 + rng.below(20);
+        let wd = random_dense(&mut rng, n, k, 0.4);
+        let csr = CsrMatrix::from_dense(&wd, n, k);
+        let x = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
+        let g = Tensor::new(vec![b, n], rng.normal_vec(b * n, 1.0));
+        let fwd = ops::dxct(&x, &csr);
+        let bwd = ops::dxc(&g, &csr);
+        let lhs: f64 = fwd.data.iter().zip(&g.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let rhs: f64 = x.data.iter().zip(&bwd.data).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+        let denom = lhs.abs().max(rhs.abs()).max(1.0);
+        assert!((lhs - rhs).abs() / denom < 1e-4, "{lhs} vs {rhs}");
+    }
+}
+
+#[test]
+fn prop_blockell_matmul_equals_dense() {
+    let mut rng = Rng::new(106);
+    for _ in 0..20 {
+        let n_br = 1 + rng.below(5);
+        let n_bc = 1 + rng.below(5);
+        let (bh, bw) = (4, 8);
+        let (rows, cols) = (n_br * bh, n_bc * bw);
+        let dense = random_dense(&mut rng, rows, cols, 0.3);
+        let bell = BlockEllMatrix::from_dense(&dense, rows, cols, bh, bw);
+        assert_eq!(bell.to_dense(), dense);
+        let b = 1 + rng.below(10);
+        let d = Tensor::new(vec![b, cols], rng.normal_vec(b * cols, 1.0));
+        let got = bell.dxct(&d);
+        let want = matmul_nt(&d, &Tensor::new(vec![rows, cols], dense));
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-3);
+        }
+    }
+}
+
+#[test]
+fn prop_prox_shrinkage_and_zero_band() {
+    let mut rng = Rng::new(107);
+    for _ in 0..CASES {
+        let n = 1 + rng.below(500);
+        let t = rng.range(0.0, 1.5);
+        let xs: Vec<f32> = rng.normal_vec(n, 1.0);
+        let mut out = xs.clone();
+        prox::soft_threshold_inplace(&mut out, t);
+        for (x, y) in xs.iter().zip(&out) {
+            if x.abs() <= t {
+                assert_eq!(*y, 0.0);
+            } else {
+                assert!((y.abs() - (x.abs() - t)).abs() < 1e-5);
+                assert_eq!(y.signum(), x.signum());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_hard_threshold_subset_of_soft_zeros() {
+    // Hard and soft thresholding zero exactly the same entries; soft
+    // additionally shrinks survivors.
+    let mut rng = Rng::new(108);
+    for _ in 0..CASES {
+        let xs: Vec<f32> = rng.normal_vec(200, 1.0);
+        let t = rng.range(0.0, 1.0);
+        let mut soft = xs.clone();
+        let mut hard = xs.clone();
+        prox::soft_threshold_inplace(&mut soft, t);
+        prox::hard_threshold_inplace(&mut hard, t);
+        for (s, h) in soft.iter().zip(&hard) {
+            assert_eq!(*s == 0.0, *h == 0.0);
+        }
+    }
+}
+
+#[test]
+fn prop_compression_rate_equals_explicit_zero_count() {
+    let mut rng = Rng::new(109);
+    for _ in 0..CASES {
+        let n = 10 + rng.below(500);
+        let spec = ParamSpec {
+            name: "w".into(),
+            kind: "fc_w".into(),
+            shape: vec![n],
+            prunable: true,
+            layer: "fc".into(),
+        };
+        let mut values = rng.normal_vec(n, 1.0);
+        let t = rng.range(0.0, 1.0);
+        prox::soft_threshold_inplace(&mut values, t);
+        let explicit = values.iter().filter(|&&v| v == 0.0).count();
+        let bundle = ParamBundle { specs: vec![spec], values: vec![values] };
+        assert_eq!(bundle.zero_weights(), explicit);
+        assert!((bundle.compression_rate() - explicit as f64 / n as f64).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_random_sparsity() {
+    let mut rng = Rng::new(110);
+    let dir = std::env::temp_dir().join("proxcomp_prop_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..15 {
+        let n = 2 + rng.below(20);
+        let k = 2 + rng.below(20);
+        let spec = ParamSpec {
+            name: "w".into(),
+            kind: "fc_w".into(),
+            shape: vec![n, k],
+            prunable: true,
+            layer: "fc".into(),
+        };
+        let mut values = rng.normal_vec(n * k, 1.0);
+        let t = rng.range(0.0, 2.5);
+        prox::soft_threshold_inplace(&mut values, t);
+        let bundle = ParamBundle { specs: vec![spec], values: vec![values] };
+        let path = dir.join(format!("c{case}.pxcp"));
+        proxcomp::checkpoint::save(&path, &bundle, &proxcomp::util::json::Json::obj()).unwrap();
+        let ck = proxcomp::checkpoint::load(&path).unwrap();
+        assert_eq!(ck.params.values, bundle.values, "case {case}");
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    use proxcomp::util::json::{self, Json};
+    let mut rng = Rng::new(111);
+
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.normal() * 100.0 * 128.0).round() / 128.0),
+            3 => Json::Str(format!("s{}✓\n\"{}\"", rng.below(1000), rng.below(10))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+
+    for _ in 0..60 {
+        let doc = gen(&mut rng, 3);
+        let compact = json::parse(&doc.to_string_compact()).unwrap();
+        let pretty = json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(doc, compact);
+        assert_eq!(doc, pretty);
+    }
+}
+
+#[test]
+fn prop_dataset_batches_always_in_range() {
+    use proxcomp::data::{self, Batcher};
+    let mut rng = Rng::new(112);
+    for _ in 0..8 {
+        let n = 10 + rng.below(60);
+        let d = data::synth_mnist(n, rng.next_u64());
+        let mut b = Batcher::new(d.n, rng.next_u64());
+        for _ in 0..5 {
+            let batch = 1 + rng.below(17);
+            let (xs, ys) = b.next_batch(&d, batch);
+            assert_eq!(xs.len(), batch * 784);
+            assert_eq!(ys.len(), batch);
+            assert!(ys.iter().all(|&y| (0..10).contains(&y)));
+            assert!(xs.iter().all(|v| v.is_finite()));
+        }
+    }
+}
+
+#[test]
+fn prop_engine_dense_sparse_parity_random_weights() {
+    use proxcomp::inference::Engine;
+    let mut rng = Rng::new(113);
+    for _ in 0..6 {
+        // Random sparse MLP bundle at the manifest shapes.
+        let specs = vec![
+            ParamSpec { name: "fc1_w".into(), kind: "fc_w".into(), shape: vec![256, 784], prunable: true, layer: "fc1".into() },
+            ParamSpec { name: "fc1_b".into(), kind: "fc_b".into(), shape: vec![256], prunable: false, layer: "fc1".into() },
+            ParamSpec { name: "fc2_w".into(), kind: "fc_w".into(), shape: vec![128, 256], prunable: true, layer: "fc2".into() },
+            ParamSpec { name: "fc2_b".into(), kind: "fc_b".into(), shape: vec![128], prunable: false, layer: "fc2".into() },
+            ParamSpec { name: "fc3_w".into(), kind: "fc_w".into(), shape: vec![10, 128], prunable: true, layer: "fc3".into() },
+            ParamSpec { name: "fc3_b".into(), kind: "fc_b".into(), shape: vec![10], prunable: false, layer: "fc3".into() },
+        ];
+        let mut bundle = ParamBundle::he_init(&specs, rng.next_u64());
+        let t = rng.range(0.0, 0.08);
+        for (spec, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+            if spec.prunable {
+                prox::soft_threshold_inplace(v, t);
+            }
+        }
+        let dense = Engine::from_bundle("mlp", &bundle, false).unwrap();
+        let sparse = Engine::from_bundle("mlp", &bundle, true).unwrap();
+        let x = Tensor::new(vec![3, 1, 28, 28], rng.normal_vec(3 * 784, 1.0));
+        let a = dense.forward(&x).unwrap();
+        let b = sparse.forward(&x).unwrap();
+        for (u, v) in a.data.iter().zip(&b.data) {
+            assert!((u - v).abs() < 1e-3, "dense/sparse engines diverge: {u} vs {v}");
+        }
+    }
+}
