@@ -13,3 +13,38 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 @pytest.fixture
 def rng():
     return np.random.default_rng(0xC0FFEE)
+
+
+# ---------------------------------------------------------------------------
+# Optional-hypothesis shim: property sweeps skip (rather than error at
+# collection) on minimal images without the `hypothesis` package. Test
+# modules fall back to `from conftest import given, settings, st`.
+# ---------------------------------------------------------------------------
+
+
+def given(*_args, **_kwargs):
+    def deco(_fn):
+        return pytest.mark.skip(reason="hypothesis not installed")(_fn)
+
+    return deco
+
+
+def settings(*_args, **_kwargs):
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+class _StrategyStub:
+    """Stands in for `hypothesis.strategies`; strategies are never drawn
+    because `given` skips the test before it runs."""
+
+    def __getattr__(self, _name):
+        def strategy(*_args, **_kwargs):
+            return None
+
+        return strategy
+
+
+st = _StrategyStub()

@@ -8,7 +8,11 @@ pseudocode.
 
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # minimal CI images: skip the sweeps, keep the rest
+    from conftest import given, settings, st
 
 from compile import optim
 

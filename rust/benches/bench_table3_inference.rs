@@ -24,7 +24,7 @@ use proxcomp::config::RunConfig;
 use proxcomp::coordinator::{trainer::StepScalars, Trainer};
 use proxcomp::data;
 use proxcomp::device::{estimate_speedup, DeviceModel, GTX_1080TI, MALI_T860};
-use proxcomp::inference::Engine;
+use proxcomp::inference::{Engine, WeightMode};
 use proxcomp::runtime::{Manifest, ParamBundle, Runtime};
 use proxcomp::tensor::Tensor;
 
@@ -61,6 +61,7 @@ fn main() -> anyhow::Result<()> {
 
     let dense = Engine::from_bundle("lenet", &params, false)?;
     let sparse = Engine::from_bundle("lenet", &params, true)?;
+    let auto = Engine::from_bundle_mode("lenet", &params, WeightMode::Auto)?;
 
     // --- model size row
     println!("\nmodel size:");
@@ -70,13 +71,25 @@ fn main() -> anyhow::Result<()> {
         dense.model_size_bytes() as f64 / sparse.model_size_bytes() as f64,
     );
     println!("  paper:     148 KB vs 5.0 MB (34×)");
+    println!(
+        "  dispatch   {:>7.1} KB — per-layer formats: {}",
+        auto.model_size_bytes() as f64 / 1024.0,
+        auto.layer_formats()
+            .iter()
+            .map(|(l, f)| format!("{l}:{f}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
 
     // --- measured on this host
     let test = data::generate("synth-mnist", 512, 99)?;
     println!("\nmeasured (rust engines, this host), batched inference over {} images:", test.n);
     println!("{:<14} {:>12} {:>14}", "engine", "total ms", "images/s");
-    let mut times = [0.0f64; 2];
-    for (i, (name, engine)) in [("dense", &dense), ("compressed", &sparse)].iter().enumerate() {
+    let mut times = [0.0f64; 3];
+    for (i, (name, engine)) in [("dense", &dense), ("compressed", &sparse), ("dispatch", &auto)]
+        .iter()
+        .enumerate()
+    {
         // Warmup + 3 reps, take the best (steady-state cache behaviour).
         let mut xs = Vec::with_capacity(test.n * 784);
         for j in 0..test.n {
@@ -91,6 +104,7 @@ fn main() -> anyhow::Result<()> {
         println!("{:<14} {:>12.1} {:>14.0}", name, us / 1e3, test.n as f64 / (us / 1e6));
     }
     println!("measured speedup: {:.2}×   (paper: 1.98× desktop, 1.20× embedded)", times[0] / times[1]);
+    println!("dispatch vs fixed-CSR: {:.2}×", times[1] / times[2]);
 
     // --- modeled on the paper's devices (batch 64, the steady-state
     // regime the paper's whole-test-set timings reflect)
@@ -119,7 +133,11 @@ fn main() -> anyhow::Result<()> {
     // Accuracy parity (compression must not corrupt the model).
     let acc_d = dense.accuracy(&test, 128)?;
     let acc_s = sparse.accuracy(&test, 128)?;
-    println!("\naccuracy parity: dense {acc_d:.4} vs compressed {acc_s:.4}");
+    let acc_a = auto.accuracy(&test, 128)?;
+    println!("\naccuracy parity: dense {acc_d:.4} vs compressed {acc_s:.4} vs dispatch {acc_a:.4}");
     assert!((acc_d - acc_s).abs() < 1e-9, "CSR engine must be numerically identical");
+    // Dispatch may reorder float accumulation per format; predictions must
+    // still agree to well under a percent.
+    assert!((acc_d - acc_a).abs() < 5e-3, "dispatch engine accuracy drifted: {acc_d} vs {acc_a}");
     Ok(())
 }

@@ -30,6 +30,7 @@ use crate::coordinator::{trainer::StepScalars, Trainer};
 use crate::info;
 use crate::metrics::RunResult;
 use crate::runtime::{Manifest, ParamBundle, Runtime};
+use crate::sparse::dispatch::{DynSparseMatrix, SparseFormat};
 use crate::sparse::prox::{magnitude_quantile, soft_threshold_inplace};
 
 /// C-step regularizer choice (see module docs).
@@ -66,12 +67,38 @@ pub fn run(rt: &mut Runtime, manifest: &Manifest, cfg: &RunConfig) -> anyhow::Re
 
     run_mm_phase(rt, &mut trainer, cfg, mm_steps, cfg.eval_every)?;
 
+    // Deployment storage: each compressed leaf in the format the
+    // dispatch cost model picks for its structure (usually CSR for MM's
+    // unstructured ℓ0 projections — logged so exceptions are visible).
+    for (layer, fmt, bytes) in deployed_formats(&trainer.state.params) {
+        info!("[MM] deploy {layer}: {} ({:.1} KB)", fmt.name(), bytes as f64 / 1024.0);
+    }
+
     let result = finish_run(rt, &mut trainer, "MM", cfg.lambda as f64, t0)?;
     info!(
         "[MM] done: acc {:.4} rate {:.4} in {:.1}s",
         result.accuracy, result.compression_rate, result.wall_secs
     );
     Ok(result)
+}
+
+/// Per-leaf (layer, chosen format, storage bytes) for the deployed MM
+/// iterate — the compressed model's storage plan, via `sparse::dispatch`.
+pub fn deployed_formats(params: &ParamBundle) -> Vec<(String, SparseFormat, usize)> {
+    params
+        .specs
+        .iter()
+        .zip(&params.values)
+        .filter(|(s, _)| s.prunable)
+        .filter_map(|(s, v)| {
+            let (rows, cols) = crate::checkpoint::matrix_view(s);
+            if rows == 0 {
+                return None; // not 2-D-viewable
+            }
+            let m = DynSparseMatrix::from_dense(v, rows, cols);
+            Some((s.layer.clone(), m.format(), m.storage_bytes()))
+        })
+        .collect()
 }
 
 /// The MM loop proper, starting from the trainer's current (pretrained)
@@ -280,6 +307,38 @@ mod tests {
         c_step(&mut t1, &w, None, 0.2, 1.0, MmPenalty::L1, 0.0); // thresh 0.2
         c_step(&mut t2, &w, None, 0.2, 10.0, MmPenalty::L1, 0.0); // thresh 0.02
         assert!(t2.values[0][0] > t1.values[0][0]);
+    }
+
+    #[test]
+    fn deployed_formats_reports_prunable_2d_leaves() {
+        let spec2d = ParamSpec {
+            name: "fc1_w".into(),
+            kind: "fc_w".into(),
+            shape: vec![8, 16],
+            prunable: true,
+            layer: "fc1".into(),
+        };
+        let bias = ParamSpec {
+            name: "fc1_b".into(),
+            kind: "fc_b".into(),
+            shape: vec![8],
+            prunable: false,
+            layer: "fc1".into(),
+        };
+        let mut w = vec![0.0f32; 8 * 16];
+        w[3] = 1.0;
+        w[40] = -2.0;
+        let params = ParamBundle {
+            specs: vec![spec2d, bias],
+            values: vec![w, vec![0.0; 8]],
+        };
+        let report = deployed_formats(&params);
+        assert_eq!(report.len(), 1, "bias leaves are skipped");
+        let (layer, fmt, bytes) = &report[0];
+        assert_eq!(layer, "fc1");
+        // Unstructured scatter → the paper's production format.
+        assert_eq!(*fmt, SparseFormat::Csr);
+        assert!(*bytes > 0 && *bytes < 8 * 16 * 4);
     }
 
     #[test]

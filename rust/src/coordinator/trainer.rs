@@ -13,6 +13,8 @@ use crate::metrics::History;
 use crate::runtime::client;
 use crate::runtime::{HostValue, Manifest, ModelEntry, ParamBundle, Role, Runtime};
 use crate::util::logger;
+// Offline stand-in for the PJRT bindings; see `xla_compat` module docs.
+use crate::xla_compat as xla;
 
 /// Host-side training state, role-addressable.
 #[derive(Debug, Clone)]

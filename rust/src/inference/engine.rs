@@ -10,15 +10,28 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::runtime::{ParamBundle, ParamSpec};
-use crate::sparse::{ops, CsrMatrix};
+use crate::sparse::{ops, CsrMatrix, DynSparseMatrix};
 use crate::tensor::{self, ConvSpec, Tensor};
 
-/// A weight matrix in the engine: dense (reference path) or CSR
-/// (compressed path). Both are (N, K) row-major views.
+/// How the engine stores prunable weights.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WeightMode {
+    /// Dense reference path.
+    Dense,
+    /// Fixed CSR everywhere — the paper's deployment format.
+    Csr,
+    /// Per-layer format dispatch (`sparse::dispatch::select_format`).
+    Auto,
+}
+
+/// A weight matrix in the engine: dense (reference path), CSR (the
+/// paper's compressed path), or dispatch-chosen per layer. All are
+/// (N, K) row-major views.
 #[derive(Debug, Clone)]
 pub enum WeightStore {
     Dense(Tensor),
     Csr(CsrMatrix),
+    Auto(DynSparseMatrix),
 }
 
 impl WeightStore {
@@ -26,6 +39,7 @@ impl WeightStore {
         match self {
             WeightStore::Dense(w) => tensor::matmul_nt(x, w),
             WeightStore::Csr(w) => ops::dxct(x, w),
+            WeightStore::Auto(w) => w.dxct(x),
         }
     }
 
@@ -33,6 +47,7 @@ impl WeightStore {
         match self {
             WeightStore::Dense(w) => w.numel() * 4,
             WeightStore::Csr(w) => w.storage_bytes(),
+            WeightStore::Auto(w) => w.storage_bytes(),
         }
     }
 
@@ -40,6 +55,7 @@ impl WeightStore {
         match self {
             WeightStore::Dense(w) => w.data.iter().filter(|&&v| v != 0.0).count(),
             WeightStore::Csr(w) => w.nnz(),
+            WeightStore::Auto(w) => w.nnz(),
         }
     }
 
@@ -47,6 +63,16 @@ impl WeightStore {
         match self {
             WeightStore::Dense(w) => (w.shape[0], w.shape[1]),
             WeightStore::Csr(w) => (w.rows, w.cols),
+            WeightStore::Auto(w) => (w.rows(), w.cols()),
+        }
+    }
+
+    /// Human-readable storage format ("dense", "CSR", "ELL", …).
+    pub fn format_name(&self) -> &'static str {
+        match self {
+            WeightStore::Dense(_) => "dense",
+            WeightStore::Csr(_) => "CSR",
+            WeightStore::Auto(w) => w.format().name(),
         }
     }
 }
@@ -88,6 +114,18 @@ impl Engine {
     /// Build from a parameter bundle. `sparse = true` stores prunable
     /// weights CSR (compressed deployment); `false` keeps dense.
     pub fn from_bundle(model: &str, bundle: &ParamBundle, sparse: bool) -> anyhow::Result<Engine> {
+        Self::from_bundle_mode(model, bundle, if sparse { WeightMode::Csr } else { WeightMode::Dense })
+    }
+
+    /// Build with an explicit weight-storage mode. `WeightMode::Auto`
+    /// stores each prunable layer in the format `select_format` chose
+    /// for its structure instead of hard-coded CSR.
+    pub fn from_bundle_mode(
+        model: &str,
+        bundle: &ParamBundle,
+        mode: WeightMode,
+    ) -> anyhow::Result<Engine> {
+        let sparse = mode != WeightMode::Dense;
         let leaves: HashMap<&str, (usize, &ParamSpec)> = bundle
             .specs
             .iter()
@@ -103,10 +141,14 @@ impl Engine {
         let store = |name: &str| -> anyhow::Result<WeightStore> {
             let (s, v) = value(name)?;
             let (rows, cols) = crate::checkpoint::matrix_view(s);
-            Ok(if sparse && s.prunable {
-                WeightStore::Csr(CsrMatrix::from_dense(v, rows, cols))
-            } else {
-                WeightStore::Dense(Tensor::new(vec![rows, cols], v.clone()))
+            Ok(match mode {
+                WeightMode::Csr if s.prunable => {
+                    WeightStore::Csr(CsrMatrix::from_dense(v, rows, cols))
+                }
+                WeightMode::Auto if s.prunable => {
+                    WeightStore::Auto(DynSparseMatrix::from_dense(v, rows, cols))
+                }
+                _ => WeightStore::Dense(Tensor::new(vec![rows, cols], v.clone())),
             })
         };
 
@@ -239,6 +281,21 @@ impl Engine {
             None => anyhow::bail!("no FC head found"),
         };
         Ok(Engine { model: model.to_string(), sparse, layers, num_classes })
+    }
+
+    /// (layer name, storage format) per weight layer — shows what the
+    /// dispatch chose in `WeightMode::Auto` (all "CSR"/"dense" otherwise).
+    pub fn layer_formats(&self) -> Vec<(String, &'static str)> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Conv { name, w, .. } | Layer::Fc { name, w, .. } => {
+                    Some((name.clone(), w.format_name()))
+                }
+                Layer::ProjectResidual { w, .. } => Some(("proj".to_string(), w.format_name())),
+                _ => None,
+            })
+            .collect()
     }
 
     /// Total weight storage (paper Table 3 "Model Size").

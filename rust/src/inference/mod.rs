@@ -9,4 +9,4 @@
 
 pub mod engine;
 
-pub use engine::{Engine, LayerTiming, WeightStore};
+pub use engine::{Engine, LayerTiming, WeightMode, WeightStore};

@@ -32,3 +32,4 @@ pub mod runtime;
 pub mod sparse;
 pub mod tensor;
 pub mod util;
+pub mod xla_compat;

@@ -10,6 +10,8 @@ use std::collections::HashMap;
 use std::path::Path;
 
 use crate::util::logger;
+// Offline stand-in for the PJRT bindings; see `xla_compat` module docs.
+use crate::xla_compat as xla;
 
 /// Host-side value passed to / returned from an executable.
 #[derive(Debug, Clone, PartialEq)]
@@ -118,21 +120,13 @@ impl HostValue {
 /// literal constructor copies the bytes once, which is unavoidable).
 pub fn literal_f32(shape: &[usize], data: &[f32]) -> anyhow::Result<xla::Literal> {
     let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::F32,
-        shape,
-        bytes,
-    )?)
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
 }
 
 /// As [`literal_f32`] for i32.
 pub fn literal_i32(shape: &[usize], data: &[i32]) -> anyhow::Result<xla::Literal> {
     let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
-    Ok(xla::Literal::create_from_shape_and_untyped_data(
-        xla::ElementType::S32,
-        shape,
-        bytes,
-    )?)
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
 }
 
 /// PJRT CPU runtime with a per-path executable cache.

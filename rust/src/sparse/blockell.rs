@@ -8,6 +8,7 @@
 //! so ELL padding — fatal at element level — is cheap at block level,
 //! and static shapes suit the MXU.
 
+use super::csr::CsrMatrix;
 use crate::tensor::Tensor;
 use crate::util::pool;
 
@@ -112,6 +113,22 @@ impl BlockEllMatrix {
 
     pub fn storage_bytes(&self) -> usize {
         self.values.len() * 4 + self.col_idx.len() * 4
+    }
+
+    /// Stored nonzeros (padding tiles hold exact zeros and do not count).
+    pub fn nnz(&self) -> usize {
+        self.values.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Build from CSR (via the dense view — block packing needs the full
+    /// tile contents anyway, so there is nothing cheaper to walk).
+    pub fn from_csr(csr: &CsrMatrix, bh: usize, bw: usize) -> BlockEllMatrix {
+        BlockEllMatrix::from_dense(&csr.to_dense(), csr.rows, csr.cols, bh, bw)
+    }
+
+    /// Convert to CSR, dropping block padding and explicit zeros.
+    pub fn to_csr(&self) -> CsrMatrix {
+        CsrMatrix::from_dense(&self.to_dense(), self.rows, self.cols)
     }
 
     /// (min, mean, max) nonzero blocks per block-row — evidence for the
@@ -253,5 +270,18 @@ mod tests {
     #[should_panic]
     fn untileable_panics() {
         BlockEllMatrix::from_dense(&vec![0.0; 30], 5, 6, 2, 4);
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let mut rng = Rng::new(34);
+        let dense = block_sparse(&mut rng, 32, 64, 8, 16, 0.4);
+        let csr = crate::sparse::CsrMatrix::from_dense(&dense, 32, 64);
+        let bell = BlockEllMatrix::from_csr(&csr, 8, 16);
+        assert_eq!(bell, BlockEllMatrix::from_dense(&dense, 32, 64, 8, 16));
+        let back = bell.to_csr();
+        back.validate().unwrap();
+        assert_eq!(back, csr);
+        assert_eq!(bell.nnz(), csr.nnz());
     }
 }

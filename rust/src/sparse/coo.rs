@@ -6,6 +6,8 @@
 //! comparison test below confirms.
 
 use super::csr::CsrMatrix;
+use crate::tensor::Tensor;
+use crate::util::pool;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct CooMatrix {
@@ -65,6 +67,28 @@ impl CooMatrix {
             indices: csr.indices.clone(),
             data: csr.data.clone(),
         }
+    }
+
+    /// `dmat (B, K) @ self' -> (B, N)` with `self` shaped (N, K) — the
+    /// Figure-2 contraction in COO form: one streamed pass over the
+    /// triplets per batch row, scattering into the output row.
+    pub fn dxct(&self, dmat: &Tensor) -> Tensor {
+        let (b, k) = (dmat.shape[0], dmat.shape[1]);
+        assert_eq!(k, self.cols, "coo dxct: K mismatch ({k} vs {})", self.cols);
+        let n = self.rows;
+        let mut out = vec![0.0f32; b * n];
+        let ptr = pool::SharedMut::new(&mut out);
+        pool::parallel_chunks(b, pool::max_threads(), |b0, b1| {
+            let out = unsafe { ptr.slice() };
+            for bi in b0..b1 {
+                let xrow = &dmat.data[bi * k..(bi + 1) * k];
+                let orow = &mut out[bi * n..(bi + 1) * n];
+                for i in 0..self.data.len() {
+                    orow[self.row[i] as usize] += self.data[i] * xrow[self.indices[i] as usize];
+                }
+            }
+        });
+        Tensor::new(vec![b, n], out)
     }
 
     /// COO (sorted row-major, as produced here) -> CSR.
@@ -135,6 +159,27 @@ mod tests {
         let csr = CsrMatrix::from_dense(&dense, r, c);
         let coo = CooMatrix::from_dense(&dense, r, c);
         assert!(coo.storage_bytes() > csr.storage_bytes());
+    }
+
+    #[test]
+    fn dxct_matches_dense() {
+        use crate::tensor::{matmul_nt, Tensor};
+        let mut rng = crate::util::rng::Rng::new(6);
+        for &(b, n, k) in &[(1usize, 4usize, 4usize), (5, 25, 35), (2, 13, 8)] {
+            let mut dense = vec![0.0f32; n * k];
+            for v in &mut dense {
+                if rng.uniform() < 0.3 {
+                    *v = rng.normal() as f32;
+                }
+            }
+            let coo = CooMatrix::from_dense(&dense, n, k);
+            let d = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
+            let got = coo.dxct(&d);
+            let want = matmul_nt(&d, &Tensor::new(vec![n, k], dense));
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+            }
+        }
     }
 
     #[test]

@@ -3,6 +3,13 @@
 //! Stores whole diagonals; "suitable for the case when nonzero values are
 //! at a small number of diagonals" (banded systems), which prox-trained
 //! weight matrices are not — the comparison test quantifies the blow-up.
+//! The format-dispatch layer (`sparse::dispatch`) still selects DIA when a
+//! matrix *is* banded, so it carries its own `dxct` kernel and CSR
+//! conversions.
+
+use super::csr::CsrMatrix;
+use crate::tensor::Tensor;
+use crate::util::pool;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct DiaMatrix {
@@ -60,6 +67,86 @@ impl DiaMatrix {
 
     pub fn storage_bytes(&self) -> usize {
         self.data.len() * 4 + self.offsets.len() * 8
+    }
+
+    /// Stored nonzeros (padding slots hold exact zeros and do not count).
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Build from CSR without materializing the dense matrix.
+    pub fn from_csr(csr: &CsrMatrix) -> DiaMatrix {
+        let mut offsets: Vec<i64> = Vec::new();
+        for r in 0..csr.rows {
+            for (c, _) in csr.row(r) {
+                let off = c as i64 - r as i64;
+                if let Err(pos) = offsets.binary_search(&off) {
+                    offsets.insert(pos, off);
+                }
+            }
+        }
+        let mut data = vec![0.0f32; offsets.len() * csr.rows];
+        for r in 0..csr.rows {
+            for (c, v) in csr.row(r) {
+                let off = c as i64 - r as i64;
+                let d = offsets.binary_search(&off).expect("offset collected above");
+                data[d * csr.rows + r] = v;
+            }
+        }
+        DiaMatrix { rows: csr.rows, cols: csr.cols, offsets, data }
+    }
+
+    /// Convert to CSR, dropping the padding zeros. Offsets are ascending,
+    /// so per-row columns come out strictly increasing (valid CSR).
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut ptr = Vec::with_capacity(self.rows + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        ptr.push(0);
+        for r in 0..self.rows {
+            for (d, &off) in self.offsets.iter().enumerate() {
+                let c = r as i64 + off;
+                if c < 0 || c as usize >= self.cols {
+                    continue;
+                }
+                let v = self.data[d * self.rows + r];
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    data.push(v);
+                }
+            }
+            ptr.push(indices.len());
+        }
+        CsrMatrix { rows: self.rows, cols: self.cols, ptr, indices, data }
+    }
+
+    /// `dmat (B, K) @ self' -> (B, N)` with `self` shaped (N, K) — the
+    /// Figure-2 contraction in DIA form. Each diagonal contributes a
+    /// shifted elementwise product, which keeps both operands on
+    /// unit-stride walks (the reason DIA wins on banded matrices).
+    pub fn dxct(&self, dmat: &Tensor) -> Tensor {
+        let (b, k) = (dmat.shape[0], dmat.shape[1]);
+        assert_eq!(k, self.cols, "dia dxct: K mismatch ({k} vs {})", self.cols);
+        let n = self.rows;
+        let mut out = vec![0.0f32; b * n];
+        let ptr = pool::SharedMut::new(&mut out);
+        pool::parallel_chunks(b, pool::max_threads(), |b0, b1| {
+            let out = unsafe { ptr.slice() };
+            for bi in b0..b1 {
+                let xrow = &dmat.data[bi * k..(bi + 1) * k];
+                let orow = &mut out[bi * n..(bi + 1) * n];
+                for (d, &off) in self.offsets.iter().enumerate() {
+                    let diag = &self.data[d * n..(d + 1) * n];
+                    // Rows r where column c = r + off stays inside [0, k).
+                    let r_lo = (-off).max(0) as usize;
+                    let r_hi = n.min((k as i64 - off).max(0) as usize);
+                    for r in r_lo..r_hi {
+                        orow[r] += diag[r] * xrow[(r as i64 + off) as usize];
+                    }
+                }
+            }
+        });
+        Tensor::new(vec![b, n], out)
     }
 }
 
@@ -147,6 +234,49 @@ mod tests {
                 }
             }
             assert_eq!(DiaMatrix::from_dense(&dense, rows, cols).to_dense(), dense);
+        }
+    }
+
+    #[test]
+    fn csr_conversions_roundtrip() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..10 {
+            let rows = 1 + rng.below(15);
+            let cols = 1 + rng.below(15);
+            let mut dense = vec![0.0f32; rows * cols];
+            for v in &mut dense {
+                if rng.uniform() < 0.25 {
+                    *v = rng.normal() as f32;
+                }
+            }
+            let csr = CsrMatrix::from_dense(&dense, rows, cols);
+            let dia = DiaMatrix::from_csr(&csr);
+            assert_eq!(dia, DiaMatrix::from_dense(&dense, rows, cols));
+            let back = dia.to_csr();
+            back.validate().unwrap();
+            assert_eq!(back, csr);
+            assert_eq!(dia.nnz(), csr.nnz());
+        }
+    }
+
+    #[test]
+    fn dxct_matches_dense_including_rectangular() {
+        use crate::tensor::{matmul_nt, Tensor};
+        let mut rng = crate::util::rng::Rng::new(10);
+        for &(b, n, k) in &[(1usize, 6usize, 6usize), (5, 12, 7), (4, 7, 12), (3, 20, 20)] {
+            let mut dense = vec![0.0f32; n * k];
+            for v in &mut dense {
+                if rng.uniform() < 0.3 {
+                    *v = rng.normal() as f32;
+                }
+            }
+            let dia = DiaMatrix::from_dense(&dense, n, k);
+            let d = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
+            let got = dia.dxct(&d);
+            let want = matmul_nt(&d, &Tensor::new(vec![n, k], dense));
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+            }
         }
     }
 }

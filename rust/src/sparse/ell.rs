@@ -7,6 +7,8 @@
 //! format-comparison bench.
 
 use super::csr::CsrMatrix;
+use crate::tensor::Tensor;
+use crate::util::pool;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct EllMatrix {
@@ -73,6 +75,59 @@ impl EllMatrix {
             return 0.0;
         }
         1.0 - self.nnz() as f64 / slots as f64
+    }
+
+    /// Convert back to CSR. Slots within a row keep CSR's ascending
+    /// column order (that is how `from_csr` packed them), so the result
+    /// is valid without sorting.
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut ptr = Vec::with_capacity(self.rows + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        ptr.push(0);
+        for r in 0..self.rows {
+            for s in 0..self.width {
+                let c = self.indices[r * self.width + s];
+                if c == ELL_PAD {
+                    break; // padding is always the row's tail
+                }
+                indices.push(c);
+                data.push(self.data[r * self.width + s]);
+            }
+            ptr.push(indices.len());
+        }
+        CsrMatrix { rows: self.rows, cols: self.cols, ptr, indices, data }
+    }
+
+    /// `dmat (B, K) @ self' -> (B, N)` with `self` shaped (N, K) — the
+    /// Figure-2 contraction in ELL form: every output row walks a
+    /// fixed-width slot strip, the regular access pattern ELL trades its
+    /// padding for.
+    pub fn dxct(&self, dmat: &Tensor) -> Tensor {
+        let (b, k) = (dmat.shape[0], dmat.shape[1]);
+        assert_eq!(k, self.cols, "ell dxct: K mismatch ({k} vs {})", self.cols);
+        let n = self.rows;
+        let mut out = vec![0.0f32; b * n];
+        let ptr = pool::SharedMut::new(&mut out);
+        pool::parallel_chunks(b, pool::max_threads(), |b0, b1| {
+            let out = unsafe { ptr.slice() };
+            for bi in b0..b1 {
+                let xrow = &dmat.data[bi * k..(bi + 1) * k];
+                let orow = &mut out[bi * n..(bi + 1) * n];
+                for r in 0..n {
+                    let mut acc = 0.0f32;
+                    for s in 0..self.width {
+                        let c = self.indices[r * self.width + s];
+                        if c == ELL_PAD {
+                            break;
+                        }
+                        acc += self.data[r * self.width + s] * xrow[c as usize];
+                    }
+                    orow[r] = acc;
+                }
+            }
+        });
+        Tensor::new(vec![b, n], out)
     }
 }
 
@@ -147,6 +202,46 @@ mod tests {
                 }
             }
             assert_eq!(EllMatrix::from_dense(&dense, rows, cols).to_dense(), dense);
+        }
+    }
+
+    #[test]
+    fn csr_roundtrip() {
+        let mut rng = crate::util::rng::Rng::new(7);
+        for _ in 0..10 {
+            let rows = 1 + rng.below(15);
+            let cols = 1 + rng.below(15);
+            let mut dense = vec![0.0f32; rows * cols];
+            for v in &mut dense {
+                if rng.uniform() < 0.3 {
+                    *v = rng.normal() as f32;
+                }
+            }
+            let csr = CsrMatrix::from_dense(&dense, rows, cols);
+            let back = EllMatrix::from_csr(&csr).to_csr();
+            back.validate().unwrap();
+            assert_eq!(back, csr);
+        }
+    }
+
+    #[test]
+    fn dxct_matches_dense() {
+        use crate::tensor::{matmul_nt, Tensor};
+        let mut rng = crate::util::rng::Rng::new(8);
+        for &(b, n, k) in &[(1usize, 5usize, 9usize), (6, 30, 40), (3, 17, 11)] {
+            let mut dense = vec![0.0f32; n * k];
+            for v in &mut dense {
+                if rng.uniform() < 0.3 {
+                    *v = rng.normal() as f32;
+                }
+            }
+            let ell = EllMatrix::from_dense(&dense, n, k);
+            let d = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
+            let got = ell.dxct(&d);
+            let want = matmul_nt(&d, &Tensor::new(vec![n, k], dense));
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+            }
         }
     }
 }

@@ -3,14 +3,16 @@
 //! Implements every format the paper compares in Figure 1 (DIA, ELL, CSR,
 //! COO), the two dense×compressed kernels it contributes (Figures 2-3),
 //! and the elementwise proximal operator (Figure 4), as multithreaded
-//! cache-blocked CPU kernels. CSR is the production format (the paper's
-//! conclusion); DIA/ELL/COO exist for the format-comparison study and as
-//! conversion targets with round-trip tests.
+//! cache-blocked CPU kernels. CSR is the production format for
+//! unstructured sparsity (the paper's conclusion); every format carries
+//! its own `dxct` kernel and CSR conversions, and `dispatch` picks the
+//! best format per weight matrix with a storage cost model.
 
 pub mod blockell;
 pub mod coo;
 pub mod csr;
 pub mod dia;
+pub mod dispatch;
 pub mod ell;
 pub mod ops;
 pub mod prox;
@@ -19,4 +21,5 @@ pub use blockell::BlockEllMatrix;
 pub use coo::CooMatrix;
 pub use csr::CsrMatrix;
 pub use dia::DiaMatrix;
+pub use dispatch::{analyze, select_format, DynSparseMatrix, SparseFormat, SparseKernel, Structure};
 pub use ell::EllMatrix;

@@ -1,0 +1,240 @@
+//! Offline stand-in for the `xla` (PJRT) crate.
+//!
+//! The runtime layer was written against the PJRT C API bindings of the
+//! `xla` crate, which are not present in the offline build image. This
+//! module mirrors the small slice of that API the crate uses so the whole
+//! workspace compiles and tests without it:
+//!
+//! * [`Literal`] packing/unpacking is **fully functional host-side**
+//!   (shape + element type + little-endian bytes) — the runtime's
+//!   literal round-trip tests run against it for real.
+//! * Anything that would touch a compiled executable or a device
+//!   ([`PjRtClient::cpu`], [`PjRtLoadedExecutable::execute`], …) returns
+//!   a descriptive error at runtime.
+//!
+//! `runtime::client` and `coordinator::trainer` import this module under
+//! the name `xla` (`use crate::xla_compat as xla`), so swapping in the
+//! real crate later is a two-line change per file plus the `pjrt`
+//! feature (which also un-gates the artifact-driven integration tests).
+
+use anyhow::Result;
+
+/// XLA element types the manifest artifacts can produce. Only `F32` and
+/// `S32` flow through the trainer today; the rest exist so downstream
+/// matches keep an honest wildcard arm.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    F16,
+    F32,
+    F64,
+}
+
+/// Host-native scalar types a [`Literal`] can be decoded into.
+pub trait NativeType: Copy {
+    const ELEMENT_TYPE: ElementType;
+    fn from_le(bytes: [u8; 4]) -> Self;
+}
+
+impl NativeType for f32 {
+    const ELEMENT_TYPE: ElementType = ElementType::F32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        f32::from_le_bytes(bytes)
+    }
+}
+
+impl NativeType for i32 {
+    const ELEMENT_TYPE: ElementType = ElementType::S32;
+    fn from_le(bytes: [u8; 4]) -> Self {
+        i32::from_le_bytes(bytes)
+    }
+}
+
+/// Array shape of a literal (dimensions only; layout is dense row-major).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host-side literal: element type + dims + raw little-endian bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<i64>,
+    bytes: Vec<u8>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        Ok(Literal {
+            ty,
+            dims: dims.iter().map(|&d| d as i64).collect(),
+            bytes: data.to_vec(),
+        })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(self.ty)
+    }
+
+    /// Decode the payload as a vector of 4-byte host scalars. Errors on
+    /// an element-type mismatch (as the real crate does) instead of
+    /// silently reinterpreting the bytes.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        anyhow::ensure!(
+            self.ty == T::ELEMENT_TYPE,
+            "literal holds {:?}, requested {:?}",
+            self.ty,
+            T::ELEMENT_TYPE
+        );
+        anyhow::ensure!(
+            self.bytes.len() % 4 == 0,
+            "literal payload of {} bytes is not 4-byte aligned",
+            self.bytes.len()
+        );
+        Ok(self
+            .bytes
+            .chunks_exact(4)
+            .map(|c| T::from_le([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Destructure a tuple literal. Device executions are the only
+    /// producers of tuples, so the stub never has one to destructure.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+}
+
+fn unavailable(what: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "{what} needs the real XLA/PJRT runtime; this build uses the offline \
+         stub (build with the `pjrt` feature once the xla crate is vendored)"
+    )
+}
+
+/// PJRT client handle. The stub cannot create one.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Compiled executable handle (unreachable without a client).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// Device buffer handle (unreachable without a client).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module (text form). Parsing needs the native XLA parser.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_packs_and_decodes_f32() {
+        let vals = [1.5f32, -2.0, 0.25];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::F32, &[3], &bytes).unwrap();
+        assert_eq!(lit.ty().unwrap(), ElementType::F32);
+        assert_eq!(lit.array_shape().unwrap().dims(), &[3i64]);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+    }
+
+    #[test]
+    fn literal_packs_and_decodes_i32() {
+        let vals = [7i32, -9];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[2], &bytes).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vals);
+    }
+
+    #[test]
+    fn to_vec_rejects_type_mismatch() {
+        let bytes = 7i32.to_le_bytes();
+        let lit =
+            Literal::create_from_shape_and_untyped_data(ElementType::S32, &[1], &bytes).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn device_paths_error_descriptively() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        let proto = HloModuleProto::from_text_file("missing.hlo.txt");
+        assert!(proto.is_err());
+    }
+}

@@ -4,6 +4,13 @@
 //! loudly with instructions otherwise). One shared Runtime per process
 //! keeps compilation costs amortized; tests use the small `mlp` model so
 //! the whole file stays fast.
+//!
+//! The whole file is gated on the `pjrt` feature: the default offline
+//! build has no PJRT runtime (see `proxcomp::xla_compat`) and no compiled
+//! artifacts, so these tests only exist when the real stack is present
+//! (`cargo test --features pjrt`).
+
+#![cfg(feature = "pjrt")]
 
 use std::sync::Mutex;
 

@@ -4,6 +4,7 @@
 //! pipeline. Each property runs against many random instances.
 
 use proxcomp::runtime::{ParamBundle, ParamSpec};
+use proxcomp::sparse::dispatch::{self, DynSparseMatrix, SparseFormat};
 use proxcomp::sparse::{ops, prox, BlockEllMatrix, CooMatrix, CsrMatrix, DiaMatrix, EllMatrix};
 use proxcomp::tensor::{matmul, matmul_nt, Tensor};
 use proxcomp::util::rng::Rng;
@@ -280,20 +281,215 @@ fn prop_dataset_batches_always_in_range() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Format dispatch (sparse::dispatch)
+// ---------------------------------------------------------------------------
+
+/// Random banded matrix: a contiguous band of `band` diagonals around the
+/// main diagonal, fully populated.
+fn random_banded(rng: &mut Rng, n: usize, band: usize) -> Vec<f32> {
+    let mut dense = vec![0.0f32; n * n];
+    let half = band as i64 / 2;
+    for r in 0..n {
+        for off in -half..=half {
+            let c = r as i64 + off;
+            if c >= 0 && (c as usize) < n {
+                dense[r * n + c as usize] = rng.normal() as f32 * 0.5;
+            }
+        }
+    }
+    dense
+}
+
+/// Exactly `per_row` nonzeros per row at random distinct columns.
+fn random_uniform_rows(rng: &mut Rng, rows: usize, cols: usize, per_row: usize) -> Vec<f32> {
+    let mut dense = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let mut placed = 0;
+        while placed < per_row {
+            let c = rng.below(cols);
+            if dense[r * cols + c] == 0.0 {
+                dense[r * cols + c] = rng.normal() as f32 * 0.5;
+                placed += 1;
+            }
+        }
+    }
+    dense
+}
+
+/// Fixed number of dense 8×16 tiles per block-row, scattered columns.
+fn random_block_sparse(rng: &mut Rng, rows: usize, cols: usize, blocks_per_row: usize) -> Vec<f32> {
+    let (bh, bw) = (dispatch::BLOCK_H, dispatch::BLOCK_W);
+    let mut dense = vec![0.0f32; rows * cols];
+    let n_bc = cols / bw;
+    for i in 0..rows / bh {
+        let mut placed = 0;
+        let mut used = vec![false; n_bc];
+        while placed < blocks_per_row {
+            let j = rng.below(n_bc);
+            if used[j] {
+                continue;
+            }
+            used[j] = true;
+            placed += 1;
+            for y in 0..bh {
+                for x in 0..bw {
+                    dense[(i * bh + y) * cols + j * bw + x] = rng.normal() as f32 * 0.5;
+                }
+            }
+        }
+    }
+    dense
+}
+
+fn chosen_format(dense: &[f32], rows: usize, cols: usize) -> SparseFormat {
+    let s = dispatch::analyze(dense, rows, cols);
+    dispatch::select_format(rows, cols, s.nnz, &s)
+}
+
+#[test]
+fn prop_select_format_matches_structure() {
+    let mut rng = Rng::new(120);
+    for _ in 0..10 {
+        // Banded → DIA.
+        let n = 16 + 8 * rng.below(6);
+        let banded = random_banded(&mut rng, n, 3);
+        assert_eq!(chosen_format(&banded, n, n), SparseFormat::Dia);
+
+        // Uniform row populations, scattered columns → ELL.
+        let (rows, cols) = (32 + 8 * rng.below(4), 48 + 16 * rng.below(4));
+        let uniform = random_uniform_rows(&mut rng, rows, cols, 4 + rng.below(4));
+        assert_eq!(chosen_format(&uniform, rows, cols), SparseFormat::Ell);
+
+        // Skewed rows (one dense row) → CSR. Odd cols keep Block-ELL out.
+        let cols = 91;
+        let mut skewed = vec![0.0f32; 24 * cols];
+        for c in 0..cols {
+            skewed[c] = 1.0;
+        }
+        for r in 1..24 {
+            skewed[r * cols + rng.below(cols)] = 2.0;
+        }
+        assert_eq!(chosen_format(&skewed, 24, cols), SparseFormat::Csr);
+
+        // Block-structured → Block-ELL.
+        let block = random_block_sparse(&mut rng, 64, 128, 2);
+        assert_eq!(chosen_format(&block, 64, 128), SparseFormat::BlockEll);
+    }
+}
+
+#[test]
+fn prop_every_format_roundtrips_identically() {
+    // Acceptance: every format reproduces `to_dense` bit-identically on
+    // the same input, whatever the structure.
+    let mut rng = Rng::new(121);
+    for case in 0..12 {
+        let dense = match case % 3 {
+            0 => random_banded(&mut rng, 32, 5),
+            1 => random_uniform_rows(&mut rng, 32, 64, 5),
+            _ => random_block_sparse(&mut rng, 32, 64, 2),
+        };
+        let (rows, cols) = (32, dense.len() / 32);
+        for fmt in [
+            SparseFormat::Dia,
+            SparseFormat::Ell,
+            SparseFormat::Csr,
+            SparseFormat::Coo,
+            SparseFormat::BlockEll,
+        ] {
+            let m = DynSparseMatrix::from_dense_as(fmt, &dense, rows, cols);
+            assert_eq!(m.to_dense(), dense, "case {case}: {} roundtrip", fmt.name());
+            assert_eq!(m.nnz(), dense.iter().filter(|&&v| v != 0.0).count());
+        }
+    }
+}
+
+#[test]
+fn prop_dispatch_spmm_matches_dense_reference() {
+    // Acceptance: dispatch-chosen SpMM matches the dense reference within
+    // 1e-5 (relative to the magnitude of the entry) on random banded /
+    // uniform / block-sparse matrices.
+    let mut rng = Rng::new(122);
+    for case in 0..12 {
+        let (dense, rows, cols) = match case % 3 {
+            0 => (random_banded(&mut rng, 40, 5), 40, 40),
+            1 => (random_uniform_rows(&mut rng, 32, 48, 6), 32, 48),
+            _ => (random_block_sparse(&mut rng, 32, 64, 2), 32, 64),
+        };
+        let m = DynSparseMatrix::from_dense(&dense, rows, cols);
+        let b = 1 + rng.below(9);
+        let d = Tensor::new(vec![b, cols], rng.normal_vec(b * cols, 1.0));
+        let got = m.dxct(&d);
+        let want = matmul_nt(&d, &Tensor::new(vec![rows, cols], dense));
+        for (g, w) in got.data.iter().zip(&want.data) {
+            let tol = 1e-5f32 * w.abs().max(1.0);
+            assert!(
+                (g - w).abs() <= tol,
+                "case {case} ({}): {g} vs {w}",
+                m.format().name()
+            );
+        }
+    }
+}
+
+/// The manifest-shaped MLP parameter spec used by the engine tests.
+fn mlp_specs() -> Vec<ParamSpec> {
+    let spec = |name: &str, kind: &str, shape: Vec<usize>, prunable: bool| ParamSpec {
+        name: name.into(),
+        kind: kind.into(),
+        shape,
+        prunable,
+        layer: name.trim_end_matches("_w").trim_end_matches("_b").into(),
+    };
+    vec![
+        spec("fc1_w", "fc_w", vec![256, 784], true),
+        spec("fc1_b", "fc_b", vec![256], false),
+        spec("fc2_w", "fc_w", vec![128, 256], true),
+        spec("fc2_b", "fc_b", vec![128], false),
+        spec("fc3_w", "fc_w", vec![10, 128], true),
+        spec("fc3_b", "fc_b", vec![10], false),
+    ]
+}
+
+#[test]
+fn prop_engine_auto_matches_dense_and_csr() {
+    use proxcomp::inference::{Engine, WeightMode};
+    let mut rng = Rng::new(123);
+    let specs = mlp_specs();
+    for _ in 0..4 {
+        let mut bundle = ParamBundle::he_init(&specs, rng.next_u64());
+        let t = rng.range(0.02, 0.08);
+        for (spec, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+            if spec.prunable {
+                prox::soft_threshold_inplace(v, t);
+            }
+        }
+        let dense = Engine::from_bundle_mode("mlp", &bundle, WeightMode::Dense).unwrap();
+        let csr = Engine::from_bundle_mode("mlp", &bundle, WeightMode::Csr).unwrap();
+        let auto = Engine::from_bundle_mode("mlp", &bundle, WeightMode::Auto).unwrap();
+        // Every weight layer got a concrete sparse format.
+        for (layer, fmt) in auto.layer_formats() {
+            assert_ne!(fmt, "dense", "{layer} not compressed in Auto mode");
+        }
+        // Auto never stores more bytes than fixed CSR (the cost model
+        // only moves away from CSR when it is a strict win).
+        assert!(auto.model_size_bytes() <= csr.model_size_bytes());
+        let x = Tensor::new(vec![3, 1, 28, 28], rng.normal_vec(3 * 784, 1.0));
+        let a = dense.forward(&x).unwrap();
+        let b = auto.forward(&x).unwrap();
+        for (u, v) in a.data.iter().zip(&b.data) {
+            assert!((u - v).abs() < 1e-3, "dense/auto engines diverge: {u} vs {v}");
+        }
+    }
+}
+
 #[test]
 fn prop_engine_dense_sparse_parity_random_weights() {
     use proxcomp::inference::Engine;
     let mut rng = Rng::new(113);
     for _ in 0..6 {
         // Random sparse MLP bundle at the manifest shapes.
-        let specs = vec![
-            ParamSpec { name: "fc1_w".into(), kind: "fc_w".into(), shape: vec![256, 784], prunable: true, layer: "fc1".into() },
-            ParamSpec { name: "fc1_b".into(), kind: "fc_b".into(), shape: vec![256], prunable: false, layer: "fc1".into() },
-            ParamSpec { name: "fc2_w".into(), kind: "fc_w".into(), shape: vec![128, 256], prunable: true, layer: "fc2".into() },
-            ParamSpec { name: "fc2_b".into(), kind: "fc_b".into(), shape: vec![128], prunable: false, layer: "fc2".into() },
-            ParamSpec { name: "fc3_w".into(), kind: "fc_w".into(), shape: vec![10, 128], prunable: true, layer: "fc3".into() },
-            ParamSpec { name: "fc3_b".into(), kind: "fc_b".into(), shape: vec![10], prunable: false, layer: "fc3".into() },
-        ];
+        let specs = mlp_specs();
         let mut bundle = ParamBundle::he_init(&specs, rng.next_u64());
         let t = rng.range(0.0, 0.08);
         for (spec, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {

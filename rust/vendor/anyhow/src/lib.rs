@@ -1,0 +1,183 @@
+//! Vendored minimal stand-in for the `anyhow` crate.
+//!
+//! The offline build environment has no crates.io access, so this local
+//! path dependency provides the subset of the anyhow API the workspace
+//! uses: [`Error`], [`Result`], and the `anyhow!` / `bail!` / `ensure!`
+//! macros, with `?`-conversion from any `std::error::Error`. It is a
+//! drop-in for the real crate at this API surface; swap the path
+//! dependency for the registry crate when a registry is available.
+
+use std::fmt;
+
+/// Boxed error with an eagerly rendered message and an optional source
+/// chain. Like the real `anyhow::Error`, this type deliberately does NOT
+/// implement `std::error::Error` — that keeps the blanket
+/// `From<E: std::error::Error>` impl coherent.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// The rendered top-level message.
+    pub fn to_message(&self) -> &str {
+        &self.msg
+    }
+
+    /// Iterate the source chain (top-level cause first).
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: self.source.as_deref().map(|s| s as &(dyn std::error::Error + 'static)) }
+    }
+}
+
+/// Iterator over an [`Error`]'s source chain.
+pub struct Chain<'a> {
+    next: Option<&'a (dyn std::error::Error + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn std::error::Error + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        // `{:#}` renders the full cause chain, as real anyhow does.
+        if f.alternate() {
+            for cause in self.chain() {
+                write!(f, ": {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        for cause in self.chain() {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string(), source: Some(Box::new(e)) }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string (with inline captures) or
+/// any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<usize> {
+        ensure!(flag, "flag was {flag}");
+        Ok(1)
+    }
+
+    fn bails() -> Result<()> {
+        bail!("bailed with {}", 42)
+    }
+
+    #[test]
+    fn message_and_formatting() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let x = 7;
+        let e = anyhow!("captured {x} and {}", "positional");
+        assert_eq!(e.to_string(), "captured 7 and positional");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(fails(true).unwrap(), 1);
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(bails().unwrap_err().to_string(), "bailed with 42");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        let err = parse("nope").unwrap_err();
+        assert!(!err.to_string().is_empty());
+        // Source chain is preserved and rendered by `{:#}`.
+        assert_eq!(err.chain().count(), 1);
+        let rendered = format!("{err:#}");
+        assert!(rendered.starts_with(err.to_message()));
+    }
+
+    #[test]
+    fn identity_question_mark() {
+        fn inner() -> Result<()> {
+            bail!("inner")
+        }
+        fn outer() -> Result<()> {
+            inner()?;
+            Ok(())
+        }
+        assert_eq!(outer().unwrap_err().to_string(), "inner");
+    }
+}
