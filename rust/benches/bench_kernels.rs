@@ -10,7 +10,7 @@
 #[path = "common.rs"]
 mod common;
 
-use proxcomp::sparse::dispatch::{self, DynSparseMatrix};
+use proxcomp::sparse::dispatch::{self, DynSparseMatrix, SparseFormat};
 use proxcomp::sparse::{ops, prox, BlockEllMatrix, CooMatrix, CsrMatrix, DiaMatrix, EllMatrix};
 use proxcomp::tensor::{self, ConvSpec, Tensor};
 use proxcomp::util::rng::Rng;
@@ -192,6 +192,139 @@ fn main() -> anyhow::Result<()> {
             us_csr / us_auto,
             csr.storage_bytes() as f64 / auto.storage_bytes() as f64,
         );
+    }
+
+    // --- thread sweep: every format's kernel at the serving shape (B=1).
+    // Fixtures are big enough (4096×4096 at 90–97% sparsity) that the
+    // parallel partitions amortize the scoped-thread spawn cost; the
+    // acceptance shape is parallel (≥4 threads) beating the 1-thread run
+    // (the sequential PR-1 behaviour at B=1).
+    common::section("thread sweep: dxct at serving shape B=1 (90–97% sparsity fixtures)");
+    {
+        let (rows, cols) = (4096usize, 4096usize);
+        let thread_counts = [1usize, 2, 4, 8];
+        // Banded fixtures for DIA at exact target sparsities.
+        let banded_at = |rng: &mut Rng, density: f64| {
+            let diags = ((cols as f64 * density).round() as usize).max(1);
+            let mut dense = vec![0.0f32; rows * cols];
+            let half = diags as i64 / 2;
+            for r in 0..rows {
+                for off in -half..(diags as i64 - half) {
+                    let c = r as i64 + off;
+                    if c >= 0 && (c as usize) < cols {
+                        dense[r * cols + c as usize] = rng.normal() as f32 + 2.0;
+                    }
+                }
+            }
+            dense
+        };
+        // Uniform-row fixtures for ELL.
+        let uniform_at = |rng: &mut Rng, density: f64| {
+            let per_row = ((cols as f64 * density).round() as usize).max(1);
+            let mut dense = vec![0.0f32; rows * cols];
+            for r in 0..rows {
+                let mut placed = 0;
+                while placed < per_row {
+                    let c = rng.below(cols);
+                    if dense[r * cols + c] == 0.0 {
+                        dense[r * cols + c] = rng.normal() as f32 + 2.0;
+                        placed += 1;
+                    }
+                }
+            }
+            dense
+        };
+        // Dense-tile fixtures for Block-ELL.
+        let blocks_at = |rng: &mut Rng, density: f64| {
+            let n_bc = cols / dispatch::BLOCK_W;
+            let per_row = ((n_bc as f64 * density).round() as usize).max(1);
+            let mut dense = vec![0.0f32; rows * cols];
+            for i in 0..rows / dispatch::BLOCK_H {
+                for s in 0..per_row {
+                    let j = (i * 13 + s * 7) % n_bc;
+                    for y in 0..dispatch::BLOCK_H {
+                        for x in 0..dispatch::BLOCK_W {
+                            dense[(i * dispatch::BLOCK_H + y) * cols + j * dispatch::BLOCK_W + x] =
+                                rng.normal() as f32 + 2.0;
+                        }
+                    }
+                }
+            }
+            dense
+        };
+        let unstructured_at = |rng: &mut Rng, density: f64| {
+            let mut dense = rng.normal_vec(rows * cols, 0.05);
+            let t = prox::magnitude_quantile(&dense, 1.0 - density);
+            prox::hard_threshold_inplace(&mut dense, t);
+            dense
+        };
+        let d1 = Tensor::new(vec![1, cols], rng.normal_vec(cols, 1.0));
+        println!(
+            "{:<26} {:>9} {:>9} {:>9} {:>9} {:>11}",
+            "fixture → format", "t=1 µs", "t=2 µs", "t=4 µs", "t=8 µs", "t=4 speedup"
+        );
+        let mut sweep: Vec<(String, DynSparseMatrix)> = Vec::new();
+        for density in [0.10f64, 0.03] {
+            let pct = 100.0 - density * 100.0;
+            let dia = banded_at(&mut rng, density);
+            sweep.push((
+                format!("banded {pct:.0}% → DIA"),
+                DynSparseMatrix::from_dense_as(SparseFormat::Dia, &dia, rows, cols),
+            ));
+            let ell = uniform_at(&mut rng, density);
+            sweep.push((
+                format!("uniform {pct:.0}% → ELL"),
+                DynSparseMatrix::from_dense_as(SparseFormat::Ell, &ell, rows, cols),
+            ));
+            let bell = blocks_at(&mut rng, density);
+            sweep.push((
+                format!("blocks {pct:.0}% → BlockELL"),
+                DynSparseMatrix::from_dense_as(SparseFormat::BlockEll, &bell, rows, cols),
+            ));
+            let unstructured = unstructured_at(&mut rng, density);
+            sweep.push((
+                format!("random {pct:.0}% → CSR"),
+                DynSparseMatrix::from_dense_as(SparseFormat::Csr, &unstructured, rows, cols),
+            ));
+            sweep.push((
+                format!("random {pct:.0}% → COO"),
+                DynSparseMatrix::from_dense_as(SparseFormat::Coo, &unstructured, rows, cols),
+            ));
+        }
+        for (name, m) in &sweep {
+            let us: Vec<f64> = thread_counts
+                .iter()
+                .map(|&t| {
+                    common::time_median_us(reps, || {
+                        m.dxct_threads(&d1, t);
+                    })
+                })
+                .collect();
+            println!(
+                "{:<26} {:>9.0} {:>9.0} {:>9.0} {:>9.0} {:>10.2}×",
+                name,
+                us[0],
+                us[1],
+                us[2],
+                us[3],
+                us[0] / us[2]
+            );
+        }
+    }
+
+    // --- batch sweep: request coalescing payoff on the CSR serving path
+    common::section("batch sweep: CSR dxct, 97% sparse 4096×4096, max threads");
+    {
+        let (rows, cols) = (4096usize, 4096usize);
+        let (_, csr97) = sparse_matrix(&mut rng, rows, cols, 0.97);
+        println!("{:<10} {:>10} {:>14} {:>14}", "batch", "µs", "samples/s", "µs/sample");
+        for b in [1usize, 4, 16, 64] {
+            let db = Tensor::new(vec![b, cols], rng.normal_vec(b * cols, 1.0));
+            let us = common::time_median_us(reps, || {
+                ops::dxct(&db, &csr97);
+            });
+            println!("{:<10} {:>10.0} {:>14.0} {:>14.1}", b, us, b as f64 / (us * 1e-6), us / b as f64);
+        }
     }
 
     // --- Figure-1 format storage comparison on a prox-trained-style matrix

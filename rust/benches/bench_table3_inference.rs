@@ -20,13 +20,18 @@
 #[path = "common.rs"]
 mod common;
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use proxcomp::config::RunConfig;
 use proxcomp::coordinator::{trainer::StepScalars, Trainer};
 use proxcomp::data;
 use proxcomp::device::{estimate_speedup, DeviceModel, GTX_1080TI, MALI_T860};
-use proxcomp::inference::{Engine, WeightMode};
-use proxcomp::runtime::{Manifest, ParamBundle, Runtime};
+use proxcomp::inference::{BatchConfig, BatchServer, Engine, WeightMode};
+use proxcomp::runtime::{Manifest, ParamBundle, ParamSpec, Runtime};
+use proxcomp::sparse::prox;
 use proxcomp::tensor::Tensor;
+use proxcomp::util::rng::Rng;
 
 fn train_compressed_lenet(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Result<ParamBundle> {
     // SpC + debias to the paper's Table-3 operating point: λ high enough
@@ -51,8 +56,110 @@ fn train_compressed_lenet(rt: &mut Runtime, manifest: &Manifest) -> anyhow::Resu
     Ok(trainer.state.params)
 }
 
+/// Synthetic 97%-sparse MLP bundle (manifest shapes) for the serving
+/// sweeps — lets this bench's serving groups run without AOT artifacts.
+fn synthetic_sparse_mlp(seed: u64, rate: f64) -> ParamBundle {
+    let specs = vec![
+        ParamSpec::new("fc1_w", "fc_w", vec![256, 784], true),
+        ParamSpec::new("fc1_b", "fc_b", vec![256], false),
+        ParamSpec::new("fc2_w", "fc_w", vec![128, 256], true),
+        ParamSpec::new("fc2_b", "fc_b", vec![128], false),
+        ParamSpec::new("fc3_w", "fc_w", vec![10, 128], true),
+        ParamSpec::new("fc3_b", "fc_b", vec![10], false),
+    ];
+    let mut bundle = ParamBundle::he_init(&specs, seed);
+    for (s, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+        if s.prunable {
+            let t = prox::magnitude_quantile(v, rate);
+            prox::hard_threshold_inplace(v, t);
+        }
+    }
+    bundle
+}
+
+/// Serving sweeps: thread-count × batch-size forward throughput, then the
+/// `BatchServer` coalescing path under concurrent clients. Runs offline
+/// (synthetic weights — no AOT artifacts needed).
+fn serving_sweeps() -> anyhow::Result<()> {
+    let mut rng = Rng::new(400);
+    let bundle = synthetic_sparse_mlp(401, 0.97);
+    let engine = Arc::new(Engine::from_bundle_mode("mlp", &bundle, WeightMode::Csr)?);
+
+    common::section("serving sweep: PROXCOMP_THREADS × batch (97% sparse MLP, CSR engine)");
+    let saved_threads = std::env::var("PROXCOMP_THREADS").ok();
+    println!("{:<9} {:>9} {:>12} {:>12} {:>12}", "threads", "batch", "µs/forward", "samples/s", "µs/sample");
+    for threads in [1usize, 2, 4, 8] {
+        std::env::set_var("PROXCOMP_THREADS", threads.to_string());
+        for batch in [1usize, 8, 64] {
+            let x = Tensor::new(vec![batch, 1, 28, 28], rng.normal_vec(batch * 784, 1.0));
+            engine.forward(&x)?; // warmup
+            let us = common::time_median_us(20, || {
+                engine.forward(&x).unwrap();
+            });
+            println!(
+                "{:<9} {:>9} {:>12.0} {:>12.0} {:>12.1}",
+                threads,
+                batch,
+                us,
+                batch as f64 / (us * 1e-6),
+                us / batch as f64
+            );
+        }
+    }
+    match saved_threads {
+        Some(v) => std::env::set_var("PROXCOMP_THREADS", v),
+        None => std::env::remove_var("PROXCOMP_THREADS"),
+    }
+
+    common::section("BatchServer: coalescing micro-batches under 4 concurrent clients");
+    println!(
+        "{:<22} {:>9} {:>9} {:>11} {:>13} {:>11}",
+        "max_batch / max_wait", "batches", "mean", "mean lat µs", "fwd µs/batch", "req/s"
+    );
+    for (max_batch, wait_ms) in [(1usize, 0u64), (8, 2), (32, 2)] {
+        let server = BatchServer::start(
+            Arc::clone(&engine),
+            BatchConfig::new(max_batch, Duration::from_millis(wait_ms), (1, 28, 28)),
+        );
+        let per_client = 128usize;
+        std::thread::scope(|scope| {
+            for c in 0..4u64 {
+                let server = &server;
+                let sample = {
+                    let mut r = Rng::new(500 + c);
+                    r.normal_vec(784, 1.0)
+                };
+                scope.spawn(move || {
+                    for _ in 0..per_client {
+                        server.infer(&sample).unwrap();
+                    }
+                });
+            }
+        });
+        let stats = server.stats();
+        println!(
+            "{:<22} {:>9} {:>9.1} {:>11.0} {:>13.0} {:>11.0}",
+            format!("{max_batch} / {wait_ms} ms"),
+            stats.batches,
+            stats.mean_batch,
+            stats.mean_latency_us,
+            stats.mean_forward_us,
+            stats.throughput_rps
+        );
+    }
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load("artifacts")?;
+    serving_sweeps()?;
+
+    let manifest = match Manifest::load("artifacts") {
+        Ok(m) => m,
+        Err(e) => {
+            println!("\n[skip] trained Table-3 section needs AOT artifacts (`make artifacts`): {e}");
+            return Ok(());
+        }
+    };
     let mut rt = Runtime::cpu()?;
 
     common::section("Table 3: inference speedups by model compression (Lenet-5)");

@@ -283,6 +283,15 @@ impl Engine {
         Ok(Engine { model: model.to_string(), sparse, layers, num_classes })
     }
 
+    /// True when the forward pass mixes information *across* the batch
+    /// (batch-statistics `BatchNorm`, i.e. `resnet_s`): per-sample logits
+    /// then depend on batch composition, so the serving path must not
+    /// coalesce requests for this engine (`BatchServer` checks this and
+    /// pins its micro-batch size to 1).
+    pub fn uses_batch_stats(&self) -> bool {
+        self.layers.iter().any(|l| matches!(l, Layer::BatchNorm { .. }))
+    }
+
     /// (layer name, storage format) per weight layer — shows what the
     /// dispatch chose in `WeightMode::Auto` (all "CSR"/"dense" otherwise).
     pub fn layer_formats(&self) -> Vec<(String, &'static str)> {

@@ -6,7 +6,13 @@
 //! the Figure-2 `dense×compressed'` kernel; conv layers run im2col and
 //! then the same kernel against the (O, I·KH·KW) CSR view. Per-layer
 //! timings feed the Table-3 bench and the device cost model.
+//!
+//! `server` adds the batched serving front-end: a [`BatchServer`]
+//! coalesces single-sample requests into micro-batches over one shared
+//! [`Engine`] and reports throughput/latency via `metrics::ServingStats`.
 
 pub mod engine;
+pub mod server;
 
 pub use engine::{Engine, LayerTiming, WeightMode, WeightStore};
+pub use server::{BatchConfig, BatchServer, Pending};

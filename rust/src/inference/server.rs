@@ -1,0 +1,361 @@
+//! Batched multi-threaded serving: queue single-sample requests,
+//! coalesce them into micro-batches, run them through a shared
+//! [`Engine`].
+//!
+//! The paper's end goal is fast inference of compressed models on small
+//! parallel devices, and EIE (Han et al., 2016) shows the throughput win
+//! comes from keeping the compressed format *and* saturating all lanes.
+//! [`BatchServer`] supplies the serving half of that: a worker thread
+//! drains a request queue into micro-batches (bounded by
+//! [`BatchConfig::max_batch`] and [`BatchConfig::max_wait`]) and runs one
+//! forward per batch — inside which every sparse kernel partitions its
+//! work across `PROXCOMP_THREADS` lanes (`util::pool`), row-wise when
+//! the batch alone cannot feed them.
+//!
+//! Coalescing is only sound because the kernels make it so: every output
+//! row is computed with a fixed per-row reduction order, so a sample's
+//! logits are bit-identical whether it was served alone or inside any
+//! micro-batch (`tests/property.rs::prop_batch_server_matches_per_sample_forward`).
+//! The one exception is models whose forward uses *batch statistics*
+//! (the `resnet_s` batch-norm path): their logits depend on batch
+//! composition, so [`BatchServer::start`] pins `max_batch` to 1 for them
+//! (`Engine::uses_batch_stats`) instead of trusting the caller.
+//!
+//! Throughput and latency counters are surfaced as
+//! [`crate::metrics::ServingStats`] via [`BatchServer::stats`].
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::inference::Engine;
+use crate::metrics::ServingStats;
+use crate::tensor::Tensor;
+
+/// Coalescing knobs for a [`BatchServer`].
+#[derive(Debug, Clone)]
+pub struct BatchConfig {
+    /// Micro-batch ceiling: a forward never sees more samples than this.
+    pub max_batch: usize,
+    /// How long the worker holds an open batch waiting for more samples
+    /// once the first one arrives (the latency the server may add to buy
+    /// throughput).
+    pub max_wait: Duration,
+    /// Per-sample input shape (C, H, W); every request carries C·H·W
+    /// floats and the engine sees `(batch, C, H, W)` tensors.
+    pub input_shape: (usize, usize, usize),
+}
+
+impl BatchConfig {
+    pub fn new(max_batch: usize, max_wait: Duration, input_shape: (usize, usize, usize)) -> Self {
+        BatchConfig { max_batch: max_batch.max(1), max_wait, input_shape }
+    }
+
+    fn sample_len(&self) -> usize {
+        let (c, h, w) = self.input_shape;
+        c * h * w
+    }
+}
+
+/// One queued request: the flattened sample plus the channel its logits
+/// travel back on. Errors cross the channel as strings (`anyhow::Error`
+/// is not `Clone`, and one failed batch answers many requests).
+struct Request {
+    data: Vec<f32>,
+    submitted: Instant,
+    resp: Sender<Result<Vec<f32>, String>>,
+}
+
+/// Handle to an in-flight request returned by [`BatchServer::submit`].
+pub struct Pending {
+    rx: Receiver<Result<Vec<f32>, String>>,
+}
+
+impl Pending {
+    /// Block until the request's logits arrive.
+    pub fn wait(self) -> anyhow::Result<Vec<f32>> {
+        match self.rx.recv() {
+            Ok(Ok(logits)) => Ok(logits),
+            Ok(Err(e)) => Err(anyhow::anyhow!(e)),
+            Err(_) => Err(anyhow::anyhow!("batch server dropped the request")),
+        }
+    }
+}
+
+/// Counters the worker accumulates per batch. Only the worker writes
+/// (the channel is FIFO, so the first request it drains carries the
+/// process-wide first submit stamp): the mutex is touched once per
+/// batch, never on the submit hot path, so contention is negligible
+/// next to a forward.
+#[derive(Default)]
+struct StatsInner {
+    requests: usize,
+    batches: usize,
+    max_batch: usize,
+    total_latency_us: f64,
+    total_forward_us: f64,
+    first_submit: Option<Instant>,
+    last_done: Option<Instant>,
+}
+
+/// A serving front-end over one shared [`Engine`]: callers submit single
+/// samples from any thread; a worker coalesces them into micro-batches
+/// and fans the per-row logits back out.
+pub struct BatchServer {
+    cfg: BatchConfig,
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    stats: Arc<Mutex<StatsInner>>,
+}
+
+impl BatchServer {
+    /// Spawn the coalescing worker around a shared engine. For engines
+    /// whose forward uses batch statistics (`Engine::uses_batch_stats`,
+    /// the `resnet_s` batch-norm path) the micro-batch size is pinned to
+    /// 1 — coalescing would silently change per-sample logits.
+    pub fn start(engine: Arc<Engine>, cfg: BatchConfig) -> BatchServer {
+        let mut cfg = cfg;
+        if engine.uses_batch_stats() {
+            cfg.max_batch = 1;
+        }
+        let (tx, rx) = channel::<Request>();
+        let stats = Arc::new(Mutex::new(StatsInner::default()));
+        let worker = {
+            let stats = Arc::clone(&stats);
+            let cfg = cfg.clone();
+            std::thread::spawn(move || worker_loop(engine, cfg, rx, stats))
+        };
+        BatchServer { cfg, tx: Some(tx), worker: Some(worker), stats }
+    }
+
+    /// Queue one flattened sample; returns a [`Pending`] to wait on.
+    /// Fails fast when the sample length does not match `input_shape`.
+    pub fn submit(&self, sample: &[f32]) -> anyhow::Result<Pending> {
+        anyhow::ensure!(
+            sample.len() == self.cfg.sample_len(),
+            "sample has {} values, input shape {:?} needs {}",
+            sample.len(),
+            self.cfg.input_shape,
+            self.cfg.sample_len()
+        );
+        let (rtx, rrx) = channel();
+        let req = Request { data: sample.to_vec(), submitted: Instant::now(), resp: rtx };
+        self.tx
+            .as_ref()
+            .and_then(|tx| tx.send(req).ok())
+            .ok_or_else(|| anyhow::anyhow!("batch server is shut down"))?;
+        Ok(Pending { rx: rrx })
+    }
+
+    /// Submit one sample and block until its logits arrive.
+    pub fn infer(&self, sample: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.submit(sample)?.wait()
+    }
+
+    /// Throughput/latency counters accumulated so far.
+    pub fn stats(&self) -> ServingStats {
+        let s = self.stats.lock().unwrap();
+        let wall_secs = match (s.first_submit, s.last_done) {
+            (Some(first), Some(last)) => last.duration_since(first).as_secs_f64(),
+            _ => 0.0,
+        };
+        ServingStats {
+            requests: s.requests,
+            batches: s.batches,
+            max_batch: s.max_batch,
+            mean_batch: if s.batches == 0 { 0.0 } else { s.requests as f64 / s.batches as f64 },
+            mean_latency_us: if s.requests == 0 {
+                0.0
+            } else {
+                s.total_latency_us / s.requests as f64
+            },
+            mean_forward_us: if s.batches == 0 { 0.0 } else { s.total_forward_us / s.batches as f64 },
+            throughput_rps: if wall_secs > 0.0 { s.requests as f64 / wall_secs } else { 0.0 },
+        }
+    }
+
+    /// Stop accepting requests, drain the queue, and join the worker
+    /// (also runs on drop). In-flight requests are still answered.
+    pub fn shutdown(&mut self) {
+        self.tx.take();
+        if let Some(worker) = self.worker.take() {
+            let _ = worker.join();
+        }
+    }
+}
+
+impl Drop for BatchServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(
+    engine: Arc<Engine>,
+    cfg: BatchConfig,
+    rx: Receiver<Request>,
+    stats: Arc<Mutex<StatsInner>>,
+) {
+    let (c, h, w) = cfg.input_shape;
+    let sample_len = cfg.sample_len();
+    loop {
+        // Block for the batch's first sample; a closed channel (server
+        // dropped) after the queue drains ends the worker.
+        let first = match rx.recv() {
+            Ok(req) => req,
+            Err(_) => return,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+
+        let m = batch.len();
+        let first_submitted = batch[0].submitted;
+        let mut xs = Vec::with_capacity(m * sample_len);
+        for req in &batch {
+            xs.extend_from_slice(&req.data);
+        }
+        let x = Tensor::new(vec![m, c, h, w], xs);
+        let t0 = Instant::now();
+        let result = engine.forward(&x);
+        let forward_us = t0.elapsed().as_secs_f64() * 1e6;
+        let done = Instant::now();
+
+        // Record the batch *before* fanning responses out, so a caller
+        // that queries `stats()` right after its `wait()` returns always
+        // sees its own request counted.
+        let latency_us: f64 = batch
+            .iter()
+            .map(|req| done.duration_since(req.submitted).as_secs_f64() * 1e6)
+            .sum();
+        {
+            let mut s = stats.lock().unwrap();
+            s.first_submit.get_or_insert(first_submitted);
+            s.requests += m;
+            s.batches += 1;
+            s.max_batch = s.max_batch.max(m);
+            s.total_latency_us += latency_us;
+            s.total_forward_us += forward_us;
+            s.last_done = Some(done);
+        }
+
+        match result {
+            Ok(logits) => {
+                let per = logits.data.len() / m;
+                for (i, req) in batch.into_iter().enumerate() {
+                    let row = logits.data[i * per..(i + 1) * per].to_vec();
+                    let _ = req.resp.send(Ok(row));
+                }
+            }
+            Err(e) => {
+                let msg = format!("engine forward failed: {e}");
+                for req in batch.into_iter() {
+                    let _ = req.resp.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::WeightMode;
+    use crate::runtime::{ParamBundle, ParamSpec};
+    use crate::sparse::prox;
+    use crate::util::rng::Rng;
+
+    fn tiny_mlp_engine(seed: u64) -> Engine {
+        let specs = vec![
+            ParamSpec::new("fc1_w", "fc_w", vec![32, 784], true),
+            ParamSpec::new("fc1_b", "fc_b", vec![32], false),
+            ParamSpec::new("fc2_w", "fc_w", vec![16, 32], true),
+            ParamSpec::new("fc2_b", "fc_b", vec![16], false),
+            ParamSpec::new("fc3_w", "fc_w", vec![10, 16], true),
+            ParamSpec::new("fc3_b", "fc_b", vec![10], false),
+        ];
+        let mut bundle = ParamBundle::he_init(&specs, seed);
+        for (s, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+            if s.prunable {
+                prox::soft_threshold_inplace(v, 0.05);
+            }
+        }
+        Engine::from_bundle_mode("mlp", &bundle, WeightMode::Csr).unwrap()
+    }
+
+    #[test]
+    fn serves_single_requests() {
+        let engine = Arc::new(tiny_mlp_engine(1));
+        // An FC-only model has no batch-statistics layers: coalescing is
+        // sound and `start` keeps the configured ceiling.
+        assert!(!engine.uses_batch_stats());
+        let server = BatchServer::start(
+            Arc::clone(&engine),
+            BatchConfig::new(4, Duration::from_millis(1), (1, 28, 28)),
+        );
+        let mut rng = Rng::new(2);
+        let sample = rng.normal_vec(784, 1.0);
+        let logits = server.infer(&sample).unwrap();
+        assert_eq!(logits.len(), 10);
+        let x = Tensor::new(vec![1, 1, 28, 28], sample);
+        assert_eq!(logits, engine.forward(&x).unwrap().data);
+        let stats = server.stats();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.batches, 1);
+    }
+
+    #[test]
+    fn coalesces_up_to_max_batch() {
+        let engine = Arc::new(tiny_mlp_engine(3));
+        let server = BatchServer::start(
+            Arc::clone(&engine),
+            BatchConfig::new(4, Duration::from_millis(200), (1, 28, 28)),
+        );
+        let mut rng = Rng::new(4);
+        let pendings: Vec<(Vec<f32>, Pending)> = (0..9)
+            .map(|_| {
+                let s = rng.normal_vec(784, 1.0);
+                let p = server.submit(&s).unwrap();
+                (s, p)
+            })
+            .collect();
+        for (sample, pending) in pendings {
+            let got = pending.wait().unwrap();
+            let x = Tensor::new(vec![1, 1, 28, 28], sample);
+            assert_eq!(got, engine.forward(&x).unwrap().data);
+        }
+        let stats = server.stats();
+        assert_eq!(stats.requests, 9);
+        assert!(stats.max_batch <= 4);
+        // 9 requests through batches of ≤ 4 need at least 3 forwards.
+        assert!(stats.batches >= 3, "batches {}", stats.batches);
+        assert!(stats.throughput_rps > 0.0);
+    }
+
+    #[test]
+    fn rejects_wrong_sample_length() {
+        let engine = Arc::new(tiny_mlp_engine(5));
+        let server =
+            BatchServer::start(engine, BatchConfig::new(2, Duration::from_millis(1), (1, 28, 28)));
+        assert!(server.submit(&[0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn shutdown_rejects_new_requests() {
+        let engine = Arc::new(tiny_mlp_engine(6));
+        let mut server =
+            BatchServer::start(engine, BatchConfig::new(2, Duration::from_millis(1), (1, 28, 28)));
+        server.shutdown();
+        assert!(server.submit(&[0.0; 784]).is_err());
+    }
+}

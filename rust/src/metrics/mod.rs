@@ -120,6 +120,37 @@ impl RunResult {
     }
 }
 
+/// Aggregate throughput/latency counters from the batched serving path
+/// (`inference::server::BatchServer::stats`). Latency is measured submit
+/// → completion per request (it includes the coalescing wait), forward
+/// time per micro-batch, throughput over the first-submit → last-done
+/// wall span.
+#[derive(Debug, Clone, Default)]
+pub struct ServingStats {
+    pub requests: usize,
+    pub batches: usize,
+    /// Largest micro-batch actually formed (≤ the configured ceiling).
+    pub max_batch: usize,
+    pub mean_batch: f64,
+    pub mean_latency_us: f64,
+    pub mean_forward_us: f64,
+    pub throughput_rps: f64,
+}
+
+impl ServingStats {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("requests", Json::from(self.requests))
+            .set("batches", Json::from(self.batches))
+            .set("max_batch", Json::from(self.max_batch))
+            .set("mean_batch", Json::from(self.mean_batch))
+            .set("mean_latency_us", Json::from(self.mean_latency_us))
+            .set("mean_forward_us", Json::from(self.mean_forward_us))
+            .set("throughput_rps", Json::from(self.throughput_rps));
+        j
+    }
+}
+
 /// Reports directory helper (`reports/<name>`).
 pub fn report_path(name: &str) -> PathBuf {
     PathBuf::from("reports").join(name)
@@ -185,6 +216,23 @@ mod tests {
         };
         // Paper Table A1: 32×.
         assert!((r.times_factor() - 32.29).abs() < 0.1);
+    }
+
+    #[test]
+    fn serving_stats_json_shape() {
+        let s = ServingStats {
+            requests: 64,
+            batches: 8,
+            max_batch: 16,
+            mean_batch: 8.0,
+            mean_latency_us: 120.0,
+            mean_forward_us: 90.0,
+            throughput_rps: 5000.0,
+        };
+        let text = s.to_json().to_string_compact();
+        assert!(text.contains("\"requests\""));
+        assert!(text.contains("\"throughput_rps\""));
+        assert!(text.contains("64"));
     }
 
     #[test]

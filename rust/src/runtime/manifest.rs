@@ -21,6 +21,19 @@ pub struct ParamSpec {
 }
 
 impl ParamSpec {
+    /// Build a spec with the layer name derived from the leaf name
+    /// (`fc1_w` → layer `fc1`), matching the AOT manifest convention —
+    /// the one constructor the hand-built test/bench fixtures share.
+    pub fn new(name: &str, kind: &str, shape: Vec<usize>, prunable: bool) -> ParamSpec {
+        ParamSpec {
+            name: name.into(),
+            kind: kind.into(),
+            shape,
+            prunable,
+            layer: name.trim_end_matches("_w").trim_end_matches("_b").into(),
+        }
+    }
+
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }

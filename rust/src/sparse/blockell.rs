@@ -151,13 +151,22 @@ impl BlockEllMatrix {
     /// `dmat (B, K) @ self' -> (B, N)`: the rust mirror of the Pallas
     /// Block-ELL kernel (gather nonzero tiles, dense tile matmul).
     pub fn dxct(&self, dmat: &Tensor) -> Tensor {
+        self.dxct_threads(dmat, pool::max_threads())
+    }
+
+    /// As [`BlockEllMatrix::dxct`] with an explicit worker count. The
+    /// kernel partitions *block rows* (independent of the batch size, so
+    /// single-sample serving already goes wide) and accumulates each
+    /// output element's tiles in ascending-slot order: results are
+    /// bit-identical for any `threads`.
+    pub fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor {
         let (b, k) = (dmat.shape[0], dmat.shape[1]);
         assert_eq!(k, self.cols);
         let n = self.rows;
         let n_br = self.n_block_rows();
         let mut out = vec![0.0f32; b * n];
         let ptr = pool::SharedMut::new(&mut out);
-        pool::parallel_chunks(n_br, pool::max_threads(), |i0, i1| {
+        pool::parallel_chunks(n_br, threads, |i0, i1| {
             let out = unsafe { ptr.slice() };
             for i in i0..i1 {
                 for s in 0..self.max_blocks {

@@ -13,6 +13,9 @@ use crate::util::pool;
 pub struct CooMatrix {
     pub rows: usize,
     pub cols: usize,
+    /// Row index per nonzero — **row-major sorted** (ascending, ties in
+    /// column order). Both constructors emit this order and the
+    /// row-partitioned kernel relies on it to binary-search its span.
     pub row: Vec<u32>,
     pub indices: Vec<u32>,
     pub data: Vec<f32>,
@@ -73,21 +76,51 @@ impl CooMatrix {
     /// Figure-2 contraction in COO form: one streamed pass over the
     /// triplets per batch row, scattering into the output row.
     pub fn dxct(&self, dmat: &Tensor) -> Tensor {
+        self.dxct_threads(dmat, pool::max_threads())
+    }
+
+    /// As [`CooMatrix::dxct`] with an explicit worker count. The triplets
+    /// are row-major sorted (every constructor emits them that way), so a
+    /// row-partitioned thread owns the contiguous triplet span its output
+    /// rows cover — found by binary search — and each output element sees
+    /// its contributions in triplet order whichever dimension is
+    /// partitioned: results are bit-identical for any `threads`. The
+    /// fields are `pub`, so a hand-built unsorted matrix is possible;
+    /// the row partition checks the invariant (one cheap sequential scan,
+    /// skipped when the batch arm runs) and falls back to the
+    /// order-agnostic batch arm rather than mis-spanning the searches.
+    pub fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor {
         let (b, k) = (dmat.shape[0], dmat.shape[1]);
         assert_eq!(k, self.cols, "coo dxct: K mismatch ({k} vs {})", self.cols);
         let n = self.rows;
         let mut out = vec![0.0f32; b * n];
         let ptr = pool::SharedMut::new(&mut out);
-        pool::parallel_chunks(b, pool::max_threads(), |b0, b1| {
-            let out = unsafe { ptr.slice() };
-            for bi in b0..b1 {
-                let xrow = &dmat.data[bi * k..(bi + 1) * k];
-                let orow = &mut out[bi * n..(bi + 1) * n];
-                for i in 0..self.data.len() {
-                    orow[self.row[i] as usize] += self.data[i] * xrow[self.indices[i] as usize];
+        if pool::batch_saturates(b, threads) || !self.row.windows(2).all(|w| w[0] <= w[1]) {
+            pool::parallel_chunks(b, threads, |b0, b1| {
+                let out = unsafe { ptr.slice() };
+                for bi in b0..b1 {
+                    let xrow = &dmat.data[bi * k..(bi + 1) * k];
+                    let orow = &mut out[bi * n..(bi + 1) * n];
+                    for i in 0..self.data.len() {
+                        orow[self.row[i] as usize] += self.data[i] * xrow[self.indices[i] as usize];
+                    }
                 }
-            }
-        });
+            });
+        } else {
+            // Row partition: single-sample serving still goes wide.
+            pool::parallel_chunks(n, threads, |r0, r1| {
+                let out = unsafe { ptr.slice() };
+                let lo = self.row.partition_point(|&r| (r as usize) < r0);
+                let hi = self.row.partition_point(|&r| (r as usize) < r1);
+                for bi in 0..b {
+                    let xrow = &dmat.data[bi * k..(bi + 1) * k];
+                    for i in lo..hi {
+                        out[bi * n + self.row[i] as usize] +=
+                            self.data[i] * xrow[self.indices[i] as usize];
+                    }
+                }
+            });
+        }
         Tensor::new(vec![b, n], out)
     }
 

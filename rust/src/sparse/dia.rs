@@ -125,27 +125,61 @@ impl DiaMatrix {
     /// shifted elementwise product, which keeps both operands on
     /// unit-stride walks (the reason DIA wins on banded matrices).
     pub fn dxct(&self, dmat: &Tensor) -> Tensor {
+        self.dxct_threads(dmat, pool::max_threads())
+    }
+
+    /// As [`DiaMatrix::dxct`] with an explicit worker count (the serving
+    /// path and the thread-sweep bench pass it directly). Every output
+    /// element accumulates its diagonals in ascending-offset order
+    /// whichever dimension is partitioned, so results are bit-identical
+    /// for any `threads`.
+    pub fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor {
         let (b, k) = (dmat.shape[0], dmat.shape[1]);
         assert_eq!(k, self.cols, "dia dxct: K mismatch ({k} vs {})", self.cols);
         let n = self.rows;
         let mut out = vec![0.0f32; b * n];
         let ptr = pool::SharedMut::new(&mut out);
-        pool::parallel_chunks(b, pool::max_threads(), |b0, b1| {
-            let out = unsafe { ptr.slice() };
-            for bi in b0..b1 {
-                let xrow = &dmat.data[bi * k..(bi + 1) * k];
-                let orow = &mut out[bi * n..(bi + 1) * n];
-                for (d, &off) in self.offsets.iter().enumerate() {
-                    let diag = &self.data[d * n..(d + 1) * n];
-                    // Rows r where column c = r + off stays inside [0, k).
-                    let r_lo = (-off).max(0) as usize;
-                    let r_hi = n.min((k as i64 - off).max(0) as usize);
-                    for r in r_lo..r_hi {
-                        orow[r] += diag[r] * xrow[(r as i64 + off) as usize];
+        if pool::batch_saturates(b, threads) {
+            pool::parallel_chunks(b, threads, |b0, b1| {
+                let out = unsafe { ptr.slice() };
+                for bi in b0..b1 {
+                    let xrow = &dmat.data[bi * k..(bi + 1) * k];
+                    let orow = &mut out[bi * n..(bi + 1) * n];
+                    for (d, &off) in self.offsets.iter().enumerate() {
+                        let diag = &self.data[d * n..(d + 1) * n];
+                        // Rows r where column c = r + off stays inside [0, k).
+                        let r_lo = (-off).max(0) as usize;
+                        let r_hi = n.min((k as i64 - off).max(0) as usize);
+                        for r in r_lo..r_hi {
+                            orow[r] += diag[r] * xrow[(r as i64 + off) as usize];
+                        }
                     }
                 }
-            }
-        });
+            });
+        } else {
+            // Diagonal-row partition: single-sample serving still goes
+            // wide. Each thread owns output rows [r0, r1) for every batch
+            // row, walking diagonals *outer* — each diagonal's valid span
+            // clamped to the owned range — so the inner loops keep the
+            // unit-stride, branch-free walks DIA exists for. Per output
+            // element the diagonals still accumulate in ascending order,
+            // exactly as in the batch-partitioned arm: bit-identical.
+            pool::parallel_chunks(n, threads, |r0, r1| {
+                let out = unsafe { ptr.slice() };
+                for bi in 0..b {
+                    let xrow = &dmat.data[bi * k..(bi + 1) * k];
+                    let base = bi * n;
+                    for (d, &off) in self.offsets.iter().enumerate() {
+                        let diag = &self.data[d * n..(d + 1) * n];
+                        let lo = r0.max((-off).max(0) as usize);
+                        let hi = r1.min(n.min((k as i64 - off).max(0) as usize));
+                        for r in lo..hi {
+                            out[base + r] += diag[r] * xrow[(r as i64 + off) as usize];
+                        }
+                    }
+                }
+            });
+        }
         Tensor::new(vec![b, n], out)
     }
 }

@@ -206,6 +206,11 @@ pub trait SparseKernel {
     /// `dmat (B, K) @ self' -> (B, N)` — the paper's Figure-2 forward
     /// contraction, in this format's native kernel.
     fn dxct(&self, dmat: &Tensor) -> Tensor;
+    /// As [`SparseKernel::dxct`] with an explicit worker-thread count
+    /// (the serving path and thread-sweep benches drive this directly;
+    /// `dxct` uses `pool::max_threads()`). Every format keeps a fixed
+    /// per-output-element reduction order, so any count is bit-identical.
+    fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor;
     fn format(&self) -> SparseFormat;
 }
 
@@ -227,6 +232,9 @@ impl SparseKernel for CsrMatrix {
     }
     fn dxct(&self, dmat: &Tensor) -> Tensor {
         ops::dxct(dmat, self)
+    }
+    fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor {
+        ops::dxct_threads(dmat, self, threads)
     }
     fn format(&self) -> SparseFormat {
         SparseFormat::Csr
@@ -252,6 +260,9 @@ impl SparseKernel for DiaMatrix {
     fn dxct(&self, dmat: &Tensor) -> Tensor {
         DiaMatrix::dxct(self, dmat)
     }
+    fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor {
+        DiaMatrix::dxct_threads(self, dmat, threads)
+    }
     fn format(&self) -> SparseFormat {
         SparseFormat::Dia
     }
@@ -275,6 +286,9 @@ impl SparseKernel for EllMatrix {
     }
     fn dxct(&self, dmat: &Tensor) -> Tensor {
         EllMatrix::dxct(self, dmat)
+    }
+    fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor {
+        EllMatrix::dxct_threads(self, dmat, threads)
     }
     fn format(&self) -> SparseFormat {
         SparseFormat::Ell
@@ -300,6 +314,9 @@ impl SparseKernel for CooMatrix {
     fn dxct(&self, dmat: &Tensor) -> Tensor {
         CooMatrix::dxct(self, dmat)
     }
+    fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor {
+        CooMatrix::dxct_threads(self, dmat, threads)
+    }
     fn format(&self) -> SparseFormat {
         SparseFormat::Coo
     }
@@ -323,6 +340,9 @@ impl SparseKernel for BlockEllMatrix {
     }
     fn dxct(&self, dmat: &Tensor) -> Tensor {
         BlockEllMatrix::dxct(self, dmat)
+    }
+    fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor {
+        BlockEllMatrix::dxct_threads(self, dmat, threads)
     }
     fn format(&self) -> SparseFormat {
         SparseFormat::BlockEll
@@ -405,6 +425,11 @@ impl DynSparseMatrix {
     pub fn dxct(&self, dmat: &Tensor) -> Tensor {
         self.kernel().dxct(dmat)
     }
+
+    /// As [`DynSparseMatrix::dxct`] with an explicit worker count.
+    pub fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor {
+        self.kernel().dxct_threads(dmat, threads)
+    }
 }
 
 impl SparseKernel for DynSparseMatrix {
@@ -425,6 +450,9 @@ impl SparseKernel for DynSparseMatrix {
     }
     fn dxct(&self, dmat: &Tensor) -> Tensor {
         self.kernel().dxct(dmat)
+    }
+    fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor {
+        self.kernel().dxct_threads(dmat, threads)
     }
     fn format(&self) -> SparseFormat {
         self.kernel().format()

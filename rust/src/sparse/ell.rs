@@ -104,29 +104,57 @@ impl EllMatrix {
     /// fixed-width slot strip, the regular access pattern ELL trades its
     /// padding for.
     pub fn dxct(&self, dmat: &Tensor) -> Tensor {
+        self.dxct_threads(dmat, pool::max_threads())
+    }
+
+    /// As [`EllMatrix::dxct`] with an explicit worker count. Both
+    /// partitions walk each row's slot strip in ascending-slot order, so
+    /// results are bit-identical for any `threads`.
+    pub fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor {
         let (b, k) = (dmat.shape[0], dmat.shape[1]);
         assert_eq!(k, self.cols, "ell dxct: K mismatch ({k} vs {})", self.cols);
         let n = self.rows;
         let mut out = vec![0.0f32; b * n];
         let ptr = pool::SharedMut::new(&mut out);
-        pool::parallel_chunks(b, pool::max_threads(), |b0, b1| {
-            let out = unsafe { ptr.slice() };
-            for bi in b0..b1 {
-                let xrow = &dmat.data[bi * k..(bi + 1) * k];
-                let orow = &mut out[bi * n..(bi + 1) * n];
-                for r in 0..n {
-                    let mut acc = 0.0f32;
-                    for s in 0..self.width {
-                        let c = self.indices[r * self.width + s];
-                        if c == ELL_PAD {
-                            break;
+        if pool::batch_saturates(b, threads) {
+            pool::parallel_chunks(b, threads, |b0, b1| {
+                let out = unsafe { ptr.slice() };
+                for bi in b0..b1 {
+                    let xrow = &dmat.data[bi * k..(bi + 1) * k];
+                    let orow = &mut out[bi * n..(bi + 1) * n];
+                    for r in 0..n {
+                        let mut acc = 0.0f32;
+                        for s in 0..self.width {
+                            let c = self.indices[r * self.width + s];
+                            if c == ELL_PAD {
+                                break;
+                            }
+                            acc += self.data[r * self.width + s] * xrow[c as usize];
                         }
-                        acc += self.data[r * self.width + s] * xrow[c as usize];
+                        orow[r] = acc;
                     }
-                    orow[r] = acc;
                 }
-            }
-        });
+            });
+        } else {
+            // Row partition: single-sample serving still goes wide.
+            pool::parallel_chunks(n, threads, |r0, r1| {
+                let out = unsafe { ptr.slice() };
+                for bi in 0..b {
+                    let xrow = &dmat.data[bi * k..(bi + 1) * k];
+                    for r in r0..r1 {
+                        let mut acc = 0.0f32;
+                        for s in 0..self.width {
+                            let c = self.indices[r * self.width + s];
+                            if c == ELL_PAD {
+                                break;
+                            }
+                            acc += self.data[r * self.width + s] * xrow[c as usize];
+                        }
+                        out[bi * n + r] = acc;
+                    }
+                }
+            });
+        }
         Tensor::new(vec![b, n], out)
     }
 }

@@ -11,7 +11,11 @@
 //! * `cxd` — `Cmat @ Dmat` for completeness (the ViennaCL op the paper
 //!   worked around).
 //!
-//! All kernels parallelize over disjoint output row chunks.
+//! All kernels parallelize over disjoint output chunks. The partition
+//! axis adapts to the shape (`pool::batch_saturates`): multi-row batches
+//! split the batch, single-sample serving requests split the weight-row
+//! dimension — and every output element keeps a fixed reduction order,
+//! so results are bit-identical for any `PROXCOMP_THREADS` setting.
 
 use super::csr::CsrMatrix;
 use crate::tensor::Tensor;
@@ -45,16 +49,24 @@ fn transpose_buf(src: &[f32], r: usize, c: usize) -> Vec<f32> {
 /// row: B× the index traffic) and the unit-stride inner loop
 /// auto-vectorizes. Scalar fallback below `SPMM_MIN_BATCH`.
 pub fn dxct(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
+    dxct_threads(dmat, csr, pool::max_threads())
+}
+
+/// As [`dxct`] with an explicit worker count. Every output element
+/// accumulates its CSR row in ascending-index order on both the scalar
+/// and the column-major path, so results are bit-identical for any
+/// `threads` (and for any batch split — the serving-path guarantee).
+pub fn dxct_threads(dmat: &Tensor, csr: &CsrMatrix, threads: usize) -> Tensor {
     let (b, k) = (dmat.shape[0], dmat.shape[1]);
     assert_eq!(k, csr.cols, "dxct: K mismatch ({k} vs {})", csr.cols);
     let n = csr.rows;
     if b < SPMM_MIN_BATCH {
-        return dxct_scalar(dmat, csr);
+        return dxct_scalar_threads(dmat, csr, threads);
     }
     let dt = transpose_buf(&dmat.data, b, k); // (K, B)
     let mut out_t = vec![0.0f32; n * b]; // (N, B)
     let ptr = pool::SharedMut::new(&mut out_t);
-    pool::parallel_chunks(n, pool::max_threads(), |c0, c1| {
+    pool::parallel_chunks(n, threads, |c0, c1| {
         let out_t = unsafe { ptr.slice() };
         for col in c0..c1 {
             let orow = &mut out_t[col * b..(col + 1) * b];
@@ -78,29 +90,54 @@ pub const SPMM_MIN_BATCH: usize = 8;
 /// inner product per output element). Used for small batches and as the
 /// §Perf "before" reference in `bench_kernels`.
 pub fn dxct_scalar(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
+    dxct_scalar_threads(dmat, csr, pool::max_threads())
+}
+
+/// As [`dxct_scalar`] with an explicit worker count: batch-partitioned
+/// when the batch saturates the lanes, output-row-partitioned otherwise
+/// (single-sample serving). Bit-identical either way.
+pub fn dxct_scalar_threads(dmat: &Tensor, csr: &CsrMatrix, threads: usize) -> Tensor {
     let (b, k) = (dmat.shape[0], dmat.shape[1]);
     assert_eq!(k, csr.cols, "dxct: K mismatch ({k} vs {})", csr.cols);
     let n = csr.rows;
     let mut out = vec![0.0f32; b * n];
     let out_ptr = pool::SharedMut::new(&mut out);
-    pool::parallel_chunks(b, pool::max_threads(), |r0, r1| {
-        let out = unsafe { out_ptr.slice() };
-        for row in r0..r1 {
-            let drow = &dmat.data[row * k..(row + 1) * k];
-            let orow = &mut out[row * n..(row + 1) * n];
-            for col in 0..n {
-                let lo = csr.ptr[col];
-                let hi = csr.ptr[col + 1];
-                let mut acc = 0.0f32;
-                for idx in lo..hi {
-                    // Coalesced walk over the CSR row: indices/data are
-                    // consecutive, exactly as in the OpenCL kernel.
-                    acc += drow[csr.indices[idx] as usize] * csr.data[idx];
+    if pool::batch_saturates(b, threads) {
+        pool::parallel_chunks(b, threads, |r0, r1| {
+            let out = unsafe { out_ptr.slice() };
+            for row in r0..r1 {
+                let drow = &dmat.data[row * k..(row + 1) * k];
+                let orow = &mut out[row * n..(row + 1) * n];
+                for col in 0..n {
+                    let lo = csr.ptr[col];
+                    let hi = csr.ptr[col + 1];
+                    let mut acc = 0.0f32;
+                    for idx in lo..hi {
+                        // Coalesced walk over the CSR row: indices/data are
+                        // consecutive, exactly as in the OpenCL kernel.
+                        acc += drow[csr.indices[idx] as usize] * csr.data[idx];
+                    }
+                    orow[col] = acc;
                 }
-                orow[col] = acc;
             }
-        }
-    });
+        });
+    } else {
+        // Output-column partition (each output column walks one CSR row,
+        // so columns are independent): serving batches still go wide.
+        pool::parallel_chunks(n, threads, |c0, c1| {
+            let out = unsafe { out_ptr.slice() };
+            for row in 0..b {
+                let drow = &dmat.data[row * k..(row + 1) * k];
+                for col in c0..c1 {
+                    let mut acc = 0.0f32;
+                    for idx in csr.ptr[col]..csr.ptr[col + 1] {
+                        acc += drow[csr.indices[idx] as usize] * csr.data[idx];
+                    }
+                    out[row * n + col] = acc;
+                }
+            }
+        });
+    }
     Tensor::new(vec![b, n], out)
 }
 
@@ -110,11 +147,18 @@ pub fn dxct_scalar(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
 /// `dmat[row, j] * csr_row_j` into the output row — sequential reads of
 /// the CSR arrays and sequential writes within the output row.
 pub fn dxc(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
+    dxc_threads(dmat, csr, pool::max_threads())
+}
+
+/// As [`dxc`] with an explicit worker count (bit-identical for any
+/// `threads` — each output element's contributions arrive in ascending-j
+/// order on every path).
+pub fn dxc_threads(dmat: &Tensor, csr: &CsrMatrix, threads: usize) -> Tensor {
     let (b, n) = (dmat.shape[0], dmat.shape[1]);
     assert_eq!(n, csr.rows, "dxc: N mismatch ({n} vs {})", csr.rows);
     let k = csr.cols;
     if b < SPMM_MIN_BATCH {
-        return dxc_scalar(dmat, csr);
+        return dxc_scalar_threads(dmat, csr, threads);
     }
     // §Perf column-major form (see dxct): gt (N, B), out_t (K, B);
     // each nonzero (j → cidx, v) does out_t[cidx] += v · gt[j], a
@@ -124,7 +168,7 @@ pub fn dxc(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
     // out_t, walking the whole CSR once per thread.
     let gt = transpose_buf(&dmat.data, b, n); // (N, B)
     let mut out_t = vec![0.0f32; k * b]; // (K, B)
-    let threads = pool::max_threads().min(b / 4).max(1);
+    let threads = threads.min(b / 4).max(1);
     let ptr = pool::SharedMut::new(&mut out_t);
     pool::parallel_chunks(b, threads, |b0, b1| {
         let out_t = unsafe { ptr.slice() };
@@ -146,12 +190,25 @@ pub fn dxc(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
 /// Scalar-form dxc (direct Figure-3 port; small-batch fallback and
 /// §Perf "before" reference).
 pub fn dxc_scalar(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
+    dxc_scalar_threads(dmat, csr, pool::max_threads())
+}
+
+/// As [`dxc_scalar`] with an explicit worker count: threads own batch
+/// rows and scatter CSR rows into them, using `min(b, threads)` lanes
+/// (inline at b = 1). A transposed column-*gather* arm could go wider
+/// for tiny batches, but its counting-sort transpose is serial O(nnz)
+/// per call — as much wall-clock as the whole scatter — so without a
+/// cached transpose it never pays; and dxc is the backward-pass op, not
+/// the serving path, so b = 1 stays serial by design. Each output
+/// element accumulates in ascending-j order, bit-identical for any
+/// `threads`.
+pub fn dxc_scalar_threads(dmat: &Tensor, csr: &CsrMatrix, threads: usize) -> Tensor {
     let (b, n) = (dmat.shape[0], dmat.shape[1]);
     assert_eq!(n, csr.rows, "dxc: N mismatch ({n} vs {})", csr.rows);
     let k = csr.cols;
     let mut out = vec![0.0f32; b * k];
     let out_ptr = pool::SharedMut::new(&mut out);
-    pool::parallel_chunks(b, pool::max_threads(), |r0, r1| {
+    pool::parallel_chunks(b, threads, |r0, r1| {
         let out = unsafe { out_ptr.slice() };
         for row in r0..r1 {
             let drow = &dmat.data[row * n..(row + 1) * n];
@@ -173,12 +230,18 @@ pub fn dxc_scalar(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
 /// `csr (N, K) @ dmat (K, M) -> (N, M)` — the C×D op ViennaCL provides;
 /// kept for the `(C×D')' == D×C'` equivalence tests and format benches.
 pub fn cxd(csr: &CsrMatrix, dmat: &Tensor) -> Tensor {
+    cxd_threads(csr, dmat, pool::max_threads())
+}
+
+/// As [`cxd`] with an explicit worker count (already row-partitioned —
+/// the op is output-row independent — so any count is bit-identical).
+pub fn cxd_threads(csr: &CsrMatrix, dmat: &Tensor, threads: usize) -> Tensor {
     let (k, m) = (dmat.shape[0], dmat.shape[1]);
     assert_eq!(k, csr.cols, "cxd: K mismatch");
     let n = csr.rows;
     let mut out = vec![0.0f32; n * m];
     let out_ptr = pool::SharedMut::new(&mut out);
-    pool::parallel_chunks(n, pool::max_threads(), |r0, r1| {
+    pool::parallel_chunks(n, threads, |r0, r1| {
         let out = unsafe { out_ptr.slice() };
         for row in r0..r1 {
             let orow = &mut out[row * m..(row + 1) * m];
@@ -198,15 +261,26 @@ pub fn cxd(csr: &CsrMatrix, dmat: &Tensor) -> Tensor {
 /// Sparse matrix-vector product `csr (N, K) @ x (K) -> (N)` — used by the
 /// format-comparison bench (Bell & Garland's canonical SpMV).
 pub fn spmv(csr: &CsrMatrix, x: &[f32]) -> Vec<f32> {
+    spmv_threads(csr, x, pool::max_threads())
+}
+
+/// As [`spmv`] with an explicit worker count: output rows are
+/// independent, so the kernel row-partitions and each row accumulates in
+/// ascending-index order — bit-identical for any `threads`.
+pub fn spmv_threads(csr: &CsrMatrix, x: &[f32], threads: usize) -> Vec<f32> {
     assert_eq!(x.len(), csr.cols);
     let mut out = vec![0.0f32; csr.rows];
-    for r in 0..csr.rows {
-        let mut acc = 0.0f32;
-        for idx in csr.ptr[r]..csr.ptr[r + 1] {
-            acc += csr.data[idx] * x[csr.indices[idx] as usize];
+    let out_ptr = pool::SharedMut::new(&mut out);
+    pool::parallel_chunks(csr.rows, threads, |r0, r1| {
+        let out = unsafe { out_ptr.slice() };
+        for r in r0..r1 {
+            let mut acc = 0.0f32;
+            for idx in csr.ptr[r]..csr.ptr[r + 1] {
+                acc += csr.data[idx] * x[csr.indices[idx] as usize];
+            }
+            out[r] = acc;
         }
-        out[r] = acc;
-    }
+    });
     out
 }
 

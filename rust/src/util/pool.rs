@@ -6,10 +6,12 @@
 //! per-call (no persistent pool): the hot kernels amortize spawn cost over
 //! millions of FLOPs, and per-call scoping keeps borrows simple and safe.
 
-/// Wrapper asserting that threads write *disjoint ranges* through this
-/// pointer. Access goes through `slice()` (a method, so closures capture
-/// the whole wrapper — edition-2021 disjoint capture would otherwise
-/// capture the raw pointer field, which is not `Sync`).
+/// Wrapper asserting that threads write *disjoint index sets* through
+/// this pointer (contiguous ranges in the row-partitioned kernels,
+/// strided column sets in the batch-shared ones). Access goes through
+/// `slice()` (a method, so closures capture the whole wrapper —
+/// edition-2021 disjoint capture would otherwise capture the raw pointer
+/// field, which is not `Sync`).
 pub struct SharedMut<T>(*mut T, usize);
 
 unsafe impl<T: Send> Send for SharedMut<T> {}
@@ -36,6 +38,16 @@ pub fn max_threads() -> usize {
         }
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Partition policy for the `(batch × rows)` sparse kernels: partition
+/// the batch dimension when it can feed every lane (contiguous output
+/// rows per thread — the best write locality), otherwise partition the
+/// weight-row dimension so single-sample serving requests still go wide.
+/// Both partitions compute every output element with the same fixed
+/// reduction order, so the choice never changes results bit-for-bit.
+pub fn batch_saturates(batch: usize, threads: usize) -> bool {
+    batch >= threads
 }
 
 /// Run `f` over disjoint chunks of `0..n` on up to `threads` scoped threads.
@@ -146,5 +158,13 @@ mod tests {
     #[test]
     fn max_threads_positive() {
         assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn batch_partition_policy() {
+        assert!(batch_saturates(8, 4));
+        assert!(batch_saturates(4, 4));
+        assert!(!batch_saturates(1, 4));
+        assert!(!batch_saturates(3, 4));
     }
 }

@@ -325,6 +325,77 @@ fn engine_matches_xla_logits_dense_and_sparse() {
 }
 
 #[test]
+fn spc_smoke_loss_decreases_and_formats_deploy() {
+    // Satellite smoke test: a handful of SpC steps on the tiny mlp
+    // manifest must drive the loss down, and the trained model must
+    // deploy through the dispatch engine with a non-empty (and fully
+    // compressed) per-layer format report.
+    let _g = rt_lock();
+    let m = manifest();
+    let mut rt = Runtime::cpu().unwrap();
+    let mut cfg = small_cfg("mlp");
+    cfg.steps = 30;
+    cfg.retrain_steps = 0;
+    let r = compress::spc::run(&mut rt, &m, &cfg).unwrap();
+    let first = r.history.records.first().unwrap().loss;
+    let last = r.history.records.last().unwrap().loss;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert!(r.compression_rate > 0.0, "SpC produced no zeros");
+
+    let mut trainer = Trainer::new(&m, &cfg).unwrap();
+    let scalars = StepScalars { lambda: 1.0, lr: 2e-3, mu: 0.0 };
+    for _ in 0..10 {
+        trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
+    }
+    let auto = Engine::from_bundle_mode(
+        "mlp",
+        &trainer.state.params,
+        proxcomp::inference::WeightMode::Auto,
+    )
+    .unwrap();
+    let formats = auto.layer_formats();
+    assert!(!formats.is_empty(), "layer_formats() report is empty");
+    assert!(formats.iter().all(|(_, f)| *f != "dense"), "{formats:?}");
+}
+
+#[test]
+fn batch_server_serves_trained_model() {
+    // The serving front-end over a genuinely trained engine: per-request
+    // logits must match the engine's own batched answers.
+    use proxcomp::inference::{BatchConfig, BatchServer};
+    use std::sync::Arc;
+    use std::time::Duration;
+    let _g = rt_lock();
+    let m = manifest();
+    let mut rt = Runtime::cpu().unwrap();
+    let cfg = small_cfg("mlp");
+    let mut trainer = Trainer::new(&m, &cfg).unwrap();
+    let scalars = StepScalars { lambda: 1.0, lr: 2e-3, mu: 0.0 };
+    for _ in 0..10 {
+        trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
+    }
+    let engine = Arc::new(Engine::from_bundle("mlp", &trainer.state.params, true).unwrap());
+    let server = BatchServer::start(
+        Arc::clone(&engine),
+        BatchConfig::new(8, Duration::from_millis(20), (1, 28, 28)),
+    );
+    let pending: Vec<_> = (0..12)
+        .map(|i| {
+            let sample = trainer.test_data.image(i % trainer.test_data.n).to_vec();
+            (sample.clone(), server.submit(&sample).unwrap())
+        })
+        .collect();
+    for (sample, p) in pending {
+        let got = p.wait().unwrap();
+        let x = Tensor::new(vec![1, 1, 28, 28], sample);
+        assert_eq!(got, engine.forward(&x).unwrap().data);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 12);
+    assert!(stats.batches >= 2);
+}
+
+#[test]
 fn checkpoint_roundtrip_through_trained_model() {
     let _g = rt_lock();
     let m = manifest();

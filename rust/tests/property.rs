@@ -434,20 +434,13 @@ fn prop_dispatch_spmm_matches_dense_reference() {
 
 /// The manifest-shaped MLP parameter spec used by the engine tests.
 fn mlp_specs() -> Vec<ParamSpec> {
-    let spec = |name: &str, kind: &str, shape: Vec<usize>, prunable: bool| ParamSpec {
-        name: name.into(),
-        kind: kind.into(),
-        shape,
-        prunable,
-        layer: name.trim_end_matches("_w").trim_end_matches("_b").into(),
-    };
     vec![
-        spec("fc1_w", "fc_w", vec![256, 784], true),
-        spec("fc1_b", "fc_b", vec![256], false),
-        spec("fc2_w", "fc_w", vec![128, 256], true),
-        spec("fc2_b", "fc_b", vec![128], false),
-        spec("fc3_w", "fc_w", vec![10, 128], true),
-        spec("fc3_b", "fc_b", vec![10], false),
+        ParamSpec::new("fc1_w", "fc_w", vec![256, 784], true),
+        ParamSpec::new("fc1_b", "fc_b", vec![256], false),
+        ParamSpec::new("fc2_w", "fc_w", vec![128, 256], true),
+        ParamSpec::new("fc2_b", "fc_b", vec![128], false),
+        ParamSpec::new("fc3_w", "fc_w", vec![10, 128], true),
+        ParamSpec::new("fc3_b", "fc_b", vec![10], false),
     ]
 }
 
@@ -480,6 +473,271 @@ fn prop_engine_auto_matches_dense_and_csr() {
         for (u, v) in a.data.iter().zip(&b.data) {
             assert!((u - v).abs() < 1e-3, "dense/auto engines diverge: {u} vs {v}");
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread-count determinism (serving-path guarantee)
+// ---------------------------------------------------------------------------
+
+/// Exact-bits comparison: `f32` equality would conflate +0.0 / -0.0 and
+/// hide NaNs, and the determinism contract is *bit*-identity.
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn prop_format_kernels_bit_identical_across_thread_counts() {
+    // Every format's dxct must produce bit-identical output whether it
+    // runs inline (1 thread) or wide (8 threads), at serving batch sizes
+    // (1) and mid sizes that flip the partition axis.
+    let mut rng = Rng::new(130);
+    for case in 0..8 {
+        let (dense, rows, cols) = match case % 4 {
+            0 => (random_banded(&mut rng, 48, 5), 48, 48),
+            1 => (random_uniform_rows(&mut rng, 40, 64, 5), 40, 64),
+            2 => (random_block_sparse(&mut rng, 32, 64, 2), 32, 64),
+            _ => (random_dense(&mut rng, 37, 53, 0.07), 37, 53),
+        };
+        for fmt in [
+            SparseFormat::Dia,
+            SparseFormat::Ell,
+            SparseFormat::Csr,
+            SparseFormat::Coo,
+            SparseFormat::BlockEll,
+        ] {
+            if fmt == SparseFormat::BlockEll && (rows % dispatch::BLOCK_H != 0 || cols % dispatch::BLOCK_W != 0) {
+                continue;
+            }
+            let m = DynSparseMatrix::from_dense_as(fmt, &dense, rows, cols);
+            for b in [1usize, 3, 9] {
+                let d = Tensor::new(vec![b, cols], rng.normal_vec(b * cols, 1.0));
+                let one = m.dxct_threads(&d, 1);
+                for threads in [2usize, 4, 8] {
+                    let wide = m.dxct_threads(&d, threads);
+                    assert_bits_eq(
+                        &one.data,
+                        &wide.data,
+                        &format!("{} b={b} threads={threads}", fmt.name()),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_csr_scalar_paths_bit_identical_across_thread_counts() {
+    // The remaining CSR scalar kernels: dxct_scalar (whose small-batch
+    // arm switches to an output-column partition), dxc_scalar, cxd, spmv.
+    let mut rng = Rng::new(131);
+    for _ in 0..12 {
+        let n = 1 + rng.below(40);
+        let k = 1 + rng.below(40);
+        let dense = random_dense(&mut rng, n, k, 0.15);
+        let csr = CsrMatrix::from_dense(&dense, n, k);
+        for b in [1usize, 2, 5, 11] {
+            let d = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
+            let g = Tensor::new(vec![b, n], rng.normal_vec(b * n, 1.0));
+            let fwd1 = ops::dxct_scalar_threads(&d, &csr, 1);
+            let bwd1 = ops::dxc_scalar_threads(&g, &csr, 1);
+            for threads in [2usize, 8] {
+                assert_bits_eq(
+                    &fwd1.data,
+                    &ops::dxct_scalar_threads(&d, &csr, threads).data,
+                    &format!("dxct_scalar b={b} t={threads}"),
+                );
+                assert_bits_eq(
+                    &bwd1.data,
+                    &ops::dxc_scalar_threads(&g, &csr, threads).data,
+                    &format!("dxc_scalar b={b} t={threads}"),
+                );
+            }
+        }
+        let dm = Tensor::new(vec![k, 6], rng.normal_vec(k * 6, 1.0));
+        let x: Vec<f32> = rng.normal_vec(k, 1.0);
+        assert_bits_eq(
+            &ops::cxd_threads(&csr, &dm, 1).data,
+            &ops::cxd_threads(&csr, &dm, 8).data,
+            "cxd",
+        );
+        assert_bits_eq(&ops::spmv_threads(&csr, &x, 1), &ops::spmv_threads(&csr, &x, 8), "spmv");
+    }
+}
+
+/// Serializes the tests that flip the `PROXCOMP_THREADS` env var (it is
+/// process-global; flipping it concurrently would not break determinism
+/// — that is the property under test — but would muddy failure reports).
+static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Restores `PROXCOMP_THREADS` on drop, so a failing assertion between
+/// the `set_var` calls cannot leak a flipped setting into the rest of
+/// the test process (which would defeat the CI thread-matrix legs).
+struct EnvThreadsGuard(Option<String>);
+
+impl Drop for EnvThreadsGuard {
+    fn drop(&mut self) {
+        match self.0.take() {
+            Some(v) => std::env::set_var("PROXCOMP_THREADS", v),
+            None => std::env::remove_var("PROXCOMP_THREADS"),
+        }
+    }
+}
+
+#[test]
+fn prop_engine_forward_bit_identical_across_env_thread_counts() {
+    use proxcomp::inference::{Engine, WeightMode};
+    let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = EnvThreadsGuard(std::env::var("PROXCOMP_THREADS").ok());
+    let mut rng = Rng::new(132);
+    let specs = mlp_specs();
+    let mut bundle = ParamBundle::he_init(&specs, rng.next_u64());
+    for (spec, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+        if spec.prunable {
+            prox::soft_threshold_inplace(v, 0.05);
+        }
+    }
+    for mode in [WeightMode::Csr, WeightMode::Auto] {
+        let engine = Engine::from_bundle_mode("mlp", &bundle, mode).unwrap();
+        for b in [1usize, 3] {
+            let x = Tensor::new(vec![b, 1, 28, 28], rng.normal_vec(b * 784, 1.0));
+            std::env::set_var("PROXCOMP_THREADS", "1");
+            let one = engine.forward(&x).unwrap();
+            std::env::set_var("PROXCOMP_THREADS", "8");
+            let eight = engine.forward(&x).unwrap();
+            assert_bits_eq(&one.data, &eight.data, &format!("engine {mode:?} b={b}"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Batched serving (inference::server)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batch_server_matches_per_sample_forward() {
+    use proxcomp::inference::{BatchConfig, BatchServer, Engine, WeightMode};
+    use std::sync::Arc;
+    use std::time::Duration;
+    let mut rng = Rng::new(133);
+    let specs = mlp_specs();
+    let mut bundle = ParamBundle::he_init(&specs, rng.next_u64());
+    for (spec, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+        if spec.prunable {
+            prox::soft_threshold_inplace(v, 0.04);
+        }
+    }
+    let engine = Arc::new(Engine::from_bundle_mode("mlp", &bundle, WeightMode::Csr).unwrap());
+    // max_batch 16 lets coalesced forwards cross SPMM_MIN_BATCH into the
+    // column-major CSR path, so the equality also proves that path keeps
+    // the per-row reduction order of the single-sample scalar path.
+    for (max_batch, requests) in [(4usize, 1usize), (4, 4), (4, 11), (16, 21)] {
+        let server = BatchServer::start(
+            Arc::clone(&engine),
+            BatchConfig::new(max_batch, Duration::from_millis(40), (1, 28, 28)),
+        );
+        let submitted: Vec<(Vec<f32>, proxcomp::inference::Pending)> = (0..requests)
+            .map(|_| {
+                let sample = rng.normal_vec(784, 1.0);
+                let pending = server.submit(&sample).unwrap();
+                (sample, pending)
+            })
+            .collect();
+        for (sample, pending) in submitted {
+            let got = pending.wait().unwrap();
+            let x = Tensor::new(vec![1, 1, 28, 28], sample);
+            let want = engine.forward(&x).unwrap();
+            assert_bits_eq(&got, &want.data, &format!("server max_batch={max_batch}"));
+        }
+        let stats = server.stats();
+        assert_eq!(stats.requests, requests);
+        assert!(stats.max_batch <= max_batch);
+        // More requests than the ceiling must split into several batches.
+        assert!(
+            stats.batches >= requests.div_ceil(max_batch),
+            "requests {requests} ceiling {max_batch}: only {} batches",
+            stats.batches
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Edge-case matrices (empty / single-row / single-column / zero rows)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_edge_case_matrices_multiply_and_roundtrip() {
+    let mut rng = Rng::new(134);
+    let mut single_row = vec![0.0f32; 7];
+    single_row[1] = 1.5;
+    single_row[6] = -2.0;
+    let mut single_col = vec![0.0f32; 6];
+    single_col[0] = 3.0;
+    single_col[4] = -1.0;
+    let mut zero_rows = random_dense(&mut rng, 5, 6, 0.6);
+    for c in 0..6 {
+        zero_rows[c] = 0.0; // row 0 empty
+        zero_rows[3 * 6 + c] = 0.0; // row 3 empty
+    }
+    let cases: [(&str, Vec<f32>, usize, usize); 4] = [
+        ("empty", vec![0.0; 3 * 5], 3, 5),
+        ("single-row", single_row, 1, 7),
+        ("single-col", single_col, 6, 1),
+        ("zero-rows", zero_rows, 5, 6),
+    ];
+    for (name, dense, rows, cols) in &cases {
+        let (rows, cols) = (*rows, *cols);
+        let csr = CsrMatrix::from_dense(dense, rows, cols);
+        csr.validate().unwrap();
+        let b = 2;
+        let d = Tensor::new(vec![b, cols], rng.normal_vec(b * cols, 1.0));
+        let want = matmul_nt(&d, &Tensor::new(vec![rows, cols], dense.clone()));
+
+        // Element formats via the dispatch constructor; Block-ELL with a
+        // 1×1 tile (the edge shapes are not 8×16-tileable).
+        let mut mats: Vec<(String, DynSparseMatrix)> = [
+            SparseFormat::Dia,
+            SparseFormat::Ell,
+            SparseFormat::Csr,
+            SparseFormat::Coo,
+        ]
+        .iter()
+        .map(|&fmt| {
+            (fmt.name().to_string(), DynSparseMatrix::from_dense_as(fmt, dense, rows, cols))
+        })
+        .collect();
+        mats.push((
+            "BlockELL-1x1".to_string(),
+            DynSparseMatrix::BlockEll(BlockEllMatrix::from_dense(dense, rows, cols, 1, 1)),
+        ));
+        for (fname, m) in &mats {
+            assert_eq!(&m.to_dense(), dense, "{name}: {fname} roundtrip");
+            let got = m.dxct(&d);
+            assert_eq!(got.shape, vec![b, rows], "{name}: {fname} shape");
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert!((g - w).abs() < 1e-4, "{name}: {fname}: {g} vs {w}");
+            }
+            // Thread-count determinism holds on degenerate shapes too.
+            assert_bits_eq(
+                &m.dxct_threads(&d, 1).data,
+                &m.dxct_threads(&d, 8).data,
+                &format!("{name}: {fname} threads"),
+            );
+        }
+
+        // CSR round-trip conversions for every format.
+        let dia = DiaMatrix::from_csr(&csr);
+        assert_eq!(dia.to_csr(), csr, "{name}: DIA csr roundtrip");
+        let ell = EllMatrix::from_csr(&csr);
+        assert_eq!(ell.to_csr(), csr, "{name}: ELL csr roundtrip");
+        let coo = CooMatrix::from_csr(&csr);
+        assert_eq!(coo.to_csr(), csr, "{name}: COO csr roundtrip");
+        let bell = BlockEllMatrix::from_csr(&csr, 1, 1);
+        assert_eq!(bell.to_csr(), csr, "{name}: BlockELL csr roundtrip");
+        assert_eq!(csr.nnz(), dense.iter().filter(|&&v| v != 0.0).count(), "{name}: nnz");
     }
 }
 
