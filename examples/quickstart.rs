@@ -1,11 +1,12 @@
 //! Quickstart: compressed learning in ~40 lines.
 //!
-//! Trains the small MLP on synth-mnist with SpC (Prox-ADAM + in-graph
-//! soft thresholding), prints the accuracy / compression trade-off, and
+//! Trains the small MLP on synth-mnist with SpC (Prox-ADAM + soft
+//! thresholding), prints the accuracy / compression trade-off, and
 //! shows the layer table. Run with:
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart          # native CPU backend
+//! make artifacts && cargo run --release --features pjrt --example quickstart
 //! ```
 
 use proxcomp::config::{Method, RunConfig};
@@ -13,8 +14,9 @@ use proxcomp::coordinator::sweep;
 use proxcomp::runtime::{Manifest, Runtime};
 
 fn main() -> anyhow::Result<()> {
-    // 1. Load the AOT artifacts (built once by `make artifacts`).
-    let manifest = Manifest::load("artifacts")?;
+    // 1. Load the AOT artifacts (built by `make artifacts`); offline
+    //    builds fall back to the built-in native-backend manifest.
+    let manifest = Manifest::load_or_native("artifacts")?;
     let mut rt = Runtime::cpu()?;
 
     // 2. Configure a short SpC run: λ controls compression.

@@ -29,9 +29,10 @@ fn gflops(flops: f64, us: f64) -> f64 {
 
 fn main() -> anyhow::Result<()> {
     let mut rng = Rng::new(0);
-    let reps = 20;
+    let reps = common::reps(20);
+    let mut json = common::BenchJson::new();
 
-    common::section("kernel micro-benchmarks (median of 20 reps)");
+    common::section(&format!("kernel micro-benchmarks (median of {reps} reps)"));
 
     // --- D×C' and D×C at LeNet-fc1 shape across sparsity levels
     let (b, n, k) = (128, 500, 800);
@@ -45,6 +46,7 @@ fn main() -> anyhow::Result<()> {
     });
     let dense_flops = 2.0 * (b * n * k) as f64;
     println!("{:<22} {:>10.0} {:>10.1} {:>9}", "dense matmul_nt", dense_us, gflops(dense_flops, dense_us), "1.00×");
+    json.row("dxct_forward", "dense_matmul_nt", dense_us, "gflops", gflops(dense_flops, dense_us));
     for rate in [0.5, 0.9, 0.97] {
         let (_, csr) = sparse_matrix(&mut rng, n, k, rate);
         // §Perf before/after: scalar (Figure-2 port) vs column-major SpMM.
@@ -55,6 +57,7 @@ fn main() -> anyhow::Result<()> {
             ops::dxct(&d, &csr);
         });
         let flops = 2.0 * (b * csr.nnz()) as f64;
+        json.row("dxct_forward", &format!("csr_dxct_{:.0}pct", rate * 100.0), us, "gflops", gflops(flops, us));
         println!(
             "{:<22} {:>10.0} {:>10.1} {:>8.2}×   (scalar form: {:.0} µs, SpMM {:.1}× faster)",
             format!("CSR dxct @ {:.0}%", rate * 100.0),
@@ -116,6 +119,7 @@ fn main() -> anyhow::Result<()> {
             }
         });
         println!("  {name:<9} {us:>8.1} µs ({:.1} Gelem/s)", 400_000.0 / us / 1e3);
+        json.row("prox_soft_threshold", name, us, "gelem_per_s", 400_000.0 / us / 1e3);
     }
 
     // --- im2col + conv
@@ -309,6 +313,7 @@ fn main() -> anyhow::Result<()> {
                 us[3],
                 us[0] / us[2]
             );
+            json.row("thread_sweep_b1", name, us[2], "t4_speedup", us[0] / us[2]);
         }
     }
 
@@ -355,5 +360,6 @@ fn main() -> anyhow::Result<()> {
             "DOES NOT HOLD"
         }
     );
+    json.write("bench_kernels.json");
     Ok(())
 }

@@ -122,3 +122,45 @@ pub fn time_median_us<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     }
     proxcomp::util::stats::median(&samples)
 }
+
+/// Repetition count from the environment (`PROXCOMP_BENCH_REPS`), so CI
+/// smoke runs can dial measurement cost down without touching code.
+pub fn reps(default: usize) -> usize {
+    std::env::var("PROXCOMP_BENCH_REPS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(default)
+        .max(1)
+}
+
+/// Machine-readable bench summary: `(section, name, µs, metric)` rows
+/// accumulated during a run and written as one JSON report — the
+/// artifact the CI perf-trajectory step (`BENCH_PR<n>.json`) uploads.
+pub struct BenchJson {
+    rows: Vec<Json>,
+}
+
+impl BenchJson {
+    pub fn new() -> BenchJson {
+        BenchJson { rows: Vec::new() }
+    }
+
+    /// Record one measurement. `metric` is the row's headline derived
+    /// number (GFLOP/s, speedup, …) under the given label.
+    pub fn row(&mut self, section: &str, name: &str, us: f64, metric_name: &str, metric: f64) {
+        let mut j = Json::obj();
+        j.set("section", Json::from(section))
+            .set("name", Json::from(name))
+            .set("median_us", Json::from(us))
+            .set(metric_name, Json::from(metric));
+        self.rows.push(j);
+    }
+
+    /// Write the accumulated rows to `reports/<name>`.
+    pub fn write(self, name: &str) {
+        match proxcomp::metrics::write_json_report(name, &Json::Arr(self.rows)) {
+            Ok(p) => println!("[report] wrote {}", p.display()),
+            Err(e) => eprintln!("[report] failed: {e}"),
+        }
+    }
+}

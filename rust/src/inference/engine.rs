@@ -186,11 +186,18 @@ impl Engine {
         };
 
         match model {
-            "mlp" => {
+            // The MLP family ("mlp", "mlp-s", …): any widths and depth,
+            // wiring derived from the fc{i}_w leaves (ReLU everywhere
+            // but the head) — the native manifest registers the sized
+            // variants; widths flow in through the bundle spec.
+            m if m.starts_with("mlp") => {
                 layers.push(Layer::Flatten);
-                fc(&mut layers, "fc1", true)?;
-                fc(&mut layers, "fc2", true)?;
-                fc(&mut layers, "fc3", false)?;
+                let mut i = 1;
+                while leaves.contains_key(format!("fc{}_w", i + 1).as_str()) {
+                    fc(&mut layers, &format!("fc{i}"), true)?;
+                    i += 1;
+                }
+                fc(&mut layers, &format!("fc{i}"), false)?;
             }
             "lenet" => {
                 conv(&mut layers, "conv1", 1, 0, false)?;

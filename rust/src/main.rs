@@ -1,17 +1,19 @@
 //! proxcomp CLI — the L3 leader entrypoint.
 //!
 //! ```text
-//! proxcomp train   --model lenet --method spc --lambda 1.2 --steps 600 \
-//!                  [--retrain-steps 200]
-//! proxcomp sweep   --model lenet --lambdas 0.5,1.0,2.0 [--method spc]
-//! proxcomp seeds   --model lenet --seeds 0,1,2 --optimizer rmsprop
-//! proxcomp infer   --checkpoint ckpt.pxcp [--sparse] [--batch 64]
-//! proxcomp report  --checkpoint ckpt.pxcp        # layer table + size
-//! proxcomp info                                  # manifest summary
+//! proxcomp train    --model lenet --method spc --lambda 1.2 --steps 600 \
+//!                   [--retrain-steps 200]
+//! proxcomp sweep    --model lenet --lambdas 0.5,1.0,2.0 [--method spc]
+//! proxcomp seeds    --model lenet --seeds 0,1,2 --optimizer rmsprop
+//! proxcomp pipeline [--model mlp-s] [--steps 200]   # offline SpC→debias→serve smoke
+//! proxcomp infer    --checkpoint ckpt.pxcp [--sparse] [--batch 64]
+//! proxcomp report   --checkpoint ckpt.pxcp        # layer table + size
+//! proxcomp info                                   # manifest summary
 //! ```
 //!
-//! Every subcommand shares the manifest + PJRT runtime; results land in
-//! `reports/` as JSON/CSV.
+//! Every subcommand shares the manifest + runtime (PJRT when built with
+//! the `pjrt` feature, the native CPU backend otherwise); results land
+//! in `reports/` as JSON/CSV.
 
 use anyhow::Result;
 use proxcomp::checkpoint;
@@ -43,6 +45,7 @@ fn run() -> Result<()> {
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
         "seeds" => cmd_seeds(&args),
+        "pipeline" => cmd_pipeline(&args),
         "infer" => cmd_infer(&args),
         "report" => cmd_report(&args),
         "info" => cmd_info(&args),
@@ -80,7 +83,7 @@ fn print_result(r: &RunResult) {
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     args.finish()?;
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let manifest = Manifest::load_or_native(&cfg.artifacts_dir)?;
     let mut rt = Runtime::cpu()?;
     let result = sweep::run_method(&mut rt, &manifest, &cfg)?;
     print_result(&result);
@@ -104,7 +107,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         .map(|s| s.parse::<f32>().map_err(|_| anyhow::anyhow!("bad lambda {s:?}")))
         .collect::<Result<Vec<_>>>()?;
     args.finish()?;
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let manifest = Manifest::load_or_native(&cfg.artifacts_dir)?;
     let mut rt = Runtime::cpu()?;
     let results = sweep::lambda_sweep(&mut rt, &manifest, &cfg, &lambdas)?;
     println!("\nλ        accuracy  rate     nnz");
@@ -128,7 +131,7 @@ fn cmd_seeds(args: &Args) -> Result<()> {
         .map(|s| s.parse::<u64>().map_err(|_| anyhow::anyhow!("bad seed {s:?}")))
         .collect::<Result<Vec<_>>>()?;
     args.finish()?;
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let manifest = Manifest::load_or_native(&cfg.artifacts_dir)?;
     let mut rt = Runtime::cpu()?;
     let results = sweep::seed_sweep(&mut rt, &manifest, &cfg, &seeds)?;
     println!("\nseed   accuracy  rate");
@@ -149,6 +152,132 @@ fn cmd_seeds(args: &Args) -> Result<()> {
         &format!("seeds_{}_{}.json", cfg.model, cfg.optimizer.step_name()),
         &arr,
     )?;
+    Ok(())
+}
+
+/// Offline SpC→debias→compress→serve smoke over the native backend —
+/// the CI `e2e-pipeline` gate. Exits nonzero unless (1) the final eval
+/// loss beats the untrained eval loss, (2) the deployed engine's
+/// per-layer format report is non-empty, and (3) the compression factor
+/// exceeds 1× — the paper pipeline's minimum liveness bar.
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    use proxcomp::compress::{self, debias};
+    use proxcomp::coordinator::{trainer::StepScalars, Trainer};
+    use proxcomp::inference::{BatchConfig, BatchServer, WeightMode};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    // Pipeline defaults are tuned for the native mlp-s model: fast
+    // everywhere (seconds in release), visible sparsity, and debias
+    // headroom. A `--config` file replaces these defaults wholesale
+    // (standard load_config semantics); CLI flags override either base.
+    let mut cfg = match args.get_str("config") {
+        Some(path) => RunConfig::from_json_file(&path)?,
+        None => RunConfig {
+            model: "mlp-s".into(),
+            steps: 200,
+            retrain_steps: 80,
+            lambda: 0.5,
+            lr: 2e-3,
+            retrain_lr: 1e-3,
+            train_examples: 2048,
+            test_examples: 512,
+            eval_every: 0,
+            artifacts_dir: "native".into(),
+            ..RunConfig::default()
+        },
+    };
+    cfg.apply_args(args)?;
+    cfg.validate()?;
+    args.finish()?;
+
+    let manifest = Manifest::load_or_native(&cfg.artifacts_dir)?;
+    let mut rt = Runtime::native();
+    let t0 = std::time::Instant::now();
+    let mut trainer = Trainer::new(&manifest, &cfg)?;
+
+    let eval0 = trainer.evaluate(&mut rt)?;
+    println!("[pipeline] untrained: loss {:.4} acc {:.4}", eval0.loss, eval0.accuracy);
+
+    let scalars = StepScalars { lambda: cfg.lambda, lr: cfg.lr, mu: 0.0 };
+    compress::spc::run_with_evals(
+        &mut rt,
+        &mut trainer,
+        cfg.optimizer.step_name(),
+        cfg.steps,
+        scalars,
+        cfg.eval_every,
+    )?;
+    let eval_sparse = trainer.evaluate(&mut rt)?;
+    let rate_sparse = trainer.state.params.compression_rate();
+    println!(
+        "[pipeline] after SpC ({} steps, λ={}): loss {:.4} acc {:.4} rate {:.4}",
+        cfg.steps, cfg.lambda, eval_sparse.loss, eval_sparse.accuracy, rate_sparse
+    );
+
+    if cfg.retrain_steps > 0 {
+        debias::retrain(&mut rt, &mut trainer, cfg.retrain_steps, cfg.retrain_lr)?;
+        let eval_debias = trainer.evaluate(&mut rt)?;
+        println!(
+            "[pipeline] after debias ({} steps): loss {:.4} acc {:.4} (Δacc {:+.4})",
+            cfg.retrain_steps,
+            eval_debias.loss,
+            eval_debias.accuracy,
+            eval_debias.accuracy - eval_sparse.accuracy
+        );
+    }
+
+    let method = if cfg.retrain_steps > 0 { "SpC(Retrain)" } else { "SpC" };
+    let result = compress::finish_run(&mut rt, &mut trainer, method, cfg.lambda as f64, t0)?;
+    print_result(&result);
+
+    // Compressed deployment: dispatch-chosen formats + batched serving.
+    let engine = Arc::new(Engine::from_bundle_mode(&cfg.model, &trainer.state.params, WeightMode::Auto)?);
+    let formats = engine.layer_formats();
+    let formats_text =
+        formats.iter().map(|(l, f)| format!("{l}={f}")).collect::<Vec<_>>().join(" ");
+    println!("[pipeline] deployed formats: {formats_text}");
+    let (c, h, w) = (trainer.test_data.c, trainer.test_data.h, trainer.test_data.w);
+    let server =
+        BatchServer::start(Arc::clone(&engine), BatchConfig::new(8, Duration::from_millis(10), (c, h, w)));
+    let pending: Vec<_> = (0..16)
+        .map(|i| {
+            let sample = trainer.test_data.image(i % trainer.test_data.n).to_vec();
+            server.submit(&sample).map(|p| (sample, p))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    for (sample, p) in pending {
+        let got = p.wait()?;
+        let x = proxcomp::tensor::Tensor::new(vec![1, c, h, w], sample);
+        anyhow::ensure!(got == engine.forward(&x)?.data, "served logits diverge from engine forward");
+    }
+    let stats = server.stats();
+    println!(
+        "[pipeline] served {} requests in {} batches (parity with engine forward verified)",
+        stats.requests, stats.batches
+    );
+
+    // The CI gate.
+    anyhow::ensure!(
+        result.loss < eval0.loss,
+        "final eval loss {:.4} did not improve on untrained {:.4}",
+        result.loss,
+        eval0.loss
+    );
+    anyhow::ensure!(!formats.is_empty(), "deployed layer_formats report is empty");
+    anyhow::ensure!(
+        result.times_factor() > 1.0,
+        "compression factor {:.2}× is not > 1",
+        result.times_factor()
+    );
+    println!(
+        "[pipeline] OK: loss {:.4} → {:.4}, acc {:.4}, compression {:.1}× ({:.1}s)",
+        eval0.loss,
+        result.loss,
+        result.accuracy,
+        result.times_factor(),
+        t0.elapsed().as_secs_f64()
+    );
     Ok(())
 }
 
@@ -219,7 +348,7 @@ fn cmd_report(args: &Args) -> Result<()> {
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = args.str_or("artifacts-dir", "artifacts");
     args.finish()?;
-    let manifest = Manifest::load(&dir)?;
+    let manifest = Manifest::load_or_native(&dir)?;
     println!("manifest: {}/manifest.json", dir);
     for (name, m) in &manifest.models {
         println!(
@@ -256,6 +385,9 @@ SUBCOMMANDS
            --lambda F --lr F --steps N --retrain-steps N --seed N
   sweep    λ-grid sweep           --lambdas 0.5,1.0,2.0
   seeds    multi-seed variance    --seeds 0,1,2,3
+  pipeline offline SpC→debias→compress→serve smoke on the native CPU
+           backend (exits nonzero if loss fails to improve, the deployed
+           format report is empty, or compression ≤ 1×)
   infer    run a checkpoint through the rust inference engine
            --checkpoint F [--sparse] [--batch N]
   report   layer-wise compression table for a checkpoint

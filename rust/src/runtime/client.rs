@@ -1,14 +1,25 @@
-//! PJRT client wrapper: load HLO-text artifacts, compile once, execute.
+//! Runtime front-end: backend dispatch + PJRT client wrapper.
 //!
-//! Adapted from /opt/xla-example/load_hlo: HLO *text* is the interchange
-//! format (the text parser reassigns instruction ids, sidestepping the
-//! 64-bit-id protos jax ≥ 0.5 emits that xla_extension 0.5.1 rejects).
-//! Compiled executables are cached per path, so sweeps over λ/seeds reuse
-//! one compilation.
+//! [`Runtime`] executes artifacts through one of two [`Backend`]s:
+//!
+//! * **Native** — the pure-Rust f32 executor (`runtime::native`), which
+//!   owns every `native/<model>/<step>` artifact. Selected automatically
+//!   by [`Runtime::cpu`] when the `pjrt` feature is off, so the trainer
+//!   and compression controllers run unchanged offline.
+//! * **Pjrt** — load HLO-text artifacts, compile once, execute (adapted
+//!   from /opt/xla-example/load_hlo: HLO *text* is the interchange
+//!   format — the text parser reassigns instruction ids, sidestepping
+//!   the 64-bit-id protos jax ≥ 0.5 emits that xla_extension 0.5.1
+//!   rejects). Compiled executables are cached per path, so sweeps over
+//!   λ/seeds reuse one compilation.
+//!
+//! `native/…` paths route to the native executor under *either* backend,
+//! so a PJRT build can still drive the synthetic native manifest.
 
 use std::collections::HashMap;
 use std::path::Path;
 
+use crate::runtime::native::{self, NativeBackend};
 use crate::util::logger;
 // Offline stand-in for the PJRT bindings; see `xla_compat` module docs.
 use crate::xla_compat as xla;
@@ -129,14 +140,50 @@ pub fn literal_i32(shape: &[usize], data: &[i32]) -> anyhow::Result<xla::Literal
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
 }
 
-/// PJRT CPU runtime with a per-path executable cache.
+/// Which device path executes compiled (non-`native/…`) artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust f32 reference executor (`runtime::native`) — always
+    /// available; the only backend in offline builds.
+    Native,
+    /// PJRT CPU runtime over compiled HLO artifacts (`pjrt` feature).
+    Pjrt,
+}
+
+/// Artifact runtime: backend dispatch plus (for PJRT) a per-path
+/// executable cache. The native executor is always present so
+/// `native/<model>/<step>` artifacts run under either backend.
 pub struct Runtime {
-    client: xla::PjRtClient,
+    backend: Backend,
+    native: NativeBackend,
+    client: Option<xla::PjRtClient>,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
 impl Runtime {
+    /// The default CPU runtime: PJRT when the `pjrt` feature is on,
+    /// otherwise the native backend (offline builds train for real
+    /// through `runtime::native` instead of erroring in the stub).
     pub fn cpu() -> anyhow::Result<Runtime> {
+        if cfg!(feature = "pjrt") {
+            Runtime::pjrt()
+        } else {
+            Ok(Runtime::native())
+        }
+    }
+
+    /// The native-backend runtime (always available, any build).
+    pub fn native() -> Runtime {
+        Runtime {
+            backend: Backend::Native,
+            native: NativeBackend::new(),
+            client: None,
+            cache: HashMap::new(),
+        }
+    }
+
+    /// The PJRT runtime; errors without the real XLA/PJRT bindings.
+    pub fn pjrt() -> anyhow::Result<Runtime> {
         let client = xla::PjRtClient::cpu()?;
         logger::log(
             logger::Level::Debug,
@@ -146,17 +193,32 @@ impl Runtime {
                 client.device_count()
             ),
         );
-        Ok(Runtime { client, cache: HashMap::new() })
+        Ok(Runtime {
+            backend: Backend::Pjrt,
+            native: NativeBackend::new(),
+            client: Some(client),
+            cache: HashMap::new(),
+        })
     }
 
-    /// Load + compile an HLO-text artifact (cached by path).
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Load + compile an HLO-text artifact (cached by path; PJRT only).
     pub fn load(&mut self, path: &Path) -> anyhow::Result<&xla::PjRtLoadedExecutable> {
+        let client = self.client.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "cannot compile {path:?}: this Runtime uses the native CPU backend \
+                 (no PJRT client); rebuild with `--features pjrt` for compiled artifacts"
+            )
+        })?;
         let key = path.to_string_lossy().to_string();
         if !self.cache.contains_key(&key) {
             let t0 = std::time::Instant::now();
             let proto = xla::HloModuleProto::from_text_file(&key)?;
             let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
+            let exe = client.compile(&comp)?;
             logger::log(
                 logger::Level::Debug,
                 &format!("compiled {key} in {:.2}s", t0.elapsed().as_secs_f64()),
@@ -178,11 +240,23 @@ impl Runtime {
 
     /// Execute with pre-built literals (the training hot path builds them
     /// straight from borrowed state slices via [`literal_f32`]).
+    /// `native/…` paths dispatch to the native executor; everything else
+    /// needs the PJRT backend.
     pub fn execute_literals(
         &mut self,
         path: &Path,
         literals: &[xla::Literal],
     ) -> anyhow::Result<Vec<HostValue>> {
+        if native::is_native_path(path) {
+            return self.native.execute(path, literals);
+        }
+        if self.backend == Backend::Native {
+            anyhow::bail!(
+                "artifact {path:?} is a compiled HLO artifact, but this Runtime uses the \
+                 native CPU backend; rebuild with `--features pjrt`, or use the native \
+                 manifest (`--artifacts-dir native`, `Manifest::native()`)"
+            );
+        }
         let exe = self.load(path)?;
         let result = exe.execute::<xla::Literal>(literals)?;
         let tuple = result[0][0].to_literal_sync()?;
@@ -226,6 +300,35 @@ mod tests {
         let lit = v.to_literal().unwrap();
         let back = HostValue::from_literal(&lit).unwrap();
         assert_eq!(v, back);
+    }
+
+    #[test]
+    fn cpu_runtime_selects_native_backend_offline() {
+        if cfg!(feature = "pjrt") {
+            return; // pjrt builds route Runtime::cpu() to the PJRT client
+        }
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.backend(), Backend::Native);
+        assert_eq!(rt.compiled_count(), 0);
+    }
+
+    #[test]
+    fn native_runtime_rejects_compiled_artifacts_with_hint() {
+        let mut rt = Runtime::native();
+        let err = rt.execute(Path::new("artifacts/mlp_infer.hlo.txt"), &[]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--features pjrt"), "{msg}");
+        assert!(msg.contains("native"), "{msg}");
+        assert!(rt.load(Path::new("artifacts/x.hlo.txt")).is_err());
+    }
+
+    #[test]
+    fn native_runtime_routes_native_paths() {
+        // A malformed native path must reach the native executor (and
+        // fail there with its own diagnostics), not the PJRT error path.
+        let mut rt = Runtime::native();
+        let err = rt.execute(Path::new("native/mlp/bogus"), &[]).unwrap_err();
+        assert!(err.to_string().contains("no step"), "{err}");
     }
 
     #[test]

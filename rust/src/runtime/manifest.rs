@@ -165,6 +165,47 @@ impl Manifest {
             )
         })
     }
+
+    /// The built-in native-backend manifest: no files on disk, artifact
+    /// paths address `runtime::native` directly. Registers the MLP model
+    /// family:
+    ///
+    /// * `mlp` — 784→300→100→10 on `synth-mnist` (the paper-scale MLP);
+    /// * `mlp-s` — 784→32→16→10 on `synth-blobs`, small enough that the
+    ///   full SpC→debias→serve pipeline runs in seconds even in debug
+    ///   builds (the offline e2e tests and CI smoke use it).
+    pub fn native() -> Manifest {
+        use crate::runtime::native;
+        let mut models = BTreeMap::new();
+        models.insert(
+            "mlp".to_string(),
+            native::mlp_entry("mlp", &[1, 28, 28], &[300, 100], 10, "synth-mnist", 32, 64),
+        );
+        models.insert(
+            "mlp-s".to_string(),
+            native::mlp_entry("mlp-s", &[1, 28, 28], &[32, 16], 10, "synth-blobs", 16, 32),
+        );
+        Manifest { dir: PathBuf::from("native"), models }
+    }
+
+    /// Load the AOT manifest from `dir`, with the native manifest as the
+    /// offline fallback: `dir == "native"` selects it explicitly, and a
+    /// missing/unreadable manifest falls back to it when the `pjrt`
+    /// feature is off (a PJRT build keeps the loud error — silently
+    /// swapping backends under a real-artifact workflow would mislead).
+    pub fn load_or_native(dir: &str) -> anyhow::Result<Manifest> {
+        if dir == "native" {
+            return Ok(Manifest::native());
+        }
+        match Manifest::load(dir) {
+            Ok(m) => Ok(m),
+            Err(e) if cfg!(not(feature = "pjrt")) => {
+                crate::info!("no AOT manifest in {dir:?} ({e}); using the native CPU backend manifest");
+                Ok(Manifest::native())
+            }
+            Err(e) => Err(e),
+        }
+    }
 }
 
 fn parse_model(name: &str, j: &Json, dir: &Path) -> anyhow::Result<ModelEntry> {
@@ -284,5 +325,33 @@ mod tests {
     fn missing_manifest_is_helpful() {
         let err = Manifest::load("/nonexistent_dir_xyz").unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn native_manifest_registers_mlp_family() {
+        let m = Manifest::native();
+        for name in ["mlp", "mlp-s"] {
+            let entry = m.model(name).unwrap();
+            assert_eq!(entry.num_classes, 10);
+            assert_eq!(entry.input_shape, vec![1, 28, 28]);
+            for step in crate::runtime::native::NATIVE_STEPS {
+                let a = entry.artifact(step).unwrap();
+                assert!(crate::runtime::native::is_native_path(&a.file), "{:?}", a.file);
+                assert!(!a.inputs.is_empty() && !a.outputs.is_empty());
+            }
+        }
+        // Paper-scale mlp: 784→300→100→10 prunable weights.
+        assert_eq!(m.model("mlp").unwrap().num_weights, 300 * 784 + 100 * 300 + 10 * 100);
+    }
+
+    #[test]
+    fn load_or_native_explicit_and_fallback() {
+        let m = Manifest::load_or_native("native").unwrap();
+        assert!(m.models.contains_key("mlp-s"));
+        if cfg!(not(feature = "pjrt")) {
+            // Offline builds fall back instead of erroring.
+            let m = Manifest::load_or_native("/nonexistent_dir_xyz").unwrap();
+            assert!(m.models.contains_key("mlp"));
+        }
     }
 }

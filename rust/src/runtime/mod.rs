@@ -1,14 +1,17 @@
-//! Runtime layer: PJRT client + manifest + parameter bundles.
+//! Runtime layer: backend-dispatched execution + manifest + parameters.
 //!
-//! `client` loads and executes the AOT artifacts (HLO text → compile →
-//! execute, see /opt/xla-example/load_hlo); `manifest` is the typed
-//! contract with `python/compile/aot.py`; `params` owns host-side model
-//! state and reproduces He initialization from the manifest alone.
+//! `client` dispatches artifact execution between the PJRT path (HLO
+//! text → compile → execute, see /opt/xla-example/load_hlo) and the
+//! pure-Rust `native` training backend; `manifest` is the typed contract
+//! with `python/compile/aot.py` (plus the built-in native manifest);
+//! `params` owns host-side model state and reproduces He initialization
+//! from the manifest alone.
 
 pub mod client;
 pub mod manifest;
+pub mod native;
 pub mod params;
 
-pub use client::{HostValue, Runtime};
+pub use client::{Backend, HostValue, Runtime};
 pub use manifest::{Artifact, Manifest, ModelEntry, ParamSpec, Role, Slot};
 pub use params::ParamBundle;

@@ -1,0 +1,985 @@
+//! Native CPU training backend — the offline twin of the PJRT runtime.
+//!
+//! The paper's pipeline (ℓ1 sparse coding with proximal steps → debias →
+//! compress → serve, arXiv:1905.07931) trains **from random weights**, so
+//! it needs a runnable training backend, not just inference kernels. The
+//! AOT/PJRT path (`xla_compat`) is unavailable offline; this module is a
+//! pure-Rust f32 reference executor for the MLP model family that speaks
+//! the exact same artifact contract the trainer already uses:
+//!
+//! * Artifacts are addressed as `native/<model>/<step>` paths — no files
+//!   on disk; [`Manifest::native`](crate::runtime::Manifest::native)
+//!   registers them with the same role-slot signatures `aot.py` emits,
+//!   so `Trainer`, `spc::run`, `debias::retrain`, `pruning::run` and
+//!   `mm::run` drive either backend unchanged.
+//! * Forward = flatten → (matmul_nt + bias + ReLU)* → logits; loss is
+//!   softmax cross-entropy; backward is hand-written. The Prox-ADAM /
+//!   Prox-RMSProp / Prox-SGD update rules apply the soft-threshold
+//!   proximal operator (`sparse::prox`) inside every step, exactly as
+//!   the paper's Algorithms 1-2 (threshold = lr·λ, weights only).
+//! * Matmuls (forward and both backward products) partition over the
+//!   batch or the output axis via `util::pool::parallel_chunks` with a
+//!   fixed per-element reduction order, so training is multi-threaded
+//!   yet **bit-deterministic** for any `PROXCOMP_THREADS` (the same
+//!   contract the serving kernels pin in `tests/property.rs`).
+//!
+//! The executor reconstructs the MLP from the literals themselves (2-D
+//! leaves are weights, the 1-D leaf that follows is its bias), so any
+//! width registered by the native manifest works without recompilation.
+
+use std::path::{Path, PathBuf};
+
+use crate::runtime::client::HostValue;
+use crate::runtime::manifest::{Artifact, ModelEntry, ParamSpec, Role, Slot};
+use crate::sparse::prox;
+use crate::util::pool;
+use crate::xla_compat as xla;
+
+/// ADAM first-moment decay (paper Algorithm 1).
+pub const BETA1: f32 = 0.9;
+/// ADAM second-moment decay.
+pub const BETA2: f32 = 0.999;
+/// Optimizer epsilon.
+pub const EPS: f32 = 1e-8;
+/// RMSProp accumulator decay (paper Algorithm 2).
+pub const RMS_RHO: f32 = 0.9;
+/// SGD-momentum coefficient for the MM L-step.
+pub const MM_MOMENTUM: f32 = 0.9;
+
+/// All step names the native backend registers and executes.
+pub const NATIVE_STEPS: [&str; 7] =
+    ["train_prox_adam", "train_prox_rmsprop", "train_prox_sgd", "train_masked", "train_mm", "eval", "infer"];
+
+/// True for artifact paths owned by this backend (`native/<model>/<step>`).
+pub fn is_native_path(path: &Path) -> bool {
+    path.starts_with("native")
+}
+
+fn parse_path(path: &Path) -> anyhow::Result<(String, String)> {
+    let parts: Vec<String> = path.components().map(|c| c.as_os_str().to_string_lossy().to_string()).collect();
+    anyhow::ensure!(
+        parts.len() == 3 && parts[0] == "native",
+        "not a native artifact path (want native/<model>/<step>): {path:?}"
+    );
+    Ok((parts[1].clone(), parts[2].clone()))
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic manifest construction (the contract with the trainer)
+// ---------------------------------------------------------------------------
+
+/// Build a native-backend MLP model entry: `input → hidden… → classes`
+/// fully-connected with ReLU between layers, leaves named `fc{i}_w` /
+/// `fc{i}_b` in manifest flattening order (weights prunable).
+pub fn mlp_entry(
+    name: &str,
+    input_shape: &[usize],
+    hidden: &[usize],
+    num_classes: usize,
+    dataset: &str,
+    train_batch: usize,
+    eval_batch: usize,
+) -> ModelEntry {
+    let mut dims = vec![input_shape.iter().product::<usize>()];
+    dims.extend_from_slice(hidden);
+    dims.push(num_classes);
+    let mut params = Vec::new();
+    for i in 1..dims.len() {
+        params.push(ParamSpec::new(&format!("fc{i}_w"), "fc_w", vec![dims[i], dims[i - 1]], true));
+        params.push(ParamSpec::new(&format!("fc{i}_b"), "fc_b", vec![dims[i]], false));
+    }
+    let num_weights: usize = params.iter().filter(|s| s.prunable).map(ParamSpec::numel).sum();
+    let num_params: usize = params.iter().map(ParamSpec::numel).sum();
+    let mut artifacts = std::collections::BTreeMap::new();
+    for step in NATIVE_STEPS {
+        let batch = if step == "eval" || step == "infer" { eval_batch } else { train_batch };
+        artifacts.insert(
+            step.to_string(),
+            step_artifact(name, step, &params, batch, input_shape, num_classes),
+        );
+    }
+    ModelEntry {
+        name: name.to_string(),
+        dataset: dataset.to_string(),
+        input_shape: input_shape.to_vec(),
+        num_classes,
+        train_batch,
+        eval_batch,
+        params,
+        num_weights,
+        num_params,
+        artifacts,
+    }
+}
+
+/// The role-slot signature of one native step — the single source of
+/// truth shared by the manifest builder and the executor's input parser.
+pub fn step_artifact(
+    model: &str,
+    step: &str,
+    params: &[ParamSpec],
+    batch: usize,
+    input_shape: &[usize],
+    num_classes: usize,
+) -> Artifact {
+    let leaf = |role: Role| -> Vec<Slot> {
+        params
+            .iter()
+            .map(|s| Slot { role, name: s.name.clone(), shape: s.shape.clone(), dtype: "f32".into() })
+            .collect()
+    };
+    let scalar = |role: Role, name: &str| Slot { role, name: name.into(), shape: vec![], dtype: "f32".into() };
+    let mut x_shape = vec![batch];
+    x_shape.extend_from_slice(input_shape);
+    let x = Slot { role: Role::X, name: "x".into(), shape: x_shape, dtype: "f32".into() };
+    let y = Slot { role: Role::Y, name: "y".into(), shape: vec![batch], dtype: "i32".into() };
+
+    let (inputs, outputs) = match step {
+        "train_prox_adam" | "train_prox_rmsprop" | "train_prox_sgd" => {
+            let mut inputs = leaf(Role::Param);
+            inputs.extend(leaf(Role::OptM));
+            inputs.extend(leaf(Role::OptV));
+            inputs.push(scalar(Role::OptT, "t"));
+            inputs.push(x);
+            inputs.push(y);
+            inputs.push(scalar(Role::Lambda, "lambda"));
+            inputs.push(scalar(Role::Lr, "lr"));
+            let mut outputs = leaf(Role::Param);
+            outputs.extend(leaf(Role::OptM));
+            outputs.extend(leaf(Role::OptV));
+            outputs.push(scalar(Role::OptT, "t"));
+            outputs.push(scalar(Role::Loss, "loss"));
+            (inputs, outputs)
+        }
+        "train_masked" => {
+            let mut inputs = leaf(Role::Param);
+            inputs.extend(leaf(Role::OptM));
+            inputs.extend(leaf(Role::OptV));
+            inputs.extend(leaf(Role::Mask));
+            inputs.push(scalar(Role::OptT, "t"));
+            inputs.push(x);
+            inputs.push(y);
+            inputs.push(scalar(Role::Lr, "lr"));
+            let mut outputs = leaf(Role::Param);
+            outputs.extend(leaf(Role::OptM));
+            outputs.extend(leaf(Role::OptV));
+            outputs.push(scalar(Role::OptT, "t"));
+            outputs.push(scalar(Role::Loss, "loss"));
+            (inputs, outputs)
+        }
+        "train_mm" => {
+            let mut inputs = leaf(Role::Param);
+            inputs.extend(leaf(Role::OptM));
+            inputs.extend(leaf(Role::Theta));
+            inputs.extend(leaf(Role::Lagrange));
+            inputs.push(scalar(Role::OptT, "t"));
+            inputs.push(x);
+            inputs.push(y);
+            inputs.push(scalar(Role::Lr, "lr"));
+            inputs.push(scalar(Role::Mu, "mu"));
+            let mut outputs = leaf(Role::Param);
+            outputs.extend(leaf(Role::OptM));
+            outputs.push(scalar(Role::OptT, "t"));
+            outputs.push(scalar(Role::Loss, "loss"));
+            (inputs, outputs)
+        }
+        "eval" => {
+            let mut inputs = leaf(Role::Param);
+            inputs.push(x);
+            inputs.push(y);
+            let outputs = vec![scalar(Role::Loss, "loss"), scalar(Role::Correct, "correct")];
+            (inputs, outputs)
+        }
+        "infer" => {
+            let mut inputs = leaf(Role::Param);
+            inputs.push(x);
+            let outputs = vec![Slot {
+                role: Role::Logits,
+                name: "logits".into(),
+                shape: vec![batch, num_classes],
+                dtype: "f32".into(),
+            }];
+            (inputs, outputs)
+        }
+        other => panic!("unknown native step {other:?}"),
+    };
+    Artifact { file: PathBuf::from(format!("native/{model}/{step}")), batch, inputs, outputs }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic threaded matmuls (fixed per-element reduction order)
+// ---------------------------------------------------------------------------
+
+/// `y[b,n] = x[b,k] · w[n,k]ᵀ + bias[n]`. Partitions the batch axis when
+/// it can feed every lane, the output axis otherwise; either partition
+/// computes each element with the same ascending-k reduction, so results
+/// are bit-identical for any thread count.
+pub fn fc_forward(x: &[f32], b: usize, k: usize, w: &[f32], bias: &[f32], n: usize, threads: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), b * k);
+    debug_assert_eq!(w.len(), n * k);
+    debug_assert_eq!(bias.len(), n);
+    let mut y = vec![0.0f32; b * n];
+    let ptr = pool::SharedMut::new(&mut y);
+    let cell = |bi: usize, o: usize| -> f32 {
+        let xrow = &x[bi * k..(bi + 1) * k];
+        let wrow = &w[o * k..(o + 1) * k];
+        let mut acc = bias[o];
+        for kk in 0..k {
+            acc += xrow[kk] * wrow[kk];
+        }
+        acc
+    };
+    if pool::batch_saturates(b, threads) {
+        pool::parallel_chunks(b, threads, |r0, r1| {
+            let y = unsafe { ptr.slice() };
+            for bi in r0..r1 {
+                for o in 0..n {
+                    y[bi * n + o] = cell(bi, o);
+                }
+            }
+        });
+    } else {
+        pool::parallel_chunks(n, threads, |c0, c1| {
+            let y = unsafe { ptr.slice() };
+            for o in c0..c1 {
+                for bi in 0..b {
+                    y[bi * n + o] = cell(bi, o);
+                }
+            }
+        });
+    }
+    y
+}
+
+/// Weight gradient `dw[n,k] = Σ_b dy[b,n]·x[b,k]`, partitioned over the
+/// output-row axis; the batch reduction runs in ascending order on one
+/// thread per row, so the sum order never depends on the thread count.
+pub fn fc_grad_w(dy: &[f32], b: usize, n: usize, x: &[f32], k: usize, threads: usize) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), b * n);
+    debug_assert_eq!(x.len(), b * k);
+    let mut dw = vec![0.0f32; n * k];
+    let ptr = pool::SharedMut::new(&mut dw);
+    pool::parallel_chunks(n, threads, |c0, c1| {
+        let dw = unsafe { ptr.slice() };
+        for o in c0..c1 {
+            let row = &mut dw[o * k..(o + 1) * k];
+            for bi in 0..b {
+                let g = dy[bi * n + o];
+                if g == 0.0 {
+                    continue;
+                }
+                let xrow = &x[bi * k..(bi + 1) * k];
+                for kk in 0..k {
+                    row[kk] += g * xrow[kk];
+                }
+            }
+        }
+    });
+    dw
+}
+
+/// Bias gradient `db[n] = Σ_b dy[b,n]` (ascending-batch reduction).
+pub fn fc_grad_b(dy: &[f32], b: usize, n: usize) -> Vec<f32> {
+    let mut db = vec![0.0f32; n];
+    for bi in 0..b {
+        for o in 0..n {
+            db[o] += dy[bi * n + o];
+        }
+    }
+    db
+}
+
+/// Input gradient `dx[b,k] = Σ_o dy[b,o]·w[o,k]`, batch- or
+/// column-partitioned with a fixed ascending-o reduction per element.
+pub fn fc_grad_x(dy: &[f32], b: usize, n: usize, w: &[f32], k: usize, threads: usize) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), b * n);
+    debug_assert_eq!(w.len(), n * k);
+    let mut dx = vec![0.0f32; b * k];
+    let ptr = pool::SharedMut::new(&mut dx);
+    let cell = |bi: usize, kk: usize| -> f32 {
+        let mut acc = 0.0f32;
+        for o in 0..n {
+            acc += dy[bi * n + o] * w[o * k + kk];
+        }
+        acc
+    };
+    if pool::batch_saturates(b, threads) {
+        pool::parallel_chunks(b, threads, |r0, r1| {
+            let dx = unsafe { ptr.slice() };
+            for bi in r0..r1 {
+                for kk in 0..k {
+                    dx[bi * k + kk] = cell(bi, kk);
+                }
+            }
+        });
+    } else {
+        pool::parallel_chunks(k, threads, |c0, c1| {
+            let dx = unsafe { ptr.slice() };
+            for kk in c0..c1 {
+                for bi in 0..b {
+                    dx[bi * k + kk] = cell(bi, kk);
+                }
+            }
+        });
+    }
+    dx
+}
+
+/// Mean softmax cross-entropy over the batch plus `∂loss/∂logits`
+/// (`(softmax − onehot)/B`, rows processed in ascending order).
+pub fn softmax_ce(logits: &[f32], labels: &[i32], b: usize, ncls: usize) -> (f32, Vec<f32>) {
+    debug_assert_eq!(logits.len(), b * ncls);
+    debug_assert_eq!(labels.len(), b);
+    let mut loss = 0.0f32;
+    let mut dlogits = vec![0.0f32; b * ncls];
+    let inv_b = 1.0 / b as f32;
+    for bi in 0..b {
+        let row = &logits[bi * ncls..(bi + 1) * ncls];
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for &v in row {
+            z += (v - m).exp();
+        }
+        let label = labels[bi] as usize;
+        loss += -(row[label] - m) + z.ln();
+        let drow = &mut dlogits[bi * ncls..(bi + 1) * ncls];
+        for (j, &v) in row.iter().enumerate() {
+            drow[j] = (v - m).exp() / z * inv_b;
+        }
+        drow[label] -= inv_b;
+    }
+    (loss * inv_b, dlogits)
+}
+
+// ---------------------------------------------------------------------------
+// Update rules (paper Algorithms 1-2 + the debias/MM variants)
+// ---------------------------------------------------------------------------
+
+/// One Prox-ADAM step, elementwise: the bias-corrected ADAM update
+/// followed by the ℓ1 proximal operator with threshold `lr·λ`. `t` is
+/// the post-increment step count; pass `lambda = 0` to skip the prox
+/// (biases / dense baselines — λ=0 makes it the identity anyway).
+pub fn prox_adam_update(w: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], t: f32, lr: f32, lambda: f32) {
+    let bc1 = 1.0 - BETA1.powf(t);
+    let bc2 = 1.0 - BETA2.powf(t);
+    for i in 0..w.len() {
+        m[i] = BETA1 * m[i] + (1.0 - BETA1) * g[i];
+        v[i] = BETA2 * v[i] + (1.0 - BETA2) * g[i] * g[i];
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        w[i] -= lr * mhat / (vhat.sqrt() + EPS);
+    }
+    if lambda > 0.0 {
+        prox::soft_threshold_inplace(w, lr * lambda);
+    }
+}
+
+/// One Prox-RMSProp step: accumulator update, scaled descent, prox.
+pub fn prox_rmsprop_update(w: &mut [f32], g: &[f32], v: &mut [f32], lr: f32, lambda: f32) {
+    for i in 0..w.len() {
+        v[i] = RMS_RHO * v[i] + (1.0 - RMS_RHO) * g[i] * g[i];
+        w[i] -= lr * g[i] / (v[i].sqrt() + EPS);
+    }
+    if lambda > 0.0 {
+        prox::soft_threshold_inplace(w, lr * lambda);
+    }
+}
+
+/// One Prox-SGD step: plain descent, prox.
+pub fn prox_sgd_update(w: &mut [f32], g: &[f32], lr: f32, lambda: f32) {
+    for i in 0..w.len() {
+        w[i] -= lr * g[i];
+    }
+    if lambda > 0.0 {
+        prox::soft_threshold_inplace(w, lr * lambda);
+    }
+}
+
+/// One SGD-momentum step (the MM L-step optimizer).
+pub fn momentum_update(w: &mut [f32], g: &[f32], m: &mut [f32], lr: f32) {
+    for i in 0..w.len() {
+        m[i] = MM_MOMENTUM * m[i] + g[i];
+        w[i] -= lr * m[i];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The executor
+// ---------------------------------------------------------------------------
+
+/// Which training-family step an artifact path names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StepKind {
+    ProxAdam,
+    ProxRmsprop,
+    ProxSgd,
+    Masked,
+    Mm,
+    Eval,
+    Infer,
+}
+
+impl StepKind {
+    fn parse(step: &str) -> anyhow::Result<StepKind> {
+        Ok(match step {
+            "train_prox_adam" => StepKind::ProxAdam,
+            "train_prox_rmsprop" => StepKind::ProxRmsprop,
+            "train_prox_sgd" => StepKind::ProxSgd,
+            "train_masked" => StepKind::Masked,
+            "train_mm" => StepKind::Mm,
+            "eval" => StepKind::Eval,
+            "infer" => StepKind::Infer,
+            other => anyhow::bail!("native backend has no step {other:?}"),
+        })
+    }
+}
+
+/// One decoded f32 input leaf.
+struct Leaf {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+fn decode_f32(lit: &xla::Literal) -> anyhow::Result<Leaf> {
+    let shape: Vec<usize> = lit.array_shape()?.dims().iter().map(|&d| d as usize).collect();
+    Ok(Leaf { shape, data: lit.to_vec::<f32>()? })
+}
+
+fn decode_scalar(lit: &xla::Literal) -> anyhow::Result<f32> {
+    let leaf = decode_f32(lit)?;
+    anyhow::ensure!(leaf.data.len() == 1, "expected scalar literal, got shape {:?}", leaf.shape);
+    Ok(leaf.data[0])
+}
+
+/// One FC layer's position within the flat leaf list.
+struct LayerIdx {
+    w: usize,
+    b: usize,
+    out: usize,
+    inp: usize,
+}
+
+/// Pair up `(2-D weight, 1-D bias)` leaves into the MLP layer stack.
+fn build_layers(leaves: &[Leaf]) -> anyhow::Result<Vec<LayerIdx>> {
+    let mut layers = Vec::new();
+    let mut i = 0;
+    while i < leaves.len() {
+        let w = &leaves[i];
+        anyhow::ensure!(w.shape.len() == 2, "leaf {i}: expected 2-D weight, got shape {:?}", w.shape);
+        let b = leaves.get(i + 1).ok_or_else(|| anyhow::anyhow!("weight leaf {i} has no bias leaf"))?;
+        anyhow::ensure!(
+            b.shape.len() == 1 && b.shape[0] == w.shape[0],
+            "leaf {}: bias shape {:?} does not match weight rows {}",
+            i + 1,
+            b.shape,
+            w.shape[0]
+        );
+        layers.push(LayerIdx { w: i, b: i + 1, out: w.shape[0], inp: w.shape[1] });
+        i += 2;
+    }
+    anyhow::ensure!(!layers.is_empty(), "no parameter leaves");
+    for pair in layers.windows(2) {
+        anyhow::ensure!(pair[1].inp == pair[0].out, "layer widths do not chain: {} -> {}", pair[0].out, pair[1].inp);
+    }
+    Ok(layers)
+}
+
+/// Forward activations: `acts[0]` is the flattened input, `acts[l+1]`
+/// the post-ReLU output of layer `l` (the last entry is the raw logits).
+struct ForwardPass {
+    acts: Vec<Vec<f32>>,
+    batch: usize,
+}
+
+fn forward(layers: &[LayerIdx], leaves: &[Leaf], x: &Leaf, threads: usize) -> anyhow::Result<ForwardPass> {
+    anyhow::ensure!(!x.shape.is_empty(), "input x must be batched");
+    let batch = x.shape[0];
+    let d0: usize = x.shape[1..].iter().product();
+    anyhow::ensure!(d0 == layers[0].inp, "input example size {d0} does not match fc1 fan-in {}", layers[0].inp);
+    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(layers.len() + 1);
+    acts.push(x.data.clone());
+    for (l, layer) in layers.iter().enumerate() {
+        let mut h =
+            fc_forward(&acts[l], batch, layer.inp, &leaves[layer.w].data, &leaves[layer.b].data, layer.out, threads);
+        if l + 1 < layers.len() {
+            for v in h.iter_mut() {
+                if *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        acts.push(h);
+    }
+    Ok(ForwardPass { acts, batch })
+}
+
+/// Backward pass from `dlogits`; returns per-leaf gradients aligned with
+/// the leaf order (weight grads at weight indices, bias grads at bias
+/// indices).
+fn backward(layers: &[LayerIdx], leaves: &[Leaf], fwd: &ForwardPass, dlogits: Vec<f32>, threads: usize) -> Vec<Vec<f32>> {
+    let b = fwd.batch;
+    let mut grads: Vec<Vec<f32>> = leaves.iter().map(|_| Vec::new()).collect();
+    let mut dz = dlogits;
+    for l in (0..layers.len()).rev() {
+        let layer = &layers[l];
+        grads[layer.w] = fc_grad_w(&dz, b, layer.out, &fwd.acts[l], layer.inp, threads);
+        grads[layer.b] = fc_grad_b(&dz, b, layer.out);
+        if l > 0 {
+            let mut dx = fc_grad_x(&dz, b, layer.out, &leaves[layer.w].data, layer.inp, threads);
+            // ReLU gate: the stored activation is max(z, 0), so a zero
+            // activation means a blocked gradient.
+            for (d, &a) in dx.iter_mut().zip(&fwd.acts[l]) {
+                if a <= 0.0 {
+                    *d = 0.0;
+                }
+            }
+            dz = dx;
+        }
+    }
+    grads
+}
+
+/// The native executor. Stateless between calls (all training state is
+/// host-side in the trainer); the struct exists as the dispatch target
+/// of [`Backend::Native`](crate::runtime::client::Backend).
+#[derive(Debug, Default)]
+pub struct NativeBackend {
+    steps_executed: u64,
+}
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend { steps_executed: 0 }
+    }
+
+    /// How many artifact executions this backend has run (visible in
+    /// place of the PJRT executable-cache counter).
+    pub fn steps_executed(&self) -> u64 {
+        self.steps_executed
+    }
+
+    /// Execute a `native/<model>/<step>` artifact against role-ordered
+    /// input literals; returns role-ordered host values, mirroring
+    /// `PjRtLoadedExecutable::execute` + tuple unpacking.
+    pub fn execute(&mut self, path: &Path, inputs: &[xla::Literal]) -> anyhow::Result<Vec<HostValue>> {
+        let (_model, step) = parse_path(path)?;
+        let kind = StepKind::parse(&step)?;
+        self.steps_executed += 1;
+        let threads = pool::max_threads();
+        match kind {
+            StepKind::Eval => eval_step(inputs, threads),
+            StepKind::Infer => infer_step(inputs, threads),
+            _ => train_step(kind, inputs, threads),
+        }
+    }
+}
+
+/// Split `inputs` per the step signature (see [`step_artifact`]); the
+/// leaf count L is recovered from the literal count, which the role
+/// layout determines uniquely per step.
+fn leaf_count(kind: StepKind, n_inputs: usize) -> anyhow::Result<usize> {
+    let (num, den) = match kind {
+        StepKind::ProxAdam | StepKind::ProxRmsprop | StepKind::ProxSgd => (n_inputs as i64 - 5, 3),
+        StepKind::Masked => (n_inputs as i64 - 4, 4),
+        StepKind::Mm => (n_inputs as i64 - 5, 4),
+        StepKind::Eval => (n_inputs as i64 - 2, 1),
+        StepKind::Infer => (n_inputs as i64 - 1, 1),
+    };
+    anyhow::ensure!(num > 0 && num % den == 0, "native {kind:?}: {n_inputs} inputs do not fit the step signature");
+    Ok((num / den) as usize)
+}
+
+fn decode_leaves(lits: &[xla::Literal]) -> anyhow::Result<Vec<Leaf>> {
+    lits.iter().map(decode_f32).collect()
+}
+
+fn leaf_host_values(leaves: Vec<Leaf>) -> Vec<HostValue> {
+    leaves.into_iter().map(|l| HostValue::F32 { shape: l.shape, data: l.data }).collect()
+}
+
+/// The role-ordered tail of a training-step input list (everything past
+/// the parameter leaves), parsed per the step signature.
+struct TrainInputs {
+    opt_m: Vec<Leaf>,
+    opt_v: Vec<Leaf>,
+    theta: Option<Vec<Leaf>>,
+    lagrange: Option<Vec<Leaf>>,
+    masks: Option<Vec<Leaf>>,
+    t_in: f32,
+    x: Leaf,
+    y: Vec<i32>,
+    lambda: f32,
+    lr: f32,
+    mu: f32,
+}
+
+fn parse_train_inputs(kind: StepKind, nl: usize, inputs: &[xla::Literal]) -> anyhow::Result<TrainInputs> {
+    match kind {
+        StepKind::ProxAdam | StepKind::ProxRmsprop | StepKind::ProxSgd => Ok(TrainInputs {
+            opt_m: decode_leaves(&inputs[nl..2 * nl])?,
+            opt_v: decode_leaves(&inputs[2 * nl..3 * nl])?,
+            theta: None,
+            lagrange: None,
+            masks: None,
+            t_in: decode_scalar(&inputs[3 * nl])?,
+            x: decode_f32(&inputs[3 * nl + 1])?,
+            y: inputs[3 * nl + 2].to_vec::<i32>()?,
+            lambda: decode_scalar(&inputs[3 * nl + 3])?,
+            lr: decode_scalar(&inputs[3 * nl + 4])?,
+            mu: 0.0,
+        }),
+        StepKind::Masked => Ok(TrainInputs {
+            opt_m: decode_leaves(&inputs[nl..2 * nl])?,
+            opt_v: decode_leaves(&inputs[2 * nl..3 * nl])?,
+            theta: None,
+            lagrange: None,
+            masks: Some(decode_leaves(&inputs[3 * nl..4 * nl])?),
+            t_in: decode_scalar(&inputs[4 * nl])?,
+            x: decode_f32(&inputs[4 * nl + 1])?,
+            y: inputs[4 * nl + 2].to_vec::<i32>()?,
+            lambda: 0.0,
+            lr: decode_scalar(&inputs[4 * nl + 3])?,
+            mu: 0.0,
+        }),
+        StepKind::Mm => Ok(TrainInputs {
+            opt_m: decode_leaves(&inputs[nl..2 * nl])?,
+            opt_v: Vec::new(),
+            theta: Some(decode_leaves(&inputs[2 * nl..3 * nl])?),
+            lagrange: Some(decode_leaves(&inputs[3 * nl..4 * nl])?),
+            masks: None,
+            t_in: decode_scalar(&inputs[4 * nl])?,
+            x: decode_f32(&inputs[4 * nl + 1])?,
+            y: inputs[4 * nl + 2].to_vec::<i32>()?,
+            lambda: 0.0,
+            lr: decode_scalar(&inputs[4 * nl + 3])?,
+            mu: decode_scalar(&inputs[4 * nl + 4])?,
+        }),
+        StepKind::Eval | StepKind::Infer => anyhow::bail!("not a training step"),
+    }
+}
+
+fn train_step(kind: StepKind, inputs: &[xla::Literal], threads: usize) -> anyhow::Result<Vec<HostValue>> {
+    let nl = leaf_count(kind, inputs.len())?;
+    let mut params = decode_leaves(&inputs[..nl])?;
+    let layers = build_layers(&params)?;
+    let TrainInputs { mut opt_m, mut opt_v, theta, lagrange, masks, t_in, x, y, lambda, lr, mu } =
+        parse_train_inputs(kind, nl, inputs)?;
+    let batch = x.shape.first().copied().unwrap_or(0);
+    anyhow::ensure!(y.len() == batch, "labels length {} != batch {batch}", y.len());
+
+    let fwd = forward(&layers, &params, &x, threads)?;
+    let ncls = layers.last().map(|l| l.out).unwrap_or(0);
+    let (loss, dlogits) = softmax_ce(fwd.acts.last().unwrap(), &y, batch, ncls);
+    let mut grads = backward(&layers, &params, &fwd, dlogits, threads);
+
+    // Masked training (debias, Section 2.4): gradients gated by the 0/1
+    // mask, weights re-clamped after the step so pruned entries stay
+    // exactly zero even under optimizer epsilon noise.
+    if let Some(masks) = &masks {
+        for (g, m) in grads.iter_mut().zip(masks) {
+            anyhow::ensure!(g.len() == m.data.len(), "mask/grad length mismatch");
+            for (gi, &mi) in g.iter_mut().zip(&m.data) {
+                *gi *= mi;
+            }
+        }
+    }
+    // MM L-step (augmented Lagrangian pull): g += μ(w − θ) − λ_mult.
+    if let (Some(theta), Some(lagrange)) = (&theta, &lagrange) {
+        for i in 0..params.len() {
+            let (w, th, lg) = (&params[i].data, &theta[i].data, &lagrange[i].data);
+            let g = &mut grads[i];
+            for j in 0..g.len() {
+                g[j] += mu * (w[j] - th[j]) - lg[j];
+            }
+        }
+    }
+
+    let t_out = t_in + 1.0;
+    for (i, leaf) in params.iter_mut().enumerate() {
+        // Only 2-D weight leaves are prunable; biases never see the prox.
+        let leaf_lambda = if leaf.shape.len() == 2 { lambda } else { 0.0 };
+        match kind {
+            StepKind::ProxAdam | StepKind::Masked => {
+                prox_adam_update(
+                    &mut leaf.data,
+                    &grads[i],
+                    &mut opt_m[i].data,
+                    &mut opt_v[i].data,
+                    t_out,
+                    lr,
+                    leaf_lambda,
+                );
+            }
+            StepKind::ProxRmsprop => {
+                prox_rmsprop_update(&mut leaf.data, &grads[i], &mut opt_v[i].data, lr, leaf_lambda);
+            }
+            StepKind::ProxSgd => {
+                prox_sgd_update(&mut leaf.data, &grads[i], lr, leaf_lambda);
+            }
+            StepKind::Mm => {
+                momentum_update(&mut leaf.data, &grads[i], &mut opt_m[i].data, lr);
+            }
+            StepKind::Eval | StepKind::Infer => unreachable!(),
+        }
+        if let Some(masks) = &masks {
+            for (w, &mi) in leaf.data.iter_mut().zip(&masks[i].data) {
+                *w *= mi;
+            }
+        }
+    }
+
+    let mut out = leaf_host_values(params);
+    out.extend(leaf_host_values(opt_m));
+    if kind != StepKind::Mm {
+        out.extend(leaf_host_values(opt_v));
+    }
+    out.push(HostValue::scalar_f32(t_out));
+    out.push(HostValue::scalar_f32(loss));
+    Ok(out)
+}
+
+fn eval_step(inputs: &[xla::Literal], threads: usize) -> anyhow::Result<Vec<HostValue>> {
+    let nl = leaf_count(StepKind::Eval, inputs.len())?;
+    let params = decode_leaves(&inputs[..nl])?;
+    let layers = build_layers(&params)?;
+    let x = decode_f32(&inputs[nl])?;
+    let y = inputs[nl + 1].to_vec::<i32>()?;
+    let fwd = forward(&layers, &params, &x, threads)?;
+    let ncls = layers.last().unwrap().out;
+    let (loss, _) = softmax_ce(fwd.acts.last().unwrap(), &y, fwd.batch, ncls);
+    let logits = fwd.acts.last().unwrap();
+    let mut correct = 0usize;
+    for bi in 0..fwd.batch {
+        let row = &logits[bi * ncls..(bi + 1) * ncls];
+        // total_cmp: NaN logits (diverged weights) must not panic the
+        // executor — every other malformed state errors, not aborts.
+        let pred = row.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map(|(j, _)| j).unwrap();
+        if pred == y[bi] as usize {
+            correct += 1;
+        }
+    }
+    Ok(vec![HostValue::scalar_f32(loss), HostValue::scalar_f32(correct as f32)])
+}
+
+fn infer_step(inputs: &[xla::Literal], threads: usize) -> anyhow::Result<Vec<HostValue>> {
+    let nl = leaf_count(StepKind::Infer, inputs.len())?;
+    let params = decode_leaves(&inputs[..nl])?;
+    let layers = build_layers(&params)?;
+    let x = decode_f32(&inputs[nl])?;
+    let fwd = forward(&layers, &params, &x, threads)?;
+    let ncls = layers.last().unwrap().out;
+    let logits = fwd.acts.last().unwrap().clone();
+    Ok(vec![HostValue::F32 { shape: vec![fwd.batch, ncls], data: logits }])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::client;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_paths_recognized() {
+        assert!(is_native_path(Path::new("native/mlp/train_prox_adam")));
+        assert!(!is_native_path(Path::new("artifacts/mlp_infer.hlo.txt")));
+        let (m, s) = parse_path(Path::new("native/mlp-s/eval")).unwrap();
+        assert_eq!((m.as_str(), s.as_str()), ("mlp-s", "eval"));
+        assert!(parse_path(Path::new("native/mlp")).is_err());
+    }
+
+    #[test]
+    fn mlp_entry_signatures_match_trainer_contract() {
+        let entry = mlp_entry("mlp", &[1, 28, 28], &[300, 100], 10, "synth-mnist", 32, 64);
+        assert_eq!(entry.params.len(), 6);
+        assert_eq!(entry.params[0].shape, vec![300, 784]);
+        assert!(entry.params[0].prunable && !entry.params[1].prunable);
+        assert_eq!(entry.num_weights, 300 * 784 + 100 * 300 + 10 * 100);
+        // Prox steps: params, m, v (3L) + t + x + y + λ + lr.
+        let adam = entry.artifact("train_prox_adam").unwrap();
+        assert_eq!(adam.inputs.len(), 3 * 6 + 5);
+        assert_eq!(adam.inputs.last().unwrap().role, Role::Lr);
+        assert_eq!(adam.outputs.len(), 3 * 6 + 2);
+        assert_eq!(adam.outputs.last().unwrap().role, Role::Loss);
+        // Masked adds one mask leaf per param leaf, drops λ.
+        let masked = entry.artifact("train_masked").unwrap();
+        assert_eq!(masked.inputs.len(), 4 * 6 + 4);
+        assert!(masked.inputs.iter().all(|s| s.role != Role::Lambda));
+        // Infer: params + x → logits.
+        let infer = entry.artifact("infer").unwrap();
+        assert_eq!(infer.inputs.len(), 7);
+        assert_eq!(infer.outputs[0].shape, vec![64, 10]);
+    }
+
+    #[test]
+    fn fc_forward_matches_hand_computation() {
+        // x = [[1, 2], [3, 4]], w = [[1, 0], [0, 1], [1, 1]], bias = [0.5, 0, -1]
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let w = [1.0f32, 0.0, 0.0, 1.0, 1.0, 1.0];
+        let bias = [0.5f32, 0.0, -1.0];
+        let y = fc_forward(&x, 2, 2, &w, &bias, 3, 1);
+        assert_eq!(y, vec![1.5, 2.0, 2.0, 3.5, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn fc_kernels_bit_identical_across_thread_counts() {
+        let mut rng = Rng::new(40);
+        for (b, k, n) in [(1usize, 17, 9), (6, 13, 21), (16, 33, 5)] {
+            let x = rng.normal_vec(b * k, 1.0);
+            let w = rng.normal_vec(n * k, 1.0);
+            let bias = rng.normal_vec(n, 1.0);
+            let dy = rng.normal_vec(b * n, 1.0);
+            let f1 = fc_forward(&x, b, k, &w, &bias, n, 1);
+            let gw1 = fc_grad_w(&dy, b, n, &x, k, 1);
+            let gx1 = fc_grad_x(&dy, b, n, &w, k, 1);
+            for threads in [2usize, 4, 8] {
+                assert_eq!(f1, fc_forward(&x, b, k, &w, &bias, n, threads), "fwd b={b} t={threads}");
+                assert_eq!(gw1, fc_grad_w(&dy, b, n, &x, k, threads), "dw b={b} t={threads}");
+                assert_eq!(gx1, fc_grad_x(&dy, b, n, &w, k, threads), "dx b={b} t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_ce_uniform_logits() {
+        let logits = vec![0.0f32; 2 * 4];
+        let (loss, d) = softmax_ce(&logits, &[1, 3], 2, 4);
+        assert!((loss - (4.0f32).ln()).abs() < 1e-6);
+        // Gradient rows sum to zero and the label entry is negative.
+        for bi in 0..2 {
+            let row = &d[bi * 4..(bi + 1) * 4];
+            let s: f32 = row.iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+        assert!(d[1] < 0.0 && d[2 * 4 - 1] < 0.0);
+    }
+
+    #[test]
+    fn prox_adam_shrinks_and_zeroes() {
+        // Zero gradient, positive λ: the prox must carve the small weight
+        // to exact zero and shrink the big one by exactly lr·λ.
+        let mut w = vec![0.5f32, 1e-4];
+        let g = vec![0.0f32; 2];
+        let mut m = vec![0.0f32; 2];
+        let mut v = vec![0.0f32; 2];
+        prox_adam_update(&mut w, &g, &mut m, &mut v, 1.0, 0.1, 1.0);
+        assert!((w[0] - 0.4).abs() < 1e-6, "{}", w[0]);
+        assert_eq!(w[1], 0.0);
+    }
+
+    #[test]
+    fn adam_with_zero_lambda_is_plain_adam() {
+        let mut w = vec![1.0f32];
+        let g = vec![1.0f32];
+        let mut m = vec![0.0f32];
+        let mut v = vec![0.0f32];
+        prox_adam_update(&mut w, &g, &mut m, &mut v, 1.0, 0.01, 0.0);
+        // Bias-corrected first step moves by ≈ lr·g/|g| = lr.
+        assert!((w[0] - 0.99).abs() < 1e-4, "{}", w[0]);
+    }
+
+    fn tiny_entry() -> ModelEntry {
+        mlp_entry("mlp-t", &[1, 2, 2], &[3], 2, "synth-blobs", 4, 4)
+    }
+
+    fn leaf_literals(values: &[(Vec<usize>, Vec<f32>)]) -> Vec<xla::Literal> {
+        values.iter().map(|(shape, data)| client::literal_f32(shape, data).unwrap()).collect()
+    }
+
+    #[test]
+    fn executor_runs_one_adam_step_and_advances_t() {
+        let entry = tiny_entry();
+        let mut rng = Rng::new(50);
+        let mut lits = Vec::new();
+        // params, then zero moments, in spec order.
+        let leaves: Vec<(Vec<usize>, Vec<f32>)> = entry
+            .params
+            .iter()
+            .map(|s| (s.shape.clone(), rng.normal_vec(s.numel(), 0.5)))
+            .collect();
+        lits.extend(leaf_literals(&leaves));
+        for _ in 0..2 {
+            let zeros: Vec<(Vec<usize>, Vec<f32>)> =
+                entry.params.iter().map(|s| (s.shape.clone(), vec![0.0; s.numel()])).collect();
+            lits.extend(leaf_literals(&zeros));
+        }
+        lits.push(client::literal_f32(&[], &[0.0]).unwrap()); // t
+        lits.push(client::literal_f32(&[4, 1, 2, 2], &rng.normal_vec(16, 1.0)).unwrap());
+        lits.push(client::literal_i32(&[4], &[0, 1, 0, 1]).unwrap());
+        lits.push(client::literal_f32(&[], &[0.5]).unwrap()); // λ
+        lits.push(client::literal_f32(&[], &[0.01]).unwrap()); // lr
+        let mut backend = NativeBackend::new();
+        let out = backend.execute(Path::new("native/mlp-t/train_prox_adam"), &lits).unwrap();
+        // params (4) + m (4) + v (4) + t + loss.
+        assert_eq!(out.len(), 3 * 4 + 2);
+        assert_eq!(out[out.len() - 2].scalar().unwrap(), 1.0);
+        let loss = out[out.len() - 1].scalar().unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        // Weight leaf changed, shape preserved.
+        assert_eq!(out[0].shape(), &leaves[0].0[..]);
+        assert_ne!(out[0].as_f32().unwrap(), &leaves[0].1[..]);
+        assert_eq!(backend.steps_executed(), 1);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        // Directional-derivative check: for a random direction d,
+        // (L(w+h·d) − L(w−h·d)) / 2h ≈ ⟨∇L, d⟩ — catches any index or
+        // transpose slip in the hand-written backward.
+        let mut rng = Rng::new(60);
+        let dims = [7usize, 5, 4, 3];
+        let mut leaves: Vec<Leaf> = Vec::new();
+        for i in 1..dims.len() {
+            leaves.push(Leaf { shape: vec![dims[i], dims[i - 1]], data: rng.normal_vec(dims[i] * dims[i - 1], 0.5) });
+            leaves.push(Leaf { shape: vec![dims[i]], data: rng.normal_vec(dims[i], 0.1) });
+        }
+        let layers = build_layers(&leaves).unwrap();
+        let batch = 6;
+        let x = Leaf { shape: vec![batch, dims[0]], data: rng.normal_vec(batch * dims[0], 1.0) };
+        let y: Vec<i32> = (0..batch).map(|i| (i % dims[3]) as i32).collect();
+
+        let loss_of = |leaves: &[Leaf]| -> f32 {
+            let fwd = forward(&layers, leaves, &x, 1).unwrap();
+            softmax_ce(fwd.acts.last().unwrap(), &y, batch, dims[3]).0
+        };
+        let fwd = forward(&layers, &leaves, &x, 1).unwrap();
+        let (_, dlogits) = softmax_ce(fwd.acts.last().unwrap(), &y, batch, dims[3]);
+        let grads = backward(&layers, &leaves, &fwd, dlogits, 1);
+
+        // A single direction can land on a ReLU kink (central differences
+        // then pick up O(1) curvature error even with a correct backward),
+        // so take 9 directions and require a supermajority to agree — a
+        // transposed or misindexed gradient fails every one of them.
+        let h = 1e-4f32;
+        let mut ok = 0;
+        for _ in 0..9 {
+            let dirs: Vec<Vec<f32>> = leaves.iter().map(|l| rng.normal_vec(l.data.len(), 1.0)).collect();
+            let analytic: f32 =
+                grads.iter().zip(&dirs).map(|(g, d)| g.iter().zip(d).map(|(a, b)| a * b).sum::<f32>()).sum();
+            let shifted = |sign: f32| -> Vec<Leaf> {
+                leaves
+                    .iter()
+                    .zip(&dirs)
+                    .map(|(l, d)| Leaf {
+                        shape: l.shape.clone(),
+                        data: l.data.iter().zip(d).map(|(w, di)| w + sign * h * di).collect(),
+                    })
+                    .collect()
+            };
+            let numeric = (loss_of(&shifted(1.0)) - loss_of(&shifted(-1.0))) / (2.0 * h);
+            let denom = analytic.abs().max(numeric.abs()).max(0.5);
+            if (analytic - numeric).abs() / denom < 0.05 {
+                ok += 1;
+            }
+        }
+        assert!(ok >= 7, "directional-derivative check failed: only {ok}/9 directions agree");
+    }
+
+    #[test]
+    fn executor_rejects_malformed_inputs() {
+        let mut backend = NativeBackend::new();
+        let lits = vec![client::literal_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]).unwrap()];
+        assert!(backend.execute(Path::new("native/m/train_prox_adam"), &lits).is_err());
+        assert!(backend.execute(Path::new("native/m/bogus_step"), &lits).is_err());
+        assert!(backend.execute(Path::new("artifacts/m.hlo.txt"), &lits).is_err());
+    }
+}

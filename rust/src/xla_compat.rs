@@ -125,8 +125,11 @@ impl Literal {
 
 fn unavailable(what: &str) -> anyhow::Error {
     anyhow::anyhow!(
-        "{what} needs the real XLA/PJRT runtime; this build uses the offline \
-         stub (build with the `pjrt` feature once the xla crate is vendored)"
+        "{what} needs the real XLA/PJRT runtime, which this offline build stubs out \
+         because the `pjrt` cargo feature is disabled. Either rebuild with \
+         `cargo build --features pjrt` (once the xla crate is vendored), or run the \
+         pipeline on the native CPU backend instead — `Runtime::native()` / \
+         `--artifacts-dir native` — which trains and serves offline without PJRT"
     )
 }
 
@@ -232,8 +235,13 @@ mod tests {
 
     #[test]
     fn device_paths_error_descriptively() {
+        // The stub's error must be actionable: name the `pjrt` feature
+        // flag AND point at the native-backend escape hatch.
         let err = PjRtClient::cpu().err().unwrap();
-        assert!(err.to_string().contains("pjrt"), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("--features pjrt"), "{msg}");
+        assert!(msg.contains("pjrt` cargo feature"), "{msg}");
+        assert!(msg.contains("--artifacts-dir native"), "{msg}");
         let proto = HloModuleProto::from_text_file("missing.hlo.txt");
         assert!(proto.is_err());
     }

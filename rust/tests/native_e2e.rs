@@ -1,0 +1,387 @@
+//! Offline end-to-end tests over the native CPU training backend — the
+//! feature-less twins of the `pjrt`-gated suite in `integration.rs`.
+//!
+//! Every test here runs in the default offline build: the built-in
+//! native manifest (`Manifest::native()`) registers the MLP family with
+//! `native/<model>/<step>` artifacts, `Runtime::native()` executes them
+//! through `runtime::native`, and the trainer / compression controllers
+//! are the exact same code paths the PJRT build drives. The `mlp-s`
+//! model (784→32→16→10 on `synth-blobs`) keeps each test in debug-build
+//! seconds.
+//!
+//! Hyperparameters were chosen with margin to spare (λ=1.0 at lr 2e-3
+//! reaches ~0.9 zero-rate with ~0.9+ accuracy on synth-blobs; debiasing
+//! then drops eval loss by ~3× — verified across 16 seeds), so the
+//! assertions are robust, and the run itself is bit-deterministic per
+//! seed for any `PROXCOMP_THREADS`.
+
+use proxcomp::compress::{self, debias};
+use proxcomp::config::{Method, Optimizer, RunConfig};
+use proxcomp::coordinator::{trainer::StepScalars, Trainer};
+use proxcomp::inference::{BatchConfig, BatchServer, Engine, WeightMode};
+use proxcomp::runtime::{Backend, Manifest, Runtime};
+use proxcomp::tensor::Tensor;
+use proxcomp::util::json::Json;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn manifest() -> Manifest {
+    Manifest::native()
+}
+
+fn small_cfg() -> RunConfig {
+    RunConfig {
+        model: "mlp-s".into(),
+        steps: 60,
+        lambda: 1.0,
+        lr: 2e-3,
+        retrain_lr: 1e-3,
+        train_examples: 512,
+        test_examples: 256,
+        artifacts_dir: "native".into(),
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn native_manifest_covers_all_models_and_steps() {
+    let m = manifest();
+    for name in ["mlp", "mlp-s"] {
+        let entry = m.model(name).unwrap();
+        for step in [
+            "train_prox_adam",
+            "train_prox_rmsprop",
+            "train_prox_sgd",
+            "train_masked",
+            "train_mm",
+            "eval",
+            "infer",
+        ] {
+            let a = entry.artifact(step).unwrap();
+            assert!(!a.inputs.is_empty() && !a.outputs.is_empty(), "{name}/{step}");
+        }
+    }
+}
+
+#[test]
+fn native_training_decreases_loss_and_creates_exact_zeros() {
+    let m = manifest();
+    let mut rt = Runtime::native();
+    assert_eq!(rt.backend(), Backend::Native);
+    let cfg = small_cfg();
+    let mut trainer = Trainer::new(&m, &cfg).unwrap();
+    let scalars = StepScalars { lambda: 1.0, lr: 2e-3, mu: 0.0 };
+    let first = trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
+    let mut last = first;
+    for _ in 0..24 {
+        last = trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
+    }
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    // The prox writes exact zeros during training (Section 2.2).
+    assert!(trainer.state.params.zero_weights() > 100, "prox produced no zeros");
+    // Timestep advanced through the OptT role round-trip.
+    assert_eq!(trainer.state.t, 25.0);
+}
+
+#[test]
+fn native_rmsprop_and_sgd_artifacts_run() {
+    let m = manifest();
+    let mut rt = Runtime::native();
+    for step in ["train_prox_rmsprop", "train_prox_sgd"] {
+        let cfg = small_cfg();
+        let mut trainer = Trainer::new(&m, &cfg).unwrap();
+        let scalars = StepScalars { lambda: 0.5, lr: 1e-3, mu: 0.0 };
+        let loss = trainer.step(&mut rt, step, scalars).unwrap();
+        assert!(loss.is_finite(), "{step} produced {loss}");
+    }
+}
+
+#[test]
+fn native_lambda_zero_never_zeroes_weights() {
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let cfg = small_cfg();
+    let mut trainer = Trainer::new(&m, &cfg).unwrap();
+    let scalars = StepScalars { lambda: 0.0, lr: 1e-3, mu: 0.0 };
+    for _ in 0..5 {
+        trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
+    }
+    assert_eq!(trainer.state.params.zero_weights(), 0);
+}
+
+#[test]
+fn native_masked_step_never_resurrects_zeros() {
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let cfg = small_cfg();
+    let mut trainer = Trainer::new(&m, &cfg).unwrap();
+    // Sparsify hard, then retrain.
+    let scalars = StepScalars { lambda: 2.0, lr: 2e-3, mu: 0.0 };
+    for _ in 0..10 {
+        trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
+    }
+    let zeros_before = trainer.state.params.zero_weights();
+    assert!(zeros_before > 1000, "only {zeros_before} zeros after sparsification");
+    debias::retrain(&mut rt, &mut trainer, 10, 1e-4).unwrap();
+    assert!(
+        trainer.state.params.zero_weights() >= zeros_before,
+        "retraining resurrected zeros"
+    );
+}
+
+#[test]
+fn native_higher_lambda_compresses_more() {
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let mut rates = Vec::new();
+    for lam in [0.25f32, 1.0, 4.0] {
+        let cfg = small_cfg();
+        let mut trainer = Trainer::new(&m, &cfg).unwrap();
+        let scalars = StepScalars { lambda: lam, lr: 2e-3, mu: 0.0 };
+        for _ in 0..15 {
+            trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
+        }
+        rates.push(trainer.state.params.compression_rate());
+    }
+    assert!(rates[0] < rates[1] && rates[1] < rates[2], "{rates:?}");
+}
+
+#[test]
+fn native_seeds_reproduce_and_differ() {
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let run = |rt: &mut Runtime, seed: u64| {
+        let mut cfg = small_cfg();
+        cfg.seed = seed;
+        let mut trainer = Trainer::new(&m, &cfg).unwrap();
+        let scalars = StepScalars { lambda: 0.5, lr: 1e-3, mu: 0.0 };
+        let mut loss = 0.0;
+        for _ in 0..5 {
+            loss = trainer.step(rt, "train_prox_adam", scalars).unwrap();
+        }
+        loss
+    };
+    let a = run(&mut rt, 7);
+    let b = run(&mut rt, 7);
+    let c = run(&mut rt, 8);
+    assert_eq!(a, b, "same seed must reproduce bit-exactly");
+    assert_ne!(a, c, "different seeds must differ");
+}
+
+#[test]
+fn native_evaluate_returns_sane_metrics() {
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let cfg = small_cfg();
+    let mut trainer = Trainer::new(&m, &cfg).unwrap();
+    let eval = trainer.evaluate(&mut rt).unwrap();
+    assert_eq!(eval.n, cfg.test_examples);
+    assert!(eval.accuracy >= 0.0 && eval.accuracy <= 1.0);
+    // Untrained net: random-logit CE on synth-blobs (looser than the
+    // synth-mnist band — blob inputs are larger-scale).
+    assert!(eval.loss > 1.5 && eval.loss < 10.0, "loss {}", eval.loss);
+    // Training improves accuracy.
+    let scalars = StepScalars { lambda: 0.0, lr: 2e-3, mu: 0.0 };
+    for _ in 0..25 {
+        trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
+    }
+    let eval2 = trainer.evaluate(&mut rt).unwrap();
+    assert!(eval2.accuracy > eval.accuracy + 0.1, "{} -> {}", eval.accuracy, eval2.accuracy);
+}
+
+#[test]
+fn native_spc_controller_end_to_end() {
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let mut cfg = small_cfg();
+    cfg.steps = 40;
+    cfg.retrain_steps = 10;
+    let r = compress::spc::run(&mut rt, &m, &cfg).unwrap();
+    assert_eq!(r.method, "SpC(Retrain)");
+    assert!(r.compression_rate > 0.3, "rate {}", r.compression_rate);
+    assert!(r.accuracy > 0.5, "accuracy {}", r.accuracy);
+    assert!(r.nnz < r.total_weights, "no zeros: nnz {} of {}", r.nnz, r.total_weights);
+}
+
+#[test]
+fn native_pru_controller_hits_target_rate() {
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let mut cfg = small_cfg();
+    cfg.method = Method::Pru;
+    cfg.steps = 20;
+    cfg.pru_target_rate = 0.8;
+    cfg.retrain_steps = 5;
+    let r = compress::pruning::run(&mut rt, &m, &cfg).unwrap();
+    assert!((r.compression_rate - 0.8).abs() < 0.02, "rate {}", r.compression_rate);
+}
+
+#[test]
+fn native_mm_controller_produces_sparse_model() {
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let mut cfg = small_cfg();
+    cfg.method = Method::MM;
+    cfg.steps = 60;
+    cfg.pru_target_rate = 0.8; // ℓ0-constraint C-step target (κ)
+    cfg.mm_mu0 = 0.1;
+    cfg.mm_mu_growth = 1.5;
+    cfg.mm_compress_every = 6;
+    cfg.lr = 0.02;
+    let r = compress::mm::run(&mut rt, &m, &cfg).unwrap();
+    // The ℓ0 C-step pins the rate exactly.
+    assert!((r.compression_rate - 0.8).abs() < 0.02, "MM rate {}", r.compression_rate);
+    assert!(r.accuracy > 0.5, "MM accuracy collapsed: {}", r.accuracy);
+}
+
+#[test]
+fn native_optimizer_selection_routes_to_artifact() {
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let mut cfg = small_cfg();
+    cfg.optimizer = Optimizer::ProxRmsprop;
+    cfg.steps = 10;
+    let r = compress::spc::run(&mut rt, &m, &cfg).unwrap();
+    assert!(r.accuracy > 0.0);
+}
+
+#[test]
+fn native_batch_server_serves_trained_model() {
+    // The serving front-end over a natively trained engine: per-request
+    // logits must match the engine's own answers bit-for-bit.
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let cfg = small_cfg();
+    let mut trainer = Trainer::new(&m, &cfg).unwrap();
+    let scalars = StepScalars { lambda: 1.0, lr: 2e-3, mu: 0.0 };
+    for _ in 0..10 {
+        trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
+    }
+    let engine = Arc::new(Engine::from_bundle("mlp-s", &trainer.state.params, true).unwrap());
+    let server = BatchServer::start(
+        Arc::clone(&engine),
+        BatchConfig::new(8, Duration::from_millis(20), (1, 28, 28)),
+    );
+    let pending: Vec<_> = (0..12)
+        .map(|i| {
+            let sample = trainer.test_data.image(i % trainer.test_data.n).to_vec();
+            (sample.clone(), server.submit(&sample).unwrap())
+        })
+        .collect();
+    for (sample, p) in pending {
+        let got = p.wait().unwrap();
+        let x = Tensor::new(vec![1, 1, 28, 28], sample);
+        assert_eq!(got, engine.forward(&x).unwrap().data);
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 12);
+    assert!(stats.batches >= 2);
+}
+
+#[test]
+fn native_checkpoint_roundtrip_through_trained_model() {
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let cfg = small_cfg();
+    let mut trainer = Trainer::new(&m, &cfg).unwrap();
+    let scalars = StepScalars { lambda: 2.0, lr: 2e-3, mu: 0.0 };
+    for _ in 0..10 {
+        trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
+    }
+    let dir = std::env::temp_dir().join("proxcomp_native_e2e");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("m.pxcp");
+    let mut meta = Json::obj();
+    meta.set("model", Json::from("mlp-s"));
+    proxcomp::checkpoint::save(&path, &trainer.state.params, &meta).unwrap();
+    let ck = proxcomp::checkpoint::load(&path).unwrap();
+    assert_eq!(ck.params.values, trainer.state.params.values);
+    // The engine accepts the loaded bundle (mlp family by name prefix).
+    let engine = Engine::from_bundle("mlp-s", &ck.params, true).unwrap();
+    assert!(engine.model_size_bytes() > 0);
+}
+
+/// The acceptance pipeline: SpC from random init decreases eval loss,
+/// debiasing improves (or preserves) eval accuracy while strictly
+/// improving eval loss, and the compressed model serves through the
+/// dispatch engine + `BatchServer` with compression factor > 1.
+#[test]
+fn native_full_pipeline_spc_debias_compress_serve() {
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let mut cfg = small_cfg();
+    cfg.steps = 60;
+    cfg.retrain_steps = 40;
+    let t0 = std::time::Instant::now();
+    let mut trainer = Trainer::new(&m, &cfg).unwrap();
+
+    // Phase 0: untrained baseline.
+    let eval0 = trainer.evaluate(&mut rt).unwrap();
+
+    // Phase 1: SpC — ℓ1 sparse coding with Prox-ADAM from random init.
+    let scalars = StepScalars { lambda: cfg.lambda, lr: cfg.lr, mu: 0.0 };
+    compress::spc::run_with_evals(&mut rt, &mut trainer, "train_prox_adam", cfg.steps, scalars, 0)
+        .unwrap();
+    let eval_sparse = trainer.evaluate(&mut rt).unwrap();
+    let rate_sparse = trainer.state.params.compression_rate();
+    assert!(
+        eval_sparse.loss < eval0.loss,
+        "SpC did not decrease eval loss: {} -> {}",
+        eval0.loss,
+        eval_sparse.loss
+    );
+    assert!(rate_sparse > 0.5, "SpC rate too low: {rate_sparse}");
+    assert!(rate_sparse < 0.999, "SpC collapsed the network: {rate_sparse}");
+
+    // Phase 2: debias (Section 2.4) — masked retraining without the ℓ1
+    // term recovers the shrinkage bias: eval loss strictly improves and
+    // accuracy improves or is preserved.
+    debias::retrain(&mut rt, &mut trainer, cfg.retrain_steps, cfg.retrain_lr).unwrap();
+    let eval_debias = trainer.evaluate(&mut rt).unwrap();
+    assert!(
+        eval_debias.loss < eval_sparse.loss,
+        "debias did not improve eval loss: {} -> {}",
+        eval_sparse.loss,
+        eval_debias.loss
+    );
+    assert!(
+        eval_debias.accuracy >= eval_sparse.accuracy - 0.02,
+        "debias lost accuracy: {} -> {}",
+        eval_sparse.accuracy,
+        eval_debias.accuracy
+    );
+    assert!(eval_debias.accuracy > 0.75, "final accuracy too low: {}", eval_debias.accuracy);
+
+    // Phase 3: compress + deploy. finish_run assembles the RunResult
+    // (compression factor > 1×), the dispatch engine picks per-layer
+    // formats, and the batch server serves with bit-exact parity.
+    let result = compress::finish_run(&mut rt, &mut trainer, "SpC(Retrain)", cfg.lambda as f64, t0)
+        .unwrap();
+    assert!(result.times_factor() > 1.0, "compression factor {} not > 1", result.times_factor());
+    assert!(result.compression_rate > 0.5);
+
+    let engine =
+        Arc::new(Engine::from_bundle_mode("mlp-s", &trainer.state.params, WeightMode::Auto).unwrap());
+    let formats = engine.layer_formats();
+    assert!(!formats.is_empty(), "layer_formats() report is empty");
+    assert!(formats.iter().all(|(_, f)| *f != "dense"), "dense leak in deployment: {formats:?}");
+
+    let server = BatchServer::start(
+        Arc::clone(&engine),
+        BatchConfig::new(8, Duration::from_millis(20), (1, 28, 28)),
+    );
+    let pending: Vec<_> = (0..16)
+        .map(|i| {
+            let sample = trainer.test_data.image(i % trainer.test_data.n).to_vec();
+            (sample.clone(), server.submit(&sample).unwrap())
+        })
+        .collect();
+    let ncls = m.model("mlp-s").unwrap().num_classes;
+    for (sample, p) in pending {
+        let got = p.wait().unwrap();
+        assert_eq!(got.len(), ncls);
+        let x = Tensor::new(vec![1, 1, 28, 28], sample);
+        assert_eq!(got, engine.forward(&x).unwrap().data, "served logits diverge");
+    }
+    assert_eq!(server.stats().requests, 16);
+}

@@ -765,3 +765,129 @@ fn prop_engine_dense_sparse_parity_random_weights() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Native training backend (runtime::native)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_native_prox_adam_matches_scalar_reference() {
+    // The backend's vector Prox-ADAM against an independent elementwise
+    // reference — bit-exact, across timesteps, rates and λ (including
+    // λ=0, where the prox must be the identity).
+    use proxcomp::runtime::native;
+    let mut rng = Rng::new(140);
+    for case in 0..CASES {
+        let n = 1 + rng.below(300);
+        let mut w = rng.normal_vec(n, 0.5);
+        let g = rng.normal_vec(n, 1.0);
+        let mut m = rng.normal_vec(n, 0.1);
+        let mut v: Vec<f32> = rng.normal_vec(n, 0.1).iter().map(|x| x * x).collect();
+        let t = (1 + rng.below(200)) as f32;
+        let lr = rng.range(1e-4, 5e-2);
+        let lambda = if case % 3 == 0 { 0.0 } else { rng.range(0.0, 4.0) };
+        // Scalar reference, one element at a time.
+        let (mut rw, mut rm, mut rv) = (w.clone(), m.clone(), v.clone());
+        let (b1, b2, eps) = (native::BETA1, native::BETA2, native::EPS);
+        for i in 0..n {
+            rm[i] = b1 * rm[i] + (1.0 - b1) * g[i];
+            rv[i] = b2 * rv[i] + (1.0 - b2) * g[i] * g[i];
+            let mhat = rm[i] / (1.0 - b1.powf(t));
+            let vhat = rv[i] / (1.0 - b2.powf(t));
+            rw[i] -= lr * mhat / (vhat.sqrt() + eps);
+            if lambda > 0.0 {
+                let thresh = lr * lambda;
+                let a = rw[i].abs() - thresh;
+                rw[i] = if a > 0.0 { a * rw[i].signum() } else { 0.0 };
+            }
+        }
+        native::prox_adam_update(&mut w, &g, &mut m, &mut v, t, lr, lambda);
+        assert_bits_eq(&w, &rw, &format!("case {case}: weights (λ={lambda})"));
+        assert_bits_eq(&m, &rm, &format!("case {case}: first moment"));
+        assert_bits_eq(&v, &rv, &format!("case {case}: second moment"));
+    }
+}
+
+#[test]
+fn prop_native_prox_rmsprop_and_sgd_match_scalar_reference() {
+    use proxcomp::runtime::native;
+    let mut rng = Rng::new(141);
+    for case in 0..CASES {
+        let n = 1 + rng.below(200);
+        let g = rng.normal_vec(n, 1.0);
+        let lr = rng.range(1e-4, 5e-2);
+        let lambda = rng.range(0.0, 2.0);
+        // RMSProp.
+        let mut w = rng.normal_vec(n, 0.5);
+        let mut v: Vec<f32> = rng.normal_vec(n, 0.1).iter().map(|x| x * x).collect();
+        let (mut rw, mut rv) = (w.clone(), v.clone());
+        for i in 0..n {
+            rv[i] = native::RMS_RHO * rv[i] + (1.0 - native::RMS_RHO) * g[i] * g[i];
+            rw[i] -= lr * g[i] / (rv[i].sqrt() + native::EPS);
+            if lambda > 0.0 {
+                let a = rw[i].abs() - lr * lambda;
+                rw[i] = if a > 0.0 { a * rw[i].signum() } else { 0.0 };
+            }
+        }
+        native::prox_rmsprop_update(&mut w, &g, &mut v, lr, lambda);
+        assert_bits_eq(&w, &rw, &format!("rmsprop case {case}"));
+        assert_bits_eq(&v, &rv, &format!("rmsprop v case {case}"));
+        // SGD.
+        let mut w = rng.normal_vec(n, 0.5);
+        let mut rw = w.clone();
+        for i in 0..n {
+            rw[i] -= lr * g[i];
+            if lambda > 0.0 {
+                let a = rw[i].abs() - lr * lambda;
+                rw[i] = if a > 0.0 { a * rw[i].signum() } else { 0.0 };
+            }
+        }
+        native::prox_sgd_update(&mut w, &g, lr, lambda);
+        assert_bits_eq(&w, &rw, &format!("sgd case {case}"));
+    }
+}
+
+#[test]
+fn prop_native_training_bit_deterministic_across_env_thread_counts() {
+    // The whole native training loop — data synthesis, batching,
+    // forward, backward, Prox-ADAM, evaluate — must be bit-identical
+    // under PROXCOMP_THREADS=1 and =4 (the CI thread matrix): the
+    // kernels partition work but never change any reduction order.
+    use proxcomp::config::RunConfig;
+    use proxcomp::coordinator::{trainer::StepScalars, Trainer};
+    use proxcomp::runtime::{Manifest, Runtime};
+    let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = EnvThreadsGuard(std::env::var("PROXCOMP_THREADS").ok());
+    let manifest = Manifest::native();
+    let cfg = RunConfig {
+        model: "mlp-s".into(),
+        steps: 8,
+        lambda: 1.0,
+        lr: 2e-3,
+        train_examples: 96,
+        test_examples: 64,
+        artifacts_dir: "native".into(),
+        ..RunConfig::default()
+    };
+    let run = |threads: &str| {
+        std::env::set_var("PROXCOMP_THREADS", threads);
+        let mut rt = Runtime::native();
+        let mut trainer = Trainer::new(&manifest, &cfg).unwrap();
+        let scalars = StepScalars { lambda: cfg.lambda, lr: cfg.lr, mu: 0.0 };
+        let mut losses = Vec::new();
+        for _ in 0..cfg.steps {
+            losses.push(trainer.step(&mut rt, "train_prox_adam", scalars).unwrap());
+        }
+        let eval = trainer.evaluate(&mut rt).unwrap();
+        (losses, trainer.state.params.values.clone(), eval.loss, eval.accuracy)
+    };
+    let (losses1, params1, eloss1, eacc1) = run("1");
+    let (losses4, params4, eloss4, eacc4) = run("4");
+    assert_bits_eq(&losses1, &losses4, "per-step losses");
+    assert_eq!(params1.len(), params4.len());
+    for (i, (a, b)) in params1.iter().zip(&params4).enumerate() {
+        assert_bits_eq(a, b, &format!("parameter leaf {i}"));
+    }
+    assert_eq!(eloss1.to_bits(), eloss4.to_bits(), "eval loss");
+    assert_eq!(eacc1, eacc4, "eval accuracy");
+}
