@@ -33,7 +33,9 @@ fn main() -> anyhow::Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(400);
     let retrain_steps = steps / 4;
-    let manifest = Manifest::load("artifacts")?;
+    // AOT artifacts when present; the native conv-capable CPU backend
+    // otherwise, so this example runs offline end to end.
+    let manifest = Manifest::load_or_native("artifacts")?;
     let mut rt = Runtime::cpu()?;
     let cfg = RunConfig {
         model: "lenet".into(),

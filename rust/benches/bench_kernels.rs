@@ -122,14 +122,80 @@ fn main() -> anyhow::Result<()> {
         json.row("prox_soft_threshold", name, us, "gelem_per_s", 400_000.0 / us / 1e3);
     }
 
-    // --- im2col + conv
-    println!("\nconv2d via im2col (LeNet conv2: 20→50 ch, 5×5, 12×12 input, B=64):");
-    let x = Tensor::new(vec![64, 20, 12, 12], rng.normal_vec(64 * 20 * 144, 1.0));
-    let w = Tensor::new(vec![50, 20, 5, 5], rng.normal_vec(25_000, 0.1));
-    let us = common::time_median_us(reps, || {
-        tensor::conv2d(&x, &w, &[0.0; 50], ConvSpec { stride: 1, pad: 0 });
-    });
-    println!("  dense: {us:.0} µs");
+    // --- conv training kernels (the native-backend LeNet path): im2col,
+    // forward matmul (dense + CSR), both backward products, col2im and
+    // the max-pool pair — all at the LeNet conv2 shape.
+    common::section("conv kernels: LeNet conv2 (20→50 ch, 5×5, 12×12 input, B=64)");
+    {
+        use proxcomp::runtime::native;
+        let spec = ConvSpec { stride: 1, pad: 0 };
+        let (bsz, ci, o, k) = (64usize, 20usize, 50usize, 5usize);
+        let (oh, ow) = (8usize, 8usize);
+        let (rows, kk) = (bsz * oh * ow, ci * k * k);
+        let threads = proxcomp::util::pool::max_threads();
+        let x = Tensor::new(vec![bsz, ci, 12, 12], rng.normal_vec(bsz * ci * 144, 1.0));
+        let w = Tensor::new(vec![o, ci, k, k], rng.normal_vec(o * kk, 0.1));
+        let bias = vec![0.0f32; o];
+
+        let us = common::time_median_us(reps, || {
+            tensor::conv2d(&x, &w, &bias, spec);
+        });
+        println!("{:<34} {:>10.0} µs", "dense conv2d (im2col+matmul_nt)", us);
+        json.row("conv_kernels", "dense_conv2d_fwd", us, "gflops", gflops(2.0 * (rows * o * kk) as f64, us));
+
+        let us_im2col = common::time_median_us(reps, || {
+            tensor::im2col(&x, k, k, spec);
+        });
+        println!("{:<34} {:>10.0} µs", "im2col unfold", us_im2col);
+        json.row("conv_kernels", "im2col", us_im2col, "gelem_per_s", (rows * kk) as f64 / us_im2col / 1e3);
+
+        let cols = tensor::im2col(&x, k, k, spec);
+        let us_fwd = common::time_median_us(reps, || {
+            native::fc_forward(&cols.data, rows, kk, &w.data, &bias, o, threads);
+        });
+        println!("{:<34} {:>10.0} µs", "native conv fwd matmul", us_fwd);
+        let fwd_flops = 2.0 * (rows * o * kk) as f64;
+        json.row("conv_kernels", "native_conv_fwd_matmul", us_fwd, "gflops", gflops(fwd_flops, us_fwd));
+
+        // Compressed forward: the same contraction with 90%-sparse CSR
+        // filters — what the serving engine runs after SpC.
+        let (_, csr) = sparse_matrix(&mut rng, o, kk, 0.9);
+        let us_csr = common::time_median_us(reps, || {
+            ops::dxct(&cols, &csr);
+        });
+        println!(
+            "{:<34} {:>10.0} µs ({:.2}× vs dense fwd)",
+            "CSR conv fwd @ 90%", us_csr, us_fwd / us_csr
+        );
+        let csr_flops = 2.0 * (rows * csr.nnz()) as f64;
+        json.row("conv_kernels", "csr_conv_fwd_90pct", us_csr, "gflops", gflops(csr_flops, us_csr));
+
+        let dy = rng.normal_vec(rows * o, 1.0);
+        let us_gw = common::time_median_us(reps, || {
+            native::fc_grad_w(&dy, rows, o, &cols.data, kk, threads);
+        });
+        println!("{:<34} {:>10.0} µs", "conv weight grad (colsᵀ·dy)", us_gw);
+        json.row("conv_kernels", "conv_grad_w", us_gw, "gflops", gflops(2.0 * (rows * o * kk) as f64, us_gw));
+
+        let us_gx = common::time_median_us(reps, || {
+            let dcols = native::fc_grad_x(&dy, rows, o, &w.data, kk, threads);
+            tensor::col2im(&Tensor::new(vec![rows, kk], dcols), bsz, ci, 12, 12, k, k, spec);
+        });
+        println!("{:<34} {:>10.0} µs", "conv input grad (dy·W + col2im)", us_gx);
+        json.row("conv_kernels", "conv_grad_x_col2im", us_gx, "gflops", gflops(2.0 * (rows * o * kk) as f64, us_gx));
+
+        let conv_out = Tensor::new(vec![bsz, o, oh, ow], rng.normal_vec(bsz * o * oh * ow, 1.0));
+        let us_pool = common::time_median_us(reps, || {
+            tensor::max_pool(&conv_out, 2, 2);
+        });
+        let d_pool = Tensor::new(vec![bsz, o, oh / 2, ow / 2], rng.normal_vec(bsz * o * 16, 1.0));
+        let us_poolb = common::time_median_us(reps, || {
+            tensor::max_pool_backward(&conv_out, &d_pool, 2, 2);
+        });
+        println!("{:<34} {:>10.0} µs / {:>6.0} µs bwd", "max-pool 2×2 fwd/bwd", us_pool, us_poolb);
+        json.row("conv_kernels", "max_pool_fwd", us_pool, "gelem_per_s", conv_out.numel() as f64 / us_pool / 1e3);
+        json.row("conv_kernels", "max_pool_bwd", us_poolb, "gelem_per_s", conv_out.numel() as f64 / us_poolb / 1e3);
+    }
 
     // --- format dispatch vs fixed CSR on structured matrices
     common::section("dispatch vs fixed-CSR: structure-matched formats (B=128)");

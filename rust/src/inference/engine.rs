@@ -199,14 +199,25 @@ impl Engine {
                 }
                 fc(&mut layers, &format!("fc{i}"), false)?;
             }
-            "lenet" => {
-                conv(&mut layers, "conv1", 1, 0, false)?;
-                layers.push(Layer::MaxPool { size: 2, stride: 2 });
-                conv(&mut layers, "conv2", 1, 0, false)?;
-                layers.push(Layer::MaxPool { size: 2, stride: 2 });
+            // The LeNet family ("lenet", "lenet-s", …): any number of
+            // conv{i} stages (each followed by a 2×2 max-pool) then the
+            // fc{i} chain, wiring derived from the leaf names — the same
+            // stage structure the native training backend executes, so
+            // natively trained conv checkpoints serve unchanged.
+            m if m.starts_with("lenet") => {
+                let mut i = 1;
+                while leaves.contains_key(format!("conv{i}_w").as_str()) {
+                    conv(&mut layers, &format!("conv{i}"), 1, 0, false)?;
+                    layers.push(Layer::MaxPool { size: 2, stride: 2 });
+                    i += 1;
+                }
                 layers.push(Layer::Flatten);
-                fc(&mut layers, "fc1", true)?;
-                fc(&mut layers, "fc2", false)?;
+                let mut i = 1;
+                while leaves.contains_key(format!("fc{}_w", i + 1).as_str()) {
+                    fc(&mut layers, &format!("fc{i}"), true)?;
+                    i += 1;
+                }
+                fc(&mut layers, &format!("fc{i}"), false)?;
             }
             "alexnet_s" => {
                 conv(&mut layers, "conv1", 1, 2, true)?;
@@ -504,6 +515,8 @@ impl Engine {
 }
 
 /// Conv through the CSR path: im2col then `Dmat × Cmat'` (paper Fig. 2).
+/// Exercised directly by the parity tests below — the engine's conv
+/// stages route every format through this one function.
 fn conv_via_csr(
     x: &Tensor,
     w: &WeightStore,
@@ -532,4 +545,152 @@ fn conv_via_csr(
         }
     }
     Ok(Tensor::new(vec![batch, o, oh, ow], out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ParamBundle;
+    use crate::sparse::dispatch::SparseFormat;
+    use crate::sparse::prox;
+    use crate::util::rng::Rng;
+
+    /// Randomly sparsified conv weights at `rate` zero fraction, as both
+    /// the 4-D tensor and the (O, C·KH·KW) im2col matrix view.
+    fn sparse_conv_w(
+        rng: &mut Rng,
+        o: usize,
+        c: usize,
+        kh: usize,
+        kw: usize,
+        rate: f64,
+    ) -> (Tensor, Vec<f32>) {
+        let mut flat = rng.normal_vec(o * c * kh * kw, 0.5);
+        let t = prox::magnitude_quantile(&flat, rate);
+        prox::hard_threshold_inplace(&mut flat, t);
+        (Tensor::new(vec![o, c, kh, kw], flat.clone()), flat)
+    }
+
+    fn assert_close(got: &Tensor, want: &Tensor, what: &str) {
+        assert_eq!(got.shape, want.shape, "{what}: shape");
+        for (g, w) in got.data.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-4 * w.abs().max(1.0), "{what}: {g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn conv_via_csr_matches_dense_conv2d_across_all_formats() {
+        // Every storage format the dispatch can choose must produce the
+        // same conv output as the dense tensor::conv2d reference on the
+        // same randomly sparsified weights.
+        // Geometry chosen so the (O, C·KH·KW) = (8, 16) matrix is
+        // tileable by the Block-ELL 8×16 block (its packer asserts it).
+        let mut rng = Rng::new(17);
+        let (o, c, kh, kw) = (8usize, 4usize, 2usize, 2usize);
+        let (w4, flat) = sparse_conv_w(&mut rng, o, c, kh, kw, 0.7);
+        let bias: Vec<f32> = rng.normal_vec(o, 0.3);
+        let x = Tensor::new(vec![2, c, 8, 8], rng.normal_vec(2 * c * 64, 1.0));
+        let spec = ConvSpec { stride: 1, pad: 0 };
+        let want = tensor::conv2d(&x, &w4, &bias, spec);
+        let k = c * kh * kw;
+        let stores = [
+            ("dense", WeightStore::Dense(Tensor::new(vec![o, k], flat.clone()))),
+            ("CSR", WeightStore::Csr(CsrMatrix::from_dense(&flat, o, k))),
+            ("auto", WeightStore::Auto(DynSparseMatrix::from_dense(&flat, o, k))),
+        ];
+        for (name, store) in &stores {
+            let got = conv_via_csr(&x, store, &bias, c, kh, kw, spec).unwrap();
+            assert_close(&got, &want, name);
+        }
+        for fmt in [
+            SparseFormat::Csr,
+            SparseFormat::Coo,
+            SparseFormat::Ell,
+            SparseFormat::Dia,
+            SparseFormat::BlockEll,
+        ] {
+            let store = WeightStore::Auto(DynSparseMatrix::from_dense_as(fmt, &flat, o, k));
+            let got = conv_via_csr(&x, &store, &bias, c, kh, kw, spec).unwrap();
+            assert_close(&got, &want, fmt.name());
+        }
+    }
+
+    #[test]
+    fn conv_via_csr_edge_geometries() {
+        // Stride 2 / pad 0, pad 1, a 1×1 kernel, and a window that does
+        // not divide the input — all against the dense reference.
+        let mut rng = Rng::new(29);
+        for (b, c, h, w, o, kh, kw, stride, pad) in [
+            (1usize, 2usize, 7usize, 7usize, 3usize, 3usize, 3usize, 2usize, 0usize),
+            (2, 1, 6, 5, 2, 3, 3, 1, 1),
+            (1, 3, 4, 4, 4, 1, 1, 1, 0),
+            (2, 2, 7, 7, 3, 2, 2, 2, 0), // out 3×3: window not dividing input
+        ] {
+            let (w4, flat) = sparse_conv_w(&mut rng, o, c, kh, kw, 0.5);
+            let bias: Vec<f32> = rng.normal_vec(o, 0.3);
+            let x = Tensor::new(vec![b, c, h, w], rng.normal_vec(b * c * h * w, 1.0));
+            let spec = ConvSpec { stride, pad };
+            let want = tensor::conv2d(&x, &w4, &bias, spec);
+            let store = WeightStore::Csr(CsrMatrix::from_dense(&flat, o, c * kh * kw));
+            let got = conv_via_csr(&x, &store, &bias, c, kh, kw, spec).unwrap();
+            assert_close(&got, &want, &format!("s={stride} p={pad} {h}x{w}"));
+        }
+    }
+
+    /// A lenet-s-shaped bundle small enough for forward tests: input
+    /// (1,10,10) → conv 2@3×3 → pool → conv 3@3×3 → pool → fc 3→4→2.
+    fn lenet_family_bundle(seed: u64) -> ParamBundle {
+        let p = |name: &str, kind: &str, shape: Vec<usize>, prunable: bool| {
+            crate::runtime::ParamSpec::new(name, kind, shape, prunable)
+        };
+        let specs = vec![
+            p("conv1_w", "conv_w", vec![2, 1, 3, 3], true),
+            p("conv1_b", "conv_b", vec![2], false),
+            p("conv2_w", "conv_w", vec![3, 2, 3, 3], true),
+            p("conv2_b", "conv_b", vec![3], false),
+            p("fc1_w", "fc_w", vec![4, 3], true),
+            p("fc1_b", "fc_b", vec![4], false),
+            p("fc2_w", "fc_w", vec![2, 4], true),
+            p("fc2_b", "fc_b", vec![2], false),
+        ];
+        ParamBundle::he_init(&specs, seed)
+    }
+
+    #[test]
+    fn engine_wires_lenet_family_by_name_prefix() {
+        let bundle = lenet_family_bundle(3);
+        for name in ["lenet", "lenet-s", "lenet-custom"] {
+            let engine = Engine::from_bundle_mode(name, &bundle, WeightMode::Dense).unwrap();
+            assert_eq!(engine.num_classes, 2);
+            // conv1, conv2, fc1, fc2 weight layers reported in order.
+            let formats = engine.layer_formats();
+            let names: Vec<&str> = formats.iter().map(|(n, _)| n.as_str()).collect();
+            assert_eq!(names, ["conv1", "conv2", "fc1", "fc2"]);
+            let x = Tensor::new(vec![2, 1, 10, 10], vec![0.25; 200]);
+            let logits = engine.forward(&x).unwrap();
+            assert_eq!(logits.shape, vec![2, 2]);
+        }
+    }
+
+    #[test]
+    fn engine_sparse_modes_agree_with_dense_on_conv_net() {
+        let mut bundle = lenet_family_bundle(5);
+        // Sparsify the prunable leaves so CSR/dispatch have zeros to skip.
+        for (spec, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+            if spec.prunable {
+                let t = prox::magnitude_quantile(v, 0.5);
+                prox::hard_threshold_inplace(v, t);
+            }
+        }
+        let mut rng = Rng::new(41);
+        let x = Tensor::new(vec![3, 1, 10, 10], rng.normal_vec(300, 1.0));
+        let dense = Engine::from_bundle_mode("lenet-s", &bundle, WeightMode::Dense).unwrap();
+        let want = dense.forward(&x).unwrap();
+        for mode in [WeightMode::Csr, WeightMode::Auto] {
+            let engine = Engine::from_bundle_mode("lenet-s", &bundle, mode).unwrap();
+            let got = engine.forward(&x).unwrap();
+            assert_close(&got, &want, &format!("{mode:?}"));
+            assert!(engine.model_size_bytes() > 0);
+        }
+    }
 }

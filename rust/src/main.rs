@@ -5,7 +5,7 @@
 //!                   [--retrain-steps 200]
 //! proxcomp sweep    --model lenet --lambdas 0.5,1.0,2.0 [--method spc]
 //! proxcomp seeds    --model lenet --seeds 0,1,2 --optimizer rmsprop
-//! proxcomp pipeline [--model mlp-s] [--steps 200]   # offline SpC→debias→serve smoke
+//! proxcomp pipeline [--model mlp-s|lenet-s] [--steps 200]  # offline SpC→debias→serve smoke
 //! proxcomp infer    --checkpoint ckpt.pxcp [--sparse] [--batch 64]
 //! proxcomp report   --checkpoint ckpt.pxcp        # layer table + size
 //! proxcomp info                                   # manifest summary
@@ -156,36 +156,45 @@ fn cmd_seeds(args: &Args) -> Result<()> {
 }
 
 /// Offline SpC→debias→compress→serve smoke over the native backend —
-/// the CI `e2e-pipeline` gate. Exits nonzero unless (1) the final eval
-/// loss beats the untrained eval loss, (2) the deployed engine's
-/// per-layer format report is non-empty, and (3) the compression factor
-/// exceeds 1× — the paper pipeline's minimum liveness bar.
+/// the CI `e2e-pipeline` gate, for both the MLP and the LeNet (conv)
+/// families. Exits nonzero unless (1) a conv model's backward passes
+/// the finite-difference gradient check, (2) the final eval loss beats
+/// the untrained eval loss, (3) the deployed engine's per-layer format
+/// report is non-empty, and (4) the compression factor exceeds 1× —
+/// the paper pipeline's minimum liveness bar.
 fn cmd_pipeline(args: &Args) -> Result<()> {
     use proxcomp::compress::{self, debias};
     use proxcomp::coordinator::{trainer::StepScalars, Trainer};
     use proxcomp::inference::{BatchConfig, BatchServer, WeightMode};
+    use proxcomp::runtime::native;
     use std::sync::Arc;
     use std::time::Duration;
 
-    // Pipeline defaults are tuned for the native mlp-s model: fast
-    // everywhere (seconds in release), visible sparsity, and debias
-    // headroom. A `--config` file replaces these defaults wholesale
-    // (standard load_config semantics); CLI flags override either base.
+    // Pipeline defaults are tuned per model family — fast everywhere
+    // (seconds in release), visible sparsity, and debias headroom; the
+    // conv family trains a little longer at a gentler λ so the small
+    // filter banks keep live channels. A `--config` file replaces these
+    // defaults wholesale (standard load_config semantics); CLI flags
+    // override either base.
     let mut cfg = match args.get_str("config") {
         Some(path) => RunConfig::from_json_file(&path)?,
-        None => RunConfig {
-            model: "mlp-s".into(),
-            steps: 200,
-            retrain_steps: 80,
-            lambda: 0.5,
-            lr: 2e-3,
-            retrain_lr: 1e-3,
-            train_examples: 2048,
-            test_examples: 512,
-            eval_every: 0,
-            artifacts_dir: "native".into(),
-            ..RunConfig::default()
-        },
+        None => {
+            let model = args.str_or("model", "mlp-s");
+            let conv = model.starts_with("lenet");
+            RunConfig {
+                steps: if conv { 240 } else { 200 },
+                retrain_steps: 80,
+                lambda: if conv { 0.4 } else { 0.5 },
+                lr: 2e-3,
+                retrain_lr: 1e-3,
+                train_examples: 2048,
+                test_examples: 512,
+                eval_every: 0,
+                artifacts_dir: "native".into(),
+                model,
+                ..RunConfig::default()
+            }
+        }
     };
     cfg.apply_args(args)?;
     cfg.validate()?;
@@ -194,6 +203,16 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let manifest = Manifest::load_or_native(&cfg.artifacts_dir)?;
     let mut rt = Runtime::native();
     let t0 = std::time::Instant::now();
+
+    // Conv preflight: the hand-written conv/pool backward must agree
+    // with central finite differences before we trust it to train —
+    // part of the gate, not a warning.
+    let entry = manifest.model(&cfg.model)?;
+    if entry.params.iter().any(|s| s.kind == "conv_w") {
+        let (ok, total) = native::gradient_check(entry, cfg.seed, 4)?;
+        println!("[pipeline] conv gradient check: {ok}/{total} directions agree");
+    }
+
     let mut trainer = Trainer::new(&manifest, &cfg)?;
 
     let eval0 = trainer.evaluate(&mut rt)?;
@@ -386,8 +405,11 @@ SUBCOMMANDS
   sweep    λ-grid sweep           --lambdas 0.5,1.0,2.0
   seeds    multi-seed variance    --seeds 0,1,2,3
   pipeline offline SpC→debias→compress→serve smoke on the native CPU
-           backend (exits nonzero if loss fails to improve, the deployed
-           format report is empty, or compression ≤ 1×)
+           backend; --model mlp-s (default), mlp, lenet-s or lenet —
+           conv models run a finite-difference gradient preflight
+           (exits nonzero if the gradient check or loss improvement
+           fails, the deployed format report is empty, or compression
+           ≤ 1×)
   infer    run a checkpoint through the rust inference engine
            --checkpoint F [--sparse] [--batch N]
   report   layer-wise compression table for a checkpoint

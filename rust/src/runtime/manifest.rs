@@ -167,13 +167,19 @@ impl Manifest {
     }
 
     /// The built-in native-backend manifest: no files on disk, artifact
-    /// paths address `runtime::native` directly. Registers the MLP model
-    /// family:
+    /// paths address `runtime::native` directly. Registers the MLP and
+    /// LeNet model families:
     ///
     /// * `mlp` — 784→300→100→10 on `synth-mnist` (the paper-scale MLP);
     /// * `mlp-s` — 784→32→16→10 on `synth-blobs`, small enough that the
     ///   full SpC→debias→serve pipeline runs in seconds even in debug
-    ///   builds (the offline e2e tests and CI smoke use it).
+    ///   builds (the offline e2e tests and CI smoke use it);
+    /// * `lenet` — the paper's 430,500-weight LeNet-5 (conv 20@5×5 →
+    ///   pool → conv 50@5×5 → pool → fc 800→500→10) on `synth-mnist`,
+    ///   backing the conv rows of Table 3 / Figs. 6-8 offline;
+    /// * `lenet-s` — a downscaled LeNet (conv 6@3×3 → pool → conv
+    ///   12@3×3 → pool → fc 48→32→10) on the 16×16 `synth-blobs16`
+    ///   set, the conv twin of `mlp-s` for e2e tests and CI smoke.
     pub fn native() -> Manifest {
         use crate::runtime::native;
         let mut models = BTreeMap::new();
@@ -184,6 +190,32 @@ impl Manifest {
         models.insert(
             "mlp-s".to_string(),
             native::mlp_entry("mlp-s", &[1, 28, 28], &[32, 16], 10, "synth-blobs", 16, 32),
+        );
+        models.insert(
+            "lenet".to_string(),
+            native::lenet_entry(
+                "lenet",
+                &[1, 28, 28],
+                &[(20, 5), (50, 5)],
+                &[500],
+                10,
+                "synth-mnist",
+                32,
+                64,
+            ),
+        );
+        models.insert(
+            "lenet-s".to_string(),
+            native::lenet_entry(
+                "lenet-s",
+                &[1, 16, 16],
+                &[(6, 3), (12, 3)],
+                &[32],
+                10,
+                "synth-blobs16",
+                16,
+                32,
+            ),
         );
         Manifest { dir: PathBuf::from("native"), models }
     }
@@ -328,12 +360,11 @@ mod tests {
     }
 
     #[test]
-    fn native_manifest_registers_mlp_family() {
+    fn native_manifest_registers_mlp_and_lenet_families() {
         let m = Manifest::native();
-        for name in ["mlp", "mlp-s"] {
+        for name in ["mlp", "mlp-s", "lenet", "lenet-s"] {
             let entry = m.model(name).unwrap();
             assert_eq!(entry.num_classes, 10);
-            assert_eq!(entry.input_shape, vec![1, 28, 28]);
             for step in crate::runtime::native::NATIVE_STEPS {
                 let a = entry.artifact(step).unwrap();
                 assert!(crate::runtime::native::is_native_path(&a.file), "{:?}", a.file);
@@ -342,6 +373,16 @@ mod tests {
         }
         // Paper-scale mlp: 784→300→100→10 prunable weights.
         assert_eq!(m.model("mlp").unwrap().num_weights, 300 * 784 + 100 * 300 + 10 * 100);
+        // Paper-scale lenet: Table A1's 430,500 weights, conv leaves first.
+        let lenet = m.model("lenet").unwrap();
+        assert_eq!(lenet.num_weights, 430_500);
+        assert_eq!(lenet.params[0].kind, "conv_w");
+        assert_eq!(lenet.input_shape, vec![1, 28, 28]);
+        // lenet-s: the downscaled conv twin on the 16×16 blob set.
+        let small = m.model("lenet-s").unwrap();
+        assert_eq!(small.input_shape, vec![1, 16, 16]);
+        assert_eq!(small.dataset, "synth-blobs16");
+        assert_eq!(small.num_weights, 54 + 648 + 1536 + 320);
     }
 
     #[test]

@@ -12,26 +12,35 @@
 //!   registers them with the same role-slot signatures `aot.py` emits,
 //!   so `Trainer`, `spc::run`, `debias::retrain`, `pruning::run` and
 //!   `mm::run` drive either backend unchanged.
-//! * Forward = flatten → (matmul_nt + bias + ReLU)* → logits; loss is
-//!   softmax cross-entropy; backward is hand-written. The Prox-ADAM /
-//!   Prox-RMSProp / Prox-SGD update rules apply the soft-threshold
-//!   proximal operator (`sparse::prox`) inside every step, exactly as
-//!   the paper's Algorithms 1-2 (threshold = lr·λ, weights only).
-//! * Matmuls (forward and both backward products) partition over the
-//!   batch or the output axis via `util::pool::parallel_chunks` with a
-//!   fixed per-element reduction order, so training is multi-threaded
-//!   yet **bit-deterministic** for any `PROXCOMP_THREADS` (the same
-//!   contract the serving kernels pin in `tests/property.rs`).
+//! * Forward = `[conv → max-pool]* → flatten → (matmul_nt + bias +
+//!   ReLU)* → logits`; loss is softmax cross-entropy; backward is
+//!   hand-written. Conv uses the paper's im2col-as-matmul formulation
+//!   (shared with EIE, Han et al. 2016): forward multiplies the unfolded
+//!   input against filters flattened to `(O, C·KH·KW)` — exactly the
+//!   matrix the serving engine stores CSR — weight grad = colsᵀ·dy,
+//!   input grad = `col2im(dy·W)`. The Prox-ADAM / Prox-RMSProp /
+//!   Prox-SGD update rules apply the soft-threshold proximal operator
+//!   (`sparse::prox`) inside every step, exactly as the paper's
+//!   Algorithms 1-2 (threshold = lr·λ, weight leaves only — conv
+//!   filters see the prox on that same flattened view).
+//! * Matmuls (forward and both backward products), im2col/col2im and the
+//!   max-pool forward/backward all partition via
+//!   `util::pool::parallel_chunks` with a fixed per-element reduction
+//!   order (pool ties break to the first scan hit), so training is
+//!   multi-threaded yet **bit-deterministic** for any `PROXCOMP_THREADS`
+//!   (the same contract the serving kernels pin in `tests/property.rs`).
 //!
-//! The executor reconstructs the MLP from the literals themselves (2-D
-//! leaves are weights, the 1-D leaf that follows is its bias), so any
-//! width registered by the native manifest works without recompilation.
+//! The executor reconstructs the network from the literals themselves
+//! (4-D leaves are conv filter banks, 2-D leaves fc weights, the 1-D
+//! leaf after each is its bias), so any geometry registered by the
+//! native manifest works without recompilation.
 
 use std::path::{Path, PathBuf};
 
 use crate::runtime::client::HostValue;
 use crate::runtime::manifest::{Artifact, ModelEntry, ParamSpec, Role, Slot};
 use crate::sparse::prox;
+use crate::tensor::{self, ConvSpec, Tensor};
 use crate::util::pool;
 use crate::xla_compat as xla;
 
@@ -80,14 +89,65 @@ pub fn mlp_entry(
     train_batch: usize,
     eval_batch: usize,
 ) -> ModelEntry {
-    let mut dims = vec![input_shape.iter().product::<usize>()];
+    let mut params = Vec::new();
+    push_fc_params(&mut params, input_shape.iter().product::<usize>(), hidden, num_classes);
+    entry_from_params(name, dataset, input_shape, num_classes, train_batch, eval_batch, params)
+}
+
+/// Build a native-backend conv model entry with the `lenet` stage
+/// structure the serving engine wires: `[k×k conv (stride 1, pad 0) →
+/// 2×2/2 max-pool]* → flatten → fc…`, leaves named `conv{i}_w` /
+/// `conv{i}_b` then `fc{i}_w` / `fc{i}_b` in manifest flattening order
+/// (weight leaves prunable, biases not). `convs` lists `(out_channels,
+/// kernel)` per conv stage, `hidden` the fc widths before the
+/// `num_classes` head; the fc1 fan-in is derived by walking the
+/// conv/pool spatial geometry from `input_shape`.
+pub fn lenet_entry(
+    name: &str,
+    input_shape: &[usize],
+    convs: &[(usize, usize)],
+    hidden: &[usize],
+    num_classes: usize,
+    dataset: &str,
+    train_batch: usize,
+    eval_batch: usize,
+) -> ModelEntry {
+    assert_eq!(input_shape.len(), 3, "conv input shape must be (C, H, W)");
+    let (mut c, mut h, mut w) = (input_shape[0], input_shape[1], input_shape[2]);
+    let mut params = Vec::new();
+    for (i, &(o, k)) in convs.iter().enumerate() {
+        params.push(ParamSpec::new(&format!("conv{}_w", i + 1), "conv_w", vec![o, c, k, k], true));
+        params.push(ParamSpec::new(&format!("conv{}_b", i + 1), "conv_b", vec![o], false));
+        h = tensor::out_dim(tensor::out_dim(h, k, 1, 0), POOL, POOL, 0);
+        w = tensor::out_dim(tensor::out_dim(w, k, 1, 0), POOL, POOL, 0);
+        c = o;
+    }
+    push_fc_params(&mut params, c * h * w, hidden, num_classes);
+    entry_from_params(name, dataset, input_shape, num_classes, train_batch, eval_batch, params)
+}
+
+/// Append the `fc{i}_w` / `fc{i}_b` chain `flat → hidden… → classes`.
+fn push_fc_params(params: &mut Vec<ParamSpec>, flat: usize, hidden: &[usize], num_classes: usize) {
+    let mut dims = vec![flat];
     dims.extend_from_slice(hidden);
     dims.push(num_classes);
-    let mut params = Vec::new();
     for i in 1..dims.len() {
         params.push(ParamSpec::new(&format!("fc{i}_w"), "fc_w", vec![dims[i], dims[i - 1]], true));
         params.push(ParamSpec::new(&format!("fc{i}_b"), "fc_b", vec![dims[i]], false));
     }
+}
+
+/// Assemble a [`ModelEntry`] with every native step artifact from a
+/// finished parameter spec list (shared by the mlp/lenet builders).
+fn entry_from_params(
+    name: &str,
+    dataset: &str,
+    input_shape: &[usize],
+    num_classes: usize,
+    train_batch: usize,
+    eval_batch: usize,
+    params: Vec<ParamSpec>,
+) -> ModelEntry {
     let num_weights: usize = params.iter().filter(|s| s.prunable).map(ParamSpec::numel).sum();
     let num_params: usize = params.iter().map(ParamSpec::numel).sum();
     let mut artifacts = std::collections::BTreeMap::new();
@@ -451,89 +511,252 @@ fn decode_scalar(lit: &xla::Literal) -> anyhow::Result<f32> {
     Ok(leaf.data[0])
 }
 
-/// One FC layer's position within the flat leaf list.
-struct LayerIdx {
-    w: usize,
-    b: usize,
-    out: usize,
-    inp: usize,
+/// Pool window/stride applied after every conv stage — the `lenet`
+/// stage structure `inference::engine` wires for serving.
+pub const POOL: usize = 2;
+
+/// Conv geometry of the native stage graph (the engine's `lenet`
+/// wiring: valid convolution, unit stride).
+const CONV_SPEC: ConvSpec = ConvSpec { stride: 1, pad: 0 };
+
+/// One executable stage decoded from the leaf shapes: a 4-D leaf is a
+/// conv filter bank (its 1-D bias follows; a 2×2 max-pool follows the
+/// conv, per the engine's `lenet` graph), a 2-D leaf a fully-connected
+/// weight (ReLU after every fc but the head). `w`/`b` index the flat
+/// leaf list.
+#[derive(Debug, Clone, Copy)]
+enum Stage {
+    Conv { w: usize, b: usize, o: usize, c: usize, kh: usize, kw: usize },
+    Fc { w: usize, b: usize, out: usize, inp: usize },
 }
 
-/// Pair up `(2-D weight, 1-D bias)` leaves into the MLP layer stack.
-fn build_layers(leaves: &[Leaf]) -> anyhow::Result<Vec<LayerIdx>> {
-    let mut layers = Vec::new();
+/// Pair `(weight, bias)` leaves into the conv/pool/fc stage list.
+fn build_stages(leaves: &[Leaf]) -> anyhow::Result<Vec<Stage>> {
+    let mut stages = Vec::new();
+    let mut seen_fc = false;
     let mut i = 0;
     while i < leaves.len() {
         let w = &leaves[i];
-        anyhow::ensure!(w.shape.len() == 2, "leaf {i}: expected 2-D weight, got shape {:?}", w.shape);
         let b = leaves.get(i + 1).ok_or_else(|| anyhow::anyhow!("weight leaf {i} has no bias leaf"))?;
+        let out = w.shape.first().copied().unwrap_or(0);
         anyhow::ensure!(
-            b.shape.len() == 1 && b.shape[0] == w.shape[0],
-            "leaf {}: bias shape {:?} does not match weight rows {}",
+            b.shape.len() == 1 && b.shape[0] == out,
+            "leaf {}: bias shape {:?} does not match weight leading dim {out}",
             i + 1,
-            b.shape,
-            w.shape[0]
+            b.shape
         );
-        layers.push(LayerIdx { w: i, b: i + 1, out: w.shape[0], inp: w.shape[1] });
+        match w.shape.len() {
+            4 => {
+                anyhow::ensure!(!seen_fc, "leaf {i}: conv leaf after an fc leaf");
+                stages.push(Stage::Conv {
+                    w: i,
+                    b: i + 1,
+                    o: w.shape[0],
+                    c: w.shape[1],
+                    kh: w.shape[2],
+                    kw: w.shape[3],
+                });
+            }
+            2 => {
+                seen_fc = true;
+                stages.push(Stage::Fc { w: i, b: i + 1, out, inp: w.shape[1] });
+            }
+            other => anyhow::bail!("leaf {i}: expected a 2-D fc or 4-D conv weight, got rank {other}"),
+        }
         i += 2;
     }
-    anyhow::ensure!(!layers.is_empty(), "no parameter leaves");
-    for pair in layers.windows(2) {
-        anyhow::ensure!(pair[1].inp == pair[0].out, "layer widths do not chain: {} -> {}", pair[0].out, pair[1].inp);
+    anyhow::ensure!(!stages.is_empty(), "no parameter leaves");
+    anyhow::ensure!(matches!(stages.last(), Some(Stage::Fc { .. })), "model head must be fully-connected");
+    for pair in stages.windows(2) {
+        match (pair[0], pair[1]) {
+            (Stage::Fc { out, .. }, Stage::Fc { inp, .. }) => {
+                anyhow::ensure!(inp == out, "fc widths do not chain: {out} -> {inp}");
+            }
+            (Stage::Conv { o, .. }, Stage::Conv { c, .. }) => {
+                anyhow::ensure!(c == o, "conv channels do not chain: {o} -> {c}");
+            }
+            // Conv → fc flattening is validated against x at forward time
+            // (the flat width depends on the input's spatial size).
+            _ => {}
+        }
     }
-    Ok(layers)
+    Ok(stages)
 }
 
-/// Forward activations: `acts[0]` is the flattened input, `acts[l+1]`
-/// the post-ReLU output of layer `l` (the last entry is the raw logits).
+/// Head width (`build_stages` guarantees the last stage is fc).
+fn head_classes(stages: &[Stage]) -> usize {
+    match stages.last() {
+        Some(Stage::Fc { out, .. }) => *out,
+        _ => 0,
+    }
+}
+
+/// Per-conv-stage tensors cached by forward for the backward pass.
+struct ConvCache {
+    /// im2col unfold of the stage input, `(B·OH·OW, C·KH·KW)`.
+    cols: Tensor,
+    /// Pre-pool conv output `(B, O, OH, OW)` — the pool argmax source.
+    conv_out: Tensor,
+}
+
+/// Forward activations: `acts[s]` is the input to stage `s` (NCHW for
+/// conv stages, `(B, D)` flattened for fc stages); the extra last entry
+/// is the raw logits. `caches[s]` holds what conv backward reuses.
 struct ForwardPass {
-    acts: Vec<Vec<f32>>,
+    acts: Vec<Tensor>,
+    caches: Vec<Option<ConvCache>>,
     batch: usize,
 }
 
-fn forward(layers: &[LayerIdx], leaves: &[Leaf], x: &Leaf, threads: usize) -> anyhow::Result<ForwardPass> {
-    anyhow::ensure!(!x.shape.is_empty(), "input x must be batched");
-    let batch = x.shape[0];
-    let d0: usize = x.shape[1..].iter().product();
-    anyhow::ensure!(d0 == layers[0].inp, "input example size {d0} does not match fc1 fan-in {}", layers[0].inp);
-    let mut acts: Vec<Vec<f32>> = Vec::with_capacity(layers.len() + 1);
-    acts.push(x.data.clone());
-    for (l, layer) in layers.iter().enumerate() {
-        let mut h =
-            fc_forward(&acts[l], batch, layer.inp, &leaves[layer.w].data, &leaves[layer.b].data, layer.out, threads);
-        if l + 1 < layers.len() {
-            for v in h.iter_mut() {
-                if *v < 0.0 {
-                    *v = 0.0;
+/// Scatter a `(B·OH·OW, O)` matmul output into NCHW — the same
+/// transpose the serving engine's `conv_via_csr` applies.
+fn nchw_from_rows(y: &[f32], b: usize, o: usize, oh: usize, ow: usize) -> Tensor {
+    let mut out = vec![0.0f32; b * o * oh * ow];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (bi * oh + oy) * ow + ox;
+                for oc in 0..o {
+                    out[((bi * o + oc) * oh + oy) * ow + ox] = y[row * o + oc];
                 }
             }
         }
-        acts.push(h);
     }
-    Ok(ForwardPass { acts, batch })
+    Tensor::new(vec![b, o, oh, ow], out)
+}
+
+/// Inverse of [`nchw_from_rows`]: gather NCHW into `(B·OH·OW, O)` rows.
+fn rows_from_nchw(t: &Tensor) -> Vec<f32> {
+    let (b, o, oh, ow) = (t.shape[0], t.shape[1], t.shape[2], t.shape[3]);
+    let mut out = vec![0.0f32; t.numel()];
+    for bi in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (bi * oh + oy) * ow + ox;
+                for oc in 0..o {
+                    out[row * o + oc] = t.data[((bi * o + oc) * oh + oy) * ow + ox];
+                }
+            }
+        }
+    }
+    out
+}
+
+fn forward(stages: &[Stage], leaves: &[Leaf], x: &Leaf, threads: usize) -> anyhow::Result<ForwardPass> {
+    anyhow::ensure!(!x.shape.is_empty(), "input x must be batched");
+    let batch = x.shape[0];
+    let mut h = Tensor::new(x.shape.clone(), x.data.clone());
+    let mut acts: Vec<Tensor> = Vec::with_capacity(stages.len() + 1);
+    let mut caches: Vec<Option<ConvCache>> = Vec::with_capacity(stages.len());
+    let last = stages.len() - 1;
+    for (s, stage) in stages.iter().enumerate() {
+        match *stage {
+            Stage::Conv { w: wi, b: bi, o, c, kh, kw } => {
+                anyhow::ensure!(
+                    h.rank() == 4 && h.shape[1] == c,
+                    "conv stage {s} expects (B, {c}, H, W) input, got {:?}",
+                    h.shape
+                );
+                let (ih, iw) = (h.shape[2], h.shape[3]);
+                anyhow::ensure!(ih >= kh && iw >= kw, "conv stage {s}: {kh}x{kw} kernel exceeds {ih}x{iw} input");
+                let oh = tensor::out_dim(ih, kh, CONV_SPEC.stride, CONV_SPEC.pad);
+                let ow = tensor::out_dim(iw, kw, CONV_SPEC.stride, CONV_SPEC.pad);
+                anyhow::ensure!(
+                    oh >= POOL && ow >= POOL,
+                    "conv stage {s}: {oh}x{ow} output smaller than the {POOL}x{POOL} pool"
+                );
+                let cols = tensor::im2col(&h, kh, kw, CONV_SPEC);
+                let y = fc_forward(
+                    &cols.data,
+                    batch * oh * ow,
+                    c * kh * kw,
+                    &leaves[wi].data,
+                    &leaves[bi].data,
+                    o,
+                    threads,
+                );
+                let conv_out = nchw_from_rows(&y, batch, o, oh, ow);
+                let pooled = tensor::max_pool(&conv_out, POOL, POOL);
+                acts.push(std::mem::replace(&mut h, pooled));
+                caches.push(Some(ConvCache { cols, conv_out }));
+            }
+            Stage::Fc { w: wi, b: bi, out, inp } => {
+                if h.rank() != 2 {
+                    let rest: usize = h.shape[1..].iter().product();
+                    h = h.reshape(vec![batch, rest]);
+                }
+                anyhow::ensure!(
+                    h.shape[1] == inp,
+                    "fc stage {s}: input size {} does not match fan-in {inp}",
+                    h.shape[1]
+                );
+                let mut y = fc_forward(&h.data, batch, inp, &leaves[wi].data, &leaves[bi].data, out, threads);
+                if s < last {
+                    for v in y.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                acts.push(std::mem::replace(&mut h, Tensor::new(vec![batch, out], y)));
+                caches.push(None);
+            }
+        }
+    }
+    acts.push(h);
+    Ok(ForwardPass { acts, caches, batch })
 }
 
 /// Backward pass from `dlogits`; returns per-leaf gradients aligned with
 /// the leaf order (weight grads at weight indices, bias grads at bias
-/// indices).
-fn backward(layers: &[LayerIdx], leaves: &[Leaf], fwd: &ForwardPass, dlogits: Vec<f32>, threads: usize) -> Vec<Vec<f32>> {
-    let b = fwd.batch;
+/// indices). Conv gradients use the im2col formulation: weight grad =
+/// colsᵀ·dy, input grad = `col2im(dy·W)`, with the max-pool gradient
+/// routed by `tensor::max_pool_backward` first.
+fn backward(stages: &[Stage], leaves: &[Leaf], fwd: &ForwardPass, dlogits: Vec<f32>, threads: usize) -> Vec<Vec<f32>> {
+    let bsz = fwd.batch;
     let mut grads: Vec<Vec<f32>> = leaves.iter().map(|_| Vec::new()).collect();
-    let mut dz = dlogits;
-    for l in (0..layers.len()).rev() {
-        let layer = &layers[l];
-        grads[layer.w] = fc_grad_w(&dz, b, layer.out, &fwd.acts[l], layer.inp, threads);
-        grads[layer.b] = fc_grad_b(&dz, b, layer.out);
-        if l > 0 {
-            let mut dx = fc_grad_x(&dz, b, layer.out, &leaves[layer.w].data, layer.inp, threads);
-            // ReLU gate: the stored activation is max(z, 0), so a zero
-            // activation means a blocked gradient.
-            for (d, &a) in dx.iter_mut().zip(&fwd.acts[l]) {
-                if a <= 0.0 {
-                    *d = 0.0;
+    let mut dz = Tensor::new(vec![bsz, head_classes(stages)], dlogits);
+    for s in (0..stages.len()).rev() {
+        match stages[s] {
+            Stage::Fc { w: wi, b: bi, out, inp } => {
+                let input = &fwd.acts[s];
+                grads[wi] = fc_grad_w(&dz.data, bsz, out, &input.data, inp, threads);
+                grads[bi] = fc_grad_b(&dz.data, bsz, out);
+                if s == 0 {
+                    break;
                 }
+                let mut dx = fc_grad_x(&dz.data, bsz, out, &leaves[wi].data, inp, threads);
+                if matches!(stages[s - 1], Stage::Fc { .. }) {
+                    // ReLU gate: the stored activation is max(z, 0), so a
+                    // zero activation means a blocked gradient. A conv
+                    // stage ends in a max-pool, not a ReLU — no gate.
+                    for (d, &a) in dx.iter_mut().zip(&input.data) {
+                        if a <= 0.0 {
+                            *d = 0.0;
+                        }
+                    }
+                }
+                dz = Tensor::new(vec![bsz, inp], dx);
             }
-            dz = dx;
+            Stage::Conv { w: wi, b: bi, o, c, kh, kw } => {
+                let cache = fwd.caches[s].as_ref().expect("conv stage has a forward cache");
+                let (oh, ow) = (cache.conv_out.shape[2], cache.conv_out.shape[3]);
+                let ph = tensor::out_dim(oh, POOL, POOL, 0);
+                let pw = tensor::out_dim(ow, POOL, POOL, 0);
+                let d_pool = dz.reshape(vec![bsz, o, ph, pw]);
+                let d_conv = tensor::max_pool_backward(&cache.conv_out, &d_pool, POOL, POOL);
+                let dy = rows_from_nchw(&d_conv);
+                let (rows, k) = (bsz * oh * ow, c * kh * kw);
+                grads[wi] = fc_grad_w(&dy, rows, o, &cache.cols.data, k, threads);
+                grads[bi] = fc_grad_b(&dy, rows, o);
+                if s == 0 {
+                    break;
+                }
+                let dcols = fc_grad_x(&dy, rows, o, &leaves[wi].data, k, threads);
+                let input = &fwd.acts[s];
+                let (ih, iw) = (input.shape[2], input.shape[3]);
+                dz = tensor::col2im(&Tensor::new(vec![rows, k], dcols), bsz, c, ih, iw, kh, kw, CONV_SPEC);
+            }
         }
     }
     grads
@@ -661,16 +884,16 @@ fn parse_train_inputs(kind: StepKind, nl: usize, inputs: &[xla::Literal]) -> any
 fn train_step(kind: StepKind, inputs: &[xla::Literal], threads: usize) -> anyhow::Result<Vec<HostValue>> {
     let nl = leaf_count(kind, inputs.len())?;
     let mut params = decode_leaves(&inputs[..nl])?;
-    let layers = build_layers(&params)?;
+    let stages = build_stages(&params)?;
     let TrainInputs { mut opt_m, mut opt_v, theta, lagrange, masks, t_in, x, y, lambda, lr, mu } =
         parse_train_inputs(kind, nl, inputs)?;
     let batch = x.shape.first().copied().unwrap_or(0);
     anyhow::ensure!(y.len() == batch, "labels length {} != batch {batch}", y.len());
 
-    let fwd = forward(&layers, &params, &x, threads)?;
-    let ncls = layers.last().map(|l| l.out).unwrap_or(0);
-    let (loss, dlogits) = softmax_ce(fwd.acts.last().unwrap(), &y, batch, ncls);
-    let mut grads = backward(&layers, &params, &fwd, dlogits, threads);
+    let fwd = forward(&stages, &params, &x, threads)?;
+    let ncls = head_classes(&stages);
+    let (loss, dlogits) = softmax_ce(&fwd.acts.last().unwrap().data, &y, batch, ncls);
+    let mut grads = backward(&stages, &params, &fwd, dlogits, threads);
 
     // Masked training (debias, Section 2.4): gradients gated by the 0/1
     // mask, weights re-clamped after the step so pruned entries stay
@@ -696,8 +919,11 @@ fn train_step(kind: StepKind, inputs: &[xla::Literal], threads: usize) -> anyhow
 
     let t_out = t_in + 1.0;
     for (i, leaf) in params.iter_mut().enumerate() {
-        // Only 2-D weight leaves are prunable; biases never see the prox.
-        let leaf_lambda = if leaf.shape.len() == 2 { lambda } else { 0.0 };
+        // Weight leaves (2-D fc; 4-D conv, i.e. the filters on their
+        // flattened (O, C·KH·KW) view — the prox is elementwise, so the
+        // view is exactly the CSR matrix the engine serves) see the
+        // prox; 1-D biases never do.
+        let leaf_lambda = if leaf.shape.len() >= 2 { lambda } else { 0.0 };
         match kind {
             StepKind::ProxAdam | StepKind::Masked => {
                 prox_adam_update(
@@ -741,13 +967,13 @@ fn train_step(kind: StepKind, inputs: &[xla::Literal], threads: usize) -> anyhow
 fn eval_step(inputs: &[xla::Literal], threads: usize) -> anyhow::Result<Vec<HostValue>> {
     let nl = leaf_count(StepKind::Eval, inputs.len())?;
     let params = decode_leaves(&inputs[..nl])?;
-    let layers = build_layers(&params)?;
+    let stages = build_stages(&params)?;
     let x = decode_f32(&inputs[nl])?;
     let y = inputs[nl + 1].to_vec::<i32>()?;
-    let fwd = forward(&layers, &params, &x, threads)?;
-    let ncls = layers.last().unwrap().out;
-    let (loss, _) = softmax_ce(fwd.acts.last().unwrap(), &y, fwd.batch, ncls);
-    let logits = fwd.acts.last().unwrap();
+    let fwd = forward(&stages, &params, &x, threads)?;
+    let ncls = head_classes(&stages);
+    let (loss, _) = softmax_ce(&fwd.acts.last().unwrap().data, &y, fwd.batch, ncls);
+    let logits = &fwd.acts.last().unwrap().data;
     let mut correct = 0usize;
     for bi in 0..fwd.batch {
         let row = &logits[bi * ncls..(bi + 1) * ncls];
@@ -764,12 +990,97 @@ fn eval_step(inputs: &[xla::Literal], threads: usize) -> anyhow::Result<Vec<Host
 fn infer_step(inputs: &[xla::Literal], threads: usize) -> anyhow::Result<Vec<HostValue>> {
     let nl = leaf_count(StepKind::Infer, inputs.len())?;
     let params = decode_leaves(&inputs[..nl])?;
-    let layers = build_layers(&params)?;
+    let stages = build_stages(&params)?;
     let x = decode_f32(&inputs[nl])?;
-    let fwd = forward(&layers, &params, &x, threads)?;
-    let ncls = layers.last().unwrap().out;
-    let logits = fwd.acts.last().unwrap().clone();
+    let fwd = forward(&stages, &params, &x, threads)?;
+    let ncls = head_classes(&stages);
+    let logits = fwd.acts.last().unwrap().data.clone();
     Ok(vec![HostValue::F32 { shape: vec![fwd.batch, ncls], data: logits }])
+}
+
+// ---------------------------------------------------------------------------
+// Finite-difference gradient self-check
+// ---------------------------------------------------------------------------
+
+/// Relative tolerance one finite-difference direction must meet.
+pub const FD_TOL: f32 = 0.05;
+/// Random directions probed per check.
+pub const FD_DIRECTIONS: usize = 9;
+/// Directions that must agree for the check to pass. A single direction
+/// can land on a ReLU/max-pool kink (central differences then pick up
+/// O(1) curvature error even with a correct backward); a transposed or
+/// misindexed gradient fails essentially every direction.
+pub const FD_MIN_AGREE: usize = 7;
+
+/// Finite-difference self-check of the executor's backward on `entry`'s
+/// architecture: He-init weights, random inputs, [`FD_DIRECTIONS`]
+/// random directions; the central-difference directional derivative
+/// must agree with ⟨∇L, d⟩ within [`FD_TOL`] relative error on at least
+/// [`FD_MIN_AGREE`] directions. Returns `(agreeing, probed)` on
+/// success, errors otherwise — `proxcomp pipeline` runs this before
+/// training conv models, so a broken conv backward fails the CI gate
+/// instead of silently training garbage.
+pub fn gradient_check(entry: &ModelEntry, seed: u64, batch: usize) -> anyhow::Result<(usize, usize)> {
+    use crate::util::rng::Rng;
+    let mut rng = Rng::new(seed ^ 0x6772_6164_6368_6b21); // "gradchk!" salt
+    let bundle = crate::runtime::params::ParamBundle::he_init(&entry.params, seed);
+    let leaves: Vec<Leaf> = bundle
+        .specs
+        .iter()
+        .zip(&bundle.values)
+        .map(|(s, v)| Leaf { shape: s.shape.clone(), data: v.clone() })
+        .collect();
+    let stages = build_stages(&leaves)?;
+    let ncls = head_classes(&stages);
+    anyhow::ensure!(ncls > 1 && batch > 0, "gradient check needs classes and a batch");
+    let mut x_shape = vec![batch];
+    x_shape.extend_from_slice(&entry.input_shape);
+    let n_in: usize = x_shape.iter().product();
+    let x = Leaf { shape: x_shape, data: rng.normal_vec(n_in, 1.0) };
+    let y: Vec<i32> = (0..batch).map(|i| (i % ncls) as i32).collect();
+
+    // Every kernel is bit-deterministic for any thread count, so the
+    // 2·FD_DIRECTIONS forward passes can use the full pool for free.
+    let threads = pool::max_threads();
+    let loss_of = |leaves: &[Leaf]| -> anyhow::Result<f32> {
+        let fwd = forward(&stages, leaves, &x, threads)?;
+        Ok(softmax_ce(&fwd.acts.last().unwrap().data, &y, batch, ncls).0)
+    };
+    let fwd = forward(&stages, &leaves, &x, threads)?;
+    let (_, dlogits) = softmax_ce(&fwd.acts.last().unwrap().data, &y, batch, ncls);
+    let grads = backward(&stages, &leaves, &fwd, dlogits, threads);
+
+    // Scale h so the perturbation norm stays ~1e-2 regardless of model
+    // size (directions are unnormalized: ‖d‖ ≈ √numel).
+    let numel: usize = leaves.iter().map(|l| l.data.len()).sum();
+    let h = 1e-2f32 / (numel as f32).sqrt();
+    let mut ok = 0;
+    for _ in 0..FD_DIRECTIONS {
+        let dirs: Vec<Vec<f32>> = leaves.iter().map(|l| rng.normal_vec(l.data.len(), 1.0)).collect();
+        let analytic: f32 =
+            grads.iter().zip(&dirs).map(|(g, d)| g.iter().zip(d).map(|(a, b)| a * b).sum::<f32>()).sum();
+        let shifted = |sign: f32| -> Vec<Leaf> {
+            leaves
+                .iter()
+                .zip(&dirs)
+                .map(|(l, d)| Leaf {
+                    shape: l.shape.clone(),
+                    data: l.data.iter().zip(d).map(|(w, di)| w + sign * h * di).collect(),
+                })
+                .collect()
+        };
+        let numeric = (loss_of(&shifted(1.0))? - loss_of(&shifted(-1.0))?) / (2.0 * h);
+        let denom = analytic.abs().max(numeric.abs()).max(0.5);
+        if (analytic - numeric).abs() / denom < FD_TOL {
+            ok += 1;
+        }
+    }
+    anyhow::ensure!(
+        ok >= FD_MIN_AGREE,
+        "finite-difference gradient check failed on {}: only {ok}/{FD_DIRECTIONS} directions agree",
+        entry.name
+    );
+    Ok((ok, FD_DIRECTIONS))
 }
 
 #[cfg(test)]
@@ -932,18 +1243,18 @@ mod tests {
             leaves.push(Leaf { shape: vec![dims[i], dims[i - 1]], data: rng.normal_vec(dims[i] * dims[i - 1], 0.5) });
             leaves.push(Leaf { shape: vec![dims[i]], data: rng.normal_vec(dims[i], 0.1) });
         }
-        let layers = build_layers(&leaves).unwrap();
+        let stages = build_stages(&leaves).unwrap();
         let batch = 6;
         let x = Leaf { shape: vec![batch, dims[0]], data: rng.normal_vec(batch * dims[0], 1.0) };
         let y: Vec<i32> = (0..batch).map(|i| (i % dims[3]) as i32).collect();
 
         let loss_of = |leaves: &[Leaf]| -> f32 {
-            let fwd = forward(&layers, leaves, &x, 1).unwrap();
-            softmax_ce(fwd.acts.last().unwrap(), &y, batch, dims[3]).0
+            let fwd = forward(&stages, leaves, &x, 1).unwrap();
+            softmax_ce(&fwd.acts.last().unwrap().data, &y, batch, dims[3]).0
         };
-        let fwd = forward(&layers, &leaves, &x, 1).unwrap();
-        let (_, dlogits) = softmax_ce(fwd.acts.last().unwrap(), &y, batch, dims[3]);
-        let grads = backward(&layers, &leaves, &fwd, dlogits, 1);
+        let fwd = forward(&stages, &leaves, &x, 1).unwrap();
+        let (_, dlogits) = softmax_ce(&fwd.acts.last().unwrap().data, &y, batch, dims[3]);
+        let grads = backward(&stages, &leaves, &fwd, dlogits, 1);
 
         // A single direction can land on a ReLU kink (central differences
         // then pick up O(1) curvature error even with a correct backward),
@@ -972,6 +1283,146 @@ mod tests {
             }
         }
         assert!(ok >= 7, "directional-derivative check failed: only {ok}/9 directions agree");
+    }
+
+    #[test]
+    fn lenet_entry_matches_paper_geometry() {
+        // Paper Table A1 LeNet-5: conv1 20@5×5, conv2 50@5×5, fc 800→500→10.
+        let entry = lenet_entry(
+            "lenet",
+            &[1, 28, 28],
+            &[(20, 5), (50, 5)],
+            &[500],
+            10,
+            "synth-mnist",
+            32,
+            64,
+        );
+        assert_eq!(entry.params.len(), 8);
+        assert_eq!(entry.params[0].shape, vec![20, 1, 5, 5]);
+        assert_eq!(entry.params[0].kind, "conv_w");
+        assert!(entry.params[0].prunable && !entry.params[1].prunable);
+        assert_eq!(entry.params[2].shape, vec![50, 20, 5, 5]);
+        // 28 → conv5 → 24 → pool → 12 → conv5 → 8 → pool → 4; 50·4·4 = 800.
+        assert_eq!(entry.params[4].name, "fc1_w");
+        assert_eq!(entry.params[4].shape, vec![500, 800]);
+        assert_eq!(entry.params[6].shape, vec![10, 500]);
+        assert_eq!(entry.num_weights, 430_500);
+        // Same role-slot step signatures as the MLP family.
+        let adam = entry.artifact("train_prox_adam").unwrap();
+        assert_eq!(adam.inputs.len(), 3 * 8 + 5);
+        assert_eq!(adam.outputs.len(), 3 * 8 + 2);
+        assert!(is_native_path(&adam.file));
+    }
+
+    /// A conv net small enough for exhaustive checks: 1×6×6 input,
+    /// conv 2@3×3 → 4×4 → pool → 2×2, flatten 8 → fc 2.
+    fn tiny_lenet_entry() -> ModelEntry {
+        lenet_entry("lenet-t", &[1, 6, 6], &[(2, 3)], &[], 2, "synth-blobs", 4, 4)
+    }
+
+    fn he_leaves(entry: &ModelEntry, seed: u64) -> Vec<Leaf> {
+        let bundle = crate::runtime::params::ParamBundle::he_init(&entry.params, seed);
+        bundle
+            .specs
+            .iter()
+            .zip(&bundle.values)
+            .map(|(s, v)| Leaf { shape: s.shape.clone(), data: v.clone() })
+            .collect()
+    }
+
+    #[test]
+    fn conv_forward_matches_dense_conv2d_and_pool() {
+        // The executor's im2col-matmul conv + pool must agree with the
+        // reference tensor::conv2d + tensor::max_pool pipeline.
+        let entry = tiny_lenet_entry();
+        let mut rng = Rng::new(71);
+        let leaves = he_leaves(&entry, 7);
+        let stages = build_stages(&leaves).unwrap();
+        let batch = 3;
+        let x = Leaf { shape: vec![batch, 1, 6, 6], data: rng.normal_vec(batch * 36, 1.0) };
+        let fwd = forward(&stages, &leaves, &x, 1).unwrap();
+        let xt = Tensor::new(x.shape.clone(), x.data.clone());
+        let wt = Tensor::new(leaves[0].shape.clone(), leaves[0].data.clone());
+        let want = tensor::max_pool(&tensor::conv2d(&xt, &wt, &leaves[1].data, CONV_SPEC), POOL, POOL);
+        // acts[1] is the input to the fc stage: the pooled map, flattened.
+        assert_eq!(fwd.acts[1].data.len(), want.numel());
+        for (got, want) in fwd.acts[1].data.iter().zip(&want.data) {
+            assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn conv_backward_passes_gradient_check() {
+        let (ok, total) = gradient_check(&tiny_lenet_entry(), 3, 5).unwrap();
+        assert!(ok >= FD_MIN_AGREE, "{ok}/{total}");
+        // A deeper two-conv geometry (odd maps: pool windows that do not
+        // divide the input) must also pass.
+        let deep = lenet_entry("lenet-t2", &[1, 11, 11], &[(3, 3), (4, 2)], &[6], 3, "synth-blobs", 4, 4);
+        gradient_check(&deep, 5, 4).unwrap();
+    }
+
+    #[test]
+    fn conv_forward_backward_bit_identical_across_thread_counts() {
+        let entry = tiny_lenet_entry();
+        let mut rng = Rng::new(83);
+        let leaves = he_leaves(&entry, 11);
+        let stages = build_stages(&leaves).unwrap();
+        let batch = 5;
+        let x = Leaf { shape: vec![batch, 1, 6, 6], data: rng.normal_vec(batch * 36, 1.0) };
+        let y: Vec<i32> = (0..batch).map(|i| (i % 2) as i32).collect();
+        let run = |threads: usize| {
+            let fwd = forward(&stages, &leaves, &x, threads).unwrap();
+            let logits = fwd.acts.last().unwrap().data.clone();
+            let (_, dlogits) = softmax_ce(&logits, &y, batch, 2);
+            (logits, backward(&stages, &leaves, &fwd, dlogits, threads))
+        };
+        let (logits1, grads1) = run(1);
+        for threads in [2usize, 4, 8] {
+            let (logits_t, grads_t) = run(threads);
+            assert_eq!(logits1, logits_t, "conv forward diverged at t={threads}");
+            assert_eq!(grads1, grads_t, "conv backward diverged at t={threads}");
+        }
+    }
+
+    #[test]
+    fn executor_runs_lenet_adam_step_and_applies_prox_to_filters() {
+        let entry = tiny_lenet_entry();
+        let mut rng = Rng::new(91);
+        let mut lits = Vec::new();
+        let leaves: Vec<(Vec<usize>, Vec<f32>)> = entry
+            .params
+            .iter()
+            .map(|s| (s.shape.clone(), rng.normal_vec(s.numel(), 0.5)))
+            .collect();
+        lits.extend(leaf_literals(&leaves));
+        for _ in 0..2 {
+            let zeros: Vec<(Vec<usize>, Vec<f32>)> =
+                entry.params.iter().map(|s| (s.shape.clone(), vec![0.0; s.numel()])).collect();
+            lits.extend(leaf_literals(&zeros));
+        }
+        lits.push(client::literal_f32(&[], &[0.0]).unwrap()); // t
+        lits.push(client::literal_f32(&[4, 1, 6, 6], &rng.normal_vec(4 * 36, 1.0)).unwrap());
+        lits.push(client::literal_i32(&[4], &[0, 1, 0, 1]).unwrap());
+        lits.push(client::literal_f32(&[], &[50.0]).unwrap()); // λ
+        lits.push(client::literal_f32(&[], &[0.05]).unwrap()); // lr
+        let mut backend = NativeBackend::new();
+        let out = backend.execute(Path::new("native/lenet-t/train_prox_adam"), &lits).unwrap();
+        // params (4 leaves) + m + v + t + loss.
+        assert_eq!(out.len(), 3 * 4 + 2);
+        assert_eq!(out[out.len() - 2].scalar().unwrap(), 1.0);
+        assert!(out[out.len() - 1].scalar().unwrap().is_finite());
+        // The prox hits the conv filters on their flattened view:
+        // threshold lr·λ = 2.5 exceeds any |w₀ ± adam-step| here (weights
+        // drawn at std 0.5, step ≈ lr), so every filter entry must be
+        // carved to exactly zero.
+        let conv_w = out[0].as_f32().unwrap();
+        assert_eq!(out[0].shape(), &[2, 1, 3, 3]);
+        assert_ne!(conv_w, &leaves[0].1[..]);
+        assert!(conv_w.iter().all(|&v| v == 0.0), "prox missed conv filter entries: {conv_w:?}");
+        // Conv bias (leaf 1) never sees the prox: no new exact zeros.
+        let conv_b = out[1].as_f32().unwrap();
+        assert!(conv_b.iter().all(|&v| v != 0.0), "bias was proxed: {conv_b:?}");
     }
 
     #[test]

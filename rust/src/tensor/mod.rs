@@ -188,6 +188,65 @@ pub fn im2col(x: &Tensor, kh: usize, kw: usize, spec: ConvSpec) -> Tensor {
     Tensor::new(vec![rows, cols], out)
 }
 
+/// Fold gradients back through [`im2col`]: the exact adjoint, i.e.
+/// `⟨im2col(x), y⟩ = ⟨x, col2im(y)⟩` for every `x (B,C,H,W)` and
+/// `y (B*OH*OW, C*KH*KW)` — which makes `col2im(dy·W)` the conv input
+/// gradient of the im2col-as-matmul formulation the native training
+/// backend uses. Partitions over the batch axis (each example's scatter
+/// is independent) with a fixed in-example loop order, so results are
+/// bit-identical for any thread count.
+pub fn col2im(
+    cols: &Tensor,
+    b: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    spec: ConvSpec,
+) -> Tensor {
+    let oh = out_dim(h, kh, spec.stride, spec.pad);
+    let ow = out_dim(w, kw, spec.stride, spec.pad);
+    let ncols = c * kh * kw;
+    assert_eq!(
+        cols.shape,
+        vec![b * oh * ow, ncols],
+        "col2im: cols shape {:?} does not match (B*OH*OW, C*KH*KW) for ({b},{c},{h},{w})",
+        cols.shape
+    );
+    let mut out = vec![0.0f32; b * c * h * w];
+    let out_ptr = pool::SharedMut::new(&mut out);
+    pool::parallel_chunks(b, pool::max_threads(), |b0, b1| {
+        let out = unsafe { out_ptr.slice() };
+        for bi in b0..b1 {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let row = (bi * oh + oy) * ow + ox;
+                    let base = row * ncols;
+                    for ci in 0..c {
+                        for ky in 0..kh {
+                            let iy = (oy * spec.stride + ky) as isize - spec.pad as isize;
+                            if iy < 0 || iy as usize >= h {
+                                continue;
+                            }
+                            for kx in 0..kw {
+                                let ix = (ox * spec.stride + kx) as isize - spec.pad as isize;
+                                if ix < 0 || ix as usize >= w {
+                                    continue;
+                                }
+                                let col = (ci * kh + ky) * kw + kx;
+                                out[((bi * c + ci) * h + iy as usize) * w + ix as usize] +=
+                                    cols.data[base + col];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+    Tensor::new(vec![b, c, h, w], out)
+}
+
 /// Dense conv2d: im2col + matmul_nt + bias. `w (O,C,KH,KW)`, `b (O)`.
 pub fn conv2d(x: &Tensor, w: &Tensor, bias: &[f32], spec: ConvSpec) -> Tensor {
     let (batch, _c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
@@ -242,6 +301,54 @@ pub fn max_pool(x: &Tensor, size: usize, stride: usize) -> Tensor {
         }
     }
     Tensor::new(vec![b, c, oh, ow], out)
+}
+
+/// Max-pool backward: route each output gradient to the window position
+/// that won the forward max, matching [`max_pool`]'s first-max-wins scan
+/// (`ky`, `kx` ascending — the fixed tie-break that keeps training
+/// deterministic). Overlapping windows accumulate in that same fixed
+/// order; partitioned over the batch axis, so results are bit-identical
+/// for any thread count.
+pub fn max_pool_backward(x: &Tensor, dy: &Tensor, size: usize, stride: usize) -> Tensor {
+    let (b, c, h, w) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let oh = out_dim(h, size, stride, 0);
+    let ow = out_dim(w, size, stride, 0);
+    assert_eq!(
+        dy.shape,
+        vec![b, c, oh, ow],
+        "max_pool_backward: dy shape {:?} does not match pooled {:?}",
+        dy.shape,
+        [b, c, oh, ow]
+    );
+    let mut dx = vec![0.0f32; x.numel()];
+    let dx_ptr = pool::SharedMut::new(&mut dx);
+    pool::parallel_chunks(b, pool::max_threads(), |b0, b1| {
+        let dx = unsafe { dx_ptr.slice() };
+        for bi in b0..b1 {
+            for ci in 0..c {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut best = f32::NEG_INFINITY;
+                        let mut best_idx = 0usize;
+                        for ky in 0..size {
+                            for kx in 0..size {
+                                let idx = ((bi * c + ci) * h + oy * stride + ky) * w
+                                    + ox * stride
+                                    + kx;
+                                let v = x.data[idx];
+                                if v > best {
+                                    best = v;
+                                    best_idx = idx;
+                                }
+                            }
+                        }
+                        dx[best_idx] += dy.data[((bi * c + ci) * oh + oy) * ow + ox];
+                    }
+                }
+            }
+        }
+    });
+    Tensor::new(x.shape.clone(), dx)
 }
 
 pub fn global_avg_pool(x: &Tensor) -> Tensor {
@@ -429,6 +536,78 @@ mod tests {
         let w = Tensor::new(vec![2, 1, 1, 1], vec![1.0, 1.0]);
         let y = conv2d(&x, &w, &[3.0, -1.0], ConvSpec { stride: 1, pad: 0 });
         assert_eq!(y.data, vec![3., 3., 3., 3., -1., -1., -1., -1.]);
+    }
+
+    #[test]
+    fn col2im_is_im2col_adjoint() {
+        // ⟨im2col(x), y⟩ = ⟨x, col2im(y)⟩ over several geometries,
+        // including stride 2, padding, and windows not dividing the input.
+        let mut rng = crate::util::rng::Rng::new(9);
+        for (b, c, h, w, kh, kw, stride, pad) in [
+            (2usize, 3usize, 5usize, 5usize, 3usize, 3usize, 1usize, 0usize),
+            (1, 2, 7, 6, 3, 2, 2, 1),
+            (3, 1, 5, 5, 2, 2, 2, 0), // window does not divide the input
+        ] {
+            let spec = ConvSpec { stride, pad };
+            let x = Tensor::new(vec![b, c, h, w], rng.normal_vec(b * c * h * w, 1.0));
+            let cols = im2col(&x, kh, kw, spec);
+            let y = Tensor::new(cols.shape.clone(), rng.normal_vec(cols.numel(), 1.0));
+            let folded = col2im(&y, b, c, h, w, kh, kw, spec);
+            let lhs: f64 =
+                cols.data.iter().zip(&y.data).map(|(a, b)| (a * b) as f64).sum();
+            let rhs: f64 =
+                x.data.iter().zip(&folded.data).map(|(a, b)| (a * b) as f64).sum();
+            assert!(
+                (lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
+                "adjoint identity failed for ({b},{c},{h},{w}) k={kh}x{kw} s={stride} p={pad}: {lhs} vs {rhs}"
+            );
+        }
+    }
+
+    #[test]
+    fn col2im_counts_window_coverage() {
+        // All-ones cols fold to the per-pixel window-coverage count.
+        let spec = ConvSpec { stride: 1, pad: 0 };
+        let cols = Tensor::new(vec![4, 4], vec![1.0; 16]); // 1×1×3×3 input, 2×2 kernel
+        let folded = col2im(&cols, 1, 1, 3, 3, 2, 2, spec);
+        assert_eq!(folded.data, vec![1., 2., 1., 2., 4., 2., 1., 2., 1.]);
+    }
+
+    #[test]
+    fn max_pool_backward_routes_to_argmax() {
+        let x = Tensor::new(vec![1, 1, 4, 4], (0..16).map(|i| i as f32).collect());
+        let dy = Tensor::new(vec![1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let dx = max_pool_backward(&x, &dy, 2, 2);
+        let mut want = vec![0.0f32; 16];
+        // Forward maxima sit at 5, 7, 13, 15.
+        want[5] = 1.0;
+        want[7] = 2.0;
+        want[13] = 3.0;
+        want[15] = 4.0;
+        assert_eq!(dx.data, want);
+    }
+
+    #[test]
+    fn max_pool_backward_tie_break_matches_forward_scan() {
+        // A flat window: the first element in (ky, kx) scan order wins,
+        // exactly the element max_pool's `>` comparison returns.
+        let x = Tensor::new(vec![1, 1, 2, 2], vec![3.0; 4]);
+        let dy = Tensor::new(vec![1, 1, 1, 1], vec![5.0]);
+        let dx = max_pool_backward(&x, &dy, 2, 2);
+        assert_eq!(dx.data, vec![5.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn max_pool_backward_window_not_dividing_input() {
+        // 5×5 input, 2×2/2 pool → 2×2 output; the trailing row/col get no
+        // gradient (forward never reads them).
+        let x = Tensor::new(vec![1, 1, 5, 5], (0..25).map(|i| i as f32).collect());
+        let dy = Tensor::new(vec![1, 1, 2, 2], vec![1.0; 4]);
+        let dx = max_pool_backward(&x, &dy, 2, 2);
+        let grads: f32 = dx.data.iter().sum();
+        assert_eq!(grads, 4.0);
+        assert!(dx.data[20..].iter().all(|&v| v == 0.0), "trailing row leaked gradient");
+        assert_eq!(dx.data[6], 1.0); // max of window (0,0) is index (1,1)
     }
 
     #[test]

@@ -301,6 +301,142 @@ fn native_checkpoint_roundtrip_through_trained_model() {
     assert!(engine.model_size_bytes() > 0);
 }
 
+/// The conv acceptance pipeline (paper Table 3 / Figs. 6-8 track):
+/// `lenet-s` SpC from random init passes the finite-difference gradient
+/// preflight and decreases eval loss, debiasing preserves-or-improves
+/// accuracy, and the compressed conv model serves bit-exactly through
+/// the dispatch engine + `BatchServer` at compression factor > 1.
+#[test]
+fn native_lenet_pipeline_spc_debias_compress_serve() {
+    use proxcomp::runtime::native;
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let cfg = RunConfig {
+        model: "lenet-s".into(),
+        steps: 120,
+        retrain_steps: 40,
+        lambda: 0.4,
+        lr: 2e-3,
+        retrain_lr: 1e-3,
+        train_examples: 1024,
+        test_examples: 256,
+        artifacts_dir: "native".into(),
+        ..RunConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+
+    // Phase 0: the conv backward must pass the FD check before we trust
+    // its training signal (the same preflight `proxcomp pipeline` gates on).
+    let (ok, total) = native::gradient_check(m.model("lenet-s").unwrap(), cfg.seed, 4).unwrap();
+    assert!(ok >= native::FD_MIN_AGREE, "gradient check: {ok}/{total}");
+
+    let mut trainer = Trainer::new(&m, &cfg).unwrap();
+    let eval0 = trainer.evaluate(&mut rt).unwrap();
+
+    // Phase 1: SpC — ℓ1 sparse coding with Prox-ADAM from random init.
+    let scalars = StepScalars { lambda: cfg.lambda, lr: cfg.lr, mu: 0.0 };
+    compress::spc::run_with_evals(&mut rt, &mut trainer, "train_prox_adam", cfg.steps, scalars, 0)
+        .unwrap();
+    let eval_sparse = trainer.evaluate(&mut rt).unwrap();
+    let rate_sparse = trainer.state.params.compression_rate();
+    assert!(
+        eval_sparse.loss < eval0.loss,
+        "SpC did not decrease eval loss: {} -> {}",
+        eval0.loss,
+        eval_sparse.loss
+    );
+    assert!(rate_sparse > 0.05, "SpC produced almost no conv-net zeros: {rate_sparse}");
+    assert!(rate_sparse < 0.999, "SpC collapsed the network: {rate_sparse}");
+
+    // Phase 2: debias — masked retraining must preserve-or-improve
+    // accuracy (Section 2.4) and never resurrect zeros (checked inside
+    // `debias::retrain`).
+    debias::retrain(&mut rt, &mut trainer, cfg.retrain_steps, cfg.retrain_lr).unwrap();
+    let eval_debias = trainer.evaluate(&mut rt).unwrap();
+    assert!(
+        eval_debias.accuracy >= eval_sparse.accuracy - 0.05,
+        "debias lost accuracy: {} -> {}",
+        eval_sparse.accuracy,
+        eval_debias.accuracy
+    );
+    assert!(
+        eval_debias.loss < eval0.loss,
+        "debiased loss {} did not beat untrained {}",
+        eval_debias.loss,
+        eval0.loss
+    );
+    assert!(eval_debias.accuracy > 0.3, "final conv accuracy too low: {}", eval_debias.accuracy);
+
+    // Phase 3: compress + deploy through the dispatch engine.
+    let result =
+        compress::finish_run(&mut rt, &mut trainer, "SpC(Retrain)", cfg.lambda as f64, t0).unwrap();
+    assert!(result.times_factor() > 1.0, "compression factor {} not > 1", result.times_factor());
+
+    let engine =
+        Arc::new(Engine::from_bundle_mode("lenet-s", &trainer.state.params, WeightMode::Auto).unwrap());
+    let formats = engine.layer_formats();
+    assert!(!formats.is_empty(), "layer_formats() report is empty");
+    assert_eq!(formats.len(), 4, "conv1/conv2/fc1/fc2 expected: {formats:?}");
+
+    let server = BatchServer::start(
+        Arc::clone(&engine),
+        BatchConfig::new(8, Duration::from_millis(20), (1, 16, 16)),
+    );
+    let pending: Vec<_> = (0..16)
+        .map(|i| {
+            let sample = trainer.test_data.image(i % trainer.test_data.n).to_vec();
+            (sample.clone(), server.submit(&sample).unwrap())
+        })
+        .collect();
+    for (sample, p) in pending {
+        let got = p.wait().unwrap();
+        assert_eq!(got.len(), 10);
+        let x = Tensor::new(vec![1, 1, 16, 16], sample);
+        assert_eq!(got, engine.forward(&x).unwrap().data, "served conv logits diverge");
+    }
+    assert_eq!(server.stats().requests, 16);
+}
+
+/// The native trainer must drive every conv artifact family end to end
+/// (prox optimizers, masked debias, MM L-step) — the same role-driven
+/// code paths the MLP family exercises.
+#[test]
+fn native_lenet_all_step_kinds_run() {
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let cfg = RunConfig {
+        model: "lenet-s".into(),
+        steps: 4,
+        train_examples: 64,
+        test_examples: 32,
+        artifacts_dir: "native".into(),
+        ..RunConfig::default()
+    };
+    for step in ["train_prox_adam", "train_prox_rmsprop", "train_prox_sgd"] {
+        let mut trainer = Trainer::new(&m, &cfg).unwrap();
+        let scalars = StepScalars { lambda: 0.5, lr: 1e-3, mu: 0.0 };
+        let loss = trainer.step(&mut rt, step, scalars).unwrap();
+        assert!(loss.is_finite(), "{step} produced {loss}");
+    }
+    // Masked debias on a conv net.
+    let mut trainer = Trainer::new(&m, &cfg).unwrap();
+    let scalars = StepScalars { lambda: 2.0, lr: 2e-3, mu: 0.0 };
+    for _ in 0..4 {
+        trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
+    }
+    debias::retrain(&mut rt, &mut trainer, 4, 1e-4).unwrap();
+    // MM on a conv net: pretrain-free smoke of the L-step machinery.
+    let mut trainer = Trainer::new(&m, &cfg).unwrap();
+    let mut mm_cfg = cfg.clone();
+    mm_cfg.method = Method::MM;
+    mm_cfg.pru_target_rate = 0.5;
+    mm_cfg.mm_mu0 = 0.1;
+    mm_cfg.mm_compress_every = 2;
+    mm_cfg.lr = 0.01;
+    compress::mm::run_mm_phase(&mut rt, &mut trainer, &mm_cfg, 4, 0).unwrap();
+    assert!((trainer.state.params.compression_rate() - 0.5).abs() < 0.05);
+}
+
 /// The acceptance pipeline: SpC from random init decreases eval loss,
 /// debiasing improves (or preserves) eval accuracy while strictly
 /// improving eval loss, and the compressed model serves through the

@@ -891,3 +891,210 @@ fn prop_native_training_bit_deterministic_across_env_thread_counts() {
     assert_eq!(eloss1.to_bits(), eloss4.to_bits(), "eval loss");
     assert_eq!(eacc1, eacc4, "eval accuracy");
 }
+
+// ---------------------------------------------------------------------------
+// Conv training kernels (tensor::col2im / max_pool_backward + the native
+// conv executor)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_im2col_col2im_adjoint_identity() {
+    // ⟨im2col(x), y⟩ = ⟨x, col2im(y)⟩ for random geometries — the
+    // defining property that makes col2im(dy·W) the conv input gradient.
+    use proxcomp::tensor::{col2im, im2col, ConvSpec};
+    let mut rng = Rng::new(150);
+    for case in 0..CASES {
+        let b = 1 + rng.below(3);
+        let c = 1 + rng.below(3);
+        let h = 3 + rng.below(8);
+        let w = 3 + rng.below(8);
+        let kh = 1 + rng.below((h - 1).min(3));
+        let kw = 1 + rng.below((w - 1).min(3));
+        let spec = ConvSpec { stride: 1 + rng.below(2), pad: rng.below(2) };
+        let x = Tensor::new(vec![b, c, h, w], rng.normal_vec(b * c * h * w, 1.0));
+        let cols = im2col(&x, kh, kw, spec);
+        let y = Tensor::new(cols.shape.clone(), rng.normal_vec(cols.numel(), 1.0));
+        let folded = col2im(&y, b, c, h, w, kh, kw, spec);
+        let lhs: f64 = cols.data.iter().zip(&y.data).map(|(a, b)| (a * b) as f64).sum();
+        let rhs: f64 = x.data.iter().zip(&folded.data).map(|(a, b)| (a * b) as f64).sum();
+        assert!(
+            (lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0),
+            "case {case} ({b},{c},{h},{w}) k={kh}x{kw} s={} p={}: {lhs} vs {rhs}",
+            spec.stride,
+            spec.pad
+        );
+    }
+}
+
+#[test]
+fn prop_conv2d_backward_matches_finite_differences() {
+    // The conv gradients the native executor assembles from the public
+    // kernels — weight grad = colsᵀ·dy (fc_grad_w over im2col), input
+    // grad = col2im(dy·W) (fc_grad_x then fold) — against central
+    // differences of the scalar loss L = ⟨conv2d(·), r⟩, 9 directions
+    // each, tolerance-pinned at `native::FD_TOL`, mirroring the MLP
+    // check. The loss is linear in w (and in x), so for a correct
+    // backward every direction must agree to float precision.
+    use proxcomp::runtime::native;
+    use proxcomp::tensor::{col2im, conv2d, im2col, ConvSpec};
+    let mut rng = Rng::new(151);
+    let (b, c, h, w, o, k) = (2usize, 2usize, 7usize, 7usize, 3usize, 3usize);
+    let spec = ConvSpec { stride: 1, pad: 0 };
+    let (oh, ow) = (5usize, 5usize);
+    let (rows, kk) = (b * oh * ow, c * k * k);
+    let x = Tensor::new(vec![b, c, h, w], rng.normal_vec(b * c * h * w, 1.0));
+    let wt = Tensor::new(vec![o, c, k, k], rng.normal_vec(o * kk, 0.5));
+    let bias = vec![0.0f32; o];
+    // Random output coefficients r, both as NCHW and (B·OH·OW, O) rows.
+    let r = Tensor::new(vec![b, o, oh, ow], rng.normal_vec(b * o * oh * ow, 1.0));
+    let mut r_rows = vec![0.0f32; rows * o];
+    for bi in 0..b {
+        for oc in 0..o {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    r_rows[((bi * oh + oy) * ow + ox) * o + oc] =
+                        r.data[((bi * o + oc) * oh + oy) * ow + ox];
+                }
+            }
+        }
+    }
+    let loss_of = |x: &Tensor, wt: &Tensor| -> f32 {
+        conv2d(x, wt, &bias, spec).data.iter().zip(&r.data).map(|(a, b)| a * b).sum()
+    };
+    let cols = im2col(&x, k, k, spec);
+    let dw = native::fc_grad_w(&r_rows, rows, o, &cols.data, kk, 1);
+    let dcols = native::fc_grad_x(&r_rows, rows, o, &wt.data, kk, 1);
+    let dx = col2im(&Tensor::new(vec![rows, kk], dcols), b, c, h, w, k, k, spec);
+    let fd = 1e-3f32;
+    for dir in 0..9 {
+        // Weight direction.
+        let d = rng.normal_vec(o * kk, 1.0);
+        let analytic: f32 = dw.iter().zip(&d).map(|(a, b)| a * b).sum();
+        let shift = |sign: f32| {
+            let data: Vec<f32> =
+                wt.data.iter().zip(&d).map(|(v, di)| v + sign * fd * di).collect();
+            Tensor::new(wt.shape.clone(), data)
+        };
+        let numeric = (loss_of(&x, &shift(1.0)) - loss_of(&x, &shift(-1.0))) / (2.0 * fd);
+        let denom = analytic.abs().max(numeric.abs()).max(0.5);
+        assert!(
+            (analytic - numeric).abs() / denom < native::FD_TOL,
+            "dW dir {dir}: analytic {analytic} vs numeric {numeric}"
+        );
+        // Input direction.
+        let d = rng.normal_vec(b * c * h * w, 1.0);
+        let analytic: f32 = dx.data.iter().zip(&d).map(|(a, b)| a * b).sum();
+        let shift = |sign: f32| {
+            let data: Vec<f32> =
+                x.data.iter().zip(&d).map(|(v, di)| v + sign * fd * di).collect();
+            Tensor::new(x.shape.clone(), data)
+        };
+        let numeric = (loss_of(&shift(1.0), &wt) - loss_of(&shift(-1.0), &wt)) / (2.0 * fd);
+        let denom = analytic.abs().max(numeric.abs()).max(0.5);
+        assert!(
+            (analytic - numeric).abs() / denom < native::FD_TOL,
+            "dX dir {dir}: analytic {analytic} vs numeric {numeric}"
+        );
+    }
+}
+
+#[test]
+fn prop_max_pool_backward_matches_finite_differences() {
+    // L = ⟨max_pool(x), r⟩: the analytic dx routes r to each window's
+    // argmax; away from ties (random continuous inputs) the central
+    // difference must agree per the 9-direction supermajority rule —
+    // a direction can step across an argmax switch, so we tolerate the
+    // same minority of kink hits the MLP/conv checks do.
+    use proxcomp::runtime::native;
+    use proxcomp::tensor::{max_pool, max_pool_backward};
+    let mut rng = Rng::new(152);
+    for (h, size, stride) in [(8usize, 2usize, 2usize), (7, 3, 2), (9, 2, 1)] {
+        let (b, c) = (2usize, 2usize);
+        let x = Tensor::new(vec![b, c, h, h], rng.normal_vec(b * c * h * h, 1.0));
+        let pooled = max_pool(&x, size, stride);
+        let r = Tensor::new(pooled.shape.clone(), rng.normal_vec(pooled.numel(), 1.0));
+        let dx = max_pool_backward(&x, &r, size, stride);
+        let loss_of = |x: &Tensor| -> f32 {
+            max_pool(x, size, stride).data.iter().zip(&r.data).map(|(a, b)| a * b).sum()
+        };
+        let fd = 1e-3f32;
+        let mut ok = 0;
+        for _ in 0..9 {
+            let d = rng.normal_vec(x.numel(), 1.0);
+            let analytic: f32 = dx.data.iter().zip(&d).map(|(a, b)| a * b).sum();
+            let shift = |sign: f32| {
+                let data: Vec<f32> =
+                    x.data.iter().zip(&d).map(|(v, di)| v + sign * fd * di).collect();
+                Tensor::new(x.shape.clone(), data)
+            };
+            let numeric = (loss_of(&shift(1.0)) - loss_of(&shift(-1.0))) / (2.0 * fd);
+            let denom = analytic.abs().max(numeric.abs()).max(0.5);
+            if (analytic - numeric).abs() / denom < native::FD_TOL {
+                ok += 1;
+            }
+        }
+        assert!(
+            ok >= native::FD_MIN_AGREE,
+            "pool {size}/{stride} on {h}x{h}: only {ok}/9 directions agree"
+        );
+    }
+}
+
+#[test]
+fn prop_native_conv_executor_passes_gradient_check() {
+    // The whole-net finite-difference check the pipeline gate runs, on
+    // the registered lenet-s entry and a second geometry, across seeds.
+    use proxcomp::runtime::{native, Manifest};
+    let manifest = Manifest::native();
+    let lenet_s = manifest.model("lenet-s").unwrap();
+    for seed in [0u64, 1, 2] {
+        let (ok, total) = native::gradient_check(lenet_s, seed, 4).unwrap();
+        assert!(ok >= native::FD_MIN_AGREE, "seed {seed}: {ok}/{total}");
+    }
+    // And the MLP family keeps passing through the same entry point.
+    let (ok, _) = native::gradient_check(manifest.model("mlp-s").unwrap(), 0, 4).unwrap();
+    assert!(ok >= native::FD_MIN_AGREE);
+}
+
+#[test]
+fn prop_lenet_training_bit_deterministic_across_env_thread_counts() {
+    // The conv twin of the MLP whole-training-loop determinism test:
+    // im2col/col2im, the conv matmuls, max-pool backward and the prox
+    // must all be bit-identical under PROXCOMP_THREADS=1 and =4.
+    use proxcomp::config::RunConfig;
+    use proxcomp::coordinator::{trainer::StepScalars, Trainer};
+    use proxcomp::runtime::{Manifest, Runtime};
+    let _g = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = EnvThreadsGuard(std::env::var("PROXCOMP_THREADS").ok());
+    let manifest = Manifest::native();
+    let cfg = RunConfig {
+        model: "lenet-s".into(),
+        steps: 4,
+        lambda: 0.5,
+        lr: 2e-3,
+        train_examples: 64,
+        test_examples: 32,
+        artifacts_dir: "native".into(),
+        ..RunConfig::default()
+    };
+    let run = |threads: &str| {
+        std::env::set_var("PROXCOMP_THREADS", threads);
+        let mut rt = Runtime::native();
+        let mut trainer = Trainer::new(&manifest, &cfg).unwrap();
+        let scalars = StepScalars { lambda: cfg.lambda, lr: cfg.lr, mu: 0.0 };
+        let mut losses = Vec::new();
+        for _ in 0..cfg.steps {
+            losses.push(trainer.step(&mut rt, "train_prox_adam", scalars).unwrap());
+        }
+        let eval = trainer.evaluate(&mut rt).unwrap();
+        (losses, trainer.state.params.values.clone(), eval.loss, eval.accuracy)
+    };
+    let (losses1, params1, eloss1, eacc1) = run("1");
+    let (losses4, params4, eloss4, eacc4) = run("4");
+    assert_bits_eq(&losses1, &losses4, "per-step losses");
+    for (i, (a, b)) in params1.iter().zip(&params4).enumerate() {
+        assert_bits_eq(a, b, &format!("parameter leaf {i}"));
+    }
+    assert_eq!(eloss1.to_bits(), eloss4.to_bits(), "eval loss");
+    assert_eq!(eacc1, eacc4, "eval accuracy");
+}
