@@ -398,6 +398,62 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // --- quantized serving kernels: QcsMatrix vs CSR at the paper's
+    // sparsity operating points (the PR-5 perf-trajectory group).
+    common::section("quant kernels: QCS vs CSR dxct/spmv, 500×800 @ 90–97% sparsity");
+    {
+        use proxcomp::quant::{QcsMatrix, QuantConfig};
+        let (n, k) = (500usize, 800usize);
+        let d128 = Tensor::new(vec![128, k], rng.normal_vec(128 * k, 1.0));
+        let x1: Vec<f32> = rng.normal_vec(k, 1.0);
+        println!(
+            "{:<26} {:>10} {:>10} {:>9} {:>12}",
+            "kernel", "CSR µs", "QCS µs", "speedup", "bytes ratio"
+        );
+        for rate in [0.9, 0.97] {
+            let pct = rate * 100.0;
+            let (_, csr) = sparse_matrix(&mut rng, n, k, rate);
+            let (qcs, stats) = QcsMatrix::from_csr(&csr, &QuantConfig::default());
+            let bytes_ratio = csr.storage_bytes() as f64 / qcs.storage_bytes() as f64;
+            let flops = 2.0 * (128 * csr.nnz()) as f64;
+
+            let us_csr = common::time_median_us(reps, || {
+                ops::dxct(&d128, &csr);
+            });
+            let us_qcs = common::time_median_us(reps, || {
+                qcs.dxct(&d128);
+            });
+            println!(
+                "{:<26} {:>10.0} {:>10.0} {:>8.2}× {:>11.2}×   (rmse {:.5})",
+                format!("dxct B=128 @ {pct:.0}%"),
+                us_csr,
+                us_qcs,
+                us_csr / us_qcs,
+                bytes_ratio,
+                stats.rmse
+            );
+            json.row("quant_kernels", &format!("csr_dxct_b128_{pct:.0}pct"), us_csr, "gflops", gflops(flops, us_csr));
+            json.row("quant_kernels", &format!("qcs_dxct_b128_{pct:.0}pct"), us_qcs, "gflops", gflops(flops, us_qcs));
+            json.row("quant_kernels", &format!("qcs_bytes_ratio_{pct:.0}pct"), 0.0, "csr_over_qcs_bytes", bytes_ratio);
+
+            let us_csr1 = common::time_median_us(reps, || {
+                ops::spmv(&csr, &x1);
+            });
+            let us_qcs1 = common::time_median_us(reps, || {
+                qcs.spmv(&x1);
+            });
+            println!(
+                "{:<26} {:>10.1} {:>10.1} {:>8.2}×",
+                format!("spmv  B=1   @ {pct:.0}%"),
+                us_csr1,
+                us_qcs1,
+                us_csr1 / us_qcs1
+            );
+            json.row("quant_kernels", &format!("csr_spmv_b1_{pct:.0}pct"), us_csr1, "gflops", gflops(2.0 * csr.nnz() as f64, us_csr1));
+            json.row("quant_kernels", &format!("qcs_spmv_b1_{pct:.0}pct"), us_qcs1, "gflops", gflops(2.0 * csr.nnz() as f64, us_qcs1));
+        }
+    }
+
     // --- Figure-1 format storage comparison on a prox-trained-style matrix
     common::section("Figure 1 formats: storage on a 97%-sparse 500×800 weight matrix");
     let (dense, csr) = sparse_matrix(&mut rng, 500, 800, 0.97);

@@ -1,31 +1,49 @@
 //! Compressed checkpoints: the on-disk model format.
 //!
-//! Binary layout:
+//! Binary layout (format v2; v1 files still load):
 //!
 //! ```text
 //! magic "PXCP" | u32 version | u64 header_len | header JSON (UTF-8)
 //! then per leaf, in spec order:
-//!   u8 encoding (0 = dense, 1 = CSR)
+//!   u8 encoding (0 = dense, 1 = CSR, 2 = quantized CSR)
 //!   dense: u64 n, then n × f32 (LE)
 //!   csr:   u64 rows, u64 cols, u64 nnz,
 //!          (rows+1) × u32 ptr, nnz × u32 indices, nnz × f32 data
+//!   qcs:   u64 rows, u64 cols, u64 nnz,
+//!          u16 codebook_len, u8 code_bits (4|8), u8 index_bytes (2|4),
+//!          codebook_len × f32 codebook, (rows+1) × u32 ptr,
+//!          nnz × (u16|u32) indices, packed codes (⌈nnz/2⌉ or nnz bytes)
 //! ```
 //!
 //! Prunable 2-D-viewable leaves whose zero fraction exceeds
 //! `CSR_THRESHOLD` are stored CSR (conv weights view as (O, I·KH·KW),
 //! exactly the im2col layout the inference engine multiplies against);
-//! everything else is dense. `model_size_bytes` on the result is the
-//! paper's Table-3 "Model Size" quantity.
+//! everything else is dense. [`save_quantized`] additionally persists
+//! codebook-quantized leaves (`quant::QcsMatrix`) under tag 2 — the
+//! Deep-Compression artifact `proxcomp quantize` emits.
+//! `model_size_bytes` on the result is the paper's Table-3 "Model Size"
+//! quantity.
+//!
+//! Loading is defensive: bad magic, unknown versions, truncated
+//! payloads, and ptr/nnz inconsistencies all fail with explicit errors
+//! (the corrupt-bytes unit tests below pin each message).
 
 use std::io::{Read, Write};
 use std::path::Path;
 
+use crate::quant::{QuantLeaf, QuantizedModel};
 use crate::runtime::{ParamBundle, ParamSpec};
 use crate::sparse::CsrMatrix;
 use crate::util::json::{self, Json};
 
 const MAGIC: &[u8; 4] = b"PXCP";
-const VERSION: u32 = 1;
+/// Newest format this build reads (the loader accepts `1..=VERSION`).
+/// Writers stamp the *lowest* version whose features they use: plain
+/// dense/CSR checkpoints stay v1 so pre-quantization readers keep
+/// loading them; only quantized (tag-2) leaves require v2.
+const VERSION: u32 = 2;
+/// Sanity cap on the header JSON (a corrupt length field must not OOM).
+const MAX_HEADER_LEN: usize = 16 << 20;
 /// Store CSR when at least this fraction of a leaf is zero (below this
 /// the index overhead exceeds the dense payload).
 pub const CSR_THRESHOLD: f64 = 0.5;
@@ -37,22 +55,44 @@ pub struct Checkpoint {
     pub meta: Json,
     /// Bytes of the serialized parameter payload (excl. header).
     pub payload_bytes: usize,
+    /// Per-leaf quantized representation for tag-2 leaves (aligned with
+    /// `params.specs`; `None` for dense/CSR leaves). `params.values`
+    /// always holds the dequantized dense view, so every existing
+    /// consumer works unchanged.
+    pub quantized: Vec<Option<crate::quant::QcsMatrix>>,
 }
 
-/// Serialize a bundle; `meta` carries run provenance (model, method, λ…).
-pub fn save(path: &Path, params: &ParamBundle, meta: &Json) -> anyhow::Result<usize> {
-    if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
+impl Checkpoint {
+    /// True when any leaf was stored codebook-quantized (a v2 artifact
+    /// from `proxcomp quantize` / `pipeline --quantize`).
+    pub fn is_quantized(&self) -> bool {
+        self.quantized.iter().any(Option::is_some)
     }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
 
+    /// Reassemble the quantized model for bit-faithful serving
+    /// (`Engine::from_quantized`): tag-2 leaves keep their stored
+    /// codebooks, everything else rides along as dense f32.
+    pub fn to_quantized_model(&self) -> QuantizedModel {
+        let leaves = self
+            .quantized
+            .iter()
+            .zip(&self.params.values)
+            .map(|(q, v)| match q {
+                Some(m) => QuantLeaf::Qcs(m.clone()),
+                None => QuantLeaf::Dense(v.clone()),
+            })
+            .collect();
+        QuantizedModel { specs: self.params.specs.clone(), leaves }
+    }
+}
+
+fn write_header(f: &mut impl Write, version: u32, specs: &[ParamSpec], meta: &Json) -> anyhow::Result<()> {
+    f.write_all(MAGIC)?;
+    f.write_all(&version.to_le_bytes())?;
     // Header: spec + meta (everything needed to reload without a manifest).
     let mut header = Json::obj();
     header.set("meta", meta.clone());
-    let specs: Vec<Json> = params
-        .specs
+    let spec_arr: Vec<Json> = specs
         .iter()
         .map(|s| {
             let mut j = Json::obj();
@@ -64,56 +104,135 @@ pub fn save(path: &Path, params: &ParamBundle, meta: &Json) -> anyhow::Result<us
             j
         })
         .collect();
-    header.set("specs", Json::Arr(specs));
+    header.set("specs", Json::Arr(spec_arr));
     let header_text = header.to_string_compact();
     f.write_all(&(header_text.len() as u64).to_le_bytes())?;
     f.write_all(header_text.as_bytes())?;
+    Ok(())
+}
 
+/// Write one f32 leaf with the dense/CSR encoding choice; returns its
+/// payload bytes.
+fn write_f32_leaf(f: &mut impl Write, spec: &ParamSpec, values: &[f32]) -> anyhow::Result<usize> {
+    let zero_frac =
+        values.iter().filter(|&&v| v == 0.0).count() as f64 / values.len().max(1) as f64;
+    let (rows, cols) = matrix_view(spec);
+    if spec.prunable && zero_frac >= CSR_THRESHOLD && rows > 0 {
+        let csr = CsrMatrix::from_dense(values, rows, cols);
+        f.write_all(&[1u8])?;
+        f.write_all(&(csr.rows as u64).to_le_bytes())?;
+        f.write_all(&(csr.cols as u64).to_le_bytes())?;
+        f.write_all(&(csr.nnz() as u64).to_le_bytes())?;
+        for &p in &csr.ptr {
+            f.write_all(&(p as u32).to_le_bytes())?;
+        }
+        for &i in &csr.indices {
+            f.write_all(&i.to_le_bytes())?;
+        }
+        for &v in &csr.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        Ok(1 + 24 + csr.storage_bytes())
+    } else {
+        f.write_all(&[0u8])?;
+        f.write_all(&(values.len() as u64).to_le_bytes())?;
+        for &v in values {
+            f.write_all(&v.to_le_bytes())?;
+        }
+        Ok(1 + 8 + values.len() * 4)
+    }
+}
+
+/// Write one quantized-CSR leaf (tag 2); returns its payload bytes.
+fn write_qcs_leaf(f: &mut impl Write, q: &crate::quant::QcsMatrix) -> anyhow::Result<usize> {
+    f.write_all(&[2u8])?;
+    f.write_all(&(q.rows as u64).to_le_bytes())?;
+    f.write_all(&(q.cols as u64).to_le_bytes())?;
+    f.write_all(&(q.nnz() as u64).to_le_bytes())?;
+    f.write_all(&(q.codebook().len() as u16).to_le_bytes())?;
+    f.write_all(&[q.code_bits() as u8])?;
+    f.write_all(&[q.index_bytes() as u8])?;
+    for &c in q.codebook() {
+        f.write_all(&c.to_le_bytes())?;
+    }
+    for &p in &q.ptr {
+        f.write_all(&(p as u32).to_le_bytes())?;
+    }
+    // Indices re-serialize through the accessor view; codes stream
+    // verbatim (`code_bytes` is already the file's pack format).
+    let nnz = q.nnz();
+    if q.index_bytes() == 2 {
+        for k in 0..nnz {
+            f.write_all(&(q.index_at(k) as u16).to_le_bytes())?;
+        }
+    } else {
+        for k in 0..nnz {
+            f.write_all(&(q.index_at(k) as u32).to_le_bytes())?;
+        }
+    }
+    f.write_all(q.code_bytes())?;
+    Ok(1 + 24 + 4 + q.storage_bytes())
+}
+
+/// Serialize a bundle; `meta` carries run provenance (model, method, λ…).
+pub fn save(path: &Path, params: &ParamBundle, meta: &Json) -> anyhow::Result<usize> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    // Dense/CSR-only payloads are byte-identical to the v1 layout, so
+    // stamp v1 and stay loadable by pre-quantization readers.
+    write_header(&mut f, 1, &params.specs, meta)?;
     let mut payload = 0usize;
     for (spec, values) in params.specs.iter().zip(&params.values) {
-        let zero_frac =
-            values.iter().filter(|&&v| v == 0.0).count() as f64 / values.len().max(1) as f64;
-        let (rows, cols) = matrix_view(spec);
-        if spec.prunable && zero_frac >= CSR_THRESHOLD && rows > 0 {
-            let csr = CsrMatrix::from_dense(values, rows, cols);
-            f.write_all(&[1u8])?;
-            f.write_all(&(csr.rows as u64).to_le_bytes())?;
-            f.write_all(&(csr.cols as u64).to_le_bytes())?;
-            f.write_all(&(csr.nnz() as u64).to_le_bytes())?;
-            for &p in &csr.ptr {
-                f.write_all(&(p as u32).to_le_bytes())?;
-            }
-            for &i in &csr.indices {
-                f.write_all(&i.to_le_bytes())?;
-            }
-            for &v in &csr.data {
-                f.write_all(&v.to_le_bytes())?;
-            }
-            payload += 1 + 24 + csr.storage_bytes();
-        } else {
-            f.write_all(&[0u8])?;
-            f.write_all(&(values.len() as u64).to_le_bytes())?;
-            for &v in values {
-                f.write_all(&v.to_le_bytes())?;
-            }
-            payload += 1 + 8 + values.len() * 4;
-        }
+        payload += write_f32_leaf(&mut f, spec, values)?;
     }
     f.flush()?;
     Ok(payload)
 }
 
-/// Load a checkpoint back into a dense `ParamBundle`.
+/// Serialize a quantized model: tag-2 quantized-CSR for its quantized
+/// leaves, the usual dense/CSR choice for the f32 rest. Returns payload
+/// bytes — the quantized Table-3 "Model Size".
+pub fn save_quantized(path: &Path, qm: &QuantizedModel, meta: &Json) -> anyhow::Result<usize> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    // Tag-2 leaves need v2; an all-f32 quantized model degenerates to
+    // the v1 layout, so keep it readable by pre-quantization builds.
+    let version = if qm.leaves.iter().any(|l| matches!(l, QuantLeaf::Qcs(_))) { VERSION } else { 1 };
+    write_header(&mut f, version, &qm.specs, meta)?;
+    let mut payload = 0usize;
+    for (spec, leaf) in qm.specs.iter().zip(&qm.leaves) {
+        payload += match leaf {
+            QuantLeaf::Dense(v) => write_f32_leaf(&mut f, spec, v)?,
+            QuantLeaf::Qcs(q) => write_qcs_leaf(&mut f, q)?,
+        };
+    }
+    f.flush()?;
+    Ok(payload)
+}
+
+/// Load a checkpoint back into a dense `ParamBundle` (+ the stored
+/// quantized leaves when present).
 pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
     let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
     let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "not a proxcomp checkpoint (bad magic)");
-    let version = read_u32(&mut f)?;
-    anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
-    let header_len = read_u64(&mut f)? as usize;
+    read_exactly(&mut f, &mut magic, "magic")?;
+    anyhow::ensure!(&magic == MAGIC, "not a proxcomp checkpoint (bad magic {magic:02x?})");
+    let version = read_u32(&mut f, "version")?;
+    anyhow::ensure!(
+        (1..=VERSION).contains(&version),
+        "unsupported checkpoint version {version} (this build reads 1..={VERSION})"
+    );
+    let header_len = read_u64(&mut f, "header length")? as usize;
+    anyhow::ensure!(
+        header_len <= MAX_HEADER_LEN,
+        "implausible header length {header_len} (corrupt checkpoint?)"
+    );
     let mut header_bytes = vec![0u8; header_len];
-    f.read_exact(&mut header_bytes)?;
+    read_exactly(&mut f, &mut header_bytes, "header")?;
     let header = json::parse(std::str::from_utf8(&header_bytes)?)?;
     let meta = header.req("meta")?.clone();
     let specs: Vec<ParamSpec> = header
@@ -133,30 +252,43 @@ pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
         .collect::<anyhow::Result<Vec<_>>>()?;
 
     let mut values = Vec::with_capacity(specs.len());
+    let mut quantized: Vec<Option<crate::quant::QcsMatrix>> = Vec::with_capacity(specs.len());
     let mut payload = 0usize;
     for spec in &specs {
         let mut enc = [0u8; 1];
-        f.read_exact(&mut enc)?;
+        read_exactly(&mut f, &mut enc, "leaf encoding tag")?;
         match enc[0] {
             0 => {
-                let n = read_u64(&mut f)? as usize;
+                let n = read_u64(&mut f, "dense leaf length")? as usize;
                 anyhow::ensure!(n == spec.numel(), "dense leaf size mismatch for {}", spec.name);
                 let mut data = vec![0.0f32; n];
-                read_f32s(&mut f, &mut data)?;
+                read_f32s(&mut f, &mut data, "dense leaf values")?;
                 payload += 1 + 8 + n * 4;
                 values.push(data);
+                quantized.push(None);
             }
             1 => {
-                let rows = read_u64(&mut f)? as usize;
-                let cols = read_u64(&mut f)? as usize;
-                let nnz = read_u64(&mut f)? as usize;
+                let rows = read_u64(&mut f, "csr rows")? as usize;
+                let cols = read_u64(&mut f, "csr cols")? as usize;
+                let nnz = read_u64(&mut f, "csr nnz")? as usize;
                 anyhow::ensure!(rows * cols == spec.numel(), "csr leaf shape mismatch for {}", spec.name);
+                anyhow::ensure!(
+                    nnz <= rows * cols,
+                    "csr leaf {}: nnz {nnz} exceeds {rows}×{cols}",
+                    spec.name
+                );
                 let mut ptr = vec![0u32; rows + 1];
-                read_u32s(&mut f, &mut ptr)?;
+                read_u32s(&mut f, &mut ptr, "csr row pointers")?;
+                anyhow::ensure!(
+                    ptr.last().copied() == Some(nnz as u32),
+                    "csr leaf {}: ptr/nnz inconsistency (last ptr {} != nnz {nnz})",
+                    spec.name,
+                    ptr.last().copied().unwrap_or(0)
+                );
                 let mut indices = vec![0u32; nnz];
-                read_u32s(&mut f, &mut indices)?;
+                read_u32s(&mut f, &mut indices, "csr column indices")?;
                 let mut data = vec![0.0f32; nnz];
-                read_f32s(&mut f, &mut data)?;
+                read_f32s(&mut f, &mut data, "csr values")?;
                 let csr = CsrMatrix {
                     rows,
                     cols,
@@ -167,6 +299,71 @@ pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
                 csr.validate()?;
                 payload += 1 + 24 + csr.storage_bytes();
                 values.push(csr.to_dense());
+                quantized.push(None);
+            }
+            2 => {
+                let rows = read_u64(&mut f, "qcs rows")? as usize;
+                let cols = read_u64(&mut f, "qcs cols")? as usize;
+                let nnz = read_u64(&mut f, "qcs nnz")? as usize;
+                anyhow::ensure!(rows * cols == spec.numel(), "qcs leaf shape mismatch for {}", spec.name);
+                anyhow::ensure!(
+                    nnz <= rows * cols,
+                    "qcs leaf {}: nnz {nnz} exceeds {rows}×{cols}",
+                    spec.name
+                );
+                let k = read_u16(&mut f, "qcs codebook length")? as usize;
+                let mut small = [0u8; 2];
+                read_exactly(&mut f, &mut small, "qcs packing descriptor")?;
+                let (code_bits, idx_bytes) = (small[0] as usize, small[1] as usize);
+                anyhow::ensure!(
+                    (code_bits == 4 || code_bits == 8) && (idx_bytes == 2 || idx_bytes == 4),
+                    "qcs leaf {}: bad packing descriptor (code_bits {code_bits}, index_bytes {idx_bytes})",
+                    spec.name
+                );
+                anyhow::ensure!(
+                    k <= 256 && (code_bits == 8 || k <= 16),
+                    "qcs leaf {}: codebook length {k} does not fit {code_bits}-bit codes",
+                    spec.name
+                );
+                let mut codebook = vec![0.0f32; k];
+                read_f32s(&mut f, &mut codebook, "qcs codebook")?;
+                let mut ptr = vec![0u32; rows + 1];
+                read_u32s(&mut f, &mut ptr, "qcs row pointers")?;
+                anyhow::ensure!(
+                    ptr.last().copied() == Some(nnz as u32),
+                    "qcs leaf {}: ptr/nnz inconsistency (last ptr {} != nnz {nnz})",
+                    spec.name,
+                    ptr.last().copied().unwrap_or(0)
+                );
+                let indices: Vec<u32> = if idx_bytes == 2 {
+                    let mut idx = vec![0u16; nnz];
+                    read_u16s(&mut f, &mut idx, "qcs column indices")?;
+                    idx.into_iter().map(|i| i as u32).collect()
+                } else {
+                    let mut idx = vec![0u32; nnz];
+                    read_u32s(&mut f, &mut idx, "qcs column indices")?;
+                    idx
+                };
+                let codes: Vec<u8> = if code_bits == 4 {
+                    let mut packed = vec![0u8; nnz.div_ceil(2)];
+                    read_exactly(&mut f, &mut packed, "qcs packed codes")?;
+                    (0..nnz).map(|j| (packed[j / 2] >> ((j % 2) * 4)) & 0xF).collect()
+                } else {
+                    let mut raw = vec![0u8; nnz];
+                    read_exactly(&mut f, &mut raw, "qcs codes")?;
+                    raw
+                };
+                let q = crate::quant::QcsMatrix::from_parts(
+                    rows,
+                    cols,
+                    ptr.iter().map(|&p| p as usize).collect(),
+                    codebook,
+                    indices,
+                    codes,
+                )?;
+                payload += 1 + 24 + 4 + q.storage_bytes();
+                values.push(q.to_dense());
+                quantized.push(Some(q));
             }
             other => anyhow::bail!("unknown leaf encoding {other}"),
         }
@@ -175,6 +372,7 @@ pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
         params: ParamBundle { specs, values },
         meta,
         payload_bytes: payload,
+        quantized,
     })
 }
 
@@ -187,30 +385,57 @@ pub fn matrix_view(spec: &ParamSpec) -> (usize, usize) {
     }
 }
 
-fn read_u32(f: &mut impl Read) -> anyhow::Result<u32> {
+/// `read_exact` with a truncation-aware error: every payload read names
+/// what it was reading when the file ran out.
+fn read_exactly(f: &mut impl Read, buf: &mut [u8], what: &str) -> anyhow::Result<()> {
+    f.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            anyhow::anyhow!("truncated checkpoint while reading {what}")
+        } else {
+            anyhow::anyhow!("read error while reading {what}: {e}")
+        }
+    })
+}
+
+fn read_u16(f: &mut impl Read, what: &str) -> anyhow::Result<u16> {
+    let mut b = [0u8; 2];
+    read_exactly(f, &mut b, what)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(f: &mut impl Read, what: &str) -> anyhow::Result<u32> {
     let mut b = [0u8; 4];
-    f.read_exact(&mut b)?;
+    read_exactly(f, &mut b, what)?;
     Ok(u32::from_le_bytes(b))
 }
 
-fn read_u64(f: &mut impl Read) -> anyhow::Result<u64> {
+fn read_u64(f: &mut impl Read, what: &str) -> anyhow::Result<u64> {
     let mut b = [0u8; 8];
-    f.read_exact(&mut b)?;
+    read_exactly(f, &mut b, what)?;
     Ok(u64::from_le_bytes(b))
 }
 
-fn read_u32s(f: &mut impl Read, out: &mut [u32]) -> anyhow::Result<()> {
+fn read_u16s(f: &mut impl Read, out: &mut [u16], what: &str) -> anyhow::Result<()> {
+    let mut bytes = vec![0u8; out.len() * 2];
+    read_exactly(f, &mut bytes, what)?;
+    for (i, chunk) in bytes.chunks_exact(2).enumerate() {
+        out[i] = u16::from_le_bytes(chunk.try_into().unwrap());
+    }
+    Ok(())
+}
+
+fn read_u32s(f: &mut impl Read, out: &mut [u32], what: &str) -> anyhow::Result<()> {
     let mut bytes = vec![0u8; out.len() * 4];
-    f.read_exact(&mut bytes)?;
+    read_exactly(f, &mut bytes, what)?;
     for (i, chunk) in bytes.chunks_exact(4).enumerate() {
         out[i] = u32::from_le_bytes(chunk.try_into().unwrap());
     }
     Ok(())
 }
 
-fn read_f32s(f: &mut impl Read, out: &mut [f32]) -> anyhow::Result<()> {
+fn read_f32s(f: &mut impl Read, out: &mut [f32], what: &str) -> anyhow::Result<()> {
     let mut bytes = vec![0u8; out.len() * 4];
-    f.read_exact(&mut bytes)?;
+    read_exactly(f, &mut bytes, what)?;
     for (i, chunk) in bytes.chunks_exact(4).enumerate() {
         out[i] = f32::from_le_bytes(chunk.try_into().unwrap());
     }
@@ -220,6 +445,7 @@ fn read_f32s(f: &mut impl Read, out: &mut [f32]) -> anyhow::Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::quant::{quantize_bundle, QuantConfig};
 
     fn test_bundle(sparse: bool) -> ParamBundle {
         let mut rng = crate::util::rng::Rng::new(40);
@@ -278,6 +504,7 @@ mod tests {
         assert_eq!(ck.meta.get("model").unwrap().as_str(), Some("test"));
         assert_eq!(ck.params.specs.len(), 3);
         assert_eq!(ck.params.specs[0].shape, vec![4, 2, 3, 3]);
+        assert!(!ck.is_quantized());
     }
 
     #[test]
@@ -307,10 +534,147 @@ mod tests {
     }
 
     #[test]
+    fn quantized_roundtrip_is_bit_faithful_and_smaller() {
+        let b = test_bundle(true);
+        // Lower the nnz floor so the 72-col fc leaf quantizes in-test.
+        let cfg = QuantConfig { min_quant_nnz: 8, ..QuantConfig::default() };
+        let (qm, _) = quantize_bundle(&b, &cfg);
+        let pq = tmp("quant.pxcp");
+        let pc = tmp("quant_ref.pxcp");
+        let q_bytes = save_quantized(&pq, &qm, &Json::obj()).unwrap();
+        let c_bytes = save(&pc, &b, &Json::obj()).unwrap();
+        assert!(q_bytes < c_bytes, "quantized {q_bytes} >= csr {c_bytes}");
+        let ck = load(&pq).unwrap();
+        assert!(ck.is_quantized());
+        assert_eq!(ck.payload_bytes, q_bytes);
+        // Dequantized dense view matches the in-memory quantized model…
+        assert_eq!(ck.params.values, qm.to_bundle().values);
+        // …and the stored QcsMatrix round-trips exactly (codebook, codes,
+        // pattern), so serving after reload is bit-identical.
+        let back = ck.to_quantized_model();
+        for (a, b) in qm.leaves.iter().zip(&back.leaves) {
+            match (a, b) {
+                (crate::quant::QuantLeaf::Qcs(x), crate::quant::QuantLeaf::Qcs(y)) => {
+                    assert_eq!(x, y)
+                }
+                (crate::quant::QuantLeaf::Dense(x), crate::quant::QuantLeaf::Dense(y)) => {
+                    assert_eq!(x, y)
+                }
+                _ => panic!("leaf encoding changed across the roundtrip"),
+            }
+        }
+    }
+
+    #[test]
+    fn writers_stamp_lowest_sufficient_version() {
+        // Dense/CSR-only payloads are v1-layout bytes, so they must
+        // stay stamped v1 for pre-quantization readers; only a tag-2
+        // (quantized) leaf escalates the file to v2.
+        let b = test_bundle(true);
+        let p1 = tmp("ver_f32.pxcp");
+        save(&p1, &b, &Json::obj()).unwrap();
+        let bytes = std::fs::read(&p1).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 1);
+        let cfg = QuantConfig { min_quant_nnz: 8, ..QuantConfig::default() };
+        let (qm, _) = quantize_bundle(&b, &cfg);
+        let p2 = tmp("ver_quant.pxcp");
+        save_quantized(&p2, &qm, &Json::obj()).unwrap();
+        let bytes = std::fs::read(&p2).unwrap();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), 2);
+    }
+
+    #[test]
     fn rejects_garbage() {
         let path = tmp("garbage.pxcp");
         std::fs::write(&path, b"not a checkpoint").unwrap();
-        assert!(load(&path).is_err());
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_version() {
+        let path = tmp("version99.pxcp");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("unsupported checkpoint version 99"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let b = test_bundle(true);
+        let path = tmp("trunc.pxcp");
+        save(&path, &b, &Json::obj()).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // Cut mid-payload (keep the header intact) at several depths.
+        for keep in [full.len() - 1, full.len() - 100, full.len() * 3 / 4] {
+            let tp = tmp("trunc_cut.pxcp");
+            std::fs::write(&tp, &full[..keep]).unwrap();
+            let err = load(&tp).unwrap_err().to_string();
+            assert!(err.contains("truncated checkpoint"), "keep {keep}: {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_implausible_header_length() {
+        let path = tmp("badheader.pxcp");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(u64::MAX).to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("implausible header length"), "{err}");
+    }
+
+    #[test]
+    fn rejects_ptr_nnz_inconsistency() {
+        // Hand-built v2 checkpoint: one CSR leaf whose last row pointer
+        // disagrees with the declared nnz.
+        let path = tmp("badptr.pxcp");
+        let header = r#"{"meta":{},"specs":[{"name":"fc1_w","kind":"fc_w","shape":[2,3],"prunable":true,"layer":"fc1"}]}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.push(1u8); // CSR tag
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // rows
+        bytes.extend_from_slice(&3u64.to_le_bytes()); // cols
+        bytes.extend_from_slice(&2u64.to_le_bytes()); // nnz = 2
+        for p in [0u32, 1, 3] {
+            bytes.extend_from_slice(&p.to_le_bytes()); // last ptr 3 != nnz 2
+        }
+        for i in [0u32, 2] {
+            bytes.extend_from_slice(&i.to_le_bytes());
+        }
+        for v in [1.0f32, 2.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("ptr/nnz inconsistency"), "{err}");
+    }
+
+    #[test]
+    fn rejects_oversized_nnz() {
+        let path = tmp("badnnz.pxcp");
+        let header = r#"{"meta":{},"specs":[{"name":"fc1_w","kind":"fc_w","shape":[2,3],"prunable":true,"layer":"fc1"}]}"#;
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.push(1u8);
+        bytes.extend_from_slice(&2u64.to_le_bytes());
+        bytes.extend_from_slice(&3u64.to_le_bytes());
+        bytes.extend_from_slice(&100u64.to_le_bytes()); // nnz 100 > 6
+        std::fs::write(&path, bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
     }
 
     #[test]

@@ -120,7 +120,11 @@ impl DeviceModel {
 
 /// Work description of one weight layer. Produced by
 /// `Engine::work_profile` (FLOPs = 2·B·positions·nnz; bytes = weight
-/// storage touched + activations in/out).
+/// storage touched + activations in/out). The weight bytes are the
+/// *stored* representation — f32 CSR on the paper's deployment path,
+/// quantized-CSR (packed codes + narrowed indices + codebook) under
+/// `WeightMode::Quantized` — so Table-3-style projections reflect the
+/// format actually streamed from memory, not an f32 assumption.
 #[derive(Debug, Clone)]
 pub struct LayerWork {
     pub name: String,
@@ -196,6 +200,49 @@ mod tests {
         let (tm, _) = MALI_T860.kernel_time(flops, bytes, false);
         let (tg, _) = GTX_1080TI.kernel_time(flops, bytes, false);
         assert!(tm / tg > 20.0, "mali/gtx ratio {}", tm / tg);
+    }
+
+    #[test]
+    fn roofline_consumes_stored_quantized_bytes() {
+        // Table-3-style projection must reflect the *stored* weight
+        // format: the same sparse model deployed quantized streams
+        // fewer weight bytes per layer than CSR (same nnz, same FLOPs),
+        // so its roofline estimate is never slower on any device.
+        use crate::inference::{Engine, WeightMode};
+        use crate::runtime::{ParamBundle, ParamSpec};
+        use crate::sparse::prox;
+
+        let specs = vec![
+            ParamSpec::new("fc1_w", "fc_w", vec![128, 400], true),
+            ParamSpec::new("fc1_b", "fc_b", vec![128], false),
+            ParamSpec::new("fc2_w", "fc_w", vec![10, 128], true),
+            ParamSpec::new("fc2_b", "fc_b", vec![10], false),
+        ];
+        let mut bundle = ParamBundle::he_init(&specs, 2);
+        for (spec, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+            if spec.prunable {
+                let t = prox::magnitude_quantile(v, 0.9);
+                prox::hard_threshold_inplace(v, t);
+            }
+        }
+        let csr = Engine::from_bundle_mode("mlp-s", &bundle, WeightMode::Csr).unwrap();
+        let quant = Engine::from_bundle_mode("mlp-s", &bundle, WeightMode::Quantized).unwrap();
+        let wc = csr.work_profile(1, 1, 20, 20);
+        let wq = quant.work_profile(1, 1, 20, 20);
+        assert_eq!(wc.len(), wq.len());
+        let (mut bc, mut bq) = (0.0f64, 0.0f64);
+        for (c, q) in wc.iter().zip(&wq) {
+            assert_eq!(c.flops, q.flops, "{}: nnz-driven FLOPs must not change", c.name);
+            assert!(q.bytes < c.bytes, "{}: quantized bytes {} >= CSR {}", c.name, q.bytes, c.bytes);
+            bc += c.bytes;
+            bq += q.bytes;
+        }
+        assert!(bq < bc);
+        for d in [MALI_T860, GTX_1080TI, CPU_REF] {
+            let tc: f64 = d.estimate_engine(&csr, &wc).iter().map(|l| l.seconds).sum();
+            let tq: f64 = d.estimate_engine(&quant, &wq).iter().map(|l| l.seconds).sum();
+            assert!(tq <= tc + 1e-15, "{}: quantized projection {tq} slower than CSR {tc}", d.name);
+        }
     }
 
     #[test]

@@ -9,6 +9,7 @@
 use std::collections::HashMap;
 use std::time::Instant;
 
+use crate::quant::{QcsMatrix, QuantConfig, QuantizedModel};
 use crate::runtime::{ParamBundle, ParamSpec};
 use crate::sparse::{ops, CsrMatrix, DynSparseMatrix};
 use crate::tensor::{self, ConvSpec, Tensor};
@@ -22,16 +23,22 @@ pub enum WeightMode {
     Csr,
     /// Per-layer format dispatch (`sparse::dispatch::select_format`).
     Auto,
+    /// Codebook-quantized CSR (`quant::QcsMatrix`) — lossy: each leaf's
+    /// nonzeros collapse onto a per-leaf k-means codebook
+    /// (`QuantConfig::default()`; use [`Engine::from_quantized`] to
+    /// serve an already-quantized model's exact codebooks).
+    Quantized,
 }
 
 /// A weight matrix in the engine: dense (reference path), CSR (the
-/// paper's compressed path), or dispatch-chosen per layer. All are
-/// (N, K) row-major views.
+/// paper's compressed path), dispatch-chosen per layer, or
+/// codebook-quantized CSR. All are (N, K) row-major views.
 #[derive(Debug, Clone)]
 pub enum WeightStore {
     Dense(Tensor),
     Csr(CsrMatrix),
     Auto(DynSparseMatrix),
+    Quantized(QcsMatrix),
 }
 
 impl WeightStore {
@@ -40,6 +47,7 @@ impl WeightStore {
             WeightStore::Dense(w) => tensor::matmul_nt(x, w),
             WeightStore::Csr(w) => ops::dxct(x, w),
             WeightStore::Auto(w) => w.dxct(x),
+            WeightStore::Quantized(w) => w.dxct(x),
         }
     }
 
@@ -48,6 +56,7 @@ impl WeightStore {
             WeightStore::Dense(w) => w.numel() * 4,
             WeightStore::Csr(w) => w.storage_bytes(),
             WeightStore::Auto(w) => w.storage_bytes(),
+            WeightStore::Quantized(w) => w.storage_bytes(),
         }
     }
 
@@ -56,6 +65,7 @@ impl WeightStore {
             WeightStore::Dense(w) => w.data.iter().filter(|&&v| v != 0.0).count(),
             WeightStore::Csr(w) => w.nnz(),
             WeightStore::Auto(w) => w.nnz(),
+            WeightStore::Quantized(w) => w.nnz(),
         }
     }
 
@@ -64,15 +74,17 @@ impl WeightStore {
             WeightStore::Dense(w) => (w.shape[0], w.shape[1]),
             WeightStore::Csr(w) => (w.rows, w.cols),
             WeightStore::Auto(w) => (w.rows(), w.cols()),
+            WeightStore::Quantized(w) => (w.rows, w.cols),
         }
     }
 
-    /// Human-readable storage format ("dense", "CSR", "ELL", …).
+    /// Human-readable storage format ("dense", "CSR", "QCS", …).
     pub fn format_name(&self) -> &'static str {
         match self {
             WeightStore::Dense(_) => "dense",
             WeightStore::Csr(_) => "CSR",
             WeightStore::Auto(w) => w.format().name(),
+            WeightStore::Quantized(_) => "QCS",
         }
     }
 }
@@ -119,11 +131,32 @@ impl Engine {
 
     /// Build with an explicit weight-storage mode. `WeightMode::Auto`
     /// stores each prunable layer in the format `select_format` chose
-    /// for its structure instead of hard-coded CSR.
+    /// for its structure instead of hard-coded CSR;
+    /// `WeightMode::Quantized` codebook-quantizes each prunable layer
+    /// with the default `QuantConfig`.
     pub fn from_bundle_mode(
         model: &str,
         bundle: &ParamBundle,
         mode: WeightMode,
+    ) -> anyhow::Result<Engine> {
+        Self::build(model, bundle, mode, None)
+    }
+
+    /// Serve an already-quantized model bit-faithfully: quantized leaves
+    /// keep their stored codebooks/codes (no re-clustering), everything
+    /// else deploys as in `WeightMode::Csr` — the checkpoint-v2 serving
+    /// path (`proxcomp infer --quantized`, `pipeline --quantize`).
+    pub fn from_quantized(model: &str, qm: &QuantizedModel) -> anyhow::Result<Engine> {
+        let bundle = qm.to_bundle();
+        let map = qm.qcs_by_name();
+        Self::build(model, &bundle, WeightMode::Csr, Some(&map))
+    }
+
+    fn build(
+        model: &str,
+        bundle: &ParamBundle,
+        mode: WeightMode,
+        qcs: Option<&HashMap<String, QcsMatrix>>,
     ) -> anyhow::Result<Engine> {
         let sparse = mode != WeightMode::Dense;
         let leaves: HashMap<&str, (usize, &ParamSpec)> = bundle
@@ -141,6 +174,11 @@ impl Engine {
         let store = |name: &str| -> anyhow::Result<WeightStore> {
             let (s, v) = value(name)?;
             let (rows, cols) = crate::checkpoint::matrix_view(s);
+            if s.prunable {
+                if let Some(q) = qcs.and_then(|m| m.get(name)) {
+                    return Ok(WeightStore::Quantized(q.clone()));
+                }
+            }
             Ok(match mode {
                 WeightMode::Csr if s.prunable => {
                     WeightStore::Csr(CsrMatrix::from_dense(v, rows, cols))
@@ -148,6 +186,9 @@ impl Engine {
                 WeightMode::Auto if s.prunable => {
                     WeightStore::Auto(DynSparseMatrix::from_dense(v, rows, cols))
                 }
+                WeightMode::Quantized if s.prunable => WeightStore::Quantized(
+                    QcsMatrix::from_dense(v, rows, cols, &QuantConfig::default()),
+                ),
                 _ => WeightStore::Dense(Tensor::new(vec![rows, cols], v.clone())),
             })
         };
@@ -320,6 +361,26 @@ impl Engine {
                     Some((name.clone(), w.format_name()))
                 }
                 Layer::ProjectResidual { w, .. } => Some(("proj".to_string(), w.format_name())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Per-weight-layer deployment report: (layer name, storage format,
+    /// stored bytes, nnz) — the pipeline's per-leaf size-breakdown
+    /// table; the bytes are the *stored* representation (quantized
+    /// bytes under `WeightMode::Quantized`), summing to
+    /// [`Engine::model_size_bytes`] minus bias/BN payloads.
+    pub fn layer_storage(&self) -> Vec<(String, &'static str, usize, usize)> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Conv { name, w, .. } | Layer::Fc { name, w, .. } => {
+                    Some((name.clone(), w.format_name(), w.storage_bytes(), w.nnz()))
+                }
+                Layer::ProjectResidual { w, .. } => {
+                    Some(("proj".to_string(), w.format_name(), w.storage_bytes(), w.nnz()))
+                }
                 _ => None,
             })
             .collect()
@@ -692,5 +753,73 @@ mod tests {
             assert_close(&got, &want, &format!("{mode:?}"));
             assert!(engine.model_size_bytes() > 0);
         }
+    }
+
+    /// A sparse MLP bundle big enough that every prunable leaf clears
+    /// the quantization nnz floor (fc 100→32→10 at ~70 % zeros).
+    fn sparse_mlp_bundle(seed: u64) -> ParamBundle {
+        let p = |name: &str, kind: &str, shape: Vec<usize>, prunable: bool| {
+            crate::runtime::ParamSpec::new(name, kind, shape, prunable)
+        };
+        let specs = vec![
+            p("fc1_w", "fc_w", vec![32, 100], true),
+            p("fc1_b", "fc_b", vec![32], false),
+            p("fc2_w", "fc_w", vec![10, 32], true),
+            p("fc2_b", "fc_b", vec![10], false),
+        ];
+        let mut bundle = ParamBundle::he_init(&specs, seed);
+        for (spec, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+            if spec.prunable {
+                let t = prox::magnitude_quantile(v, 0.7);
+                prox::hard_threshold_inplace(v, t);
+            }
+        }
+        bundle
+    }
+
+    #[test]
+    fn quantized_mode_deploys_qcs_and_shrinks_model_size() {
+        let bundle = sparse_mlp_bundle(6);
+        let mut rng = Rng::new(43);
+        let x = Tensor::new(vec![3, 1, 10, 10], rng.normal_vec(300, 1.0));
+        let csr = Engine::from_bundle_mode("mlp-s", &bundle, WeightMode::Csr).unwrap();
+        let quant = Engine::from_bundle_mode("mlp-s", &bundle, WeightMode::Quantized).unwrap();
+        assert!(quant.layer_formats().iter().all(|(_, f)| *f == "QCS"), "{:?}", quant.layer_formats());
+        assert!(
+            quant.model_size_bytes() < csr.model_size_bytes(),
+            "quantized {} >= CSR {}",
+            quant.model_size_bytes(),
+            csr.model_size_bytes()
+        );
+        // Lossy but structurally sound: logits exist and nnz is preserved.
+        let logits = quant.forward(&x).unwrap();
+        assert_eq!(logits.shape, vec![3, 10]);
+        let sizes = quant.layer_storage();
+        assert_eq!(sizes.len(), 2);
+        assert!(sizes.iter().all(|(_, f, bytes, _)| *f == "QCS" && *bytes > 0));
+    }
+
+    #[test]
+    fn from_quantized_serves_codebooks_bit_exactly() {
+        // Serving a QuantizedModel must equal serving the dequantized
+        // bundle through CSR bit-for-bit: the QCS kernel walks the same
+        // nonzeros in the same ascending-index reduction order, only
+        // loading values through the codebook.
+        let bundle = sparse_mlp_bundle(7);
+        let (qm, reports) = crate::quant::quantize_bundle(&bundle, &crate::quant::QuantConfig::default());
+        assert!(reports.iter().any(|r| r.quantized), "nothing quantized");
+        let qeng = Engine::from_quantized("mlp-s", &qm).unwrap();
+        let deq = qm.to_bundle();
+        let ceng = Engine::from_bundle_mode("mlp-s", &deq, WeightMode::Csr).unwrap();
+        let mut rng = Rng::new(47);
+        for b in [1usize, 4] {
+            let x = Tensor::new(vec![b, 1, 10, 10], rng.normal_vec(b * 100, 1.0));
+            assert_eq!(
+                qeng.forward(&x).unwrap().data,
+                ceng.forward(&x).unwrap().data,
+                "b={b}: quantized serving diverges from dequantized CSR"
+            );
+        }
+        assert!(qeng.model_size_bytes() < ceng.model_size_bytes());
     }
 }

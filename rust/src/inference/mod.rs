@@ -1,11 +1,14 @@
 //! Compressed inference engine — the "embedded device" execution path.
 //!
 //! Runs a trained model forward entirely in Rust with weights stored
-//! either dense or CSR (the paper's deployment scenario, Section 4.5):
-//! fully-connected layers multiply activations against CSR weights with
-//! the Figure-2 `dense×compressed'` kernel; conv layers run im2col and
-//! then the same kernel against the (O, I·KH·KW) CSR view. Per-layer
-//! timings feed the Table-3 bench and the device cost model.
+//! dense, CSR (the paper's deployment scenario, Section 4.5),
+//! dispatch-chosen per layer, or codebook-quantized
+//! (`quant::QcsMatrix`, `WeightMode::Quantized` /
+//! [`Engine::from_quantized`]): fully-connected layers multiply
+//! activations against the compressed weights with the Figure-2
+//! `dense×compressed'` kernel; conv layers run im2col and then the same
+//! kernel against the (O, I·KH·KW) view. Per-layer timings feed the
+//! Table-3 bench and the device cost model.
 //!
 //! `server` adds the batched serving front-end: a [`BatchServer`]
 //! coalesces single-sample requests into micro-batches over one shared

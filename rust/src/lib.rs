@@ -28,6 +28,7 @@ pub mod data;
 pub mod device;
 pub mod inference;
 pub mod metrics;
+pub mod quant;
 pub mod runtime;
 pub mod sparse;
 pub mod tensor;

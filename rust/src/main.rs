@@ -5,8 +5,9 @@
 //!                   [--retrain-steps 200]
 //! proxcomp sweep    --model lenet --lambdas 0.5,1.0,2.0 [--method spc]
 //! proxcomp seeds    --model lenet --seeds 0,1,2 --optimizer rmsprop
-//! proxcomp pipeline [--model mlp-s|lenet-s] [--steps 200]  # offline SpC→debias→serve smoke
-//! proxcomp infer    --checkpoint ckpt.pxcp [--sparse] [--batch 64]
+//! proxcomp pipeline [--model mlp-s|lenet-s] [--steps 200] [--quantize]
+//! proxcomp quantize --checkpoint ckpt.pxcp [--out q.pxcp] [--codebook-size 16]
+//! proxcomp infer    --checkpoint ckpt.pxcp [--sparse|--quantized] [--batch 64]
 //! proxcomp report   --checkpoint ckpt.pxcp        # layer table + size
 //! proxcomp info                                   # manifest summary
 //! ```
@@ -46,6 +47,7 @@ fn run() -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "seeds" => cmd_seeds(&args),
         "pipeline" => cmd_pipeline(&args),
+        "quantize" => cmd_quantize(&args),
         "infer" => cmd_infer(&args),
         "report" => cmd_report(&args),
         "info" => cmd_info(&args),
@@ -161,11 +163,17 @@ fn cmd_seeds(args: &Args) -> Result<()> {
 /// the finite-difference gradient check, (2) the final eval loss beats
 /// the untrained eval loss, (3) the deployed engine's per-layer format
 /// report is non-empty, and (4) the compression factor exceeds 1× —
-/// the paper pipeline's minimum liveness bar.
+/// the paper pipeline's minimum liveness bar. With `--quantize` the
+/// deployment stage additionally codebook-quantizes the debiased model
+/// (optional `--finetune-steps` trained-quantization pass), serves it
+/// through the QCS engine, and extends the gate: quantized accuracy
+/// must stay within `--quant-tolerance` of the debiased accuracy and
+/// the quantized checkpoint must be strictly smaller than the CSR one.
 fn cmd_pipeline(args: &Args) -> Result<()> {
     use proxcomp::compress::{self, debias};
     use proxcomp::coordinator::{trainer::StepScalars, Trainer};
     use proxcomp::inference::{BatchConfig, BatchServer, WeightMode};
+    use proxcomp::quant;
     use proxcomp::runtime::native;
     use std::sync::Arc;
     use std::time::Duration;
@@ -196,6 +204,15 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
             }
         }
     };
+    let quantize = args.flag("quantize");
+    let codebook_size = args.usize_or("codebook-size", 16)?;
+    anyhow::ensure!(
+        (1..=256).contains(&codebook_size),
+        "--codebook-size must be in 1..=256 (codes are at most 8 bits), got {codebook_size}"
+    );
+    let finetune_steps = args.usize_or("finetune-steps", 0)?;
+    let finetune_lr = args.f32_or("finetune-lr", 1e-4)?;
+    let quant_tol = args.f64_or("quant-tolerance", 0.05)?;
     cfg.apply_args(args)?;
     cfg.validate()?;
     args.finish()?;
@@ -250,12 +267,44 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let result = compress::finish_run(&mut rt, &mut trainer, method, cfg.lambda as f64, t0)?;
     print_result(&result);
 
-    // Compressed deployment: dispatch-chosen formats + batched serving.
-    let engine = Arc::new(Engine::from_bundle_mode(&cfg.model, &trainer.state.params, WeightMode::Auto)?);
+    // Compressed deployment: dispatch-chosen formats (or the codebook-
+    // quantized QCS engine under --quantize) + batched serving.
+    let qcfg = quant::QuantConfig { codebook_size, ..quant::QuantConfig::default() };
+    let quant_model = if quantize {
+        let (mut qm, reports) = quant::quantize_bundle(&trainer.state.params, &qcfg);
+        for r in reports.iter().filter(|r| r.quantized) {
+            println!(
+                "[pipeline] quantized {:<10} k={:<3} rmse {:.5} max|err| {:.5}",
+                r.name, r.codebook_len, r.stats.rmse, r.stats.max_abs_err
+            );
+        }
+        if finetune_steps > 0 {
+            let rep = quant::finetune_codebooks(
+                &mut qm,
+                &trainer.train_data,
+                finetune_steps,
+                32,
+                finetune_lr,
+                cfg.seed,
+            )?;
+            println!(
+                "[pipeline] codebook fine-tune ({} steps, lr {}): loss {:.4} -> {:.4}",
+                rep.steps, finetune_lr, rep.loss_first, rep.loss_last
+            );
+        }
+        Some(qm)
+    } else {
+        None
+    };
+    let engine = Arc::new(match &quant_model {
+        Some(qm) => Engine::from_quantized(&cfg.model, qm)?,
+        None => Engine::from_bundle_mode(&cfg.model, &trainer.state.params, WeightMode::Auto)?,
+    });
     let formats = engine.layer_formats();
     let formats_text =
         formats.iter().map(|(l, f)| format!("{l}={f}")).collect::<Vec<_>>().join(" ");
     println!("[pipeline] deployed formats: {formats_text}");
+    print_leaf_sizes(&trainer.state.params, &engine);
     let (c, h, w) = (trainer.test_data.c, trainer.test_data.h, trainer.test_data.w);
     let server =
         BatchServer::start(Arc::clone(&engine), BatchConfig::new(8, Duration::from_millis(10), (c, h, w)));
@@ -289,6 +338,40 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         "compression factor {:.2}× is not > 1",
         result.times_factor()
     );
+
+    // The quantization gate: checkpoint both representations, then
+    // require strict size improvement over CSR and accuracy within
+    // tolerance of the debiased f32 model.
+    if let Some(qm) = &quant_model {
+        let mut meta = Json::obj();
+        meta.set("model", Json::from(cfg.model.as_str()))
+            .set("dataset", Json::from(trainer.entry.dataset.as_str()))
+            .set("method", Json::from(method))
+            .set("codebook_size", Json::from(codebook_size));
+        let csr_path = metrics::report_path(&format!("pipeline_{}.pxcp", cfg.model));
+        let q_path = metrics::report_path(&format!("pipeline_{}_quant.pxcp", cfg.model));
+        let csr_bytes = checkpoint::save(&csr_path, &trainer.state.params, &meta)?;
+        let q_bytes = checkpoint::save_quantized(&q_path, qm, &meta)?;
+        let quant_acc = engine.accuracy(&trainer.test_data, 64)?;
+        println!(
+            "[pipeline] quantized: acc {:.4} (debiased {:.4}, tol {quant_tol}), \
+             checkpoint {} KB vs CSR {} KB ({:.2}×)",
+            quant_acc,
+            result.accuracy,
+            q_bytes / 1024,
+            csr_bytes / 1024,
+            csr_bytes as f64 / q_bytes.max(1) as f64
+        );
+        anyhow::ensure!(
+            q_bytes < csr_bytes,
+            "quantized checkpoint ({q_bytes} B) is not strictly smaller than CSR ({csr_bytes} B)"
+        );
+        anyhow::ensure!(
+            quant_acc >= result.accuracy - quant_tol,
+            "quantized accuracy {quant_acc:.4} dropped more than {quant_tol} below debiased {:.4}",
+            result.accuracy
+        );
+    }
     println!(
         "[pipeline] OK: loss {:.4} → {:.4}, acc {:.4}, compression {:.1}× ({:.1}s)",
         eval0.loss,
@@ -300,11 +383,132 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Per-leaf size breakdown for the pipeline report: dense f32 bytes,
+/// CSR bytes, and the engine's actually-deployed format/bytes (QCS
+/// under `--quantize`), so the final report shows *where* the
+/// compression lives instead of only the aggregate ratio.
+fn print_leaf_sizes(params: &proxcomp::runtime::ParamBundle, engine: &Engine) {
+    use proxcomp::sparse::CsrMatrix;
+    let mut base = std::collections::HashMap::new();
+    for (spec, v) in params.specs.iter().zip(&params.values) {
+        let (rows, cols) = checkpoint::matrix_view(spec);
+        if spec.prunable && rows > 0 {
+            let csr = CsrMatrix::from_dense(v, rows, cols);
+            base.insert(spec.layer.clone(), (v.len() * 4, csr.storage_bytes()));
+        }
+    }
+    println!("[pipeline] per-leaf storage (dense → CSR → deployed):");
+    let (mut td, mut tc, mut ts) = (0usize, 0usize, 0usize);
+    for (name, fmt, bytes, nnz) in engine.layer_storage() {
+        let (dense_b, csr_b) = base.get(&name).copied().unwrap_or((0, 0));
+        td += dense_b;
+        tc += csr_b;
+        ts += bytes;
+        println!(
+            "  {name:<12} {dense_b:>10} B {csr_b:>10} B {:>10} B  ({fmt}, nnz {nnz})",
+            bytes
+        );
+    }
+    println!("  {:<12} {td:>10} B {tc:>10} B {ts:>10} B", "total");
+}
+
+/// Codebook-quantize a trained checkpoint (Deep Compression stage):
+/// per-leaf k-means codebooks over the surviving nonzeros, optional
+/// trained-quantization fine-tune on the native backend, a checkpoint-v2
+/// quantized artifact, and a per-leaf size/error report.
+fn cmd_quantize(args: &Args) -> Result<()> {
+    use proxcomp::quant;
+    let path = args
+        .get_str("checkpoint")
+        .ok_or_else(|| anyhow::anyhow!("--checkpoint required"))?;
+    let out = args
+        .str_or("out", &format!("{}_quant.pxcp", path.trim_end_matches(".pxcp")));
+    let codebook_size = args.usize_or("codebook-size", 16)?;
+    anyhow::ensure!(
+        (1..=256).contains(&codebook_size),
+        "--codebook-size must be in 1..=256 (codes are at most 8 bits), got {codebook_size}"
+    );
+    let finetune_steps = args.usize_or("finetune-steps", 0)?;
+    let finetune_lr = args.f32_or("finetune-lr", 1e-4)?;
+    let batch = args.usize_or("batch", 32)?;
+    let examples = args.usize_or("examples", 1024)?;
+    let seed = args.u64_or("seed", 0)?;
+    args.finish()?;
+
+    let ck = checkpoint::load(std::path::Path::new(&path))?;
+    let model = ck.meta.get("model").and_then(Json::as_str).map(str::to_string);
+    let dataset_name =
+        ck.meta.get("dataset").and_then(Json::as_str).unwrap_or("synth-mnist").to_string();
+    let qcfg = quant::QuantConfig { codebook_size, ..quant::QuantConfig::default() };
+    let (mut qm, reports) = quant::quantize_bundle(&ck.params, &qcfg);
+
+    println!("checkpoint: {path} ({} KB payload)", ck.payload_bytes / 1024);
+    println!("\nleaf             nnz / total         k   rmse      dense B    CSR B      stored B");
+    for r in &reports {
+        println!(
+            "{:<16} {:>9} / {:<9} {:>3}   {:<9.5} {:>9} {:>9} {:>9}{}",
+            r.name,
+            r.nnz,
+            r.total,
+            if r.quantized { r.codebook_len.to_string() } else { "-".into() },
+            r.stats.rmse,
+            r.dense_bytes,
+            r.csr_bytes,
+            r.stored_bytes,
+            if r.quantized { "" } else { "  (kept f32)" }
+        );
+    }
+
+    // Trained quantization (per-code gradient descent on the centroids)
+    // needs the native backend's graph families.
+    if finetune_steps > 0 {
+        let native_family =
+            model.as_deref().map(|m| m.starts_with("mlp") || m.starts_with("lenet")).unwrap_or(false);
+        if native_family {
+            let data = data::generate(&dataset_name, examples, seed)?;
+            let rep = quant::finetune_codebooks(&mut qm, &data, finetune_steps, batch, finetune_lr, seed)?;
+            println!(
+                "\ncodebook fine-tune: {} steps at lr {finetune_lr}, loss {:.4} -> {:.4}",
+                rep.steps, rep.loss_first, rep.loss_last
+            );
+        } else {
+            println!("\n[skip] codebook fine-tune needs a native model family (mlp*/lenet*)");
+        }
+    }
+
+    // Accuracy before/after quantization when the checkpoint names an
+    // engine-servable model.
+    if let Some(model) = &model {
+        let dataset = data::generate(&dataset_name, examples, seed ^ 0x7E57_DA7A)?;
+        let base = Engine::from_bundle(model, &ck.params, true)?;
+        let qeng = Engine::from_quantized(model, &qm)?;
+        let acc_f32 = base.accuracy(&dataset, 64)?;
+        let acc_q = qeng.accuracy(&dataset, 64)?;
+        println!(
+            "\naccuracy over {} examples: f32/CSR {:.4} ({} KB) -> quantized {:.4} ({} KB)",
+            dataset.n,
+            acc_f32,
+            base.model_size_bytes() / 1024,
+            acc_q,
+            qeng.model_size_bytes() / 1024
+        );
+    }
+
+    let bytes = checkpoint::save_quantized(std::path::Path::new(&out), &qm, &ck.meta)?;
+    println!(
+        "\nwrote {out}: {} KB payload ({:.2}× vs input checkpoint)",
+        bytes / 1024,
+        ck.payload_bytes as f64 / bytes.max(1) as f64
+    );
+    Ok(())
+}
+
 fn cmd_infer(args: &Args) -> Result<()> {
     let path = args
         .get_str("checkpoint")
         .ok_or_else(|| anyhow::anyhow!("--checkpoint required"))?;
     let sparse = args.flag("sparse");
+    let quantized = args.flag("quantized");
     let batch = args.usize_or("batch", 64)?;
     let examples = args.usize_or("examples", 512)?;
     args.finish()?;
@@ -321,11 +525,25 @@ fn cmd_infer(args: &Args) -> Result<()> {
         .and_then(Json::as_str)
         .unwrap_or("synth-mnist")
         .to_string();
-    let engine = Engine::from_bundle(&model, &ck.params, sparse)?;
+    let engine = if quantized {
+        anyhow::ensure!(
+            ck.is_quantized(),
+            "--quantized needs a quantized (v2) checkpoint; run `proxcomp quantize` first"
+        );
+        Engine::from_quantized(&model, &ck.to_quantized_model())?
+    } else {
+        Engine::from_bundle(&model, &ck.params, sparse)?
+    };
     let dataset = data::generate(&dataset_name, examples, 0x7E57_DA7A)?;
     info!(
         "engine: {model} ({}), model size {} KB",
-        if sparse { "CSR" } else { "dense" },
+        if quantized {
+            "QCS"
+        } else if sparse {
+            "CSR"
+        } else {
+            "dense"
+        },
         engine.model_size_bytes() / 1024
     );
     let t0 = std::time::Instant::now();
@@ -409,9 +627,16 @@ SUBCOMMANDS
            conv models run a finite-difference gradient preflight
            (exits nonzero if the gradient check or loss improvement
            fails, the deployed format report is empty, or compression
-           ≤ 1×)
+           ≤ 1×). --quantize adds the Deep-Compression stage: codebook
+           quantization (--codebook-size 16, --finetune-steps 0,
+           --finetune-lr 1e-4), QCS serving, and two extra gates —
+           quantized accuracy within --quant-tolerance (0.05) of the
+           debiased model and a strictly smaller checkpoint than CSR
+  quantize codebook-quantize a trained checkpoint to format v2
+           --checkpoint F [--out F] [--codebook-size 16]
+           [--finetune-steps N --finetune-lr F] [--examples N]
   infer    run a checkpoint through the rust inference engine
-           --checkpoint F [--sparse] [--batch N]
+           --checkpoint F [--sparse | --quantized] [--batch N]
   report   layer-wise compression table for a checkpoint
   info     manifest summary
 

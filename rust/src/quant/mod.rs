@@ -1,0 +1,300 @@
+//! Codebook quantization subsystem — the Deep Compression stage on top
+//! of the SpC→debias→compress pipeline.
+//!
+//! The paper's compressed CSR matrices stop at f32 values with u32
+//! indices; Deep Compression (Han et al. 2016a) shows *trained*
+//! codebook quantization on top of pruned sparse weights buys a further
+//! 3–4× model-size reduction, and EIE (Han et al. 2016b) shows the
+//! 4-bit-code + codebook representation is also what makes compressed
+//! inference bandwidth-efficient. This module supplies the whole stage:
+//!
+//! * [`codebook`] — deterministic k-means codebooks per leaf with a
+//!   reported quantization error.
+//! * [`qcs`] — [`QcsMatrix`], quantized CSR (packed codes + narrowed
+//!   indices) with bit-deterministic `dxct`/`spmv` serving kernels,
+//!   registered in `sparse::dispatch` as [`SparseFormat::Qcs`] and in
+//!   the engine as `WeightMode::Quantized`.
+//! * [`quantize_bundle`] — bundle-level policy: prunable matrix leaves
+//!   with enough nonzeros go quantized, biases and small leaves stay
+//!   f32 (Deep Compression quantizes weights only).
+//! * [`finetune_codebooks`] — the "trained quantization" step on the
+//!   native backend: per-code gradient accumulation updates centroids
+//!   while codes stay fixed.
+//!
+//! `checkpoint` (format v2) persists quantized leaves, `proxcomp
+//! quantize` drives the stage from the CLI, and `proxcomp pipeline
+//! --quantize` gates on quantized accuracy + strict size improvement.
+
+pub mod codebook;
+pub mod qcs;
+
+pub use codebook::{kmeans_codebook, QuantConfig, QuantStats};
+pub use qcs::QcsMatrix;
+
+use crate::data::{Batcher, Dataset};
+use crate::runtime::{native, ParamBundle, ParamSpec};
+use crate::sparse::CsrMatrix;
+use crate::util::pool;
+
+/// One leaf of a quantized model: quantized-CSR for the big prunable
+/// matrices, plain f32 for everything else (biases, BN, small leaves —
+/// the checkpoint still stores sparse f32 leaves CSR).
+#[derive(Debug, Clone)]
+pub enum QuantLeaf {
+    Dense(Vec<f32>),
+    Qcs(QcsMatrix),
+}
+
+/// A model with codebook-quantized prunable leaves — what checkpoint v2
+/// persists and `Engine::from_quantized` serves.
+#[derive(Debug, Clone)]
+pub struct QuantizedModel {
+    pub specs: Vec<ParamSpec>,
+    pub leaves: Vec<QuantLeaf>,
+}
+
+/// Per-leaf quantization report: the size ladder (dense → CSR →
+/// quantized) plus the codebook error, printed by the CLI and checked
+/// by the pipeline gate.
+#[derive(Debug, Clone)]
+pub struct LeafReport {
+    pub name: String,
+    pub quantized: bool,
+    pub nnz: usize,
+    pub total: usize,
+    pub dense_bytes: usize,
+    pub csr_bytes: usize,
+    /// Stored bytes of this leaf in the quantized model (equals
+    /// `csr_bytes`-or-`dense_bytes` when the leaf stayed f32).
+    pub stored_bytes: usize,
+    pub codebook_len: usize,
+    pub stats: QuantStats,
+}
+
+impl QuantizedModel {
+    /// Dequantize back to a dense [`ParamBundle`] (every quantized value
+    /// becomes its centroid) — the fine-tune pass and the engine's
+    /// fallback leaves go through this.
+    pub fn to_bundle(&self) -> ParamBundle {
+        let values = self
+            .leaves
+            .iter()
+            .map(|l| match l {
+                QuantLeaf::Dense(v) => v.clone(),
+                QuantLeaf::Qcs(q) => q.to_dense(),
+            })
+            .collect();
+        ParamBundle { specs: self.specs.clone(), values }
+    }
+
+    /// The quantized leaves by spec name (the engine's store override).
+    pub fn qcs_by_name(&self) -> std::collections::HashMap<String, QcsMatrix> {
+        self.specs
+            .iter()
+            .zip(&self.leaves)
+            .filter_map(|(s, l)| match l {
+                QuantLeaf::Qcs(q) => Some((s.name.clone(), q.clone())),
+                QuantLeaf::Dense(_) => None,
+            })
+            .collect()
+    }
+}
+
+/// Quantize a trained bundle per the Deep Compression policy: each
+/// prunable 2-D-viewable leaf with at least `cfg.min_quant_nnz`
+/// nonzeros gets a per-leaf k-means codebook and a [`QcsMatrix`];
+/// biases, BN parameters, and small leaves stay f32. Returns the model
+/// and per-leaf reports (stored bytes account CSR fallback for sparse
+/// f32 leaves, mirroring what checkpoint v2 actually writes).
+pub fn quantize_bundle(bundle: &ParamBundle, cfg: &QuantConfig) -> (QuantizedModel, Vec<LeafReport>) {
+    let mut leaves = Vec::with_capacity(bundle.specs.len());
+    let mut reports = Vec::with_capacity(bundle.specs.len());
+    for (spec, values) in bundle.specs.iter().zip(&bundle.values) {
+        let (rows, cols) = crate::checkpoint::matrix_view(spec);
+        let nnz = values.iter().filter(|&&v| v != 0.0).count();
+        let dense_bytes = values.len() * 4;
+        let viewable = spec.prunable && rows > 0;
+        let csr_bytes = if viewable {
+            CsrMatrix::from_dense(values, rows, cols).storage_bytes()
+        } else {
+            dense_bytes
+        };
+        if viewable && nnz >= cfg.min_quant_nnz {
+            let (q, stats) = QcsMatrix::from_csr(&CsrMatrix::from_dense(values, rows, cols), cfg);
+            reports.push(LeafReport {
+                name: spec.name.clone(),
+                quantized: true,
+                nnz,
+                total: values.len(),
+                dense_bytes,
+                csr_bytes,
+                stored_bytes: q.storage_bytes(),
+                codebook_len: q.codebook().len(),
+                stats,
+            });
+            leaves.push(QuantLeaf::Qcs(q));
+        } else {
+            // Stays f32; checkpoint v2 still stores it CSR when sparse
+            // enough (the same threshold `checkpoint::save` applies).
+            let stored = if viewable && sparse_enough(nnz, values.len()) {
+                csr_bytes
+            } else {
+                dense_bytes
+            };
+            reports.push(LeafReport {
+                name: spec.name.clone(),
+                quantized: false,
+                nnz,
+                total: values.len(),
+                dense_bytes,
+                csr_bytes,
+                stored_bytes: stored,
+                codebook_len: 0,
+                stats: QuantStats::default(),
+            });
+            leaves.push(QuantLeaf::Dense(values.clone()));
+        }
+    }
+    (QuantizedModel { specs: bundle.specs.clone(), leaves }, reports)
+}
+
+fn sparse_enough(nnz: usize, total: usize) -> bool {
+    let zero_frac = 1.0 - nnz as f64 / total.max(1) as f64;
+    zero_frac >= crate::checkpoint::CSR_THRESHOLD
+}
+
+/// Outcome of the codebook fine-tune pass.
+#[derive(Debug, Clone, Copy)]
+pub struct FinetuneReport {
+    pub steps: usize,
+    pub loss_first: f32,
+    pub loss_last: f32,
+}
+
+/// Trained quantization (Deep Compression Figure 3): run minibatches
+/// through the native backend at the *dequantized* weights, accumulate
+/// each leaf's gradient per code (ascending CSR-entry order — bit-
+/// deterministic), and descend the centroids. Codes and the sparsity
+/// pattern never change, so the model stays exactly representable by
+/// its codebooks. Only the native model families (mlp/lenet stage
+/// graphs) can be fine-tuned — callers gate on the model name.
+pub fn finetune_codebooks(
+    qm: &mut QuantizedModel,
+    data: &Dataset,
+    steps: usize,
+    batch: usize,
+    lr: f32,
+    seed: u64,
+) -> anyhow::Result<FinetuneReport> {
+    anyhow::ensure!(batch > 0 && batch <= data.n, "bad fine-tune batch {batch} (n = {})", data.n);
+    let threads = pool::max_threads();
+    let mut batcher = Batcher::new(data.n, seed ^ 0x71F1_4E70);
+    let mut x_shape = vec![batch];
+    x_shape.extend_from_slice(&[data.c, data.h, data.w]);
+    let (mut loss_first, mut loss_last) = (0.0f32, 0.0f32);
+    for step in 0..steps {
+        let (xs, ys) = batcher.next_batch(data, batch);
+        let bundle = qm.to_bundle();
+        let (loss, grads) = native::loss_and_param_grads(&bundle, &x_shape, &xs, &ys, threads)?;
+        if step == 0 {
+            loss_first = loss;
+        }
+        loss_last = loss;
+        for (leaf, grad) in qm.leaves.iter_mut().zip(&grads) {
+            if let QuantLeaf::Qcs(q) = leaf {
+                let cols = q.cols;
+                let mut gsum = vec![0.0f32; q.codebook().len()];
+                q.for_each_entry(|r, c, code| {
+                    gsum[code] += grad[r * cols + c];
+                });
+                let cb: Vec<f32> =
+                    q.codebook().iter().zip(&gsum).map(|(c, g)| c - lr * g).collect();
+                q.set_codebook(cb);
+            }
+        }
+    }
+    Ok(FinetuneReport { steps, loss_first, loss_last })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prox;
+    use crate::util::rng::Rng;
+
+    fn sparse_bundle(seed: u64) -> ParamBundle {
+        let p = |name: &str, kind: &str, shape: Vec<usize>, prunable: bool| {
+            ParamSpec::new(name, kind, shape, prunable)
+        };
+        let specs = vec![
+            p("fc1_w", "fc_w", vec![32, 64], true),
+            p("fc1_b", "fc_b", vec![32], false),
+            p("fc2_w", "fc_w", vec![4, 32], true), // small: stays f32
+            p("fc2_b", "fc_b", vec![4], false),
+        ];
+        let mut bundle = ParamBundle::he_init(&specs, seed);
+        let mut rng = Rng::new(seed);
+        bundle.values[1] = rng.normal_vec(32, 0.1);
+        for (spec, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+            if spec.prunable {
+                let t = prox::magnitude_quantile(v, 0.8);
+                prox::hard_threshold_inplace(v, t);
+            }
+        }
+        bundle
+    }
+
+    #[test]
+    fn policy_quantizes_big_prunable_leaves_only() {
+        let bundle = sparse_bundle(1);
+        let cfg = QuantConfig::default();
+        let (qm, reports) = quantize_bundle(&bundle, &cfg);
+        assert!(matches!(qm.leaves[0], QuantLeaf::Qcs(_)), "fc1_w should quantize");
+        assert!(matches!(qm.leaves[1], QuantLeaf::Dense(_)), "bias must stay f32");
+        // fc2_w has 4·32·0.2 ≈ 26 nonzeros < min_quant_nnz → stays f32.
+        assert!(matches!(qm.leaves[2], QuantLeaf::Dense(_)), "small leaf must stay f32");
+        assert!(reports[0].quantized && !reports[1].quantized && !reports[2].quantized);
+        assert!(reports[0].stored_bytes < reports[0].csr_bytes);
+        assert!(reports[0].csr_bytes < reports[0].dense_bytes);
+    }
+
+    #[test]
+    fn dequantized_bundle_matches_reported_error() {
+        let bundle = sparse_bundle(2);
+        let (qm, reports) = quantize_bundle(&bundle, &QuantConfig::default());
+        let back = qm.to_bundle();
+        assert_eq!(back.specs.len(), bundle.specs.len());
+        for ((rep, orig), deq) in reports.iter().zip(&bundle.values).zip(&back.values) {
+            if !rep.quantized {
+                assert_eq!(orig, deq, "{}: f32 leaves must round-trip exactly", rep.name);
+                continue;
+            }
+            let max_err = orig
+                .iter()
+                .zip(deq)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(
+                max_err <= rep.stats.max_abs_err + 1e-7,
+                "{}: actual {} > reported {}",
+                rep.name,
+                max_err,
+                rep.stats.max_abs_err
+            );
+            // Sparsity pattern preserved exactly.
+            for (a, b) in orig.iter().zip(deq) {
+                assert_eq!(*a == 0.0, *b == 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qcs_by_name_maps_quantized_leaves() {
+        let bundle = sparse_bundle(3);
+        let (qm, _) = quantize_bundle(&bundle, &QuantConfig::default());
+        let map = qm.qcs_by_name();
+        assert!(map.contains_key("fc1_w"));
+        assert!(!map.contains_key("fc1_b"));
+        assert!(!map.contains_key("fc2_w"));
+    }
+}

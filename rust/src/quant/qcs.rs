@@ -1,0 +1,491 @@
+//! Quantized-CSR (`QcsMatrix`) — the EIE-style deployment format.
+//!
+//! CSR with the f32 values replaced by codes into a per-matrix codebook
+//! (EIE, Han et al. 2016b stores exactly this: 4-bit codes + a shared
+//! 16-entry table), and the u32 column indices narrowed to u16 whenever
+//! the column count fits. At the paper's 90–97 % sparsity this is what
+//! makes compressed inference bandwidth-efficient: a nonzero costs
+//! 2.5 bytes (u16 index + packed 4-bit code) instead of CSR's 8.
+//!
+//! The `dxct`/`spmv` kernels mirror `sparse::ops`: they partition over
+//! disjoint output chunks via `pool::parallel_chunks` and keep a fixed
+//! ascending-index reduction order per output element, so results are
+//! bit-identical for any `PROXCOMP_THREADS` (the serving guarantee the
+//! property tests pin).
+
+use super::codebook::{kmeans_codebook, QuantConfig, QuantStats};
+use crate::sparse::dispatch::{SparseFormat, SparseKernel};
+use crate::sparse::CsrMatrix;
+use crate::tensor::Tensor;
+use crate::util::pool;
+
+/// Column indices, narrowed to u16 when `cols` fits.
+#[derive(Debug, Clone, PartialEq)]
+enum QcsIndices {
+    U16(Vec<u16>),
+    U32(Vec<u32>),
+}
+
+/// Codebook codes: 4-bit packed (two per byte, low nibble first) when
+/// the codebook has ≤ 16 entries, one byte per code otherwise.
+#[derive(Debug, Clone, PartialEq)]
+enum QcsCodes {
+    U4(Vec<u8>),
+    U8(Vec<u8>),
+}
+
+/// A sparse matrix stored as quantized CSR.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QcsMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointers, len == rows + 1 (CSR layout).
+    pub ptr: Vec<usize>,
+    /// Centroids the codes index. Ascending-sorted at construction
+    /// (k-means emits a sorted codebook); a fine-tune pass moves
+    /// centroids independently, so ordering may drift afterwards —
+    /// nothing here relies on it (codes are fixed assignments, not
+    /// nearest-neighbour lookups).
+    codebook: Vec<f32>,
+    indices: QcsIndices,
+    codes: QcsCodes,
+    nnz: usize,
+}
+
+impl QcsMatrix {
+    /// Quantize a CSR matrix: k-means codebook over its nonzeros, codes
+    /// + narrowed indices. Returns the matrix and its quantization error.
+    pub fn from_csr(csr: &CsrMatrix, cfg: &QuantConfig) -> (QcsMatrix, QuantStats) {
+        let (codebook, codes, stats) =
+            kmeans_codebook(&csr.data, cfg.codebook_size, cfg.max_iters, cfg.seed);
+        let m = Self::pack(csr.rows, csr.cols, csr.ptr.clone(), codebook, csr.indices.clone(), codes);
+        (m, stats)
+    }
+
+    /// Quantize a dense row-major matrix (zeros dropped first).
+    pub fn from_dense(dense: &[f32], rows: usize, cols: usize, cfg: &QuantConfig) -> QcsMatrix {
+        Self::from_csr(&CsrMatrix::from_dense(dense, rows, cols), cfg).0
+    }
+
+    /// Assemble from raw parts (the checkpoint loader's entrypoint),
+    /// validating structural invariants. `indices` are u32 (narrowed
+    /// internally when `cols` fits), `codes` one u8 per nonzero.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        ptr: Vec<usize>,
+        codebook: Vec<f32>,
+        indices: Vec<u32>,
+        codes: Vec<u8>,
+    ) -> anyhow::Result<QcsMatrix> {
+        anyhow::ensure!(!codebook.is_empty() || indices.is_empty(), "nonzeros but empty codebook");
+        anyhow::ensure!(codebook.len() <= 256, "codebook too large: {}", codebook.len());
+        anyhow::ensure!(codes.len() == indices.len(), "codes/indices length mismatch");
+        for &c in &codes {
+            anyhow::ensure!((c as usize) < codebook.len().max(1), "code {c} out of codebook range");
+        }
+        // Bound-check before the u16 narrowing so corrupt wide indices
+        // cannot alias into range.
+        for &i in &indices {
+            anyhow::ensure!((i as usize) < cols, "column index {i} out of bounds for {cols} cols");
+        }
+        let m = Self::pack(rows, cols, ptr, codebook, indices, codes);
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn pack(
+        rows: usize,
+        cols: usize,
+        ptr: Vec<usize>,
+        codebook: Vec<f32>,
+        indices: Vec<u32>,
+        codes: Vec<u8>,
+    ) -> QcsMatrix {
+        let nnz = indices.len();
+        let indices = if cols <= u16::MAX as usize + 1 {
+            QcsIndices::U16(indices.into_iter().map(|i| i as u16).collect())
+        } else {
+            QcsIndices::U32(indices)
+        };
+        let codes = if codebook.len() <= 16 {
+            let mut packed = vec![0u8; nnz.div_ceil(2)];
+            for (k, &c) in codes.iter().enumerate() {
+                packed[k / 2] |= (c & 0xF) << ((k % 2) * 4);
+            }
+            QcsCodes::U4(packed)
+        } else {
+            QcsCodes::U8(codes)
+        };
+        QcsMatrix { rows, cols, ptr, codebook, indices, codes, nnz }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    pub fn codebook(&self) -> &[f32] {
+        &self.codebook
+    }
+
+    /// Replace the codebook (the fine-tune pass updates centroids in
+    /// place; codes are untouched). Length must match. The replacement
+    /// need not be sorted — see the `codebook` field doc.
+    pub fn set_codebook(&mut self, codebook: Vec<f32>) {
+        assert_eq!(codebook.len(), self.codebook.len(), "codebook length changed");
+        self.codebook = codebook;
+    }
+
+    /// Bits per stored code (4 when the codebook fits 16 entries).
+    pub fn code_bits(&self) -> usize {
+        match self.codes {
+            QcsCodes::U4(_) => 4,
+            QcsCodes::U8(_) => 8,
+        }
+    }
+
+    /// Bytes per stored column index (2 when `cols` fits u16).
+    pub fn index_bytes(&self) -> usize {
+        match self.indices {
+            QcsIndices::U16(_) => 2,
+            QcsIndices::U32(_) => 4,
+        }
+    }
+
+    /// Column index of the k-th nonzero.
+    #[inline]
+    pub fn index_at(&self, k: usize) -> usize {
+        match &self.indices {
+            QcsIndices::U16(v) => v[k] as usize,
+            QcsIndices::U32(v) => v[k] as usize,
+        }
+    }
+
+    /// The stored code bytes exactly as serialized: nibble-packed
+    /// (⌈nnz/2⌉ bytes, low nibble first) under 4-bit codes, one byte
+    /// per code otherwise — the checkpoint writer streams this buffer
+    /// verbatim so the pack format lives in one place.
+    pub fn code_bytes(&self) -> &[u8] {
+        match &self.codes {
+            QcsCodes::U4(v) | QcsCodes::U8(v) => v,
+        }
+    }
+
+    /// Code of the k-th nonzero.
+    #[inline]
+    pub fn code_at(&self, k: usize) -> usize {
+        match &self.codes {
+            QcsCodes::U4(v) => ((v[k / 2] >> ((k % 2) * 4)) & 0xF) as usize,
+            QcsCodes::U8(v) => v[k] as usize,
+        }
+    }
+
+    /// Dequantized value of the k-th nonzero.
+    #[inline]
+    pub fn value_at(&self, k: usize) -> f32 {
+        self.codebook[self.code_at(k)]
+    }
+
+    /// Visit every stored entry as `(row, col, code)` in CSR order —
+    /// the codebook fine-tune pass accumulates per-code gradients here.
+    pub fn for_each_entry(&self, mut f: impl FnMut(usize, usize, usize)) {
+        for r in 0..self.rows {
+            for k in self.ptr[r]..self.ptr[r + 1] {
+                f(r, self.index_at(k), self.code_at(k));
+            }
+        }
+    }
+
+    /// Expand to dense row-major (every value is a codebook centroid).
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for k in self.ptr[r]..self.ptr[r + 1] {
+                out[r * self.cols + self.index_at(k)] = self.value_at(k);
+            }
+        }
+        out
+    }
+
+    /// Widen back to plain CSR (dequantized values).
+    pub fn to_csr(&self) -> CsrMatrix {
+        let mut indices = Vec::with_capacity(self.nnz);
+        let mut data = Vec::with_capacity(self.nnz);
+        for k in 0..self.nnz {
+            indices.push(self.index_at(k) as u32);
+            data.push(self.value_at(k));
+        }
+        CsrMatrix { rows: self.rows, cols: self.cols, ptr: self.ptr.clone(), indices, data }
+    }
+
+    /// Storage footprint in bytes, matching the checkpoint-v2 payload
+    /// layout: packed codes + narrowed indices + u32 row pointers + the
+    /// f32 codebook — the quantized Table-3 "Model Size" quantity.
+    pub fn storage_bytes(&self) -> usize {
+        let codes = match &self.codes {
+            QcsCodes::U4(v) => v.len(),
+            QcsCodes::U8(v) => v.len(),
+        };
+        codes + self.nnz * self.index_bytes() + self.ptr.len() * 4 + self.codebook.len() * 4
+    }
+
+    /// Structural invariants (checkpoint loading runs this).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.ptr.len() == self.rows + 1,
+            "ptr len {} != rows+1 {}",
+            self.ptr.len(),
+            self.rows + 1
+        );
+        anyhow::ensure!(
+            self.ptr[0] == 0 && *self.ptr.last().unwrap() == self.nnz,
+            "ptr/nnz inconsistency: ptr spans {}..{} but nnz is {}",
+            self.ptr[0],
+            self.ptr.last().unwrap(),
+            self.nnz
+        );
+        for w in self.ptr.windows(2) {
+            anyhow::ensure!(w[1] >= w[0], "ptr not monotone");
+        }
+        for r in 0..self.rows {
+            let mut prev: Option<usize> = None;
+            for k in self.ptr[r]..self.ptr[r + 1] {
+                let c = self.index_at(k);
+                anyhow::ensure!(c < self.cols, "row {r} column {c} out of bounds");
+                if let Some(p) = prev {
+                    anyhow::ensure!(c > p, "row {r} columns not strictly increasing");
+                }
+                prev = Some(c);
+            }
+        }
+        Ok(())
+    }
+
+    /// Forward contraction `dmat (B, K) @ self' -> (B, N)` — the paper's
+    /// Figure-2 kernel with the value load replaced by a codebook lookup.
+    pub fn dxct(&self, dmat: &Tensor) -> Tensor {
+        self.dxct_threads(dmat, pool::max_threads())
+    }
+
+    /// As [`QcsMatrix::dxct`] with an explicit worker count. Both
+    /// partitions (batch rows when the batch saturates the lanes, output
+    /// columns otherwise) accumulate each output element over its CSR
+    /// row in ascending-index order — bit-identical for any `threads`.
+    pub fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor {
+        let (b, k) = (dmat.shape[0], dmat.shape[1]);
+        assert_eq!(k, self.cols, "qcs dxct: K mismatch ({k} vs {})", self.cols);
+        let n = self.rows;
+        let mut out = vec![0.0f32; b * n];
+        let out_ptr = pool::SharedMut::new(&mut out);
+        let cell = |drow: &[f32], col: usize| -> f32 {
+            let mut acc = 0.0f32;
+            for idx in self.ptr[col]..self.ptr[col + 1] {
+                acc += drow[self.index_at(idx)] * self.value_at(idx);
+            }
+            acc
+        };
+        if pool::batch_saturates(b, threads) {
+            pool::parallel_chunks(b, threads, |r0, r1| {
+                let out = unsafe { out_ptr.slice() };
+                for row in r0..r1 {
+                    let drow = &dmat.data[row * k..(row + 1) * k];
+                    let orow = &mut out[row * n..(row + 1) * n];
+                    for (col, o) in orow.iter_mut().enumerate() {
+                        *o = cell(drow, col);
+                    }
+                }
+            });
+        } else {
+            pool::parallel_chunks(n, threads, |c0, c1| {
+                let out = unsafe { out_ptr.slice() };
+                for row in 0..b {
+                    let drow = &dmat.data[row * k..(row + 1) * k];
+                    for col in c0..c1 {
+                        out[row * n + col] = cell(drow, col);
+                    }
+                }
+            });
+        }
+        Tensor::new(vec![b, n], out)
+    }
+
+    /// Sparse matrix-vector product `self (N, K) @ x (K) -> (N)` — the
+    /// B = 1 serving kernel (EIE's operating point).
+    pub fn spmv(&self, x: &[f32]) -> Vec<f32> {
+        self.spmv_threads(x, pool::max_threads())
+    }
+
+    /// As [`QcsMatrix::spmv`] with an explicit worker count (output rows
+    /// are independent; each accumulates ascending — bit-identical).
+    pub fn spmv_threads(&self, x: &[f32], threads: usize) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut out = vec![0.0f32; self.rows];
+        let out_ptr = pool::SharedMut::new(&mut out);
+        pool::parallel_chunks(self.rows, threads, |r0, r1| {
+            let out = unsafe { out_ptr.slice() };
+            for r in r0..r1 {
+                let mut acc = 0.0f32;
+                for idx in self.ptr[r]..self.ptr[r + 1] {
+                    acc += self.value_at(idx) * x[self.index_at(idx)];
+                }
+                out[r] = acc;
+            }
+        });
+        out
+    }
+}
+
+impl SparseKernel for QcsMatrix {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn nnz(&self) -> usize {
+        QcsMatrix::nnz(self)
+    }
+    fn storage_bytes(&self) -> usize {
+        QcsMatrix::storage_bytes(self)
+    }
+    fn to_dense(&self) -> Vec<f32> {
+        QcsMatrix::to_dense(self)
+    }
+    fn dxct(&self, dmat: &Tensor) -> Tensor {
+        QcsMatrix::dxct(self, dmat)
+    }
+    fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor {
+        QcsMatrix::dxct_threads(self, dmat, threads)
+    }
+    fn format(&self) -> SparseFormat {
+        SparseFormat::Qcs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::prox;
+    use crate::util::rng::Rng;
+
+    fn sparse_dense(rng: &mut Rng, rows: usize, cols: usize, rate: f64) -> Vec<f32> {
+        let mut dense = rng.normal_vec(rows * cols, 0.1);
+        let t = prox::magnitude_quantile(&dense, rate);
+        prox::hard_threshold_inplace(&mut dense, t);
+        dense
+    }
+
+    #[test]
+    fn preserves_sparsity_pattern_and_codebook_values() {
+        let mut rng = Rng::new(21);
+        let dense = sparse_dense(&mut rng, 40, 60, 0.9);
+        let cfg = QuantConfig::default();
+        let q = QcsMatrix::from_dense(&dense, 40, 60, &cfg);
+        let back = q.to_dense();
+        assert_eq!(back.len(), dense.len());
+        for (b, d) in back.iter().zip(&dense) {
+            // Exact zeros stay exact zeros; nonzeros become centroids.
+            assert_eq!(*b == 0.0, *d == 0.0);
+            if *b != 0.0 {
+                assert!(q.codebook().contains(b));
+            }
+        }
+        assert_eq!(q.nnz(), dense.iter().filter(|&&v| v != 0.0).count());
+        q.validate().unwrap();
+    }
+
+    #[test]
+    fn narrow_packing_chosen_when_it_fits() {
+        let mut rng = Rng::new(22);
+        let dense = sparse_dense(&mut rng, 20, 50, 0.8);
+        let q16 = QcsMatrix::from_dense(&dense, 20, 50, &QuantConfig::default());
+        assert_eq!(q16.code_bits(), 4);
+        assert_eq!(q16.index_bytes(), 2);
+        let q256 = QcsMatrix::from_dense(
+            &dense,
+            20,
+            50,
+            &QuantConfig { codebook_size: 64, ..QuantConfig::default() },
+        );
+        assert_eq!(q256.code_bits(), 8);
+    }
+
+    #[test]
+    fn smaller_than_csr_at_paper_sparsity() {
+        let mut rng = Rng::new(23);
+        let dense = sparse_dense(&mut rng, 200, 300, 0.95);
+        let csr = CsrMatrix::from_dense(&dense, 200, 300);
+        let q = QcsMatrix::from_csr(&csr, &QuantConfig::default()).0;
+        assert!(
+            q.storage_bytes() * 2 < csr.storage_bytes(),
+            "qcs {} vs csr {}",
+            q.storage_bytes(),
+            csr.storage_bytes()
+        );
+    }
+
+    #[test]
+    fn dxct_matches_dequantized_csr() {
+        let mut rng = Rng::new(24);
+        for &(b, n, k) in &[(1usize, 7usize, 9usize), (3, 20, 30), (16, 50, 80)] {
+            let dense = sparse_dense(&mut rng, n, k, 0.8);
+            let q = QcsMatrix::from_dense(&dense, n, k, &QuantConfig::default());
+            let csr = q.to_csr();
+            let d = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
+            let got = q.dxct(&d);
+            let want = crate::sparse::ops::dxct_scalar(&d, &csr);
+            assert_eq!(got.shape, want.shape);
+            for (g, w) in got.data.iter().zip(&want.data) {
+                assert!((g - w).abs() < 1e-4, "{g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmv_matches_dxct_row() {
+        let mut rng = Rng::new(25);
+        let dense = sparse_dense(&mut rng, 30, 40, 0.85);
+        let q = QcsMatrix::from_dense(&dense, 30, 40, &QuantConfig::default());
+        let x: Vec<f32> = rng.normal_vec(40, 1.0);
+        let got = q.spmv(&x);
+        let via_dxct = q.dxct(&Tensor::new(vec![1, 40], x));
+        assert_eq!(got, via_dxct.data);
+    }
+
+    #[test]
+    fn from_parts_rejects_corruption() {
+        let mut rng = Rng::new(26);
+        let dense = sparse_dense(&mut rng, 8, 10, 0.7);
+        let csr = CsrMatrix::from_dense(&dense, 8, 10);
+        let cb = vec![-0.1f32, 0.1];
+        let codes = vec![0u8; csr.nnz()];
+        let idx: Vec<u32> = csr.indices.clone();
+        // Valid baseline.
+        QcsMatrix::from_parts(8, 10, csr.ptr.clone(), cb.clone(), idx.clone(), codes.clone())
+            .unwrap();
+        // ptr/nnz inconsistency.
+        let mut bad_ptr = csr.ptr.clone();
+        *bad_ptr.last_mut().unwrap() += 1;
+        assert!(QcsMatrix::from_parts(8, 10, bad_ptr, cb.clone(), idx.clone(), codes.clone())
+            .is_err());
+        // Out-of-range code.
+        let mut bad_codes = codes.clone();
+        bad_codes[0] = 7;
+        assert!(QcsMatrix::from_parts(8, 10, csr.ptr.clone(), cb.clone(), idx.clone(), bad_codes)
+            .is_err());
+        // Out-of-bounds column.
+        let mut bad_idx = idx;
+        bad_idx[0] = 99;
+        assert!(QcsMatrix::from_parts(8, 10, csr.ptr.clone(), cb, bad_idx, codes).is_err());
+    }
+
+    #[test]
+    fn empty_matrix_works() {
+        let q = QcsMatrix::from_dense(&vec![0.0; 12], 3, 4, &QuantConfig::default());
+        assert_eq!(q.nnz(), 0);
+        assert_eq!(q.to_dense(), vec![0.0; 12]);
+        q.validate().unwrap();
+        let y = q.dxct(&Tensor::new(vec![2, 4], vec![1.0; 8]));
+        assert_eq!(y.data, vec![0.0; 6]);
+    }
+}

@@ -1083,6 +1083,38 @@ pub fn gradient_check(entry: &ModelEntry, seed: u64, batch: usize) -> anyhow::Re
     Ok((ok, FD_DIRECTIONS))
 }
 
+/// Loss + per-leaf gradients of the native graph at the given bundle's
+/// parameter values on one `(x, y)` minibatch — the hook the codebook
+/// fine-tune pass (`quant::finetune_codebooks`) descends: it needs raw
+/// gradients at arbitrary (dequantized) weights without touching any
+/// optimizer state. Gradients come back aligned with the bundle's leaf
+/// order and shapes; every kernel underneath is bit-deterministic for
+/// any `threads`.
+pub fn loss_and_param_grads(
+    bundle: &crate::runtime::params::ParamBundle,
+    x_shape: &[usize],
+    x: &[f32],
+    y: &[i32],
+    threads: usize,
+) -> anyhow::Result<(f32, Vec<Vec<f32>>)> {
+    let leaves: Vec<Leaf> = bundle
+        .specs
+        .iter()
+        .zip(&bundle.values)
+        .map(|(s, v)| Leaf { shape: s.shape.clone(), data: v.clone() })
+        .collect();
+    let stages = build_stages(&leaves)?;
+    anyhow::ensure!(!x_shape.is_empty(), "x must be batched");
+    let batch = x_shape[0];
+    anyhow::ensure!(y.len() == batch, "labels length {} != batch {batch}", y.len());
+    let x = Leaf { shape: x_shape.to_vec(), data: x.to_vec() };
+    let fwd = forward(&stages, &leaves, &x, threads)?;
+    let ncls = head_classes(&stages);
+    let (loss, dlogits) = softmax_ce(&fwd.acts.last().unwrap().data, y, batch, ncls);
+    let grads = backward(&stages, &leaves, &fwd, dlogits, threads);
+    Ok((loss, grads))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

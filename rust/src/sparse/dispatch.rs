@@ -37,7 +37,9 @@ use crate::tensor::Tensor;
 pub const BLOCK_H: usize = 8;
 pub const BLOCK_W: usize = 16;
 
-/// The five storage formats of the substrate (paper Figure 1 + Block-ELL).
+/// The storage formats of the substrate: the paper's Figure-1 element
+/// formats + Block-ELL, plus the quantized-CSR deployment format
+/// (`quant::QcsMatrix` — codebook codes instead of f32 values).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SparseFormat {
     Dia,
@@ -45,6 +47,10 @@ pub enum SparseFormat {
     Csr,
     Coo,
     BlockEll,
+    /// Quantized CSR. Never auto-selected by [`select_format`]: it is
+    /// *lossy*, so only an explicit quantization request (CLI /
+    /// `WeightMode::Quantized` / checkpoint v2) deploys it.
+    Qcs,
 }
 
 impl SparseFormat {
@@ -55,6 +61,7 @@ impl SparseFormat {
             SparseFormat::Csr => "CSR",
             SparseFormat::Coo => "COO",
             SparseFormat::BlockEll => "BlockELL",
+            SparseFormat::Qcs => "QCS",
         }
     }
 }
@@ -360,6 +367,7 @@ pub enum DynSparseMatrix {
     Csr(CsrMatrix),
     Coo(CooMatrix),
     BlockEll(BlockEllMatrix),
+    Qcs(crate::quant::QcsMatrix),
 }
 
 impl DynSparseMatrix {
@@ -384,6 +392,14 @@ impl DynSparseMatrix {
             SparseFormat::BlockEll => DynSparseMatrix::BlockEll(BlockEllMatrix::from_dense(
                 dense, rows, cols, BLOCK_H, BLOCK_W,
             )),
+            // Lossy (values collapse onto a default-config codebook) —
+            // callers wanting a specific codebook build QcsMatrix directly.
+            SparseFormat::Qcs => DynSparseMatrix::Qcs(crate::quant::QcsMatrix::from_dense(
+                dense,
+                rows,
+                cols,
+                &crate::quant::QuantConfig::default(),
+            )),
         }
     }
 
@@ -395,6 +411,7 @@ impl DynSparseMatrix {
             DynSparseMatrix::Csr(m) => m,
             DynSparseMatrix::Coo(m) => m,
             DynSparseMatrix::BlockEll(m) => m,
+            DynSparseMatrix::Qcs(m) => m,
         }
     }
 
@@ -580,6 +597,26 @@ mod tests {
                 let m = DynSparseMatrix::from_dense_as(fmt, &dense, rows, cols);
                 assert_eq!(m.storage_bytes(), predicted, "{} on {rows}x{cols}", fmt.name());
             }
+        }
+    }
+
+    #[test]
+    fn qcs_is_explicit_only_and_smaller_than_csr() {
+        // The lossy quantized format never wins the auto selection…
+        let mut rng = Rng::new(55);
+        let dense = uniform_rows(&mut rng, 64, 96, 6);
+        assert_ne!(choose(&dense, 64, 96), SparseFormat::Qcs);
+        // …but an explicit request packs it, reports it, and undercuts
+        // CSR storage (codes + narrow indices vs f32 + u32).
+        let m = DynSparseMatrix::from_dense_as(SparseFormat::Qcs, &dense, 64, 96);
+        assert_eq!(m.format(), SparseFormat::Qcs);
+        assert_eq!(m.nnz(), 64 * 6);
+        let csr = DynSparseMatrix::from_dense_as(SparseFormat::Csr, &dense, 64, 96);
+        assert!(m.storage_bytes() < csr.storage_bytes());
+        // Lossy: the dense round-trip preserves the pattern, not values.
+        let back = m.to_dense();
+        for (b, d) in back.iter().zip(&dense) {
+            assert_eq!(*b == 0.0, *d == 0.0);
         }
     }
 

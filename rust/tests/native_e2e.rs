@@ -521,3 +521,144 @@ fn native_full_pipeline_spc_debias_compress_serve() {
     }
     assert_eq!(server.stats().requests, 16);
 }
+
+/// The quantized deployment stage (`pipeline --quantize` twin): train +
+/// debias a small model, codebook-quantize it, and require the gates
+/// the CLI enforces — quantized checkpoint strictly smaller than CSR,
+/// quantized accuracy within tolerance, and bit-faithful serving after
+/// a checkpoint-v2 round trip (engine logits identical pre/post save).
+#[test]
+fn native_quantized_pipeline_spc_debias_quantize_serve() {
+    use proxcomp::quant::{self, QuantConfig};
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let mut cfg = small_cfg();
+    cfg.steps = 60;
+    cfg.retrain_steps = 30;
+    let mut trainer = Trainer::new(&m, &cfg).unwrap();
+    let scalars = StepScalars { lambda: cfg.lambda, lr: cfg.lr, mu: 0.0 };
+    for _ in 0..cfg.steps {
+        trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
+    }
+    debias::retrain(&mut rt, &mut trainer, cfg.retrain_steps, cfg.retrain_lr).unwrap();
+    let eval_debias = trainer.evaluate(&mut rt).unwrap();
+
+    // Quantize at the default 16-entry codebooks.
+    let (qm, reports) = quant::quantize_bundle(&trainer.state.params, &QuantConfig::default());
+    assert!(reports.iter().any(|r| r.quantized), "no leaf quantized: {reports:?}");
+    for r in reports.iter().filter(|r| r.quantized) {
+        assert!(r.stored_bytes < r.csr_bytes, "{}: {} >= {}", r.name, r.stored_bytes, r.csr_bytes);
+        assert!(r.stats.rmse.is_finite() && r.stats.rmse >= 0.0);
+    }
+
+    // Checkpoints: quantized strictly smaller than CSR.
+    let dir = std::env::temp_dir().join("proxcomp_native_e2e_quant");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut meta = Json::obj();
+    meta.set("model", Json::from("mlp-s"));
+    meta.set("dataset", Json::from(trainer.entry.dataset.as_str()));
+    let csr_bytes =
+        proxcomp::checkpoint::save(&dir.join("f32.pxcp"), &trainer.state.params, &meta).unwrap();
+    let q_bytes =
+        proxcomp::checkpoint::save_quantized(&dir.join("quant.pxcp"), &qm, &meta).unwrap();
+    assert!(q_bytes < csr_bytes, "quantized {q_bytes} >= csr {csr_bytes}");
+
+    // Quantized serving: accuracy within a generous tolerance of the
+    // debiased f32 model (k=16 codebooks on a trained sparse net).
+    let qengine = Arc::new(Engine::from_quantized("mlp-s", &qm).unwrap());
+    let quant_acc = qengine.accuracy(&trainer.test_data, 64).unwrap();
+    assert!(
+        quant_acc >= eval_debias.accuracy - 0.1,
+        "quantized accuracy collapsed: {} vs debiased {}",
+        quant_acc,
+        eval_debias.accuracy
+    );
+
+    // Bit-faithful after reload: the served logits of the reloaded
+    // checkpoint equal the in-memory quantized engine's exactly.
+    let ck = proxcomp::checkpoint::load(&dir.join("quant.pxcp")).unwrap();
+    assert!(ck.is_quantized());
+    let reloaded = Engine::from_quantized("mlp-s", &ck.to_quantized_model()).unwrap();
+    for i in 0..8 {
+        let sample = trainer.test_data.image(i).to_vec();
+        let x = Tensor::new(vec![1, 1, 28, 28], sample);
+        assert_eq!(
+            qengine.forward(&x).unwrap().data,
+            reloaded.forward(&x).unwrap().data,
+            "sample {i}: reloaded quantized serving diverges"
+        );
+    }
+
+    // BatchServer over the quantized engine: bit-exact request parity.
+    let server = BatchServer::start(
+        Arc::clone(&qengine),
+        BatchConfig::new(8, Duration::from_millis(20), (1, 28, 28)),
+    );
+    let pending: Vec<_> = (0..12)
+        .map(|i| {
+            let sample = trainer.test_data.image(i % trainer.test_data.n).to_vec();
+            (sample.clone(), server.submit(&sample).unwrap())
+        })
+        .collect();
+    for (sample, p) in pending {
+        let got = p.wait().unwrap();
+        let x = Tensor::new(vec![1, 1, 28, 28], sample);
+        assert_eq!(got, qengine.forward(&x).unwrap().data, "served quantized logits diverge");
+    }
+    assert_eq!(server.stats().requests, 12);
+}
+
+/// The trained-quantization pass: per-code gradient accumulation on the
+/// native backend is deterministic, touches only codebooks (codes and
+/// the sparsity pattern are frozen), and keeps the loss finite.
+#[test]
+fn native_codebook_finetune_is_deterministic_and_structure_preserving() {
+    use proxcomp::quant::{self, QuantConfig, QuantLeaf};
+    let m = manifest();
+    let mut rt = Runtime::native();
+    let mut cfg = small_cfg();
+    cfg.steps = 30;
+    let mut trainer = Trainer::new(&m, &cfg).unwrap();
+    let scalars = StepScalars { lambda: cfg.lambda, lr: cfg.lr, mu: 0.0 };
+    for _ in 0..cfg.steps {
+        trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
+    }
+    let (qm0, _) = quant::quantize_bundle(&trainer.state.params, &QuantConfig::default());
+
+    let run = |mut qm: proxcomp::quant::QuantizedModel| {
+        let rep =
+            quant::finetune_codebooks(&mut qm, &trainer.train_data, 5, 16, 1e-4, 7).unwrap();
+        (qm, rep)
+    };
+    let (qm_a, rep_a) = run(qm0.clone());
+    let (qm_b, rep_b) = run(qm0.clone());
+    assert!(rep_a.loss_first.is_finite() && rep_a.loss_last.is_finite());
+    assert_eq!(rep_a.loss_first.to_bits(), rep_b.loss_first.to_bits(), "fine-tune not deterministic");
+    assert_eq!(rep_a.loss_last.to_bits(), rep_b.loss_last.to_bits(), "fine-tune not deterministic");
+
+    let mut any_changed = false;
+    for ((a, b), orig) in qm_a.leaves.iter().zip(&qm_b.leaves).zip(&qm0.leaves) {
+        match ((a, b), orig) {
+            ((QuantLeaf::Qcs(x), QuantLeaf::Qcs(y)), QuantLeaf::Qcs(o)) => {
+                // Deterministic: both runs land on identical codebooks.
+                assert_eq!(x.codebook(), y.codebook());
+                // Structure frozen: same codes/pattern as before tuning.
+                assert_eq!(x.nnz(), o.nnz());
+                assert_eq!(x.ptr, o.ptr);
+                for k in 0..x.nnz() {
+                    assert_eq!(x.code_at(k), o.code_at(k));
+                    assert_eq!(x.index_at(k), o.index_at(k));
+                }
+                if x.codebook() != o.codebook() {
+                    any_changed = true;
+                }
+            }
+            ((QuantLeaf::Dense(x), QuantLeaf::Dense(y)), QuantLeaf::Dense(o)) => {
+                assert_eq!(x, y);
+                assert_eq!(x, o, "fine-tune must not touch f32 leaves");
+            }
+            _ => panic!("leaf encoding changed during fine-tune"),
+        }
+    }
+    assert!(any_changed, "fine-tune updated no codebook");
+}

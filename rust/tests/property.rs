@@ -1098,3 +1098,145 @@ fn prop_lenet_training_bit_deterministic_across_env_thread_counts() {
     assert_eq!(eloss1.to_bits(), eloss4.to_bits(), "eval loss");
     assert_eq!(eacc1, eacc4, "eval accuracy");
 }
+
+// ---------------------------------------------------------------------------
+// Quantization subsystem invariants (quant::QcsMatrix + codebooks)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_qcs_dxct_and_spmv_bit_identical_across_thread_counts() {
+    // The quantized serving kernels carry the same contract as every
+    // other sparse kernel: bit-identical results for any worker count,
+    // at both the batch-partitioned and the column-partitioned shapes.
+    use proxcomp::quant::{QcsMatrix, QuantConfig};
+    let mut rng = Rng::new(130);
+    for case in 0..CASES {
+        let n = 1 + rng.below(40);
+        let k = 1 + rng.below(50);
+        let dense = random_dense(&mut rng, n, k, 0.25);
+        let q = QcsMatrix::from_dense(&dense, n, k, &QuantConfig::default());
+        for b in [1usize, 3, 16] {
+            let d = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
+            let t1 = q.dxct_threads(&d, 1);
+            for threads in [2usize, 4, 7] {
+                let tn = q.dxct_threads(&d, threads);
+                assert_bits_eq(&t1.data, &tn.data, &format!("case {case} b={b} t={threads}"));
+            }
+        }
+        let x: Vec<f32> = rng.normal_vec(k, 1.0);
+        let s1 = q.spmv_threads(&x, 1);
+        for threads in [2usize, 4] {
+            assert_bits_eq(&s1, &q.spmv_threads(&x, threads), &format!("spmv case {case}"));
+        }
+    }
+}
+
+#[test]
+fn prop_qcs_kernel_matches_dequantized_csr_bit_exactly() {
+    // The QCS kernel walks the identical nonzeros in the identical
+    // ascending-index reduction order as the scalar CSR kernel — only
+    // the value load goes through the codebook — so on the dequantized
+    // CSR twin the results are bit-equal, not just close.
+    use proxcomp::quant::{QcsMatrix, QuantConfig};
+    let mut rng = Rng::new(131);
+    for case in 0..CASES {
+        let n = 1 + rng.below(30);
+        let k = 1 + rng.below(40);
+        let dense = random_dense(&mut rng, n, k, 0.3);
+        let q = QcsMatrix::from_dense(&dense, n, k, &QuantConfig::default());
+        let csr = q.to_csr();
+        let b = 1 + rng.below(6);
+        let d = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
+        let got = q.dxct_threads(&d, 1);
+        let want = ops::dxct_scalar_threads(&d, &csr, 1);
+        assert_bits_eq(&got.data, &want.data, &format!("case {case}"));
+    }
+}
+
+#[test]
+fn prop_dequantize_error_bounded_by_reported_error() {
+    // dequantize(quantize(W)) must stay within the error the quantizer
+    // itself reported — per element (max_abs_err) and in RMS.
+    use proxcomp::quant::kmeans_codebook;
+    let mut rng = Rng::new(132);
+    for case in 0..CASES {
+        let n = 1 + rng.below(4000);
+        let values: Vec<f32> = rng.normal_vec(n, 0.2);
+        let k = 1 + rng.below(32);
+        let (cb, codes, stats) = kmeans_codebook(&values, k, 25, case as u64);
+        assert!(!cb.is_empty() && cb.len() <= k.min(256));
+        let mut sq = 0.0f64;
+        for (&v, &c) in values.iter().zip(&codes) {
+            let e = (v - cb[c as usize]).abs();
+            assert!(
+                e <= stats.max_abs_err + 1e-7,
+                "case {case}: element error {e} > reported {}",
+                stats.max_abs_err
+            );
+            sq += (e as f64) * (e as f64);
+        }
+        let rms = (sq / values.len() as f64).sqrt();
+        assert!(rms <= stats.rmse + 1e-9, "case {case}: rms {rms} > reported {}", stats.rmse);
+    }
+}
+
+#[test]
+fn prop_one_cluster_codebook_degrades_gracefully() {
+    // k = 1 is the degenerate floor: every nonzero collapses onto one
+    // centroid, yet the matrix stays structurally valid, keeps its
+    // sparsity pattern, and its kernels agree with the dequantized CSR.
+    use proxcomp::quant::{QcsMatrix, QuantConfig};
+    let mut rng = Rng::new(133);
+    for case in 0..12 {
+        let n = 2 + rng.below(20);
+        let k = 2 + rng.below(30);
+        let dense = random_dense(&mut rng, n, k, 0.4);
+        let cfg = QuantConfig { codebook_size: 1, ..QuantConfig::default() };
+        let q = QcsMatrix::from_dense(&dense, n, k, &cfg);
+        q.validate().unwrap();
+        assert!(q.codebook().len() <= 1, "case {case}");
+        let back = q.to_dense();
+        for (b, d) in back.iter().zip(&dense) {
+            assert_eq!(*b == 0.0, *d == 0.0, "case {case}: pattern changed");
+        }
+        let d = Tensor::new(vec![2, k], rng.normal_vec(2 * k, 1.0));
+        let got = q.dxct_threads(&d, 1);
+        let want = ops::dxct_scalar_threads(&d, &q.to_csr(), 1);
+        assert_bits_eq(&got.data, &want.data, &format!("case {case}"));
+    }
+}
+
+#[test]
+fn prop_quantized_checkpoint_roundtrip_preserves_codebooks() {
+    // save_quantized → load must reproduce codes, codebooks, and the
+    // sparsity pattern bit-exactly across random sparse bundles.
+    use proxcomp::quant::{quantize_bundle, QuantConfig, QuantLeaf};
+    let mut rng = Rng::new(134);
+    let dir = std::env::temp_dir().join("proxcomp_prop_quant");
+    std::fs::create_dir_all(&dir).unwrap();
+    for case in 0..8 {
+        let n = 8 + rng.below(24);
+        let k = 8 + rng.below(48);
+        let specs = vec![
+            ParamSpec::new("fc1_w", "fc_w", vec![n, k], true),
+            ParamSpec::new("fc1_b", "fc_b", vec![n], false),
+        ];
+        let values = vec![random_dense(&mut rng, n, k, 0.4), rng.normal_vec(n, 0.1)];
+        let bundle = ParamBundle { specs, values };
+        let cfg = QuantConfig { min_quant_nnz: 1, ..QuantConfig::default() };
+        let (qm, _) = quantize_bundle(&bundle, &cfg);
+        let path = dir.join(format!("case{case}.pxcp"));
+        let meta = proxcomp::util::json::Json::obj();
+        proxcomp::checkpoint::save_quantized(&path, &qm, &meta).unwrap();
+        let ck = proxcomp::checkpoint::load(&path).unwrap();
+        assert_eq!(ck.params.values, qm.to_bundle().values, "case {case}: dense view");
+        let back = ck.to_quantized_model();
+        for (a, b) in qm.leaves.iter().zip(&back.leaves) {
+            match (a, b) {
+                (QuantLeaf::Qcs(x), QuantLeaf::Qcs(y)) => assert_eq!(x, y, "case {case}"),
+                (QuantLeaf::Dense(x), QuantLeaf::Dense(y)) => assert_eq!(x, y, "case {case}"),
+                _ => panic!("case {case}: leaf encoding changed"),
+            }
+        }
+    }
+}
