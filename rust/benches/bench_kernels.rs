@@ -328,6 +328,26 @@ fn main() -> anyhow::Result<()> {
             prox::hard_threshold_inplace(&mut dense, t);
             dense
         };
+        // Heavy-tailed fixture (EIE's load-imbalance case): ~100 dense
+        // rows at the front carry half the nonzeros; an equal-row-count
+        // partition serializes on whichever thread draws them, the
+        // nnz-prefix partition keeps speedup near the thread count.
+        let skewed_rows_at = |rng: &mut Rng, heavy_rows: usize, heavy_d: f64, tail_d: f64| {
+            let mut dense = vec![0.0f32; rows * cols];
+            for r in 0..rows {
+                let density = if r < heavy_rows { heavy_d } else { tail_d };
+                let per_row = ((cols as f64 * density).round() as usize).max(1);
+                let mut placed = 0;
+                while placed < per_row {
+                    let c = rng.below(cols);
+                    if dense[r * cols + c] == 0.0 {
+                        dense[r * cols + c] = rng.normal() as f32 + 2.0;
+                        placed += 1;
+                    }
+                }
+            }
+            dense
+        };
         let d1 = Tensor::new(vec![1, cols], rng.normal_vec(cols, 1.0));
         println!(
             "{:<26} {:>9} {:>9} {:>9} {:>9} {:>11}",
@@ -361,6 +381,11 @@ fn main() -> anyhow::Result<()> {
                 DynSparseMatrix::from_dense_as(SparseFormat::Coo, &unstructured, rows, cols),
             ));
         }
+        let skewed_dense = skewed_rows_at(&mut rng, 100, 0.5, 0.0125);
+        sweep.push((
+            "skewed 97% → CSR".to_string(),
+            DynSparseMatrix::from_dense_as(SparseFormat::Csr, &skewed_dense, rows, cols),
+        ));
         for (name, m) in &sweep {
             let us: Vec<f64> = thread_counts
                 .iter()
@@ -381,6 +406,76 @@ fn main() -> anyhow::Result<()> {
             );
             json.row("thread_sweep_b1", name, us[2], "t4_speedup", us[0] / us[2]);
         }
+    }
+
+    // --- blocked vs scalar kernel families at a single thread: the
+    // 8-lane accumulator rewrite against the pre-blocking sequential
+    // kernels (kept as `*_scalar_*`), at the serving shape on the
+    // 90–97% fixtures. This group seeds the `bench-compare` gate.
+    common::section("blocked vs scalar kernels: t=1, 4096×4096 @ 90–97% sparsity");
+    {
+        use proxcomp::quant::{QcsMatrix, QuantConfig};
+        use proxcomp::util::pool::{kernel_mode, KernelMode};
+        anyhow::ensure!(
+            kernel_mode() == KernelMode::Blocked,
+            "bench_kernels needs the default PROXCOMP_KERNEL so the blocked_kernels \
+             group measures the blocked family — unset PROXCOMP_KERNEL=scalar"
+        );
+        let (rows, cols) = (4096usize, 4096usize);
+        let x: Vec<f32> = rng.normal_vec(cols, 1.0);
+        let d1 = Tensor::new(vec![1, cols], rng.normal_vec(cols, 1.0));
+        println!("{:<26} {:>11} {:>12} {:>9}", "kernel (t=1)", "scalar µs", "blocked µs", "speedup");
+        for rate in [0.9, 0.97] {
+            let pct = rate * 100.0;
+            let (_, csr) = sparse_matrix(&mut rng, rows, cols, rate);
+            let us_s = common::time_median_us(reps, || {
+                ops::spmv_scalar_threads(&csr, &x, 1);
+            });
+            let us_b = common::time_median_us(reps, || {
+                ops::spmv_threads(&csr, &x, 1);
+            });
+            println!(
+                "{:<26} {:>11.0} {:>12.0} {:>8.2}×",
+                format!("CSR spmv @ {pct:.0}%"),
+                us_s,
+                us_b,
+                us_s / us_b
+            );
+            json.row("blocked_kernels", &format!("csr_spmv_b1_{pct:.0}pct"), us_b, "speedup_vs_scalar", us_s / us_b);
+            let us_ds = common::time_median_us(reps, || {
+                ops::dxct_scalar_threads(&d1, &csr, 1);
+            });
+            let us_db = common::time_median_us(reps, || {
+                ops::dxct_threads(&d1, &csr, 1);
+            });
+            println!(
+                "{:<26} {:>11.0} {:>12.0} {:>8.2}×",
+                format!("CSR dxct B=1 @ {pct:.0}%"),
+                us_ds,
+                us_db,
+                us_ds / us_db
+            );
+            json.row("blocked_kernels", &format!("csr_dxct_b1_{pct:.0}pct"), us_db, "speedup_vs_scalar", us_ds / us_db);
+        }
+        // QCS spmv under both families via the env knob (read per call).
+        let (_, csr97) = sparse_matrix(&mut rng, rows, cols, 0.97);
+        let (qcs, _) = QcsMatrix::from_csr(&csr97, &QuantConfig::default());
+        std::env::set_var("PROXCOMP_KERNEL", "scalar");
+        let us_qs = common::time_median_us(reps, || {
+            qcs.spmv_threads(&x, 1);
+        });
+        std::env::remove_var("PROXCOMP_KERNEL");
+        let us_qb = common::time_median_us(reps, || {
+            qcs.spmv_threads(&x, 1);
+        });
+        println!(
+            "{:<26} {:>11.1} {:>12.1} {:>8.2}×",
+            "QCS spmv @ 97%",
+            us_qs,
+            us_qb,
+            us_qs / us_qb
+        );
+        json.row("blocked_kernels", "qcs_spmv_b1_97pct", us_qb, "speedup_vs_scalar", us_qs / us_qb);
     }
 
     // --- batch sweep: request coalescing payoff on the CSR serving path
@@ -434,7 +529,7 @@ fn main() -> anyhow::Result<()> {
             );
             json.row("quant_kernels", &format!("csr_dxct_b128_{pct:.0}pct"), us_csr, "gflops", gflops(flops, us_csr));
             json.row("quant_kernels", &format!("qcs_dxct_b128_{pct:.0}pct"), us_qcs, "gflops", gflops(flops, us_qcs));
-            json.row("quant_kernels", &format!("qcs_bytes_ratio_{pct:.0}pct"), 0.0, "csr_over_qcs_bytes", bytes_ratio);
+            json.metric("quant_kernels", &format!("qcs_bytes_ratio_{pct:.0}pct"), "csr_over_qcs_bytes", bytes_ratio);
 
             let us_csr1 = common::time_median_us(reps, || {
                 ops::spmv(&csr, &x1);
@@ -482,6 +577,16 @@ fn main() -> anyhow::Result<()> {
             "DOES NOT HOLD"
         }
     );
-    json.write("bench_kernels.json");
+    json.write(
+        "bench_kernels.json",
+        &[
+            "dxct_forward",
+            "prox_soft_threshold",
+            "conv_kernels",
+            "thread_sweep_b1",
+            "blocked_kernels",
+            "quant_kernels",
+        ],
+    )?;
     Ok(())
 }

@@ -135,19 +135,36 @@ pub fn reps(default: usize) -> usize {
 
 /// Machine-readable bench summary: `(section, name, µs, metric)` rows
 /// accumulated during a run and written as one JSON report — the
-/// artifact the CI perf-trajectory step (`BENCH_PR<n>.json`) uploads.
+/// artifact the CI perf-trajectory step (`BENCH_PR<n>.json`) uploads and
+/// the `bench-compare` gate consumes.
+///
+/// Validation is strict because the gate trusts this file: a panic or a
+/// broken timer must yield *no* report (nonzero bench exit) rather than
+/// a partial JSON the gate would happily accept. Timed rows reject
+/// non-finite / non-positive timings and NaN metrics at insertion;
+/// [`BenchJson::write`] is fallible and checks that every expected
+/// section actually emitted rows.
 pub struct BenchJson {
     rows: Vec<Json>,
+    errors: Vec<String>,
 }
 
 impl BenchJson {
     pub fn new() -> BenchJson {
-        BenchJson { rows: Vec::new() }
+        BenchJson { rows: Vec::new(), errors: Vec::new() }
     }
 
     /// Record one measurement. `metric` is the row's headline derived
     /// number (GFLOP/s, speedup, …) under the given label.
     pub fn row(&mut self, section: &str, name: &str, us: f64, metric_name: &str, metric: f64) {
+        if !(us.is_finite() && us > 0.0) {
+            self.errors.push(format!("row {section}/{name}: invalid median_us {us}"));
+            return;
+        }
+        if !metric.is_finite() {
+            self.errors.push(format!("row {section}/{name}: non-finite {metric_name} {metric}"));
+            return;
+        }
         let mut j = Json::obj();
         j.set("section", Json::from(section))
             .set("name", Json::from(name))
@@ -156,11 +173,38 @@ impl BenchJson {
         self.rows.push(j);
     }
 
-    /// Write the accumulated rows to `reports/<name>`.
-    pub fn write(self, name: &str) {
-        match proxcomp::metrics::write_json_report(name, &Json::Arr(self.rows)) {
-            Ok(p) => println!("[report] wrote {}", p.display()),
-            Err(e) => eprintln!("[report] failed: {e}"),
+    /// Record a timing-free derived metric (storage ratios and the like).
+    /// No `median_us` key, so the perf gate never treats it as a timing.
+    pub fn metric(&mut self, section: &str, name: &str, metric_name: &str, metric: f64) {
+        if !metric.is_finite() {
+            self.errors.push(format!("row {section}/{name}: non-finite {metric_name} {metric}"));
+            return;
         }
+        let mut j = Json::obj();
+        j.set("section", Json::from(section))
+            .set("name", Json::from(name))
+            .set(metric_name, Json::from(metric));
+        self.rows.push(j);
+    }
+
+    /// Write the accumulated rows to `reports/<name>`, failing (so the
+    /// bench binary exits nonzero) when any row was invalid or any of
+    /// `expect_sections` never produced a row — both are the
+    /// partial-run symptoms the CI gate must not mistake for a pass.
+    pub fn write(self, name: &str, expect_sections: &[&str]) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.errors.is_empty(),
+            "bench produced invalid rows:\n  {}",
+            self.errors.join("\n  ")
+        );
+        for want in expect_sections {
+            let found = self.rows.iter().any(|r| {
+                r.get("section").and_then(|s| s.as_str()) == Some(*want)
+            });
+            anyhow::ensure!(found, "bench section {want:?} emitted no rows — partial run?");
+        }
+        let p = proxcomp::metrics::write_json_report(name, &Json::Arr(self.rows))?;
+        println!("[report] wrote {}", p.display());
+        Ok(())
     }
 }

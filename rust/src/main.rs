@@ -9,6 +9,8 @@
 //! proxcomp quantize --checkpoint ckpt.pxcp [--out q.pxcp] [--codebook-size 16]
 //! proxcomp infer    --checkpoint ckpt.pxcp [--sparse|--quantized] [--batch 64]
 //! proxcomp report   --checkpoint ckpt.pxcp        # layer table + size
+//! proxcomp bench-compare --baseline BENCH_BASELINE.json \
+//!                   --current reports/bench_kernels.json  # CI perf gate
 //! proxcomp info                                   # manifest summary
 //! ```
 //!
@@ -50,6 +52,7 @@ fn run() -> Result<()> {
         "quantize" => cmd_quantize(&args),
         "infer" => cmd_infer(&args),
         "report" => cmd_report(&args),
+        "bench-compare" => cmd_bench_compare(&args),
         "info" => cmd_info(&args),
         _ => {
             print_help();
@@ -582,6 +585,48 @@ fn cmd_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// CI bench-gate: compare a fresh `reports/bench_kernels.json` against
+/// the committed `BENCH_BASELINE.json`, print (and optionally write) the
+/// calibration-normalized delta table, and exit nonzero when any gated
+/// group's geomean regresses past `--max-regress` (default 25 %). See
+/// `metrics::benchcmp` for the comparison semantics.
+fn cmd_bench_compare(args: &Args) -> Result<()> {
+    use proxcomp::metrics::benchcmp;
+    let baseline = args.str_or("baseline", "BENCH_BASELINE.json");
+    let current = args.str_or("current", "reports/bench_kernels.json");
+    let max_regress = args.f64_or("max-regress", benchcmp::DEFAULT_MAX_REGRESS)?;
+    let gate = args.list_or("gate", &[]);
+    let out = args.get_str("out");
+    args.finish()?;
+    let read = |p: &str| -> Result<Json> {
+        let text =
+            std::fs::read_to_string(p).map_err(|e| anyhow::anyhow!("reading {p}: {e}"))?;
+        proxcomp::util::json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {p}: {e}"))
+    };
+    let rep = benchcmp::compare_json(&read(&baseline)?, &read(&current)?, max_regress, &gate)?;
+    print!("{}", rep.table);
+    if let Some(out) = out {
+        std::fs::write(&out, &rep.table)?;
+        println!("[bench-compare] wrote {out}");
+    }
+    if !rep.passed() {
+        for f in &rep.failures {
+            eprintln!("[bench-compare] {f}");
+        }
+        anyhow::bail!(
+            "bench gate failed: {} group(s) regressed more than {:.0}% vs {baseline}",
+            rep.failures.len(),
+            max_regress * 100.0
+        );
+    }
+    println!(
+        "[bench-compare] OK: {} gated group(s) within {:.0}% of {baseline}",
+        rep.groups.iter().filter(|g| g.gated).count(),
+        max_regress * 100.0
+    );
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = args.str_or("artifacts-dir", "artifacts");
     args.finish()?;
@@ -638,6 +683,10 @@ SUBCOMMANDS
   infer    run a checkpoint through the rust inference engine
            --checkpoint F [--sparse | --quantized] [--batch N]
   report   layer-wise compression table for a checkpoint
+  bench-compare  CI perf gate: compare a bench_kernels JSON against the
+           committed baseline (calibration-normalized per-group geomean)
+           --baseline BENCH_BASELINE.json --current reports/bench_kernels.json
+           [--max-regress 0.25] [--gate sec1,sec2] [--out delta.txt]
   info     manifest summary
 
 Shared: --config run.json --artifacts-dir artifacts --verbose"

@@ -1,0 +1,321 @@
+//! Bench-trajectory comparison — the logic behind `proxcomp
+//! bench-compare` and the CI `bench-gate` step.
+//!
+//! Compares a fresh `reports/bench_kernels.json` against the committed
+//! `BENCH_BASELINE.json` and fails on per-group regressions. Two design
+//! points keep the gate portable across machines (a committed baseline
+//! is replayed on arbitrary CI runners):
+//!
+//! * **Calibration normalization.** Absolute µs differ wildly between
+//!   runners, so each timed row is scored as `median_us / calibration`,
+//!   where the calibration row ([`CALIBRATION`], the dense matmul in the
+//!   dxct section) comes from the *same run*. Scores measure "how many
+//!   dense matmuls does this kernel cost", which tracks kernel quality,
+//!   not machine speed.
+//! * **Per-group geometric means.** Individual rows are noisy at CI rep
+//!   counts; the gate trips only when a whole section's geomean ratio
+//!   (current score / baseline score, rows matched by section + name)
+//!   exceeds `1 + max_regress`.
+//!
+//! Metric-only rows (no `median_us`, e.g. storage ratios) are carried in
+//! the same files but never timed-gated.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// `(section, name)` of the calibration row every bench run must emit.
+pub const CALIBRATION: (&str, &str) = ("dxct_forward", "dense_matmul_nt");
+
+/// Default failure threshold: >25 % group-geomean regression.
+pub const DEFAULT_MAX_REGRESS: f64 = 0.25;
+
+/// One timed bench row (metric-only rows are dropped at load).
+#[derive(Debug, Clone)]
+pub struct BenchRow {
+    pub section: String,
+    pub name: String,
+    pub median_us: f64,
+}
+
+/// Per-section comparison outcome.
+#[derive(Debug, Clone)]
+pub struct GroupDelta {
+    pub section: String,
+    /// Geomean of per-row `current_score / baseline_score` (1.0 = flat,
+    /// above = slower than baseline).
+    pub ratio: f64,
+    /// Rows matched between the two runs.
+    pub rows: usize,
+    pub gated: bool,
+}
+
+/// Full comparison result: per-group deltas, a printable table, and the
+/// gated groups that regressed past the threshold.
+#[derive(Debug, Clone)]
+pub struct CompareReport {
+    pub groups: Vec<GroupDelta>,
+    pub table: String,
+    pub failures: Vec<String>,
+}
+
+impl CompareReport {
+    pub fn passed(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+/// Extract timed rows from either supported file shape: a bare row array
+/// (`reports/bench_kernels.json`) or a summary object with a `rows` key
+/// (the committed `BENCH_*.json` wrappers). Rows with a positive finite
+/// `median_us` are timed; metric-only rows are skipped. A present but
+/// invalid `median_us` (NaN / zero / negative) is an error — that is the
+/// partial-JSON failure mode the gate must reject, not accept.
+pub fn load_rows(j: &Json) -> anyhow::Result<Vec<BenchRow>> {
+    let arr = match j.get("rows") {
+        Some(rows) => rows.as_arr(),
+        None => j.as_arr(),
+    };
+    let arr = arr.ok_or_else(|| anyhow::anyhow!("bench json: expected array or {{rows: [...]}}"))?;
+    let mut out = Vec::new();
+    for row in arr {
+        let section = row.req("section")?.as_str().unwrap_or_default().to_string();
+        let name = row.req("name")?.as_str().unwrap_or_default().to_string();
+        let Some(us) = row.get("median_us").and_then(|v| v.as_f64()) else {
+            continue; // metric-only row
+        };
+        anyhow::ensure!(
+            us.is_finite() && us > 0.0,
+            "bench json: row {section}/{name} has invalid median_us {us}"
+        );
+        out.push(BenchRow { section, name, median_us: us });
+    }
+    Ok(out)
+}
+
+fn calibration(rows: &[BenchRow], which: &str) -> anyhow::Result<f64> {
+    rows.iter()
+        .find(|r| r.section == CALIBRATION.0 && r.name == CALIBRATION.1)
+        .map(|r| r.median_us)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "{which}: missing calibration row {}/{} — was the bench run complete?",
+                CALIBRATION.0,
+                CALIBRATION.1
+            )
+        })
+}
+
+/// Compare `current` against `baseline`. `gate` selects the sections the
+/// pass/fail verdict considers (empty = every section present in both
+/// runs); all matched sections still appear in the delta table.
+pub fn compare(
+    baseline: &[BenchRow],
+    current: &[BenchRow],
+    max_regress: f64,
+    gate: &[String],
+) -> anyhow::Result<CompareReport> {
+    anyhow::ensure!(max_regress > 0.0, "max_regress must be positive");
+    let cal_base = calibration(baseline, "baseline")?;
+    let cal_cur = calibration(current, "current")?;
+
+    // Per-row ratios of calibration-normalized scores, grouped by section.
+    let base_by_key: BTreeMap<(&str, &str), f64> =
+        baseline.iter().map(|r| ((r.section.as_str(), r.name.as_str()), r.median_us)).collect();
+    let mut rows_by_section: BTreeMap<&str, Vec<(&str, f64)>> = BTreeMap::new();
+    for r in current {
+        if r.section == CALIBRATION.0 && r.name == CALIBRATION.1 {
+            continue; // the yardstick itself is ratio 1.0 by construction
+        }
+        if let Some(&base_us) = base_by_key.get(&(r.section.as_str(), r.name.as_str())) {
+            let ratio = (r.median_us / cal_cur) / (base_us / cal_base);
+            rows_by_section.entry(r.section.as_str()).or_default().push((r.name.as_str(), ratio));
+        }
+    }
+    anyhow::ensure!(
+        !rows_by_section.is_empty(),
+        "no overlapping timed rows between baseline and current"
+    );
+
+    let mut table = String::new();
+    let _ = writeln!(
+        table,
+        "{:<24} {:<34} {:>9}  {}",
+        "section", "name", "ratio", "(current/baseline, calibration-normalized)"
+    );
+    let mut groups = Vec::new();
+    let mut failures = Vec::new();
+    for (section, rows) in &rows_by_section {
+        let gated = gate.is_empty() || gate.iter().any(|g| g == section);
+        let log_sum: f64 = rows.iter().map(|(_, r)| r.ln()).sum();
+        let geomean = (log_sum / rows.len() as f64).exp();
+        for (name, ratio) in rows {
+            let _ = writeln!(table, "{section:<24} {name:<34} {ratio:>8.3}x");
+        }
+        let verdict = if !gated {
+            "ungated"
+        } else if geomean > 1.0 + max_regress {
+            failures.push(format!(
+                "group '{section}' regressed: geomean {geomean:.3}x > {:.3}x over {} rows",
+                1.0 + max_regress,
+                rows.len()
+            ));
+            "FAIL"
+        } else {
+            "ok"
+        };
+        let _ = writeln!(
+            table,
+            "{:<24} {:<34} {:>8.3}x  [{} geomean, {}]",
+            section,
+            "(group geomean)",
+            geomean,
+            rows.len(),
+            verdict
+        );
+        groups.push(GroupDelta { section: section.to_string(), ratio: geomean, rows: rows.len(), gated });
+    }
+    Ok(CompareReport { groups, table, failures })
+}
+
+/// Convenience: parse both files' JSON text and compare.
+pub fn compare_json(
+    baseline: &Json,
+    current: &Json,
+    max_regress: f64,
+    gate: &[String],
+) -> anyhow::Result<CompareReport> {
+    compare(&load_rows(baseline)?, &load_rows(current)?, max_regress, gate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(entries: &[(&str, &str, f64)]) -> Vec<BenchRow> {
+        entries
+            .iter()
+            .map(|(s, n, us)| BenchRow {
+                section: s.to_string(),
+                name: n.to_string(),
+                median_us: *us,
+            })
+            .collect()
+    }
+
+    fn base_fixture() -> Vec<BenchRow> {
+        rows(&[
+            (CALIBRATION.0, CALIBRATION.1, 1000.0),
+            ("dxct_forward", "csr_90pct", 200.0),
+            ("dxct_forward", "csr_97pct", 80.0),
+            ("blocked_kernels", "spmv_blocked_90pct", 50.0),
+            ("blocked_kernels", "spmv_blocked_97pct", 20.0),
+        ])
+    }
+
+    #[test]
+    fn identical_runs_pass() {
+        let b = base_fixture();
+        let rep = compare(&b, &b, DEFAULT_MAX_REGRESS, &[]).unwrap();
+        assert!(rep.passed(), "{:?}", rep.failures);
+        for g in &rep.groups {
+            assert!((g.ratio - 1.0).abs() < 1e-12, "{g:?}");
+        }
+    }
+
+    #[test]
+    fn injected_2x_slowdown_fails() {
+        let b = base_fixture();
+        let mut cur = base_fixture();
+        for r in &mut cur {
+            if r.section == "blocked_kernels" {
+                r.median_us *= 2.0; // the acceptance-criteria injection
+            }
+        }
+        let rep = compare(&b, &cur, DEFAULT_MAX_REGRESS, &[]).unwrap();
+        assert!(!rep.passed());
+        assert_eq!(rep.failures.len(), 1);
+        assert!(rep.failures[0].contains("blocked_kernels"), "{:?}", rep.failures);
+        let g = rep.groups.iter().find(|g| g.section == "blocked_kernels").unwrap();
+        assert!((g.ratio - 2.0).abs() < 1e-9);
+        // The untouched group stays clean.
+        assert!(rep.groups.iter().any(|g| g.section == "dxct_forward" && g.ratio < 1.25));
+    }
+
+    #[test]
+    fn speedups_pass_and_machine_scale_cancels() {
+        let b = base_fixture();
+        // A 3x faster machine (all timings /3) with a genuine 2x kernel
+        // speedup in one group: everything passes, ratios reflect only
+        // the kernel change because calibration normalizes machine speed.
+        let mut cur = base_fixture();
+        for r in &mut cur {
+            r.median_us /= 3.0;
+            if r.section == "blocked_kernels" {
+                r.median_us /= 2.0;
+            }
+        }
+        let rep = compare(&b, &cur, DEFAULT_MAX_REGRESS, &[]).unwrap();
+        assert!(rep.passed(), "{:?}", rep.failures);
+        let g = rep.groups.iter().find(|g| g.section == "blocked_kernels").unwrap();
+        assert!((g.ratio - 0.5).abs() < 1e-9, "{g:?}");
+    }
+
+    #[test]
+    fn gate_filter_limits_verdict_to_selected_groups() {
+        let b = base_fixture();
+        let mut cur = base_fixture();
+        for r in &mut cur {
+            if r.section == "dxct_forward" && r.name != CALIBRATION.1 {
+                r.median_us *= 4.0;
+            }
+        }
+        // dxct_forward regresses 4x but only blocked_kernels is gated.
+        let gate = vec!["blocked_kernels".to_string()];
+        let rep = compare(&b, &cur, DEFAULT_MAX_REGRESS, &gate).unwrap();
+        assert!(rep.passed(), "{:?}", rep.failures);
+        // Same comparison with the gate off fails.
+        assert!(!compare(&b, &cur, DEFAULT_MAX_REGRESS, &[]).unwrap().passed());
+        // The regression still shows in the table for humans.
+        assert!(rep.table.contains("4.000x"), "{}", rep.table);
+    }
+
+    #[test]
+    fn missing_calibration_is_an_error() {
+        let b = base_fixture();
+        let cur = rows(&[("dxct_forward", "csr_90pct", 100.0)]);
+        let err = compare(&b, &cur, DEFAULT_MAX_REGRESS, &[]).unwrap_err();
+        assert!(err.to_string().contains("calibration"), "{err}");
+    }
+
+    #[test]
+    fn load_rows_accepts_both_shapes_and_rejects_bad_timings() {
+        let bare = crate::util::json::parse(
+            r#"[{"section":"s","name":"a","median_us":5.0},
+                {"section":"s","name":"ratio_only","bytes_ratio":3.2}]"#,
+        )
+        .unwrap();
+        let got = load_rows(&bare).unwrap();
+        assert_eq!(got.len(), 1, "metric-only row must be skipped");
+        let wrapped = crate::util::json::parse(
+            r#"{"pr":6,"bench":"bench_kernels","rows":[{"section":"s","name":"a","median_us":5.0}]}"#,
+        )
+        .unwrap();
+        assert_eq!(load_rows(&wrapped).unwrap().len(), 1);
+        for bad in ["0.0", "-1.0", "null"] {
+            let j = crate::util::json::parse(&format!(
+                r#"[{{"section":"s","name":"a","median_us":{bad}}}]"#
+            ))
+            .unwrap();
+            // null median_us parses as a non-number → metric-only skip
+            // would hide corruption, so only numeric invalids error; the
+            // null case simply yields no timed rows.
+            if bad == "null" {
+                assert!(load_rows(&j).unwrap().is_empty());
+            } else {
+                assert!(load_rows(&j).is_err(), "median_us={bad} must be rejected");
+            }
+        }
+    }
+}

@@ -1,5 +1,7 @@
 //! Metric history + report writers (CSV / JSON under `reports/`).
 
+pub mod benchcmp;
+
 use std::io::Write;
 use std::path::{Path, PathBuf};
 

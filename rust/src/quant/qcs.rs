@@ -7,17 +7,20 @@
 //! makes compressed inference bandwidth-efficient: a nonzero costs
 //! 2.5 bytes (u16 index + packed 4-bit code) instead of CSR's 8.
 //!
-//! The `dxct`/`spmv` kernels mirror `sparse::ops`: they partition over
-//! disjoint output chunks via `pool::parallel_chunks` and keep a fixed
-//! ascending-index reduction order per output element, so results are
-//! bit-identical for any `PROXCOMP_THREADS` (the serving guarantee the
-//! property tests pin).
+//! The `dxct`/`spmv` kernels mirror `sparse::ops`, including the
+//! blocked-reduction contract: under the default `PROXCOMP_KERNEL=blocked`
+//! family, nonzero `q` of a row accumulates into lane `q % pool::LANES`
+//! and lanes collapse through `pool::tree_reduce` — the *same* lane
+//! semantics as the CSR kernels, so a QCS matrix multiplies bit-identically
+//! to its dequantized CSR under either kernel family. Rows partition by
+//! nnz (`pool::parallel_prefix_chunks`); partitioning and thread count
+//! never change bits (the serving guarantee the property tests pin).
 
 use super::codebook::{kmeans_codebook, QuantConfig, QuantStats};
 use crate::sparse::dispatch::{SparseFormat, SparseKernel};
 use crate::sparse::CsrMatrix;
 use crate::tensor::Tensor;
-use crate::util::pool;
+use crate::util::pool::{self, KernelMode, LANES};
 
 /// Column indices, narrowed to u16 when `cols` fits.
 #[derive(Debug, Clone, PartialEq)]
@@ -261,28 +264,59 @@ impl QcsMatrix {
         Ok(())
     }
 
+    /// Gathered blocked dot of stored row range `lo..hi` against a dense
+    /// vector: the `q`-th nonzero of the row lands in lane `q % LANES`,
+    /// lanes collapse through the fixed tree — exactly the semantics of
+    /// `sparse::ops::blocked_row_dot`, so QCS results stay bit-identical
+    /// to the dequantized-CSR kernel in blocked mode. Eight independent
+    /// accumulators also break the FMA latency chain around the codebook
+    /// lookup, which is the perf point of the rewrite.
+    #[inline]
+    fn blocked_row_dot(&self, dvec: &[f32], lo: usize, hi: usize) -> f32 {
+        let mut acc = [0.0f32; LANES];
+        for (q, idx) in (lo..hi).enumerate() {
+            acc[q % LANES] += self.value_at(idx) * dvec[self.index_at(idx)];
+        }
+        pool::tree_reduce(acc)
+    }
+
+    /// Sequential (pre-blocking) row dot — the `PROXCOMP_KERNEL=scalar`
+    /// family and the bench "before" reference.
+    #[inline]
+    fn scalar_row_dot(&self, dvec: &[f32], lo: usize, hi: usize) -> f32 {
+        let mut acc = 0.0f32;
+        for idx in lo..hi {
+            acc += self.value_at(idx) * dvec[self.index_at(idx)];
+        }
+        acc
+    }
+
     /// Forward contraction `dmat (B, K) @ self' -> (B, N)` — the paper's
     /// Figure-2 kernel with the value load replaced by a codebook lookup.
     pub fn dxct(&self, dmat: &Tensor) -> Tensor {
         self.dxct_threads(dmat, pool::max_threads())
     }
 
-    /// As [`QcsMatrix::dxct`] with an explicit worker count. Both
-    /// partitions (batch rows when the batch saturates the lanes, output
-    /// columns otherwise) accumulate each output element over its CSR
-    /// row in ascending-index order — bit-identical for any `threads`.
+    /// As [`QcsMatrix::dxct`] with an explicit worker count. Dispatches
+    /// on [`pool::kernel_mode`] like the CSR kernels. Both partitions
+    /// (batch rows when the batch saturates the lanes, output columns —
+    /// split by nnz in blocked mode — otherwise) compute every output
+    /// element with the family's fixed per-element reduction order, so
+    /// results are bit-identical for any `threads`.
     pub fn dxct_threads(&self, dmat: &Tensor, threads: usize) -> Tensor {
         let (b, k) = (dmat.shape[0], dmat.shape[1]);
         assert_eq!(k, self.cols, "qcs dxct: K mismatch ({k} vs {})", self.cols);
         let n = self.rows;
+        let blocked = pool::kernel_mode() == KernelMode::Blocked;
         let mut out = vec![0.0f32; b * n];
         let out_ptr = pool::SharedMut::new(&mut out);
         let cell = |drow: &[f32], col: usize| -> f32 {
-            let mut acc = 0.0f32;
-            for idx in self.ptr[col]..self.ptr[col + 1] {
-                acc += drow[self.index_at(idx)] * self.value_at(idx);
+            let (lo, hi) = (self.ptr[col], self.ptr[col + 1]);
+            if blocked {
+                self.blocked_row_dot(drow, lo, hi)
+            } else {
+                self.scalar_row_dot(drow, lo, hi)
             }
-            acc
         };
         if pool::batch_saturates(b, threads) {
             pool::parallel_chunks(b, threads, |r0, r1| {
@@ -296,7 +330,9 @@ impl QcsMatrix {
                 }
             });
         } else {
-            pool::parallel_chunks(n, threads, |c0, c1| {
+            // Serving batches: columns map to stored rows, so blocked
+            // mode splits them by nnz (skewed-row load balance).
+            let run = |c0: usize, c1: usize| {
                 let out = unsafe { out_ptr.slice() };
                 for row in 0..b {
                     let drow = &dmat.data[row * k..(row + 1) * k];
@@ -304,7 +340,12 @@ impl QcsMatrix {
                         out[row * n + col] = cell(drow, col);
                     }
                 }
-            });
+            };
+            if blocked {
+                pool::parallel_prefix_chunks(n, threads, &self.ptr, run);
+            } else {
+                pool::parallel_chunks(n, threads, run);
+            }
         }
         Tensor::new(vec![b, n], out)
     }
@@ -315,22 +356,31 @@ impl QcsMatrix {
         self.spmv_threads(x, pool::max_threads())
     }
 
-    /// As [`QcsMatrix::spmv`] with an explicit worker count (output rows
-    /// are independent; each accumulates ascending — bit-identical).
+    /// As [`QcsMatrix::spmv`] with an explicit worker count. Output rows
+    /// are independent and each keeps its family's fixed reduction
+    /// order — bit-identical for any `threads`, and bit-identical to
+    /// [`QcsMatrix::dxct`] of the same vector as a (1, K) batch.
     pub fn spmv_threads(&self, x: &[f32], threads: usize) -> Vec<f32> {
         assert_eq!(x.len(), self.cols);
+        let blocked = pool::kernel_mode() == KernelMode::Blocked;
         let mut out = vec![0.0f32; self.rows];
         let out_ptr = pool::SharedMut::new(&mut out);
-        pool::parallel_chunks(self.rows, threads, |r0, r1| {
+        let run = |r0: usize, r1: usize| {
             let out = unsafe { out_ptr.slice() };
             for r in r0..r1 {
-                let mut acc = 0.0f32;
-                for idx in self.ptr[r]..self.ptr[r + 1] {
-                    acc += self.value_at(idx) * x[self.index_at(idx)];
-                }
-                out[r] = acc;
+                let (lo, hi) = (self.ptr[r], self.ptr[r + 1]);
+                out[r] = if blocked {
+                    self.blocked_row_dot(x, lo, hi)
+                } else {
+                    self.scalar_row_dot(x, lo, hi)
+                };
             }
-        });
+        };
+        if blocked {
+            pool::parallel_prefix_chunks(self.rows, threads, &self.ptr, run);
+        } else {
+            pool::parallel_chunks(self.rows, threads, run);
+        }
         out
     }
 }

@@ -270,19 +270,66 @@ pub fn step_artifact(
 // Deterministic threaded matmuls (fixed per-element reduction order)
 // ---------------------------------------------------------------------------
 
+/// Dense 8-lane blocked dot: element `kk` accumulates into lane
+/// `kk % pool::LANES`, lanes collapse via `pool::tree_reduce` — the
+/// dense twin of `sparse::ops::blocked_row_dot` (same lane semantics,
+/// contiguous instead of gathered loads). Fixed-size chunk windows let
+/// the autovectorizer map the lanes onto whatever SIMD width exists
+/// while the result stays bit-identical everywhere.
+#[inline]
+fn blocked_dot(a: &[f32], c: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), c.len());
+    let mut acc = [0.0f32; pool::LANES];
+    let mut ac = a.chunks_exact(pool::LANES);
+    let mut cc = c.chunks_exact(pool::LANES);
+    for (av, cv) in (&mut ac).zip(&mut cc) {
+        for l in 0..pool::LANES {
+            acc[l] += av[l] * cv[l];
+        }
+    }
+    for (l, (av, cv)) in ac.remainder().iter().zip(cc.remainder()).enumerate() {
+        acc[l] += av * cv;
+    }
+    pool::tree_reduce(acc)
+}
+
+/// `out[i] += a * x[i]` in fixed-width blocks with a scalar tail. One
+/// add per element per call, so bit-identical to the plain loop — pure
+/// autovectorizer-friendliness, no semantic change (see sparse::ops).
+#[inline]
+fn axpy_blocked(out: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(out.len(), x.len());
+    let mut oc = out.chunks_exact_mut(pool::LANES);
+    let mut xc = x.chunks_exact(pool::LANES);
+    for (o, xv) in (&mut oc).zip(&mut xc) {
+        for l in 0..pool::LANES {
+            o[l] += a * xv[l];
+        }
+    }
+    for (o, xv) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o += a * xv;
+    }
+}
+
 /// `y[b,n] = x[b,k] · w[n,k]ᵀ + bias[n]`. Partitions the batch axis when
 /// it can feed every lane, the output axis otherwise; either partition
-/// computes each element with the same ascending-k reduction, so results
+/// computes each element with its kernel family's fixed reduction
+/// (`PROXCOMP_KERNEL=blocked` → [`blocked_dot`] plus the bias;
+/// `scalar` → sequential ascending-k starting from the bias), so results
 /// are bit-identical for any thread count.
 pub fn fc_forward(x: &[f32], b: usize, k: usize, w: &[f32], bias: &[f32], n: usize, threads: usize) -> Vec<f32> {
     debug_assert_eq!(x.len(), b * k);
     debug_assert_eq!(w.len(), n * k);
     debug_assert_eq!(bias.len(), n);
+    let blocked = pool::kernel_mode() == pool::KernelMode::Blocked;
     let mut y = vec![0.0f32; b * n];
     let ptr = pool::SharedMut::new(&mut y);
     let cell = |bi: usize, o: usize| -> f32 {
         let xrow = &x[bi * k..(bi + 1) * k];
         let wrow = &w[o * k..(o + 1) * k];
+        if blocked {
+            return bias[o] + blocked_dot(xrow, wrow);
+        }
         let mut acc = bias[o];
         for kk in 0..k {
             acc += xrow[kk] * wrow[kk];
@@ -328,10 +375,9 @@ pub fn fc_grad_w(dy: &[f32], b: usize, n: usize, x: &[f32], k: usize, threads: u
                 if g == 0.0 {
                     continue;
                 }
-                let xrow = &x[bi * k..(bi + 1) * k];
-                for kk in 0..k {
-                    row[kk] += g * xrow[kk];
-                }
+                // Chunked axpy: one add per element per batch row, so
+                // the ascending-batch sum order is unchanged.
+                axpy_blocked(row, &x[bi * k..(bi + 1) * k], g);
             }
         }
     });
@@ -350,13 +396,24 @@ pub fn fc_grad_b(dy: &[f32], b: usize, n: usize) -> Vec<f32> {
 }
 
 /// Input gradient `dx[b,k] = Σ_o dy[b,o]·w[o,k]`, batch- or
-/// column-partitioned with a fixed ascending-o reduction per element.
+/// column-partitioned with a fixed per-element reduction: blocked mode
+/// puts term `o` in lane `o % pool::LANES` (the strided `w` column is a
+/// gather, so the lane loop is explicit rather than chunked), scalar
+/// mode sums ascending-o — either way bit-identical for any threads.
 pub fn fc_grad_x(dy: &[f32], b: usize, n: usize, w: &[f32], k: usize, threads: usize) -> Vec<f32> {
     debug_assert_eq!(dy.len(), b * n);
     debug_assert_eq!(w.len(), n * k);
+    let blocked = pool::kernel_mode() == pool::KernelMode::Blocked;
     let mut dx = vec![0.0f32; b * k];
     let ptr = pool::SharedMut::new(&mut dx);
     let cell = |bi: usize, kk: usize| -> f32 {
+        if blocked {
+            let mut acc = [0.0f32; pool::LANES];
+            for o in 0..n {
+                acc[o % pool::LANES] += dy[bi * n + o] * w[o * k + kk];
+            }
+            return pool::tree_reduce(acc);
+        }
         let mut acc = 0.0f32;
         for o in 0..n {
             acc += dy[bi * n + o] * w[o * k + kk];

@@ -11,15 +11,33 @@
 //! * `cxd` — `Cmat @ Dmat` for completeness (the ViennaCL op the paper
 //!   worked around).
 //!
-//! All kernels parallelize over disjoint output chunks. The partition
-//! axis adapts to the shape (`pool::batch_saturates`): multi-row batches
-//! split the batch, single-sample serving requests split the weight-row
-//! dimension — and every output element keeps a fixed reduction order,
-//! so results are bit-identical for any `PROXCOMP_THREADS` setting.
+//! §Blocked reduction contract. The serving-path kernels (`dxct`,
+//! `spmv`) dispatch on [`pool::kernel_mode`]: the default `Blocked`
+//! family accumulates each output element into [`pool::LANES`] = 8
+//! independent lanes — nonzero `q` of a CSR row lands in lane
+//! `q % LANES` — collapsed by the fixed tree of [`pool::tree_reduce`].
+//! Eight independent accumulators break the FMA latency chain of the
+//! sequential dot (the autovectorizer maps them onto whatever SIMD width
+//! the target has), and because the lane assignment and tree are defined
+//! by the *constant* `LANES`, results are bit-identical on any hardware
+//! vector width, any `PROXCOMP_THREADS`, and any batch split. The
+//! pre-blocking sequential kernels are kept verbatim (`*_scalar_*`) as
+//! the `PROXCOMP_KERNEL=scalar` family and as property-test oracles.
+//!
+//! §Skew. Blocked CSR paths partition rows by *nnz* via
+//! [`pool::parallel_prefix_chunks`] (`csr.ptr` is the prefix sum) — EIE's
+//! per-PE load-imbalance fix — which only moves thread boundaries and
+//! never changes per-element reduction order.
+//!
+//! The scatter kernels (`dxc`, `cxd`) add exactly one contribution per
+//! output element per nonzero, so chunking their contiguous axpys
+//! ([`axpy_blocked`]) cannot reorder any element's additions: those
+//! kernels are blocked unconditionally, with bits unchanged from the
+//! pre-blocking implementation.
 
 use super::csr::CsrMatrix;
 use crate::tensor::Tensor;
-use crate::util::pool;
+use crate::util::pool::{self, KernelMode, LANES};
 
 /// Transpose a (r, c) row-major buffer into (c, r).
 fn transpose_buf(src: &[f32], r: usize, c: usize) -> Vec<f32> {
@@ -38,25 +56,77 @@ fn transpose_buf(src: &[f32], r: usize, c: usize) -> Vec<f32> {
     out
 }
 
+/// Gathered 8-lane dot of one CSR row against a dense vector: nonzero
+/// `q` accumulates into lane `q % LANES` (remainder elements continue
+/// the lane sequence at lane 0), lanes collapse via the fixed tree.
+/// This function *defines* the blocked per-element semantics — every
+/// blocked kernel (CSR, QCS, batch SpMM plane) must match it bit-exactly.
+#[inline]
+pub fn blocked_row_dot(dvec: &[f32], indices: &[u32], data: &[f32]) -> f32 {
+    debug_assert_eq!(indices.len(), data.len());
+    let mut acc = [0.0f32; LANES];
+    let mut ic = indices.chunks_exact(LANES);
+    let mut vc = data.chunks_exact(LANES);
+    for (iv, vv) in (&mut ic).zip(&mut vc) {
+        for l in 0..LANES {
+            acc[l] += vv[l] * dvec[iv[l] as usize];
+        }
+    }
+    for (l, (i, v)) in ic.remainder().iter().zip(vc.remainder()).enumerate() {
+        acc[l] += v * dvec[*i as usize];
+    }
+    pool::tree_reduce(acc)
+}
+
+/// `out[i] += a * x[i]` over a contiguous slice, in fixed-width blocks
+/// with a scalar tail. One add per element per call, so bit-identical to
+/// the plain loop — this is purely an autovectorizer-friendliness shape
+/// (fixed-size `[f32; LANES]` windows, no bounds checks in the body).
+#[inline]
+fn axpy_blocked(out: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(out.len(), x.len());
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut xc = x.chunks_exact(LANES);
+    for (o, xv) in (&mut oc).zip(&mut xc) {
+        for l in 0..LANES {
+            o[l] += a * xv[l];
+        }
+    }
+    for (o, xv) in oc.into_remainder().iter_mut().zip(xc.remainder()) {
+        *o += a * xv;
+    }
+}
+
 /// Forward: `dmat (B, K) @ csr' -> (B, N)` with `csr` shaped (N, K).
 /// Paper Figure 2: "the column memory access of Cmat' equals the row
 /// access of Cmat", so each output column walks one CSR row.
 ///
 /// §Perf: for multi-row batches the kernel runs in *column-major SpMM*
 /// form — transpose D to (K, B) once, then each CSR nonzero performs a
-/// contiguous length-B axpy (`out_t[col] += v · dt[j]`). This walks the
-/// CSR arrays exactly once (the scalar form re-walked them per batch
-/// row: B× the index traffic) and the unit-stride inner loop
-/// auto-vectorizes. Scalar fallback below `SPMM_MIN_BATCH`.
+/// contiguous length-B axpy into a lane plane. Small batches use the
+/// gathered [`blocked_row_dot`]. Both paths realize the same blocked
+/// per-element reduction, so any batch split is bit-identical.
 pub fn dxct(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
     dxct_threads(dmat, csr, pool::max_threads())
 }
 
-/// As [`dxct`] with an explicit worker count. Every output element
-/// accumulates its CSR row in ascending-index order on both the scalar
-/// and the column-major path, so results are bit-identical for any
-/// `threads` (and for any batch split — the serving-path guarantee).
+/// As [`dxct`] with an explicit worker count. Dispatches on
+/// [`pool::kernel_mode`]: `Blocked` (default) runs the 8-lane kernels,
+/// `Scalar` the pre-blocking sequential reference. Within either family
+/// every output element keeps a fixed reduction order, so results are
+/// bit-identical for any `threads` and any batch split (the serving-path
+/// guarantee) — only switching families changes bits.
 pub fn dxct_threads(dmat: &Tensor, csr: &CsrMatrix, threads: usize) -> Tensor {
+    match pool::kernel_mode() {
+        KernelMode::Blocked => dxct_blocked_threads(dmat, csr, threads),
+        KernelMode::Scalar => dxct_seq_threads(dmat, csr, threads),
+    }
+}
+
+/// Pre-blocking dxct (sequential per-element reduction): the
+/// `PROXCOMP_KERNEL=scalar` family. Body unchanged from before the
+/// blocked rewrite so benches compare against the true "before".
+fn dxct_seq_threads(dmat: &Tensor, csr: &CsrMatrix, threads: usize) -> Tensor {
     let (b, k) = (dmat.shape[0], dmat.shape[1]);
     assert_eq!(k, csr.cols, "dxct: K mismatch ({k} vs {})", csr.cols);
     let n = csr.rows;
@@ -83,12 +153,93 @@ pub fn dxct_threads(dmat: &Tensor, csr: &CsrMatrix, threads: usize) -> Tensor {
     Tensor::new(vec![b, n], transpose_buf(&out_t, n, b))
 }
 
+/// Blocked dxct: gathered 8-lane row dots for small batches, lane-plane
+/// SpMM above [`SPMM_MIN_BATCH`]. Rows partition by nnz.
+fn dxct_blocked_threads(dmat: &Tensor, csr: &CsrMatrix, threads: usize) -> Tensor {
+    let (b, k) = (dmat.shape[0], dmat.shape[1]);
+    assert_eq!(k, csr.cols, "dxct: K mismatch ({k} vs {})", csr.cols);
+    let n = csr.rows;
+    if b >= SPMM_MIN_BATCH {
+        return dxct_blocked_spmm_threads(dmat, csr, threads);
+    }
+    let mut out = vec![0.0f32; b * n];
+    let out_ptr = pool::SharedMut::new(&mut out);
+    if pool::batch_saturates(b, threads) {
+        // Threads own batch rows; each walks every CSR row, so the
+        // per-thread weight is uniform and a plain index split is fair.
+        pool::parallel_chunks(b, threads, |r0, r1| {
+            let out = unsafe { out_ptr.slice() };
+            for row in r0..r1 {
+                let drow = &dmat.data[row * k..(row + 1) * k];
+                let orow = &mut out[row * n..(row + 1) * n];
+                for col in 0..n {
+                    let (lo, hi) = (csr.ptr[col], csr.ptr[col + 1]);
+                    orow[col] = blocked_row_dot(drow, &csr.indices[lo..hi], &csr.data[lo..hi]);
+                }
+            }
+        });
+    } else {
+        // Output-column partition (serving batches): columns map to CSR
+        // rows, so split by nnz — the skewed-row case this exists for.
+        pool::parallel_prefix_chunks(n, threads, &csr.ptr, |c0, c1| {
+            let out = unsafe { out_ptr.slice() };
+            for row in 0..b {
+                let drow = &dmat.data[row * k..(row + 1) * k];
+                for col in c0..c1 {
+                    let (lo, hi) = (csr.ptr[col], csr.ptr[col + 1]);
+                    out[row * n + col] =
+                        blocked_row_dot(drow, &csr.indices[lo..hi], &csr.data[lo..hi]);
+                }
+            }
+        });
+    }
+    Tensor::new(vec![b, n], out)
+}
+
+/// Blocked column-major SpMM: per CSR row keep an 8×B accumulator plane
+/// (L1-resident for serving batch sizes); nonzero `q` axpys into plane
+/// row `q % LANES`, then every batch element tree-reduces its lane
+/// column. Per output element this sums exactly the lane partials of
+/// [`blocked_row_dot`] in the same order — bit-identical to the
+/// small-batch path, which is what keeps batch coalescing transparent.
+fn dxct_blocked_spmm_threads(dmat: &Tensor, csr: &CsrMatrix, threads: usize) -> Tensor {
+    let (b, k) = (dmat.shape[0], dmat.shape[1]);
+    let n = csr.rows;
+    let dt = transpose_buf(&dmat.data, b, k); // (K, B)
+    let mut out_t = vec![0.0f32; n * b]; // (N, B)
+    let ptr = pool::SharedMut::new(&mut out_t);
+    pool::parallel_prefix_chunks(n, threads, &csr.ptr, |c0, c1| {
+        let out_t = unsafe { ptr.slice() };
+        let mut plane = vec![0.0f32; LANES * b];
+        for col in c0..c1 {
+            let (lo, hi) = (csr.ptr[col], csr.ptr[col + 1]);
+            for (q, idx) in (lo..hi).enumerate() {
+                let j = csr.indices[idx] as usize;
+                let prow = &mut plane[(q % LANES) * b..(q % LANES + 1) * b];
+                axpy_blocked(prow, &dt[j * b..(j + 1) * b], csr.data[idx]);
+            }
+            let orow = &mut out_t[col * b..(col + 1) * b];
+            for (bi, o) in orow.iter_mut().enumerate() {
+                let mut acc = [0.0f32; LANES];
+                for (l, a) in acc.iter_mut().enumerate() {
+                    *a = plane[l * b + bi];
+                }
+                *o = pool::tree_reduce(acc);
+            }
+            plane.fill(0.0);
+        }
+    });
+    Tensor::new(vec![b, n], transpose_buf(&out_t, n, b))
+}
+
 /// Minimum batch for the column-major SpMM path (transposes amortize).
 pub const SPMM_MIN_BATCH: usize = 8;
 
 /// Scalar-form dxct: the direct port of the Figure-2 OpenCL kernel (one
-/// inner product per output element). Used for small batches and as the
-/// §Perf "before" reference in `bench_kernels`.
+/// inner product per output element, sequential ascending-index
+/// accumulation). The `PROXCOMP_KERNEL=scalar` small-batch path, the
+/// property-test oracle, and the §Perf "before" reference in
+/// `bench_kernels`.
 pub fn dxct_scalar(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
     dxct_scalar_threads(dmat, csr, pool::max_threads())
 }
@@ -152,7 +303,9 @@ pub fn dxc(dmat: &Tensor, csr: &CsrMatrix) -> Tensor {
 
 /// As [`dxc`] with an explicit worker count (bit-identical for any
 /// `threads` — each output element's contributions arrive in ascending-j
-/// order on every path).
+/// order on every path). A scatter kernel: one add per element per
+/// nonzero, so the blocked axpy shape changes no bits (see module docs)
+/// and there is no kernel-mode dispatch here.
 pub fn dxc_threads(dmat: &Tensor, csr: &CsrMatrix, threads: usize) -> Tensor {
     let (b, n) = (dmat.shape[0], dmat.shape[1]);
     assert_eq!(n, csr.rows, "dxc: N mismatch ({n} vs {})", csr.rows);
@@ -177,10 +330,7 @@ pub fn dxc_threads(dmat: &Tensor, csr: &CsrMatrix, threads: usize) -> Tensor {
             for idx in csr.ptr[j]..csr.ptr[j + 1] {
                 let cidx = csr.indices[idx] as usize;
                 let v = csr.data[idx];
-                let orow = &mut out_t[cidx * b + b0..cidx * b + b1];
-                for (o, g) in orow.iter_mut().zip(&grow[b0..b1]) {
-                    *o += v * g;
-                }
+                axpy_blocked(&mut out_t[cidx * b + b0..cidx * b + b1], &grow[b0..b1], v);
             }
         }
     });
@@ -233,25 +383,25 @@ pub fn cxd(csr: &CsrMatrix, dmat: &Tensor) -> Tensor {
     cxd_threads(csr, dmat, pool::max_threads())
 }
 
-/// As [`cxd`] with an explicit worker count (already row-partitioned —
-/// the op is output-row independent — so any count is bit-identical).
+/// As [`cxd`] with an explicit worker count. Output-row independent, so
+/// any count is bit-identical; rows split by nnz (a thread's work is
+/// proportional to its rows' nonzeros) and the per-nonzero axpy uses the
+/// blocked shape — both bit-preserving (see module docs), so no
+/// kernel-mode dispatch.
 pub fn cxd_threads(csr: &CsrMatrix, dmat: &Tensor, threads: usize) -> Tensor {
     let (k, m) = (dmat.shape[0], dmat.shape[1]);
     assert_eq!(k, csr.cols, "cxd: K mismatch");
     let n = csr.rows;
     let mut out = vec![0.0f32; n * m];
     let out_ptr = pool::SharedMut::new(&mut out);
-    pool::parallel_chunks(n, threads, |r0, r1| {
+    pool::parallel_prefix_chunks(n, threads, &csr.ptr, |r0, r1| {
         let out = unsafe { out_ptr.slice() };
         for row in r0..r1 {
             let orow = &mut out[row * m..(row + 1) * m];
             for idx in csr.ptr[row]..csr.ptr[row + 1] {
                 let col = csr.indices[idx] as usize;
-                let v = csr.data[idx];
                 let drow = &dmat.data[col * m..(col + 1) * m];
-                for j in 0..m {
-                    orow[j] += v * drow[j];
-                }
+                axpy_blocked(orow, drow, csr.data[idx]);
             }
         }
     });
@@ -264,10 +414,32 @@ pub fn spmv(csr: &CsrMatrix, x: &[f32]) -> Vec<f32> {
     spmv_threads(csr, x, pool::max_threads())
 }
 
-/// As [`spmv`] with an explicit worker count: output rows are
-/// independent, so the kernel row-partitions and each row accumulates in
-/// ascending-index order — bit-identical for any `threads`.
+/// As [`spmv`] with an explicit worker count. Dispatches on
+/// [`pool::kernel_mode`] like [`dxct_threads`]; within either family
+/// output rows are independent and each row keeps its fixed reduction
+/// order — bit-identical for any `threads`. The blocked row dot here is
+/// the same [`blocked_row_dot`] as dxct's B = 1 path, so
+/// `spmv(csr, x) == dxct(x as (1, K), csr)` bit-exactly in both modes.
 pub fn spmv_threads(csr: &CsrMatrix, x: &[f32], threads: usize) -> Vec<f32> {
+    if pool::kernel_mode() == KernelMode::Scalar {
+        return spmv_scalar_threads(csr, x, threads);
+    }
+    assert_eq!(x.len(), csr.cols);
+    let mut out = vec![0.0f32; csr.rows];
+    let out_ptr = pool::SharedMut::new(&mut out);
+    pool::parallel_prefix_chunks(csr.rows, threads, &csr.ptr, |r0, r1| {
+        let out = unsafe { out_ptr.slice() };
+        for r in r0..r1 {
+            let (lo, hi) = (csr.ptr[r], csr.ptr[r + 1]);
+            out[r] = blocked_row_dot(x, &csr.indices[lo..hi], &csr.data[lo..hi]);
+        }
+    });
+    out
+}
+
+/// Pre-blocking SpMV (sequential ascending-index row dots): the
+/// `PROXCOMP_KERNEL=scalar` family and the bench "before" reference.
+pub fn spmv_scalar_threads(csr: &CsrMatrix, x: &[f32], threads: usize) -> Vec<f32> {
     assert_eq!(x.len(), csr.cols);
     let mut out = vec![0.0f32; csr.rows];
     let out_ptr = pool::SharedMut::new(&mut out);
@@ -369,7 +541,8 @@ mod tests {
 
     #[test]
     fn identity_weight() {
-        // W = I (N=K): dxct(d, I) == d and dxc(d, I) == d.
+        // W = I (N=K): dxct(d, I) == d and dxc(d, I) == d. Exact in both
+        // kernel modes: single-nonzero rows reduce without rounding.
         let n = 9;
         let mut dense = vec![0.0f32; n * n];
         for i in 0..n {
@@ -399,6 +572,39 @@ mod tests {
         for r in 0..25 {
             let want: f32 = (0..40).map(|c| wd[r * 40 + c] * x[c]).sum();
             assert!((got[r] - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn blocked_row_dot_matches_lane_emulation() {
+        // Pin blocked_row_dot to the documented semantics with an
+        // independent re-implementation: lane q % LANES, fixed tree.
+        let mut rng = Rng::new(16);
+        for nnz in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 100] {
+            let dvec: Vec<f32> = rng.normal_vec(128, 1.0);
+            let indices: Vec<u32> = (0..nnz).map(|_| (rng.uniform() * 128.0) as u32).collect();
+            let data: Vec<f32> = rng.normal_vec(nnz, 1.0);
+            let mut acc = [0.0f32; LANES];
+            for (q, (i, v)) in indices.iter().zip(&data).enumerate() {
+                acc[q % LANES] += v * dvec[*i as usize];
+            }
+            let want = pool::tree_reduce(acc);
+            let got = blocked_row_dot(&dvec, &indices, &data);
+            assert_eq!(got.to_bits(), want.to_bits(), "nnz={nnz}");
+        }
+    }
+
+    #[test]
+    fn spmv_equals_dxct_single_row_bitwise() {
+        // The serving-path identity promised in the docs, in whichever
+        // kernel mode the environment selects.
+        let mut rng = Rng::new(17);
+        let (_, csr) = random_sparse(&mut rng, 64, 96, 0.1);
+        let x: Vec<f32> = rng.normal_vec(96, 1.0);
+        let via_spmv = spmv(&csr, &x);
+        let via_dxct = dxct(&Tensor::new(vec![1, 96], x), &csr);
+        for (a, b) in via_spmv.iter().zip(&via_dxct.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 }

@@ -30,6 +30,46 @@ impl<T> SharedMut<T> {
     }
 }
 
+/// Fixed accumulator-lane width of the blocked kernels. The blocked
+/// reduction semantics — element `k` of a row lands in lane `k % LANES`,
+/// lanes collapse in the fixed tree of [`tree_reduce`] — are defined in
+/// terms of this constant, *not* the hardware vector width, so results
+/// are bit-identical on any SIMD ISA (the "across lane counts" half of
+/// the determinism contract; `PROXCOMP_THREADS` is the other half).
+pub const LANES: usize = 8;
+
+/// Collapse [`LANES`] partial sums in a fixed tree order:
+/// `((a0+a4)+(a2+a6)) + ((a1+a5)+(a3+a7))`. Every blocked kernel — and
+/// the scalar reference emulations the property tests pin against —
+/// must reduce through this exact tree for bit-equality to hold.
+#[inline]
+pub fn tree_reduce(acc: [f32; LANES]) -> f32 {
+    let s0 = acc[0] + acc[4];
+    let s1 = acc[1] + acc[5];
+    let s2 = acc[2] + acc[6];
+    let s3 = acc[3] + acc[7];
+    (s0 + s2) + (s1 + s3)
+}
+
+/// Which kernel family the hot paths dispatch to (env override
+/// `PROXCOMP_KERNEL`): the default 8-lane `Blocked` kernels, or the
+/// pre-blocking `Scalar` sequential-reduction kernels kept as reference.
+/// CI runs the test suite under both values (× the thread matrix) so the
+/// blocked paths and their oracles stay exercised in every build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    Blocked,
+    Scalar,
+}
+
+/// Kernel family to use (env override `PROXCOMP_KERNEL=blocked|scalar`).
+pub fn kernel_mode() -> KernelMode {
+    match std::env::var("PROXCOMP_KERNEL") {
+        Ok(v) if v.eq_ignore_ascii_case("scalar") => KernelMode::Scalar,
+        _ => KernelMode::Blocked,
+    }
+}
+
 /// Number of worker threads to use (env override `PROXCOMP_THREADS`).
 pub fn max_threads() -> usize {
     if let Ok(v) = std::env::var("PROXCOMP_THREADS") {
@@ -74,6 +114,49 @@ where
             }
             let f = &f;
             scope.spawn(move || f(start, end));
+        }
+    });
+}
+
+/// Run `f` over disjoint chunks of `0..n` with chunk boundaries chosen
+/// so each thread gets roughly equal *weight* rather than equal index
+/// count. `prefix` is a monotone prefix-sum with `prefix.len() == n + 1`
+/// — for CSR kernels it is exactly the `ptr` array, so rows split by
+/// nnz. This is EIE's per-PE load-imbalance fix: with one dense row
+/// among thousands of near-empty ones, an even index split serializes
+/// on the thread that drew the heavy row. The partition only moves the
+/// *boundaries*; every element is still computed by exactly one thread
+/// with the same per-element reduction order, so results stay
+/// bit-identical to [`parallel_chunks`] for any thread count.
+pub fn parallel_prefix_chunks<F>(n: usize, threads: usize, prefix: &[usize], f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    debug_assert_eq!(prefix.len(), n + 1);
+    let threads = threads.min(n).max(1);
+    let total = prefix[n] - prefix[0];
+    if threads == 1 || n < 2 || total == 0 {
+        if n > 0 {
+            f(0, n);
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut start = 0usize;
+        for t in 0..threads {
+            // Boundary: first index whose cumulative weight reaches the
+            // t+1-th share (ceiling split so the shares cover `total`).
+            let target = prefix[0] + (total * (t + 1)).div_ceil(threads);
+            let end = if t + 1 == threads {
+                n
+            } else {
+                prefix.partition_point(|&w| w < target).min(n).max(start)
+            };
+            if start < end {
+                let f = &f;
+                scope.spawn(move || f(start, end));
+            }
+            start = end;
         }
     });
 }
@@ -158,6 +241,79 @@ mod tests {
     #[test]
     fn max_threads_positive() {
         assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn prefix_chunks_cover_everything_once() {
+        // Heavily skewed weights: one huge row among near-empty ones.
+        let mut prefix = vec![0usize];
+        for i in 0..200 {
+            let w = if i == 17 { 5000 } else { i % 3 };
+            prefix.push(prefix.last().unwrap() + w);
+        }
+        for threads in [1usize, 2, 3, 7, 16] {
+            let hits: Vec<AtomicUsize> = (0..200).map(|_| AtomicUsize::new(0)).collect();
+            parallel_prefix_chunks(200, threads, &prefix, |a, b| {
+                for i in a..b {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "threads={threads}: some index not covered exactly once"
+            );
+        }
+    }
+
+    #[test]
+    fn prefix_chunks_balance_by_weight() {
+        // 64 rows: rows 0..8 carry weight 100 each, the rest weight 1.
+        // An even index split over 2 threads puts all the heavy rows on
+        // thread 0; the weighted split must move the boundary early.
+        let mut prefix = vec![0usize];
+        for i in 0..64 {
+            prefix.push(prefix.last().unwrap() + if i < 8 { 100 } else { 1 });
+        }
+        let boundary = std::sync::Mutex::new(Vec::new());
+        parallel_prefix_chunks(64, 2, &prefix, |a, b| {
+            boundary.lock().unwrap().push((a, b));
+        });
+        let mut ranges = boundary.into_inner().unwrap();
+        ranges.sort();
+        // First range must end well before the midpoint (weight, not
+        // index, is balanced): 8 heavy rows ≈ 93% of total weight.
+        assert!(ranges[0].1 <= 8, "boundary {ranges:?} ignored weights");
+    }
+
+    #[test]
+    fn prefix_chunks_empty_and_degenerate() {
+        parallel_prefix_chunks(0, 4, &[0], |_, _| panic!("should not run"));
+        let ran = AtomicUsize::new(0);
+        // All-zero weights still cover the range (single inline call).
+        parallel_prefix_chunks(3, 4, &[0, 0, 0, 0], |a, b| {
+            assert_eq!((a, b), (0, 3));
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn tree_reduce_is_the_documented_tree() {
+        let a = [1.0f32, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0];
+        let want = ((a[0] + a[4]) + (a[2] + a[6])) + ((a[1] + a[5]) + (a[3] + a[7]));
+        assert_eq!(tree_reduce(a).to_bits(), want.to_bits());
+        assert_eq!(tree_reduce([0.0; LANES]), 0.0);
+    }
+
+    #[test]
+    fn kernel_mode_defaults_to_blocked() {
+        // The env var is absent in the default test environment unless a
+        // CI leg sets it; accept either but require a valid parse.
+        let mode = kernel_mode();
+        match std::env::var("PROXCOMP_KERNEL") {
+            Ok(v) if v.eq_ignore_ascii_case("scalar") => assert_eq!(mode, KernelMode::Scalar),
+            _ => assert_eq!(mode, KernelMode::Blocked),
+        }
     }
 
     #[test]

@@ -568,6 +568,299 @@ fn prop_csr_scalar_paths_bit_identical_across_thread_counts() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Blocked kernel family (§Blocked reduction contract in sparse::ops)
+// ---------------------------------------------------------------------------
+//
+// These tests pin the kernels to an *independent* re-implementation of
+// the documented per-element reduction: blocked mode puts nonzero `q` in
+// lane `q % LANES` and collapses through the fixed tree; scalar mode
+// sums ascending-index. They read `PROXCOMP_KERNEL` (never write it, so
+// they stay race-free under the parallel test runner): the default CI
+// leg exercises the blocked family, the `PROXCOMP_KERNEL=scalar` matrix
+// leg the sequential one.
+
+/// The documented lane tree, written out by hand so the oracle does not
+/// depend on `pool::tree_reduce` being correct.
+fn lane_tree(acc: [f32; proxcomp::util::pool::LANES]) -> f32 {
+    let s0 = acc[0] + acc[4];
+    let s1 = acc[1] + acc[5];
+    let s2 = acc[2] + acc[6];
+    let s3 = acc[3] + acc[7];
+    (s0 + s2) + (s1 + s3)
+}
+
+/// Reference row dot for whichever kernel family the environment selects.
+fn oracle_row_dot(
+    mode: proxcomp::util::pool::KernelMode,
+    dvec: &[f32],
+    indices: &[u32],
+    data: &[f32],
+) -> f32 {
+    use proxcomp::util::pool::{KernelMode, LANES};
+    match mode {
+        KernelMode::Blocked => {
+            let mut acc = [0.0f32; LANES];
+            for (q, (i, v)) in indices.iter().zip(data).enumerate() {
+                acc[q % LANES] += v * dvec[*i as usize];
+            }
+            lane_tree(acc)
+        }
+        KernelMode::Scalar => {
+            let mut acc = 0.0f32;
+            for (i, v) in indices.iter().zip(data) {
+                acc += v * dvec[*i as usize];
+            }
+            acc
+        }
+    }
+}
+
+/// Heavy-tailed fixture: row 0 near-dense, every third row empty, the
+/// rest sparse — the EIE row-skew shape the nnz-prefix partition exists
+/// for, plus the empty-row edge case.
+fn random_skewed(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f32> {
+    let mut dense = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let density = if r == 0 {
+            0.9
+        } else if r % 3 == 0 {
+            0.0
+        } else {
+            0.05
+        };
+        for c in 0..cols {
+            if rng.uniform() < density {
+                dense[r * cols + c] = rng.normal() as f32;
+            }
+        }
+    }
+    dense
+}
+
+#[test]
+fn prop_csr_kernels_match_family_oracle_bitwise() {
+    use proxcomp::util::pool::{kernel_mode, LANES};
+    assert_eq!(LANES, 8, "the hand-written oracle tree assumes 8 lanes");
+    let mode = kernel_mode();
+    let mut rng = Rng::new(150);
+    let fixtures: Vec<(Vec<f32>, usize, usize)> = vec![
+        (random_skewed(&mut rng, 24, 40), 24, 40), // skewed + empty rows
+        (random_dense(&mut rng, 1, 33, 0.5), 1, 33), // single row
+        (vec![0.0; 6 * 9], 6, 9),                  // every row empty
+        (random_dense(&mut rng, 19, 64, 0.9), 19, 64), // long rows: full lane blocks + tail
+        (random_dense(&mut rng, 40, 7, 0.2), 40, 7), // short rows: tail only
+    ];
+    for (fi, (dense, n, k)) in fixtures.iter().enumerate() {
+        let (n, k) = (*n, *k);
+        let csr = CsrMatrix::from_dense(dense, n, k);
+        let x: Vec<f32> = rng.normal_vec(k, 1.0);
+        let got = ops::spmv_threads(&csr, &x, 3);
+        for r in 0..n {
+            let (lo, hi) = (csr.ptr[r], csr.ptr[r + 1]);
+            let want = oracle_row_dot(mode, &x, &csr.indices[lo..hi], &csr.data[lo..hi]);
+            assert_eq!(got[r].to_bits(), want.to_bits(), "fixture {fi} spmv row {r}");
+        }
+        // dxct below and above SPMM_MIN_BATCH: the gathered-dot path and
+        // the lane-plane SpMM path must both realize the same
+        // per-element reduction the oracle spells out.
+        for b in [1usize, 2, ops::SPMM_MIN_BATCH + 1] {
+            let d = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
+            let got = ops::dxct_threads(&d, &csr, 4);
+            for bi in 0..b {
+                let drow = &d.data[bi * k..(bi + 1) * k];
+                for col in 0..n {
+                    let (lo, hi) = (csr.ptr[col], csr.ptr[col + 1]);
+                    let want =
+                        oracle_row_dot(mode, drow, &csr.indices[lo..hi], &csr.data[lo..hi]);
+                    assert_eq!(
+                        got.data[bi * n + col].to_bits(),
+                        want.to_bits(),
+                        "fixture {fi} dxct b={b} bi={bi} col={col}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_qcs_kernels_match_family_oracle_bitwise() {
+    // Same oracle, quantized storage: the dequantized-CSR twin exposes
+    // the identical (index, value) sequence per row, so the QCS kernels
+    // must hit the oracle bit-for-bit too.
+    use proxcomp::quant::{QcsMatrix, QuantConfig};
+    use proxcomp::util::pool::kernel_mode;
+    let mode = kernel_mode();
+    let mut rng = Rng::new(151);
+    for fi in 0..6 {
+        let (n, k) = (1 + rng.below(30), 1 + rng.below(40));
+        let dense = if fi == 0 {
+            random_skewed(&mut rng, n, k)
+        } else {
+            random_dense(&mut rng, n, k, 0.3)
+        };
+        let q = QcsMatrix::from_dense(&dense, n, k, &QuantConfig::default());
+        let csr = q.to_csr();
+        let x: Vec<f32> = rng.normal_vec(k, 1.0);
+        let got = q.spmv_threads(&x, 2);
+        for r in 0..n {
+            let (lo, hi) = (csr.ptr[r], csr.ptr[r + 1]);
+            let want = oracle_row_dot(mode, &x, &csr.indices[lo..hi], &csr.data[lo..hi]);
+            assert_eq!(got[r].to_bits(), want.to_bits(), "fixture {fi} qcs spmv row {r}");
+        }
+        let b = 1 + rng.below(4);
+        let d = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
+        let got = q.dxct_threads(&d, 3);
+        for bi in 0..b {
+            let drow = &d.data[bi * k..(bi + 1) * k];
+            for col in 0..n {
+                let (lo, hi) = (csr.ptr[col], csr.ptr[col + 1]);
+                let want = oracle_row_dot(mode, drow, &csr.indices[lo..hi], &csr.data[lo..hi]);
+                assert_eq!(
+                    got.data[bi * n + col].to_bits(),
+                    want.to_bits(),
+                    "fixture {fi} qcs dxct bi={bi} col={col}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_native_fc_kernels_match_family_oracle_bitwise() {
+    // The dense twins: fc_forward's row dot puts element kk in lane
+    // kk % LANES (bias added after the tree); fc_grad_x puts term o in
+    // lane o % LANES. Scalar mode sums sequentially (forward starts from
+    // the bias).
+    use proxcomp::runtime::native;
+    use proxcomp::util::pool::{kernel_mode, KernelMode, LANES};
+    let mode = kernel_mode();
+    let mut rng = Rng::new(152);
+    for (b, k, n) in [(1usize, 5usize, 3usize), (2, 16, 9), (4, 33, 17), (9, 20, 11)] {
+        let x = rng.normal_vec(b * k, 1.0);
+        let w = rng.normal_vec(n * k, 1.0);
+        let bias = rng.normal_vec(n, 1.0);
+        let y = native::fc_forward(&x, b, k, &w, &bias, n, 2);
+        for bi in 0..b {
+            for o in 0..n {
+                let want = match mode {
+                    KernelMode::Blocked => {
+                        let mut acc = [0.0f32; LANES];
+                        for kk in 0..k {
+                            acc[kk % LANES] += x[bi * k + kk] * w[o * k + kk];
+                        }
+                        bias[o] + lane_tree(acc)
+                    }
+                    KernelMode::Scalar => {
+                        let mut acc = bias[o];
+                        for kk in 0..k {
+                            acc += x[bi * k + kk] * w[o * k + kk];
+                        }
+                        acc
+                    }
+                };
+                assert_eq!(
+                    y[bi * n + o].to_bits(),
+                    want.to_bits(),
+                    "fc_forward b={b} bi={bi} o={o}"
+                );
+            }
+        }
+        let dy = rng.normal_vec(b * n, 1.0);
+        let dx = native::fc_grad_x(&dy, b, n, &w, k, 3);
+        for bi in 0..b {
+            for kk in 0..k {
+                let want = match mode {
+                    KernelMode::Blocked => {
+                        let mut acc = [0.0f32; LANES];
+                        for o in 0..n {
+                            acc[o % LANES] += dy[bi * n + o] * w[o * k + kk];
+                        }
+                        lane_tree(acc)
+                    }
+                    KernelMode::Scalar => {
+                        let mut acc = 0.0f32;
+                        for o in 0..n {
+                            acc += dy[bi * n + o] * w[o * k + kk];
+                        }
+                        acc
+                    }
+                };
+                assert_eq!(
+                    dx[bi * k + kk].to_bits(),
+                    want.to_bits(),
+                    "fc_grad_x b={b} bi={bi} kk={kk}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_dxct_batch_split_invariant_bitwise() {
+    // Coalescing B single-sample requests into one (B, K) batch must not
+    // change any sample's bits — this is what makes serving-path batch
+    // coalescing transparent. Batches straddle SPMM_MIN_BATCH so under
+    // blocked mode the check crosses the gathered-dot / SpMM-plane
+    // boundary; it holds in the scalar family too.
+    let mut rng = Rng::new(153);
+    for case in 0..8 {
+        let n = 1 + rng.below(30);
+        let k = 1 + rng.below(40);
+        let dense = random_dense(&mut rng, n, k, 0.3);
+        let csr = CsrMatrix::from_dense(&dense, n, k);
+        let b = ops::SPMM_MIN_BATCH + rng.below(8);
+        let d = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
+        let batched = ops::dxct_threads(&d, &csr, 4);
+        for bi in 0..b {
+            let row = Tensor::new(vec![1, k], d.data[bi * k..(bi + 1) * k].to_vec());
+            let single = ops::dxct_threads(&row, &csr, 1);
+            assert_bits_eq(
+                &single.data,
+                &batched.data[bi * n..(bi + 1) * n],
+                &format!("case {case} bi={bi}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_skewed_nnz_partition_thread_determinism() {
+    // The nnz-prefix partition may only move thread boundaries, never
+    // bits — exercised where the boundaries actually shift relative to
+    // an even row split: heavily skewed fixtures. Covers the CSR
+    // serving kernels, cxd, and the QCS twins.
+    use proxcomp::quant::{QcsMatrix, QuantConfig};
+    let mut rng = Rng::new(154);
+    for case in 0..6 {
+        let n = 32 + rng.below(32);
+        let k = 48;
+        let dense = random_skewed(&mut rng, n, k);
+        let csr = CsrMatrix::from_dense(&dense, n, k);
+        let q = QcsMatrix::from_dense(&dense, n, k, &QuantConfig::default());
+        let x: Vec<f32> = rng.normal_vec(k, 1.0);
+        let d1 = Tensor::new(vec![1, k], rng.normal_vec(k, 1.0));
+        let d9 = Tensor::new(vec![9, k], rng.normal_vec(9 * k, 1.0));
+        let dm = Tensor::new(vec![k, 5], rng.normal_vec(k * 5, 1.0));
+        let s1 = ops::spmv_threads(&csr, &x, 1);
+        let f1 = ops::dxct_threads(&d1, &csr, 1);
+        let m1 = ops::dxct_threads(&d9, &csr, 1);
+        let c1 = ops::cxd_threads(&csr, &dm, 1);
+        let qs1 = q.spmv_threads(&x, 1);
+        let qf1 = q.dxct_threads(&d1, 1);
+        for t in [2usize, 3, 8] {
+            let tag = |kern: &str| format!("{kern} case {case} t={t}");
+            assert_bits_eq(&s1, &ops::spmv_threads(&csr, &x, t), &tag("spmv"));
+            assert_bits_eq(&f1.data, &ops::dxct_threads(&d1, &csr, t).data, &tag("dxct b1"));
+            assert_bits_eq(&m1.data, &ops::dxct_threads(&d9, &csr, t).data, &tag("dxct b9"));
+            assert_bits_eq(&c1.data, &ops::cxd_threads(&csr, &dm, t).data, &tag("cxd"));
+            assert_bits_eq(&qs1, &q.spmv_threads(&x, t), &tag("qcs spmv"));
+            assert_bits_eq(&qf1.data, &q.dxct_threads(&d1, t).data, &tag("qcs dxct"));
+        }
+    }
+}
+
 /// Serializes the tests that flip the `PROXCOMP_THREADS` env var (it is
 /// process-global; flipping it concurrently would not break determinism
 /// — that is the property under test — but would muddy failure reports).
@@ -1133,10 +1426,11 @@ fn prop_qcs_dxct_and_spmv_bit_identical_across_thread_counts() {
 
 #[test]
 fn prop_qcs_kernel_matches_dequantized_csr_bit_exactly() {
-    // The QCS kernel walks the identical nonzeros in the identical
-    // ascending-index reduction order as the scalar CSR kernel — only
-    // the value load goes through the codebook — so on the dequantized
-    // CSR twin the results are bit-equal, not just close.
+    // The QCS kernel walks the identical nonzeros with the identical
+    // per-element reduction as the CSR kernel of the same family (both
+    // dispatch on PROXCOMP_KERNEL) — only the value load goes through
+    // the codebook — so on the dequantized CSR twin the results are
+    // bit-equal, not just close, in either kernel mode.
     use proxcomp::quant::{QcsMatrix, QuantConfig};
     let mut rng = Rng::new(131);
     for case in 0..CASES {
@@ -1148,7 +1442,7 @@ fn prop_qcs_kernel_matches_dequantized_csr_bit_exactly() {
         let b = 1 + rng.below(6);
         let d = Tensor::new(vec![b, k], rng.normal_vec(b * k, 1.0));
         let got = q.dxct_threads(&d, 1);
-        let want = ops::dxct_scalar_threads(&d, &csr, 1);
+        let want = ops::dxct_threads(&d, &csr, 1);
         assert_bits_eq(&got.data, &want.data, &format!("case {case}"));
     }
 }
@@ -1201,7 +1495,7 @@ fn prop_one_cluster_codebook_degrades_gracefully() {
         }
         let d = Tensor::new(vec![2, k], rng.normal_vec(2 * k, 1.0));
         let got = q.dxct_threads(&d, 1);
-        let want = ops::dxct_scalar_threads(&d, &q.to_csr(), 1);
+        let want = ops::dxct_threads(&d, &q.to_csr(), 1);
         assert_bits_eq(&got.data, &want.data, &format!("case {case}"));
     }
 }
