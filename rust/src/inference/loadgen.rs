@@ -1,0 +1,248 @@
+//! Closed-loop load generator for the framed-TCP serving front-end
+//! (`inference::net`) — the measurement half of the EIE-style "saturate
+//! the device with a request stream" story.
+//!
+//! `run` drives `clients` concurrent synthetic clients against a served
+//! engine for a fixed wall-clock duration. Each client is *closed-loop*:
+//! it keeps exactly one request in flight (send → wait → send), so total
+//! concurrency equals the client count and the measured throughput at a
+//! high client count is the server's saturation throughput — more offered
+//! load at that point only grows latency, not completions.
+//!
+//! Every client draws its samples from a deterministic per-client stream
+//! (`Rng::new(seed).fork(client_index)`). When `verify` carries an
+//! engine, each OK response is bit-compared (`f32::to_bits`) against a
+//! local `Engine::forward` of the same sample — the over-the-wire
+//! determinism contract: serving through accept loop, batch coalescing,
+//! and frame encode/decode must not perturb a single bit of the logits.
+//!
+//! The report combines the client-side view (latency histogram,
+//! per-error-code counts, achieved throughput) with the server's own
+//! STATS response, so server-reported percentiles land in the same JSON
+//! artifact CI uploads.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::inference::net::{ErrorCode, NetClient};
+use crate::inference::Engine;
+use crate::metrics::LatencyHistogram;
+use crate::tensor::Tensor;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Knobs for one load-generation run.
+#[derive(Clone)]
+pub struct LoadConfig {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Wall-clock run length.
+    pub duration: Duration,
+    /// Per-sample input shape (C, H, W) — must match the served model.
+    pub input_shape: (usize, usize, usize),
+    /// Base seed; client `i` uses the forked stream `i`.
+    pub seed: u64,
+    /// How long each client retries its initial connect (covers the
+    /// serve-process startup race in scripts and CI).
+    pub connect_timeout: Duration,
+    /// Local twin of the served engine for bit-exactness checking;
+    /// `None` skips verification (pure throughput mode).
+    pub verify: Option<Arc<Engine>>,
+    /// Fetch the server's STATS JSON into the report after the run.
+    pub fetch_server_stats: bool,
+}
+
+impl LoadConfig {
+    pub fn sample_len(&self) -> usize {
+        let (c, h, w) = self.input_shape;
+        c * h * w
+    }
+}
+
+/// What one client accumulated; merged across clients into [`LoadReport`].
+#[derive(Default)]
+struct ClientOutcome {
+    ok: u64,
+    /// Per-[`ErrorCode`] counts, indexed by `code as u8 - 1`.
+    errors: [u64; 6],
+    transport_errors: u64,
+    latency: LatencyHistogram,
+    verified: u64,
+    mismatches: u64,
+}
+
+/// Aggregated result of a load run.
+pub struct LoadReport {
+    pub addr: String,
+    pub clients: usize,
+    pub elapsed_secs: f64,
+    pub ok: u64,
+    pub errors: [u64; 6],
+    pub transport_errors: u64,
+    pub throughput_rps: f64,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: f64,
+    pub p90_latency_us: f64,
+    pub p99_latency_us: f64,
+    pub max_latency_us: f64,
+    pub verified: u64,
+    pub mismatches: u64,
+    /// The server's own STATS response (`{"serving": ..., "net": ...}`),
+    /// when fetched — server-side percentiles live in here.
+    pub server_stats: Option<Json>,
+}
+
+impl LoadReport {
+    pub fn error_count(&self, code: ErrorCode) -> u64 {
+        self.errors[code as u8 as usize - 1]
+    }
+
+    pub fn total_errors(&self) -> u64 {
+        self.errors.iter().sum()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut errors = Json::obj();
+        for code in ErrorCode::all() {
+            errors.set(code.name(), Json::from(self.error_count(code) as usize));
+        }
+        let mut latency = Json::obj();
+        latency
+            .set("mean_us", Json::from(self.mean_latency_us))
+            .set("p50_us", Json::from(self.p50_latency_us))
+            .set("p90_us", Json::from(self.p90_latency_us))
+            .set("p99_us", Json::from(self.p99_latency_us))
+            .set("max_us", Json::from(self.max_latency_us));
+        let mut verify = Json::obj();
+        verify
+            .set("checked", Json::from(self.verified as usize))
+            .set("mismatches", Json::from(self.mismatches as usize));
+        let mut j = Json::obj();
+        j.set("addr", Json::from(self.addr.as_str()))
+            .set("clients", Json::from(self.clients))
+            .set("elapsed_secs", Json::from(self.elapsed_secs))
+            .set("requests_ok", Json::from(self.ok as usize))
+            .set("errors", errors)
+            .set("transport_errors", Json::from(self.transport_errors as usize))
+            .set("throughput_rps", Json::from(self.throughput_rps))
+            .set("latency", latency)
+            .set("verify", verify)
+            .set("server", self.server_stats.clone().unwrap_or(Json::Null));
+        j
+    }
+}
+
+/// Run one closed-loop load test. Transport failures and server-reported
+/// errors are counted, not fatal — the report carries them; only failing
+/// to reach the server at all (every client) errors out.
+pub fn run(cfg: &LoadConfig) -> anyhow::Result<LoadReport> {
+    anyhow::ensure!(cfg.clients >= 1, "loadgen needs at least one client");
+    anyhow::ensure!(cfg.sample_len() > 0, "loadgen input shape is empty");
+    let deadline = Instant::now() + cfg.duration;
+    let t0 = Instant::now();
+    let outcomes: Vec<ClientOutcome> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.clients).map(|i| s.spawn(move || client_loop(cfg, i as u64, deadline))).collect();
+        handles.into_iter().map(|h| h.join().unwrap_or_default()).collect()
+    });
+    let elapsed_secs = t0.elapsed().as_secs_f64();
+
+    let mut total = ClientOutcome::default();
+    for o in &outcomes {
+        total.ok += o.ok;
+        for (t, e) in total.errors.iter_mut().zip(o.errors.iter()) {
+            *t += e;
+        }
+        total.transport_errors += o.transport_errors;
+        total.latency.merge(&o.latency);
+        total.verified += o.verified;
+        total.mismatches += o.mismatches;
+    }
+    anyhow::ensure!(
+        total.ok + total.errors.iter().sum::<u64>() > 0,
+        "no client completed a single request against {} ({} transport errors)",
+        cfg.addr,
+        total.transport_errors
+    );
+
+    let server_stats = if cfg.fetch_server_stats {
+        let mut client = NetClient::connect(&cfg.addr, cfg.connect_timeout)?;
+        Some(json::parse(&client.stats_json()?)?)
+    } else {
+        None
+    };
+
+    Ok(LoadReport {
+        addr: cfg.addr.clone(),
+        clients: cfg.clients,
+        elapsed_secs,
+        ok: total.ok,
+        errors: total.errors,
+        transport_errors: total.transport_errors,
+        throughput_rps: if elapsed_secs > 0.0 { total.ok as f64 / elapsed_secs } else { 0.0 },
+        mean_latency_us: total.latency.mean_us(),
+        p50_latency_us: total.latency.percentile(0.50),
+        p90_latency_us: total.latency.percentile(0.90),
+        p99_latency_us: total.latency.percentile(0.99),
+        max_latency_us: total.latency.max_us(),
+        verified: total.verified,
+        mismatches: total.mismatches,
+        server_stats,
+    })
+}
+
+fn client_loop(cfg: &LoadConfig, index: u64, deadline: Instant) -> ClientOutcome {
+    let mut out = ClientOutcome::default();
+    let mut client = match NetClient::connect(&cfg.addr, cfg.connect_timeout) {
+        Ok(c) => c,
+        Err(_) => {
+            out.transport_errors += 1;
+            return out;
+        }
+    };
+    let mut rng = Rng::new(cfg.seed).fork(index);
+    let (c, h, w) = cfg.input_shape;
+    while Instant::now() < deadline {
+        let sample = rng.normal_vec(cfg.sample_len(), 1.0);
+        let sent = Instant::now();
+        match client.infer(&sample) {
+            Ok(Ok(logits)) => {
+                out.latency.record(sent.elapsed().as_secs_f64() * 1e6);
+                out.ok += 1;
+                if let Some(engine) = &cfg.verify {
+                    out.verified += 1;
+                    let x = Tensor::new(vec![1, c, h, w], sample);
+                    let want = match engine.forward(&x) {
+                        Ok(t) => t.data,
+                        Err(_) => {
+                            out.mismatches += 1;
+                            continue;
+                        }
+                    };
+                    let same = want.len() == logits.len()
+                        && want.iter().zip(logits.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
+                    if !same {
+                        out.mismatches += 1;
+                    }
+                }
+            }
+            Ok(Err((code, _msg))) => {
+                out.errors[code as u8 as usize - 1] += 1;
+                match code {
+                    // Backpressure: the server told this client to back
+                    // off; yield briefly so the retry isn't a busy spin.
+                    ErrorCode::Overloaded => std::thread::sleep(Duration::from_micros(200)),
+                    // The server is draining — no more work will land.
+                    ErrorCode::ShuttingDown => return out,
+                    _ => {}
+                }
+            }
+            Err(_) => {
+                out.transport_errors += 1;
+                return out;
+            }
+        }
+    }
+    out
+}

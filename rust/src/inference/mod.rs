@@ -13,9 +13,18 @@
 //! `server` adds the batched serving front-end: a [`BatchServer`]
 //! coalesces single-sample requests into micro-batches over one shared
 //! [`Engine`] and reports throughput/latency via `metrics::ServingStats`.
+//!
+//! `net` puts that server on the wire: a framed-TCP front-end
+//! ([`NetServer`]/[`NetClient`]) with bounded admission (explicit
+//! `overloaded` backpressure), per-request deadlines, a hardened frame
+//! decoder, and graceful drain-then-close shutdown. `loadgen` is its
+//! closed-loop measurement harness (`proxcomp loadtest`).
 
 pub mod engine;
+pub mod loadgen;
+pub mod net;
 pub mod server;
 
 pub use engine::{Engine, LayerTiming, WeightMode, WeightStore};
-pub use server::{BatchConfig, BatchServer, Pending};
+pub use net::{ErrorCode, NetClient, NetConfig, NetServer};
+pub use server::{BatchConfig, BatchServer, Pending, WaitOutcome};

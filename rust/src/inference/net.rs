@@ -1,0 +1,780 @@
+//! Framed-TCP wire protocol over [`BatchServer`] — the network serving
+//! front-end.
+//!
+//! EIE's (Han et al., 2016) throughput story only counts if a request
+//! *stream* can reach the compressed engine; in-process coalescing alone
+//! gates nothing. [`NetServer`] listens on a TCP socket, decodes
+//! length-prefixed frames with the same hardened, bounds-checked
+//! discipline as checkpoint loading (explicit errors for every malformed
+//! byte, hard caps before any allocation), applies admission control
+//! (bounded in-flight requests — when full the caller gets an explicit
+//! `overloaded` rejection instead of unbounded queueing), enforces a
+//! per-request deadline, and drains in-flight requests before closing on
+//! graceful shutdown.
+//!
+//! # Wire format
+//!
+//! Every message (either direction) is one frame:
+//!
+//! ```text
+//! frame    := len:u32le  payload                  (len = payload bytes, > 0)
+//! request  := opcode:u8  body
+//! response := status:u8  body
+//! ```
+//!
+//! Request opcodes:
+//!
+//! | op | name     | body                                   |
+//! |----|----------|----------------------------------------|
+//! | 1  | INFER    | `sample_len` f32 LE values             |
+//! | 2  | STATS    | empty → JSON body (serving + net stats)|
+//! | 3  | SHUTDOWN | empty → begins graceful shutdown       |
+//! | 4  | PING     | empty → empty OK                       |
+//!
+//! Response status 0 is OK (body: logits f32 LE for INFER, JSON for
+//! STATS, empty otherwise); nonzero is an [`ErrorCode`] with a UTF-8
+//! message body. Connections are persistent: a client may pipeline many
+//! INFER frames over one socket. Recoverable request errors
+//! (wrong-length, overloaded, deadline-exceeded, engine-error) keep the
+//! connection open; protocol violations (bad-frame) close it, because a
+//! mis-framed stream can never be re-synchronized.
+//!
+//! Determinism contract: the server is a transparent transport. Logits
+//! that cross the wire are the bytes `Engine::forward` produced —
+//! `proxcomp loadtest` (and `tests/serving_net.rs`) verify bit-equality
+//! against a local engine on every response.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, PoisonError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::inference::server::WaitOutcome;
+use crate::inference::{BatchConfig, BatchServer, Engine};
+use crate::metrics::ServingStats;
+use crate::util::json::Json;
+
+/// Absolute frame-size cap (either direction): no peer can make the
+/// other allocate more than this from a length prefix.
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Request opcodes (first payload byte).
+pub const OP_INFER: u8 = 1;
+pub const OP_STATS: u8 = 2;
+pub const OP_SHUTDOWN: u8 = 3;
+pub const OP_PING: u8 = 4;
+
+/// The serving error taxonomy — every non-OK response status byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// Unparseable or oversized frame / unknown opcode. The stream can
+    /// no longer be trusted; the server closes the connection.
+    BadFrame = 1,
+    /// INFER body length ≠ `sample_len × 4` bytes. Recoverable.
+    WrongLength = 2,
+    /// Admission control rejected the request: `max_inflight` requests
+    /// are already in flight. Back off and retry. Recoverable.
+    Overloaded = 3,
+    /// The engine failed (or panicked) on the batch containing this
+    /// request. Recoverable.
+    EngineError = 4,
+    /// The server is draining; no new work is admitted.
+    ShuttingDown = 5,
+    /// The per-request deadline elapsed before the batch completed.
+    DeadlineExceeded = 6,
+}
+
+impl ErrorCode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::BadFrame => "bad-frame",
+            ErrorCode::WrongLength => "wrong-length",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::EngineError => "engine-error",
+            ErrorCode::ShuttingDown => "shutting-down",
+            ErrorCode::DeadlineExceeded => "deadline-exceeded",
+        }
+    }
+
+    pub fn from_u8(b: u8) -> Option<ErrorCode> {
+        match b {
+            1 => Some(ErrorCode::BadFrame),
+            2 => Some(ErrorCode::WrongLength),
+            3 => Some(ErrorCode::Overloaded),
+            4 => Some(ErrorCode::EngineError),
+            5 => Some(ErrorCode::ShuttingDown),
+            6 => Some(ErrorCode::DeadlineExceeded),
+            _ => None,
+        }
+    }
+
+    /// All codes, for table-driven reporting.
+    pub fn all() -> [ErrorCode; 6] {
+        [
+            ErrorCode::BadFrame,
+            ErrorCode::WrongLength,
+            ErrorCode::Overloaded,
+            ErrorCode::EngineError,
+            ErrorCode::ShuttingDown,
+            ErrorCode::DeadlineExceeded,
+        ]
+    }
+}
+
+/// Network front-end knobs.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port).
+    pub addr: String,
+    /// Concurrent-connection ceiling; excess accepts are answered with
+    /// an `overloaded` frame and closed.
+    pub max_conns: usize,
+    /// Admission cap: requests admitted (submitted to the batch queue)
+    /// but not yet answered. The bounded queue that replaces unbounded
+    /// buffering — beyond it, requests are rejected `overloaded`.
+    pub max_inflight: usize,
+    /// Per-request deadline, measured admission → response. A request
+    /// that misses it is answered `deadline-exceeded` (its eventual
+    /// engine result, if any, is discarded).
+    pub request_timeout: Duration,
+    /// How long a peer may stall mid-frame (bytes of a frame started but
+    /// not finished) before the connection is dropped as bad.
+    pub frame_stall: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            addr: "127.0.0.1:7733".to_string(),
+            max_conns: 128,
+            max_inflight: 256,
+            request_timeout: Duration::from_secs(5),
+            frame_stall: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Wire-level counters, reported next to [`ServingStats`] by STATS.
+#[derive(Debug, Clone, Default)]
+pub struct NetCounters {
+    pub accepted_conns: u64,
+    pub rejected_conns: u64,
+    pub ok_responses: u64,
+    pub bad_frame: u64,
+    pub wrong_length: u64,
+    pub overloaded: u64,
+    pub engine_error: u64,
+    pub shutting_down: u64,
+    pub deadline_exceeded: u64,
+}
+
+impl NetCounters {
+    fn count(&mut self, code: ErrorCode) {
+        match code {
+            ErrorCode::BadFrame => self.bad_frame += 1,
+            ErrorCode::WrongLength => self.wrong_length += 1,
+            ErrorCode::Overloaded => self.overloaded += 1,
+            ErrorCode::EngineError => self.engine_error += 1,
+            ErrorCode::ShuttingDown => self.shutting_down += 1,
+            ErrorCode::DeadlineExceeded => self.deadline_exceeded += 1,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("accepted_conns", Json::from(self.accepted_conns as usize))
+            .set("rejected_conns", Json::from(self.rejected_conns as usize))
+            .set("ok_responses", Json::from(self.ok_responses as usize))
+            .set("bad_frame", Json::from(self.bad_frame as usize))
+            .set("wrong_length", Json::from(self.wrong_length as usize))
+            .set("overloaded", Json::from(self.overloaded as usize))
+            .set("engine_error", Json::from(self.engine_error as usize))
+            .set("shutting_down", Json::from(self.shutting_down as usize))
+            .set("deadline_exceeded", Json::from(self.deadline_exceeded as usize));
+        j
+    }
+}
+
+/// Shared state between the accept loop, connection handlers, and the
+/// owning [`NetServer`] handle.
+struct Shared {
+    server: BatchServer,
+    cfg: NetConfig,
+    sample_len: usize,
+    shutting_down: AtomicBool,
+    inflight: AtomicUsize,
+    conns: AtomicUsize,
+    counters: Mutex<NetCounters>,
+}
+
+impl Shared {
+    fn counters(&self) -> std::sync::MutexGuard<'_, NetCounters> {
+        self.counters.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Request-frame cap: opcode byte + the model's sample, with floor
+    /// room for control frames. (Responses are bounded by the engine's
+    /// output size, checked against [`MAX_FRAME_BYTES`] on write.)
+    fn request_cap(&self) -> usize {
+        (1 + self.sample_len * 4).clamp(64, MAX_FRAME_BYTES)
+    }
+
+    fn stats_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("serving", self.server.stats().to_json()).set("net", self.counters().clone().to_json());
+        j
+    }
+}
+
+/// RAII admission permit: released even if the handler errors mid-reply.
+struct InflightPermit<'a>(&'a Shared);
+
+impl Drop for InflightPermit<'_> {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The framed-TCP serving front-end. `start` binds and spawns the accept
+/// loop; `shutdown` (also on drop) stops accepting, drains every
+/// in-flight request, and joins all threads.
+pub struct NetServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl NetServer {
+    /// Bind `cfg.addr` and start serving `engine` through a
+    /// [`BatchServer`] built from `batch_cfg`.
+    pub fn start(engine: Arc<Engine>, batch_cfg: BatchConfig, cfg: NetConfig) -> anyhow::Result<NetServer> {
+        anyhow::ensure!(cfg.max_inflight >= 1, "max_inflight must be at least 1");
+        anyhow::ensure!(cfg.max_conns >= 1, "max_conns must be at least 1");
+        let listener = TcpListener::bind(&cfg.addr).map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
+        let addr = listener.local_addr().map_err(|e| anyhow::anyhow!("local_addr: {e}"))?;
+        let sample_len = batch_cfg.sample_len();
+        anyhow::ensure!(sample_len > 0, "batch config has an empty input shape");
+        let server = BatchServer::start(engine, batch_cfg);
+        let shared = Arc::new(Shared {
+            server,
+            cfg,
+            sample_len,
+            shutting_down: AtomicBool::new(false),
+            inflight: AtomicUsize::new(0),
+            conns: AtomicUsize::new(0),
+            counters: Mutex::new(NetCounters::default()),
+        });
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let handlers = Arc::clone(&handlers);
+            std::thread::spawn(move || accept_loop(listener, shared, handlers))
+        };
+        Ok(NetServer { addr, shared, accept: Some(accept), handlers })
+    }
+
+    /// The actually-bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// True once a SHUTDOWN frame arrived or [`NetServer::shutdown`] ran.
+    pub fn shutdown_requested(&self) -> bool {
+        self.shared.shutting_down.load(Ordering::SeqCst)
+    }
+
+    /// Block until a client requests shutdown (the `proxcomp serve`
+    /// foreground wait).
+    pub fn wait_shutdown_requested(&self) {
+        while !self.shutdown_requested() {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+    }
+
+    /// Server-side serving stats (percentiles included).
+    pub fn stats(&self) -> ServingStats {
+        self.shared.server.stats()
+    }
+
+    /// Wire-level counters.
+    pub fn net_counters(&self) -> NetCounters {
+        self.shared.counters().clone()
+    }
+
+    /// The STATS response body: `{"serving": ..., "net": ...}`.
+    pub fn stats_json(&self) -> Json {
+        self.shared.stats_json()
+    }
+
+    /// Graceful shutdown: stop accepting, let every connection finish
+    /// its in-flight request (new frames are answered `shutting-down`),
+    /// then drain and join the batch worker. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.shared.shutting_down.store(true, Ordering::SeqCst);
+        // Wake the blocking accept with a throwaway connection.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(500));
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.handlers.lock().unwrap_or_else(PoisonError::into_inner));
+        for h in handles {
+            let _ = h.join();
+        }
+        self.shared.server.shutdown();
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>, handlers: Arc<Mutex<Vec<JoinHandle<()>>>>) {
+    loop {
+        let (stream, _) = match listener.accept() {
+            Ok(pair) => pair,
+            Err(_) => {
+                if shared.shutting_down.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            let mut stream = stream;
+            let _ = write_frame(&mut stream, ErrorCode::ShuttingDown as u8, b"server is shutting down");
+            return;
+        }
+        let conns = shared.conns.load(Ordering::SeqCst);
+        if conns >= shared.cfg.max_conns {
+            let mut stream = stream;
+            shared.counters().rejected_conns += 1;
+            let _ = write_frame(
+                &mut stream,
+                ErrorCode::Overloaded as u8,
+                format!("{conns} connections open (cap {})", shared.cfg.max_conns).as_bytes(),
+            );
+            continue;
+        }
+        shared.conns.fetch_add(1, Ordering::SeqCst);
+        shared.counters().accepted_conns += 1;
+        let handle = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || handle_conn(stream, shared))
+        };
+        let mut guard = handlers.lock().unwrap_or_else(PoisonError::into_inner);
+        guard.retain(|h| !h.is_finished());
+        guard.push(handle);
+    }
+}
+
+/// Decrement the connection count when a handler exits, however it exits.
+struct ConnGuard<'a>(&'a Shared);
+
+impl Drop for ConnGuard<'_> {
+    fn drop(&mut self) {
+        self.0.conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>) {
+    let _guard = ConnGuard(&shared);
+    let _ = stream.set_nodelay(true);
+    // The read timeout is a poll interval: between frames it lets the
+    // handler notice shutdown; mid-frame it feeds the stall clock.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+    loop {
+        match read_frame(&mut stream, shared.request_cap(), &shared.shutting_down, shared.cfg.frame_stall) {
+            Ok(payload) => {
+                if !handle_request(&payload, &mut stream, &shared) {
+                    return;
+                }
+            }
+            Err(FrameErr::Closed) => return,
+            Err(FrameErr::ShuttingDown) => {
+                let _ = write_error(&mut stream, ErrorCode::ShuttingDown, "server is shutting down", &shared);
+                return;
+            }
+            Err(FrameErr::Bad(msg)) => {
+                let _ = write_error(&mut stream, ErrorCode::BadFrame, &msg, &shared);
+                return;
+            }
+        }
+    }
+}
+
+/// Serve one decoded request frame. Returns false when the connection
+/// should close (protocol violation, shutdown, or write failure).
+fn handle_request(payload: &[u8], stream: &mut TcpStream, shared: &Shared) -> bool {
+    // `read_frame` already rejected empty payloads.
+    let (op, body) = (payload[0], &payload[1..]);
+    match op {
+        OP_INFER => handle_infer(body, stream, shared),
+        OP_STATS => {
+            if !body.is_empty() {
+                let _ = write_error(stream, ErrorCode::BadFrame, "STATS takes no body", shared);
+                return false;
+            }
+            write_ok(stream, shared.stats_json().to_string_pretty().as_bytes(), shared)
+        }
+        OP_PING => {
+            if !body.is_empty() {
+                let _ = write_error(stream, ErrorCode::BadFrame, "PING takes no body", shared);
+                return false;
+            }
+            write_ok(stream, &[], shared)
+        }
+        OP_SHUTDOWN => {
+            shared.shutting_down.store(true, Ordering::SeqCst);
+            let _ = write_ok(stream, &[], shared);
+            false
+        }
+        other => {
+            let _ = write_error(stream, ErrorCode::BadFrame, &format!("unknown opcode {other}"), shared);
+            false
+        }
+    }
+}
+
+fn handle_infer(body: &[u8], stream: &mut TcpStream, shared: &Shared) -> bool {
+    if shared.shutting_down.load(Ordering::SeqCst) {
+        let _ = write_error(stream, ErrorCode::ShuttingDown, "server is shutting down", shared);
+        return false;
+    }
+    let want = shared.sample_len * 4;
+    if body.len() != want {
+        return write_error(
+            stream,
+            ErrorCode::WrongLength,
+            &format!("INFER body is {} bytes; the model wants {} f32s = {want} bytes", body.len(), shared.sample_len),
+            shared,
+        );
+    }
+    // Admission control: a bounded in-flight window instead of an
+    // unbounded queue. `fetch_add` first so two racing requests can't
+    // both sneak under the cap.
+    let prev = shared.inflight.fetch_add(1, Ordering::SeqCst);
+    if prev >= shared.cfg.max_inflight {
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        return write_error(
+            stream,
+            ErrorCode::Overloaded,
+            &format!("{prev} requests in flight (cap {}); retry later", shared.cfg.max_inflight),
+            shared,
+        );
+    }
+    let _permit = InflightPermit(shared);
+    let mut sample = Vec::with_capacity(shared.sample_len);
+    for c in body.chunks_exact(4) {
+        sample.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    let pending = match shared.server.submit(&sample) {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = write_error(stream, ErrorCode::ShuttingDown, &format!("{e}"), shared);
+            return false;
+        }
+    };
+    match pending.wait_outcome(shared.cfg.request_timeout) {
+        WaitOutcome::Ready(Ok(logits)) => {
+            let mut out = Vec::with_capacity(logits.len() * 4);
+            for v in &logits {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+            write_ok(stream, &out, shared)
+        }
+        WaitOutcome::Ready(Err(msg)) => write_error(stream, ErrorCode::EngineError, &msg, shared),
+        WaitOutcome::TimedOut => write_error(
+            stream,
+            ErrorCode::DeadlineExceeded,
+            &format!("no answer within {:?}", shared.cfg.request_timeout),
+            shared,
+        ),
+        WaitOutcome::Dropped => write_error(stream, ErrorCode::EngineError, "server dropped the request", shared),
+    }
+}
+
+fn write_ok(stream: &mut TcpStream, body: &[u8], shared: &Shared) -> bool {
+    shared.counters().ok_responses += 1;
+    write_frame(stream, 0, body).is_ok()
+}
+
+fn write_error(stream: &mut TcpStream, code: ErrorCode, msg: &str, shared: &Shared) -> bool {
+    shared.counters().count(code);
+    write_frame(stream, code as u8, msg.as_bytes()).is_ok()
+}
+
+fn write_frame(stream: &mut impl Write, status: u8, body: &[u8]) -> std::io::Result<()> {
+    debug_assert!(body.len() < MAX_FRAME_BYTES, "oversized response frame");
+    let mut out = Vec::with_capacity(5 + body.len());
+    out.extend_from_slice(&((body.len() as u32 + 1).to_le_bytes()));
+    out.push(status);
+    out.extend_from_slice(body);
+    stream.write_all(&out)?;
+    stream.flush()
+}
+
+/// Why a frame read ended without a frame.
+enum FrameErr {
+    /// Hardened-decoding rejection: oversized/empty/truncated/stalled
+    /// frame. The byte stream can no longer be re-synchronized.
+    Bad(String),
+    /// Clean EOF at a frame boundary, or a hard I/O error.
+    Closed,
+    /// Idle at a frame boundary while the server is draining.
+    ShuttingDown,
+}
+
+/// Read one length-prefixed frame with checkpoint-style hardening: the
+/// length is validated against `cap` *before* any allocation, truncation
+/// anywhere is an explicit error, and a peer that stalls mid-frame for
+/// longer than `stall` is rejected rather than pinning the handler.
+fn read_frame(stream: &mut impl Read, cap: usize, shutting: &AtomicBool, stall: Duration) -> Result<Vec<u8>, FrameErr> {
+    let mut header = [0u8; 4];
+    read_full(stream, &mut header, true, shutting, stall)?;
+    let len = u32::from_le_bytes(header) as usize;
+    if len == 0 {
+        return Err(FrameErr::Bad("empty frame (length prefix 0)".to_string()));
+    }
+    if len > cap {
+        return Err(FrameErr::Bad(format!("frame of {len} bytes exceeds this endpoint's {cap}-byte cap")));
+    }
+    let mut payload = vec![0u8; len];
+    read_full(stream, &mut payload, false, shutting, stall)?;
+    Ok(payload)
+}
+
+/// Fill `buf`, treating read-timeout ticks as poll points. `idle_ok`
+/// marks a frame boundary: there (and only there, before the first
+/// byte) a clean EOF is `Closed` and a shutdown flag ends the wait.
+/// Once any byte of a frame has arrived, the peer owes the rest within
+/// `stall` or the stream is declared bad.
+fn read_full(
+    stream: &mut impl Read,
+    buf: &mut [u8],
+    idle_ok: bool,
+    shutting: &AtomicBool,
+    stall: Duration,
+) -> Result<(), FrameErr> {
+    let mut got = 0usize;
+    let mut started: Option<Instant> = if idle_ok { None } else { Some(Instant::now()) };
+    while got < buf.len() {
+        match stream.read(&mut buf[got..]) {
+            Ok(0) => {
+                return Err(if got == 0 && idle_ok {
+                    FrameErr::Closed
+                } else {
+                    FrameErr::Bad(format!("peer closed mid-frame ({got}/{} bytes)", buf.len()))
+                });
+            }
+            Ok(n) => {
+                got += n;
+                started.get_or_insert_with(Instant::now);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock || e.kind() == std::io::ErrorKind::TimedOut => {
+                match started {
+                    None => {
+                        if shutting.load(Ordering::SeqCst) {
+                            return Err(FrameErr::ShuttingDown);
+                        }
+                    }
+                    Some(t0) => {
+                        if t0.elapsed() > stall {
+                            return Err(FrameErr::Bad(format!(
+                                "peer stalled mid-frame ({got}/{} bytes after {stall:?})",
+                                buf.len()
+                            )));
+                        }
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return Err(FrameErr::Closed),
+        }
+    }
+    Ok(())
+}
+
+/// Blocking client for the frame protocol — what `proxcomp loadtest`
+/// drives and what remote integrations copy.
+pub struct NetClient {
+    stream: TcpStream,
+}
+
+impl NetClient {
+    /// Connect, retrying until `timeout` (covers the serve-process
+    /// startup race in scripts and CI).
+    pub fn connect(addr: &str, timeout: Duration) -> anyhow::Result<NetClient> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    let _ = stream.set_nodelay(true);
+                    return Ok(NetClient { stream });
+                }
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(anyhow::anyhow!("connecting to {addr}: {e}"));
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+            }
+        }
+    }
+
+    /// Send one raw request frame without waiting for the response
+    /// (split send/recv is what lets tests hold a request in flight).
+    pub fn send_request(&mut self, opcode: u8, body: &[u8]) -> anyhow::Result<()> {
+        let mut payload = Vec::with_capacity(1 + body.len());
+        payload.push(opcode);
+        payload.extend_from_slice(body);
+        let mut out = Vec::with_capacity(4 + payload.len());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload);
+        self.stream.write_all(&out).map_err(|e| anyhow::anyhow!("send: {e}"))?;
+        self.stream.flush().map_err(|e| anyhow::anyhow!("flush: {e}"))?;
+        Ok(())
+    }
+
+    /// Read one response frame: `(status, body)`.
+    pub fn recv_response(&mut self) -> anyhow::Result<(u8, Vec<u8>)> {
+        let mut header = [0u8; 4];
+        self.stream.read_exact(&mut header).map_err(|e| anyhow::anyhow!("recv header: {e}"))?;
+        let len = u32::from_le_bytes(header) as usize;
+        anyhow::ensure!(len >= 1, "empty response frame");
+        anyhow::ensure!(len <= MAX_FRAME_BYTES, "response frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte cap");
+        let mut payload = vec![0u8; len];
+        self.stream.read_exact(&mut payload).map_err(|e| anyhow::anyhow!("recv body: {e}"))?;
+        let body = payload.split_off(1);
+        Ok((payload[0], body))
+    }
+
+    pub fn send_infer(&mut self, sample: &[f32]) -> anyhow::Result<()> {
+        let mut body = Vec::with_capacity(sample.len() * 4);
+        for v in sample {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        self.send_request(OP_INFER, &body)
+    }
+
+    /// One round trip: `Ok(Ok(logits))`, or `Ok(Err((code, message)))`
+    /// for a server-reported error; `Err` only for transport failures.
+    #[allow(clippy::type_complexity)]
+    pub fn infer(&mut self, sample: &[f32]) -> anyhow::Result<Result<Vec<f32>, (ErrorCode, String)>> {
+        self.send_infer(sample)?;
+        let (status, body) = self.recv_response()?;
+        if status == 0 {
+            anyhow::ensure!(body.len() % 4 == 0, "OK INFER body of {} bytes is not whole f32s", body.len());
+            let logits =
+                body.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect::<Vec<f32>>();
+            Ok(Ok(logits))
+        } else {
+            let code =
+                ErrorCode::from_u8(status).ok_or_else(|| anyhow::anyhow!("unknown response status byte {status}"))?;
+            Ok(Err((code, String::from_utf8_lossy(&body).into_owned())))
+        }
+    }
+
+    /// Fetch the server's stats JSON text (`{"serving": ..., "net": ...}`).
+    pub fn stats_json(&mut self) -> anyhow::Result<String> {
+        self.send_request(OP_STATS, &[])?;
+        let (status, body) = self.recv_response()?;
+        anyhow::ensure!(status == 0, "STATS answered with status {status}");
+        Ok(String::from_utf8_lossy(&body).into_owned())
+    }
+
+    pub fn ping(&mut self) -> anyhow::Result<()> {
+        self.send_request(OP_PING, &[])?;
+        let (status, _) = self.recv_response()?;
+        anyhow::ensure!(status == 0, "PING answered with status {status}");
+        Ok(())
+    }
+
+    /// Ask the server to drain and exit (graceful remote shutdown).
+    pub fn shutdown_server(&mut self) -> anyhow::Result<()> {
+        self.send_request(OP_SHUTDOWN, &[])?;
+        let (status, _) = self.recv_response()?;
+        anyhow::ensure!(status == 0, "SHUTDOWN answered with status {status}");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn no_shutdown() -> AtomicBool {
+        AtomicBool::new(false)
+    }
+
+    fn frame_bytes(payload: &[u8]) -> Vec<u8> {
+        let mut out = (payload.len() as u32).to_le_bytes().to_vec();
+        out.extend_from_slice(payload);
+        out
+    }
+
+    #[test]
+    fn error_code_roundtrip_and_names() {
+        for code in ErrorCode::all() {
+            assert_eq!(ErrorCode::from_u8(code as u8), Some(code));
+            assert!(!code.name().is_empty());
+        }
+        assert_eq!(ErrorCode::from_u8(0), None);
+        assert_eq!(ErrorCode::from_u8(99), None);
+    }
+
+    #[test]
+    fn read_frame_roundtrip() {
+        let flag = no_shutdown();
+        let bytes = frame_bytes(&[OP_PING]);
+        let mut cur = Cursor::new(bytes);
+        let got = read_frame(&mut cur, 64, &flag, Duration::from_secs(1)).ok().unwrap();
+        assert_eq!(got, vec![OP_PING]);
+    }
+
+    #[test]
+    fn read_frame_rejects_empty_and_oversized() {
+        let flag = no_shutdown();
+        let mut cur = Cursor::new(0u32.to_le_bytes().to_vec());
+        assert!(matches!(read_frame(&mut cur, 64, &flag, Duration::from_secs(1)), Err(FrameErr::Bad(_))));
+        // A 1 GiB length prefix must be rejected before any allocation.
+        let mut cur = Cursor::new((1u32 << 30).to_le_bytes().to_vec());
+        match read_frame(&mut cur, 64, &flag, Duration::from_secs(1)) {
+            Err(FrameErr::Bad(msg)) => assert!(msg.contains("cap"), "{msg}"),
+            _ => panic!("oversized frame accepted"),
+        }
+    }
+
+    #[test]
+    fn read_frame_truncation_is_bad_not_silent() {
+        let flag = no_shutdown();
+        // Header promises 8 bytes, stream ends after 3.
+        let mut bytes = 8u32.to_le_bytes().to_vec();
+        bytes.extend_from_slice(&[1, 2, 3]);
+        let mut cur = Cursor::new(bytes);
+        match read_frame(&mut cur, 64, &flag, Duration::from_secs(1)) {
+            Err(FrameErr::Bad(msg)) => assert!(msg.contains("mid-frame"), "{msg}"),
+            _ => panic!("truncated frame accepted"),
+        }
+        // EOF at a frame boundary is a clean close, not an error.
+        let mut cur = Cursor::new(Vec::new());
+        assert!(matches!(read_frame(&mut cur, 64, &flag, Duration::from_secs(1)), Err(FrameErr::Closed)));
+    }
+
+    #[test]
+    fn write_frame_shape() {
+        let mut out = Vec::new();
+        write_frame(&mut out, 0, &[0xAA, 0xBB]).unwrap();
+        assert_eq!(out, vec![3, 0, 0, 0, 0, 0xAA, 0xBB]);
+        let mut out = Vec::new();
+        write_frame(&mut out, ErrorCode::Overloaded as u8, b"x").unwrap();
+        assert_eq!(out[4], ErrorCode::Overloaded as u8);
+    }
+}

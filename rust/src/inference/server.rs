@@ -21,16 +21,25 @@
 //! composition, so [`BatchServer::start`] pins `max_batch` to 1 for them
 //! (`Engine::uses_batch_stats`) instead of trusting the caller.
 //!
-//! Throughput and latency counters are surfaced as
-//! [`crate::metrics::ServingStats`] via [`BatchServer::stats`].
+//! Failure isolation: one bad batch must never take the server down. A
+//! forward that returns an error — or panics, or hands back a tensor
+//! whose shape cannot be fanned out row-per-request — answers *every*
+//! request in that batch with an error and the worker moves on to the
+//! next batch. The stats mutex is recovered if poisoned, so a panic
+//! mid-batch cannot cascade into `stats()`/`shutdown()` panics.
+//!
+//! Throughput and latency counters (including fixed-bucket latency
+//! percentiles) are surfaced as [`crate::metrics::ServingStats`] via
+//! [`BatchServer::stats`].
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::inference::Engine;
-use crate::metrics::ServingStats;
+use crate::metrics::{LatencyHistogram, ServingStats};
 use crate::tensor::Tensor;
 
 /// Coalescing knobs for a [`BatchServer`].
@@ -52,7 +61,9 @@ impl BatchConfig {
         BatchConfig { max_batch: max_batch.max(1), max_wait, input_shape }
     }
 
-    fn sample_len(&self) -> usize {
+    /// Floats per sample (C·H·W) — also the wire protocol's frame size
+    /// contract (`inference::net`).
+    pub fn sample_len(&self) -> usize {
         let (c, h, w) = self.input_shape;
         c * h * w
     }
@@ -72,6 +83,20 @@ pub struct Pending {
     rx: Receiver<Result<Vec<f32>, String>>,
 }
 
+/// What became of a request waited on with a deadline
+/// ([`Pending::wait_outcome`]). The network front-end maps these onto
+/// its wire error taxonomy.
+pub enum WaitOutcome {
+    /// The worker answered: per-request logits, or the engine/batch
+    /// error fanned back to every member of the failed batch.
+    Ready(Result<Vec<f32>, String>),
+    /// The deadline elapsed first. The request may still complete later;
+    /// its answer is discarded when this handle drops.
+    TimedOut,
+    /// The server dropped the request without answering (shutdown race).
+    Dropped,
+}
+
 impl Pending {
     /// Block until the request's logits arrive.
     pub fn wait(self) -> anyhow::Result<Vec<f32>> {
@@ -81,31 +106,53 @@ impl Pending {
             Err(_) => Err(anyhow::anyhow!("batch server dropped the request")),
         }
     }
+
+    /// Block until the logits arrive or `timeout` elapses — the
+    /// per-request deadline primitive the wire front-end builds on.
+    pub fn wait_outcome(self, timeout: Duration) -> WaitOutcome {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => WaitOutcome::Ready(r),
+            Err(RecvTimeoutError::Timeout) => WaitOutcome::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => WaitOutcome::Dropped,
+        }
+    }
 }
 
 /// Counters the worker accumulates per batch. Only the worker writes
 /// (the channel is FIFO, so the first request it drains carries the
 /// process-wide first submit stamp): the mutex is touched once per
 /// batch, never on the submit hot path, so contention is negligible
-/// next to a forward.
+/// next to a forward. Latency lands in a fixed-bucket histogram —
+/// recording is a counter bump, no allocation.
 #[derive(Default)]
 struct StatsInner {
     requests: usize,
     batches: usize,
     max_batch: usize,
-    total_latency_us: f64,
+    latency: LatencyHistogram,
     total_forward_us: f64,
     first_submit: Option<Instant>,
     last_done: Option<Instant>,
 }
 
+/// Lock the stats mutex, recovering from poisoning. A panic while the
+/// guard was held can at worst leave the counters of one batch half
+/// applied — stale numbers, never unsafety — so recovering beats turning
+/// one panic into a panic in every later `stats()`/`shutdown()` caller.
+fn lock_stats(stats: &Mutex<StatsInner>) -> MutexGuard<'_, StatsInner> {
+    stats.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
 /// A serving front-end over one shared [`Engine`]: callers submit single
 /// samples from any thread; a worker coalesces them into micro-batches
-/// and fans the per-row logits back out.
+/// and fans the per-row logits back out. All methods take `&self` (the
+/// sender/worker handles live behind mutexes), so a `BatchServer` can be
+/// shared across connection-handler threads via `Arc` and still shut
+/// down gracefully.
 pub struct BatchServer {
     cfg: BatchConfig,
-    tx: Option<Sender<Request>>,
-    worker: Option<JoinHandle<()>>,
+    tx: Mutex<Option<Sender<Request>>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
     stats: Arc<Mutex<StatsInner>>,
 }
 
@@ -126,7 +173,13 @@ impl BatchServer {
             let cfg = cfg.clone();
             std::thread::spawn(move || worker_loop(engine, cfg, rx, stats))
         };
-        BatchServer { cfg, tx: Some(tx), worker: Some(worker), stats }
+        BatchServer { cfg, tx: Mutex::new(Some(tx)), worker: Mutex::new(Some(worker)), stats }
+    }
+
+    /// The coalescing configuration actually in effect (after any
+    /// batch-statistics pin).
+    pub fn config(&self) -> &BatchConfig {
+        &self.cfg
     }
 
     /// Queue one flattened sample; returns a [`Pending`] to wait on.
@@ -142,6 +195,8 @@ impl BatchServer {
         let (rtx, rrx) = channel();
         let req = Request { data: sample.to_vec(), submitted: Instant::now(), resp: rtx };
         self.tx
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
             .as_ref()
             .and_then(|tx| tx.send(req).ok())
             .ok_or_else(|| anyhow::anyhow!("batch server is shut down"))?;
@@ -155,7 +210,7 @@ impl BatchServer {
 
     /// Throughput/latency counters accumulated so far.
     pub fn stats(&self) -> ServingStats {
-        let s = self.stats.lock().unwrap();
+        let s = lock_stats(&self.stats);
         let wall_secs = match (s.first_submit, s.last_done) {
             (Some(first), Some(last)) => last.duration_since(first).as_secs_f64(),
             _ => 0.0,
@@ -165,21 +220,22 @@ impl BatchServer {
             batches: s.batches,
             max_batch: s.max_batch,
             mean_batch: if s.batches == 0 { 0.0 } else { s.requests as f64 / s.batches as f64 },
-            mean_latency_us: if s.requests == 0 {
-                0.0
-            } else {
-                s.total_latency_us / s.requests as f64
-            },
+            mean_latency_us: s.latency.mean_us(),
             mean_forward_us: if s.batches == 0 { 0.0 } else { s.total_forward_us / s.batches as f64 },
             throughput_rps: if wall_secs > 0.0 { s.requests as f64 / wall_secs } else { 0.0 },
+            p50_latency_us: s.latency.percentile(0.50),
+            p90_latency_us: s.latency.percentile(0.90),
+            p99_latency_us: s.latency.percentile(0.99),
+            max_latency_us: s.latency.max_us(),
         }
     }
 
     /// Stop accepting requests, drain the queue, and join the worker
     /// (also runs on drop). In-flight requests are still answered.
-    pub fn shutdown(&mut self) {
-        self.tx.take();
-        if let Some(worker) = self.worker.take() {
+    pub fn shutdown(&self) {
+        self.tx.lock().unwrap_or_else(PoisonError::into_inner).take();
+        let worker = self.worker.lock().unwrap_or_else(PoisonError::into_inner).take();
+        if let Some(worker) = worker {
             let _ = worker.join();
         }
     }
@@ -191,12 +247,19 @@ impl Drop for BatchServer {
     }
 }
 
-fn worker_loop(
-    engine: Arc<Engine>,
-    cfg: BatchConfig,
-    rx: Receiver<Request>,
-    stats: Arc<Mutex<StatsInner>>,
-) {
+/// Render a caught panic payload (the `&str`/`String` cases cover every
+/// `panic!`/`assert!` in the kernel code).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn worker_loop(engine: Arc<Engine>, cfg: BatchConfig, rx: Receiver<Request>, stats: Arc<Mutex<StatsInner>>) {
     let (c, h, w) = cfg.input_shape;
     let sample_len = cfg.sample_len();
     loop {
@@ -227,42 +290,62 @@ fn worker_loop(
         }
         let x = Tensor::new(vec![m, c, h, w], xs);
         let t0 = Instant::now();
-        let result = engine.forward(&x);
+        // A panicking forward (dimension assert deep in a kernel, say)
+        // must not kill the worker: every queued request would silently
+        // hang up. The kernels spawn per-call scoped threads (no
+        // persistent pool state), so unwinding here is clean; convert
+        // the panic into the same fan-out path as an engine error.
+        let result = catch_unwind(AssertUnwindSafe(|| engine.forward(&x)))
+            .unwrap_or_else(|p| Err(anyhow::anyhow!("engine forward panicked: {}", panic_message(p.as_ref()))));
         let forward_us = t0.elapsed().as_secs_f64() * 1e6;
         let done = Instant::now();
 
         // Record the batch *before* fanning responses out, so a caller
         // that queries `stats()` right after its `wait()` returns always
         // sees its own request counted.
-        let latency_us: f64 = batch
-            .iter()
-            .map(|req| done.duration_since(req.submitted).as_secs_f64() * 1e6)
-            .sum();
         {
-            let mut s = stats.lock().unwrap();
+            let mut s = lock_stats(&stats);
             s.first_submit.get_or_insert(first_submitted);
             s.requests += m;
             s.batches += 1;
             s.max_batch = s.max_batch.max(m);
-            s.total_latency_us += latency_us;
+            for req in &batch {
+                s.latency.record(done.duration_since(req.submitted).as_secs_f64() * 1e6);
+            }
             s.total_forward_us += forward_us;
             s.last_done = Some(done);
         }
 
+        // Fan out. The per-sample row length is only trustworthy when
+        // the engine really returned one row per batched sample; a short
+        // or non-divisible output used to panic the slicing below and
+        // drop every queued request on the floor.
+        let fan_error = |batch: Vec<Request>, msg: String| {
+            for req in batch.into_iter() {
+                let _ = req.resp.send(Err(msg.clone()));
+            }
+        };
         match result {
             Ok(logits) => {
+                let rows_ok = logits.shape.first() == Some(&m);
                 let per = logits.data.len() / m;
-                for (i, req) in batch.into_iter().enumerate() {
-                    let row = logits.data[i * per..(i + 1) * per].to_vec();
-                    let _ = req.resp.send(Ok(row));
+                if rows_ok && per > 0 && logits.data.len() == m * per {
+                    for (i, req) in batch.into_iter().enumerate() {
+                        let row = logits.data[i * per..(i + 1) * per].to_vec();
+                        let _ = req.resp.send(Ok(row));
+                    }
+                } else {
+                    fan_error(
+                        batch,
+                        format!(
+                            "engine forward returned a malformed batch: shape {:?} ({} values) for {m} samples",
+                            logits.shape,
+                            logits.data.len()
+                        ),
+                    );
                 }
             }
-            Err(e) => {
-                let msg = format!("engine forward failed: {e}");
-                for req in batch.into_iter() {
-                    let _ = req.resp.send(Err(msg.clone()));
-                }
-            }
+            Err(e) => fan_error(batch, format!("engine forward failed: {e}")),
         }
     }
 }
@@ -353,9 +436,127 @@ mod tests {
     #[test]
     fn shutdown_rejects_new_requests() {
         let engine = Arc::new(tiny_mlp_engine(6));
-        let mut server =
+        let server =
             BatchServer::start(engine, BatchConfig::new(2, Duration::from_millis(1), (1, 28, 28)));
         server.shutdown();
         assert!(server.submit(&[0.0; 784]).is_err());
+    }
+
+    #[test]
+    fn engine_failure_fans_out_to_all_requesters_and_server_survives() {
+        // The configured input shape lies about the model: 8-float
+        // samples pass submit's length check but blow up inside the
+        // engine (784-column first layer). Every requester in the batch
+        // must get the error back — not a hung/dropped channel — and the
+        // worker must survive to serve the next batch.
+        let engine = Arc::new(tiny_mlp_engine(7));
+        let server = BatchServer::start(
+            Arc::clone(&engine),
+            BatchConfig::new(4, Duration::from_millis(5), (1, 1, 8)),
+        );
+        for round in 0..2 {
+            let pendings: Vec<Pending> = (0..3).map(|_| server.submit(&[0.5; 8]).unwrap()).collect();
+            for p in pendings {
+                let err = p.wait().unwrap_err().to_string();
+                assert!(err.contains("engine forward"), "round {round}: unexpected error {err:?}");
+            }
+        }
+        // The worker processed both batches and the stats lock is fine.
+        let stats = server.stats();
+        assert_eq!(stats.requests, 6);
+        assert!(stats.batches >= 2);
+        server.shutdown(); // must not panic either
+    }
+
+    #[test]
+    fn stats_survive_a_poisoned_lock() {
+        let engine = Arc::new(tiny_mlp_engine(8));
+        let server = BatchServer::start(
+            Arc::clone(&engine),
+            BatchConfig::new(2, Duration::from_millis(1), (1, 28, 28)),
+        );
+        let sample = Rng::new(9).normal_vec(784, 1.0);
+        server.infer(&sample).unwrap();
+        // Poison the stats mutex the way a panicking worker would have
+        // before the recovery fix: panic while holding the guard.
+        {
+            let stats = Arc::clone(&server.stats);
+            let _ = std::thread::spawn(move || {
+                let _guard = stats.lock().unwrap();
+                panic!("simulated worker panic while holding the stats lock");
+            })
+            .join();
+        }
+        // Both the read side and the worker's write side must recover.
+        assert_eq!(server.stats().requests, 1);
+        server.infer(&sample).unwrap();
+        assert_eq!(server.stats().requests, 2);
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_requests() {
+        // Five requests sit in the queue (the long max_wait holds the
+        // batch open); shutdown must answer all of them, not drop them.
+        let engine = Arc::new(tiny_mlp_engine(10));
+        let server = BatchServer::start(
+            Arc::clone(&engine),
+            BatchConfig::new(8, Duration::from_millis(300), (1, 28, 28)),
+        );
+        let mut rng = Rng::new(11);
+        let pendings: Vec<Pending> =
+            (0..5).map(|_| server.submit(&rng.normal_vec(784, 1.0)).unwrap()).collect();
+        server.shutdown();
+        for p in pendings {
+            assert_eq!(p.wait().unwrap().len(), 10);
+        }
+        assert_eq!(server.stats().requests, 5);
+    }
+
+    #[test]
+    fn latency_percentiles_populated() {
+        let engine = Arc::new(tiny_mlp_engine(12));
+        let server = BatchServer::start(
+            Arc::clone(&engine),
+            BatchConfig::new(4, Duration::from_millis(1), (1, 28, 28)),
+        );
+        let mut rng = Rng::new(13);
+        for _ in 0..10 {
+            server.infer(&rng.normal_vec(784, 1.0)).unwrap();
+        }
+        let stats = server.stats();
+        assert_eq!(stats.requests, 10);
+        assert!(stats.p50_latency_us > 0.0, "{stats:?}");
+        assert!(stats.p90_latency_us >= stats.p50_latency_us);
+        assert!(stats.p99_latency_us >= stats.p90_latency_us);
+        assert!(stats.max_latency_us >= stats.p99_latency_us);
+    }
+
+    #[test]
+    fn wait_outcome_timeout_and_ready() {
+        let engine = Arc::new(tiny_mlp_engine(14));
+        let server = BatchServer::start(
+            Arc::clone(&engine),
+            BatchConfig::new(8, Duration::from_millis(400), (1, 28, 28)),
+        );
+        let mut rng = Rng::new(15);
+        // The worker holds the batch open for 400 ms, so a 10 ms
+        // deadline fires first.
+        let p = server.submit(&rng.normal_vec(784, 1.0)).unwrap();
+        assert!(matches!(p.wait_outcome(Duration::from_millis(10)), WaitOutcome::TimedOut));
+        // And a generous deadline sees the answer.
+        let p = server.submit(&rng.normal_vec(784, 1.0)).unwrap();
+        match p.wait_outcome(Duration::from_secs(10)) {
+            WaitOutcome::Ready(Ok(logits)) => assert_eq!(logits.len(), 10),
+            other => panic!("expected Ready(Ok), got {}", describe(&other)),
+        }
+    }
+
+    fn describe(o: &WaitOutcome) -> &'static str {
+        match o {
+            WaitOutcome::Ready(Ok(_)) => "Ready(Ok)",
+            WaitOutcome::Ready(Err(_)) => "Ready(Err)",
+            WaitOutcome::TimedOut => "TimedOut",
+            WaitOutcome::Dropped => "Dropped",
+        }
     }
 }

@@ -9,6 +9,8 @@
 //! proxcomp quantize --checkpoint ckpt.pxcp [--out q.pxcp] [--codebook-size 16]
 //! proxcomp infer    --checkpoint ckpt.pxcp [--sparse|--quantized] [--batch 64]
 //! proxcomp report   --checkpoint ckpt.pxcp        # layer table + size
+//! proxcomp serve    --model lenet-s --addr 127.0.0.1:7733   # framed-TCP server
+//! proxcomp loadtest --model lenet-s --clients 100 --duration 10s
 //! proxcomp bench-compare --baseline BENCH_BASELINE.json \
 //!                   --current reports/bench_kernels.json  # CI perf gate
 //! proxcomp info                                   # manifest summary
@@ -52,6 +54,8 @@ fn run() -> Result<()> {
         "quantize" => cmd_quantize(&args),
         "infer" => cmd_infer(&args),
         "report" => cmd_report(&args),
+        "serve" => cmd_serve(&args),
+        "loadtest" => cmd_loadtest(&args),
         "bench-compare" => cmd_bench_compare(&args),
         "info" => cmd_info(&args),
         _ => {
@@ -585,6 +589,179 @@ fn cmd_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Deterministic synthetic serving engine: He-init the manifest model's
+/// parameters from `seed`, soft-threshold prune the prunable leaves, and
+/// deploy CSR. Both `serve` and `loadtest --model/--seed` rebuild this
+/// *identical* engine independently, which is what makes the over-the-wire
+/// bit-exactness check possible without shipping artifacts around.
+fn synthetic_engine(model: &str, seed: u64, prune: f32) -> Result<(Engine, (usize, usize, usize))> {
+    use proxcomp::inference::WeightMode;
+    use proxcomp::runtime::ParamBundle;
+    use proxcomp::sparse::prox;
+    let manifest = Manifest::native();
+    let entry = manifest.model(model)?;
+    let shape = model_input_shape(&entry.input_shape)?;
+    let mut bundle = ParamBundle::he_init(&entry.params, seed);
+    for (s, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+        if s.prunable {
+            prox::soft_threshold_inplace(v, prune);
+        }
+    }
+    let engine = Engine::from_bundle_mode(model, &bundle, WeightMode::Csr)?;
+    Ok((engine, shape))
+}
+
+fn model_input_shape(shape: &[usize]) -> Result<(usize, usize, usize)> {
+    anyhow::ensure!(shape.len() == 3, "model input shape {shape:?} is not (C, H, W)");
+    Ok((shape[0], shape[1], shape[2]))
+}
+
+/// Serve a synthetic compressed engine over the framed-TCP protocol
+/// (`inference::net`) until a client sends a SHUTDOWN frame, then drain
+/// in-flight requests and print/write the final serving stats.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use proxcomp::inference::{BatchConfig, NetConfig, NetServer};
+    use std::sync::Arc;
+    use std::time::Duration;
+    let model = args.str_or("model", "lenet-s");
+    let seed = args.u64_or("seed", 1)?;
+    let prune = args.f32_or("prune", 0.05)?;
+    let addr = args.str_or("addr", "127.0.0.1:7733");
+    let max_batch = args.usize_or("max-batch", 8)?;
+    let max_wait = args.duration_or("max-wait", Duration::from_millis(2))?;
+    let max_conns = args.usize_or("max-conns", 256)?;
+    let max_inflight = args.usize_or("max-inflight", 512)?;
+    let request_timeout = args.duration_or("request-timeout", Duration::from_secs(5))?;
+    let stats_out = args.get_str("stats-out");
+    args.finish()?;
+
+    let (engine, shape) = synthetic_engine(&model, seed, prune)?;
+    let batch_cfg = BatchConfig::new(max_batch, max_wait, shape);
+    let net_cfg = NetConfig { addr, max_conns, max_inflight, request_timeout, ..NetConfig::default() };
+    let mut server = NetServer::start(Arc::new(engine), batch_cfg, net_cfg)?;
+    println!(
+        "[serve] {model} (seed {seed}, prune {prune}) on {} — {} f32s/sample, max_batch {max_batch}, \
+         max_inflight {max_inflight}; a SHUTDOWN frame (`loadtest --stop-server`) drains and exits",
+        server.local_addr(),
+        shape.0 * shape.1 * shape.2
+    );
+    server.wait_shutdown_requested();
+    server.shutdown();
+    let stats = server.stats();
+    println!(
+        "[serve] drained: {} requests in {} batches, {:.1} req/s, p50 {:.0}µs p99 {:.0}µs max {:.0}µs",
+        stats.requests,
+        stats.batches,
+        stats.throughput_rps,
+        stats.p50_latency_us,
+        stats.p99_latency_us,
+        stats.max_latency_us
+    );
+    if let Some(path) = stats_out {
+        std::fs::write(&path, server.stats_json().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+        println!("[serve] wrote {path}");
+    }
+    Ok(())
+}
+
+/// Closed-loop load test against a live `proxcomp serve`: hundreds of
+/// concurrent synthetic clients, p50/p99 latency, saturation throughput,
+/// per-error-code counts, and (unless `--no-verify`) a bit-exactness
+/// check of every served response against a local twin engine. Exits
+/// nonzero on any bit mismatch — the determinism contract over the wire.
+fn cmd_loadtest(args: &Args) -> Result<()> {
+    use proxcomp::inference::loadgen::{self, LoadConfig};
+    use proxcomp::inference::{ErrorCode, NetClient};
+    use std::sync::Arc;
+    use std::time::Duration;
+    let addr = args.str_or("addr", "127.0.0.1:7733");
+    let model = args.str_or("model", "lenet-s");
+    let seed = args.u64_or("seed", 1)?;
+    let prune = args.f32_or("prune", 0.05)?;
+    let clients = args.usize_or("clients", 100)?;
+    let duration = args.duration_or("duration", Duration::from_secs(10))?;
+    let load_seed = args.u64_or("load-seed", 42)?;
+    let connect_timeout = args.duration_or("connect-timeout", Duration::from_secs(10))?;
+    let no_verify = args.flag("no-verify");
+    let stop_server = args.flag("stop-server");
+    let out = args.get_str("out");
+    args.finish()?;
+
+    let (verify, shape) = if no_verify {
+        let manifest = Manifest::native();
+        (None, model_input_shape(&manifest.model(&model)?.input_shape)?)
+    } else {
+        let (engine, shape) = synthetic_engine(&model, seed, prune)?;
+        (Some(Arc::new(engine)), shape)
+    };
+    let cfg = LoadConfig {
+        addr: addr.clone(),
+        clients,
+        duration,
+        input_shape: shape,
+        seed: load_seed,
+        connect_timeout,
+        verify,
+        fetch_server_stats: true,
+    };
+    println!(
+        "[loadtest] {clients} closed-loop clients × {:.1}s against {addr} ({model}, {} f32s/sample)",
+        duration.as_secs_f64(),
+        shape.0 * shape.1 * shape.2
+    );
+    let report = loadgen::run(&cfg)?;
+    println!(
+        "  ok {} in {:.1}s -> saturation throughput {:.1} req/s",
+        report.ok, report.elapsed_secs, report.throughput_rps
+    );
+    println!(
+        "  latency  mean {:.0}µs  p50 {:.0}µs  p90 {:.0}µs  p99 {:.0}µs  max {:.0}µs",
+        report.mean_latency_us,
+        report.p50_latency_us,
+        report.p90_latency_us,
+        report.p99_latency_us,
+        report.max_latency_us
+    );
+    if report.total_errors() > 0 || report.transport_errors > 0 {
+        let codes = ErrorCode::all()
+            .iter()
+            .filter(|c| report.error_count(**c) > 0)
+            .map(|c| format!("{} {}", c.name(), report.error_count(*c)))
+            .collect::<Vec<_>>()
+            .join(", ");
+        println!("  errors   {codes} (transport {})", report.transport_errors);
+    }
+    if report.verified > 0 {
+        println!(
+            "  verify   {} responses bit-compared against local Engine::forward, {} mismatches",
+            report.verified, report.mismatches
+        );
+    }
+    let json = report.to_json();
+    match out {
+        Some(path) => {
+            std::fs::write(&path, json.to_string_pretty()).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+            println!("  wrote {path}");
+        }
+        None => {
+            let p = metrics::write_json_report(&format!("loadtest_{model}.json"), &json)?;
+            println!("  wrote {}", p.display());
+        }
+    }
+    if stop_server {
+        NetClient::connect(&addr, Duration::from_secs(5))?.shutdown_server()?;
+        println!("  sent SHUTDOWN; server is draining");
+    }
+    anyhow::ensure!(
+        report.mismatches == 0,
+        "{} of {} verified responses were not bit-identical to local Engine::forward",
+        report.mismatches,
+        report.verified
+    );
+    Ok(())
+}
+
 /// CI bench-gate: compare a fresh `reports/bench_kernels.json` against
 /// the committed `BENCH_BASELINE.json`, print (and optionally write) the
 /// calibration-normalized delta table, and exit nonzero when any gated
@@ -683,6 +860,20 @@ SUBCOMMANDS
   infer    run a checkpoint through the rust inference engine
            --checkpoint F [--sparse | --quantized] [--batch N]
   report   layer-wise compression table for a checkpoint
+  serve    framed-TCP inference server over BatchServer (see README
+           \"Network serving\" for the wire format + error taxonomy)
+           --model lenet-s --seed 1 --prune 0.05 --addr 127.0.0.1:7733
+           --max-batch 8 --max-wait 2ms --max-conns 256
+           --max-inflight 512 --request-timeout 5s [--stats-out F]
+           runs until a client sends SHUTDOWN, then drains in-flight
+           requests and reports p50/p99 latency from the server side
+  loadtest closed-loop load generator against a live serve
+           --addr 127.0.0.1:7733 --clients 100 --duration 10s
+           --model lenet-s --seed 1 --prune 0.05 (must match serve so
+           the bit-exactness verify can rebuild the same engine;
+           --no-verify skips it) [--out F] [--stop-server]
+           reports p50/p99 latency, saturation throughput, and
+           per-error-code counts; exits nonzero on any bit mismatch
   bench-compare  CI perf gate: compare a bench_kernels JSON against the
            committed baseline (calibration-normalized per-group geomean)
            --baseline BENCH_BASELINE.json --current reports/bench_kernels.json

@@ -122,11 +122,112 @@ impl RunResult {
     }
 }
 
+/// Number of fixed latency-histogram buckets ([`LatencyHistogram`]).
+pub const LATENCY_BUCKETS: usize = 64;
+/// Geometric bucket growth: bucket `i` covers `[1.35^i, 1.35^(i+1))` µs,
+/// so 64 buckets span ~1 µs … ~230 s with ≤ 35 % relative error per
+/// bucket — plenty for serving percentiles.
+const LATENCY_RATIO: f64 = 1.35;
+
+/// Fixed-bucket log-spaced latency histogram. `record` touches one
+/// counter in a fixed-size array — no allocation, safe on the serving
+/// hot path — and percentile reads walk the 64 buckets.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: [u64; LATENCY_BUCKETS],
+    total: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { counts: [0; LATENCY_BUCKETS], total: 0, sum_us: 0.0, max_us: 0.0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    /// Upper bound (µs) of bucket `i`; the last bucket is open-ended.
+    fn bucket_bound(i: usize) -> f64 {
+        LATENCY_RATIO.powi(i as i32 + 1)
+    }
+
+    /// Count one latency observation (µs). Non-finite or negative values
+    /// land in the first bucket instead of corrupting the sums.
+    pub fn record(&mut self, us: f64) {
+        let us = if us.is_finite() && us > 0.0 { us } else { 0.0 };
+        let mut idx = LATENCY_BUCKETS - 1;
+        for i in 0..LATENCY_BUCKETS {
+            if us < Self::bucket_bound(i) {
+                idx = i;
+                break;
+            }
+        }
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum_us += us;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    /// Fold another histogram in (merging per-client load-gen shards).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+        if other.max_us > self.max_us {
+            self.max_us = other.max_us;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Percentile estimate in µs: the upper bound of the bucket holding
+    /// the rank-`⌈p·total⌉` observation, clamped to the observed max (so
+    /// p99 of three 10 µs requests reads 10 µs, not a bucket edge).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = (p.clamp(0.0, 1.0) * self.total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for i in 0..LATENCY_BUCKETS {
+            cum += self.counts[i];
+            if cum >= rank {
+                return Self::bucket_bound(i).min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+}
+
 /// Aggregate throughput/latency counters from the batched serving path
 /// (`inference::server::BatchServer::stats`). Latency is measured submit
 /// → completion per request (it includes the coalescing wait), forward
 /// time per micro-batch, throughput over the first-submit → last-done
-/// wall span.
+/// wall span. Percentiles come from a fixed-bucket [`LatencyHistogram`]
+/// the worker fills — server-side numbers, not a client's view.
 #[derive(Debug, Clone, Default)]
 pub struct ServingStats {
     pub requests: usize,
@@ -137,6 +238,10 @@ pub struct ServingStats {
     pub mean_latency_us: f64,
     pub mean_forward_us: f64,
     pub throughput_rps: f64,
+    pub p50_latency_us: f64,
+    pub p90_latency_us: f64,
+    pub p99_latency_us: f64,
+    pub max_latency_us: f64,
 }
 
 impl ServingStats {
@@ -148,7 +253,11 @@ impl ServingStats {
             .set("mean_batch", Json::from(self.mean_batch))
             .set("mean_latency_us", Json::from(self.mean_latency_us))
             .set("mean_forward_us", Json::from(self.mean_forward_us))
-            .set("throughput_rps", Json::from(self.throughput_rps));
+            .set("throughput_rps", Json::from(self.throughput_rps))
+            .set("p50_latency_us", Json::from(self.p50_latency_us))
+            .set("p90_latency_us", Json::from(self.p90_latency_us))
+            .set("p99_latency_us", Json::from(self.p99_latency_us))
+            .set("max_latency_us", Json::from(self.max_latency_us));
         j
     }
 }
@@ -176,6 +285,15 @@ fn ensure_parent(path: &Path) -> anyhow::Result<()> {
 mod tests {
     use super::*;
 
+    /// Unique per-test scratch dir: the pid isolates concurrent `cargo
+    /// test` invocations (shared fixed paths used to collide and flake),
+    /// the label isolates tests within one process.
+    fn unique_test_dir(label: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("proxcomp_{label}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn history_counter_monotone() {
         let mut h = History::new();
@@ -189,7 +307,7 @@ mod tests {
         let mut h = History::new();
         h.record_step(1, 2.5, 0.0);
         h.record_eval(2, 1.5, 0.5, 0.9);
-        let dir = std::env::temp_dir().join("proxcomp_metrics_test");
+        let dir = unique_test_dir("metrics_csv");
         let path = dir.join("h.csv");
         h.write_csv(&path).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
@@ -198,6 +316,7 @@ mod tests {
         assert!(lines[0].starts_with("step,"));
         assert!(lines[1].ends_with(',')); // NaN accuracy → empty field
         assert!(lines[2].contains("0.9"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
@@ -234,6 +353,7 @@ mod tests {
         let text = s.to_json().to_string_compact();
         assert!(text.contains("\"requests\""));
         assert!(text.contains("\"throughput_rps\""));
+        assert!(text.contains("\"p99_latency_us\""));
         assert!(text.contains("64"));
     }
 
@@ -245,10 +365,55 @@ mod tests {
             j
         };
         // Use temp cwd-independent check via direct path write.
-        let dir = std::env::temp_dir().join("proxcomp_reports_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = unique_test_dir("reports");
         let p = dir.join("r.json");
         std::fs::write(&p, j.to_string_pretty()).unwrap();
         assert!(std::fs::read_to_string(&p).unwrap().contains("true"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn histogram_percentiles_order_and_clamp() {
+        let mut h = LatencyHistogram::new();
+        for us in [10.0, 12.0, 11.0, 9.0, 400.0] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 5);
+        let (p50, p99) = (h.percentile(0.5), h.percentile(0.99));
+        assert!(p50 > 0.0 && p50 <= p99, "p50 {p50} p99 {p99}");
+        // The clamp: no percentile exceeds the observed max.
+        assert!(p99 <= h.max_us(), "p99 {p99} max {}", h.max_us());
+        assert!((h.mean_us() - 88.4).abs() < 1.0, "mean {}", h.mean_us());
+        // p50 lands in the ~10 µs buckets, nowhere near the 400 µs tail.
+        assert!(p50 < 50.0, "p50 {p50}");
+    }
+
+    #[test]
+    fn histogram_merge_matches_combined_recording() {
+        let (mut a, mut b, mut both) = (LatencyHistogram::new(), LatencyHistogram::new(), LatencyHistogram::new());
+        for us in [5.0, 80.0, 1500.0] {
+            a.record(us);
+            both.record(us);
+        }
+        for us in [2.0, 40_000.0] {
+            b.record(us);
+            both.record(us);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), both.count());
+        assert_eq!(a.max_us(), both.max_us());
+        for p in [0.5, 0.9, 0.99] {
+            assert_eq!(a.percentile(p), both.percentile(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn histogram_degenerate_inputs() {
+        let mut h = LatencyHistogram::new();
+        assert_eq!(h.percentile(0.99), 0.0);
+        h.record(f64::NAN);
+        h.record(-3.0);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile(0.5), 0.0); // clamped to observed max (0)
     }
 }

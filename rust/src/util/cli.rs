@@ -93,6 +93,15 @@ impl Args {
         self.flags.iter().any(|f| f == key)
     }
 
+    /// Duration option: `5s`, `250ms`, `800us`, `2m`, or a bare number
+    /// of seconds (`0.5`).
+    pub fn duration_or(&self, key: &str, default: std::time::Duration) -> anyhow::Result<std::time::Duration> {
+        match self.get_str(key) {
+            None => Ok(default),
+            Some(v) => parse_duration(&v).map_err(|e| anyhow::anyhow!("--{key}: {e}")),
+        }
+    }
+
     /// Comma-separated list option.
     pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
         match self.get_str(key) {
@@ -116,6 +125,29 @@ impl Args {
             anyhow::bail!("unknown option(s): {unknown:?}")
         }
     }
+}
+
+/// Parse a human duration: a non-negative number plus an optional unit
+/// suffix (`us`, `ms`, `s`, `m`); no suffix means seconds.
+pub fn parse_duration(text: &str) -> anyhow::Result<std::time::Duration> {
+    let text = text.trim();
+    let (num, unit) = match text.find(|c: char| c.is_ascii_alphabetic()) {
+        Some(i) => text.split_at(i),
+        None => (text, "s"),
+    };
+    let value: f64 = num
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("cannot parse duration {text:?} (want e.g. 5s, 250ms, 2m)"))?;
+    anyhow::ensure!(value.is_finite() && value >= 0.0, "duration {text:?} must be non-negative");
+    let secs = match unit {
+        "us" => value / 1e6,
+        "ms" => value / 1e3,
+        "s" => value,
+        "m" => value * 60.0,
+        other => anyhow::bail!("unknown duration unit {other:?} in {text:?} (use us, ms, s, or m)"),
+    };
+    Ok(std::time::Duration::from_secs_f64(secs))
 }
 
 #[cfg(test)]
@@ -176,5 +208,23 @@ mod tests {
     fn negative_numbers_as_values() {
         let a = parse(&["--shift", "-3"]);
         assert_eq!(a.get_parsed::<i64>("shift").unwrap(), Some(-3));
+    }
+
+    #[test]
+    fn durations() {
+        use std::time::Duration;
+        assert_eq!(parse_duration("5s").unwrap(), Duration::from_secs(5));
+        assert_eq!(parse_duration("250ms").unwrap(), Duration::from_millis(250));
+        assert_eq!(parse_duration("800us").unwrap(), Duration::from_micros(800));
+        assert_eq!(parse_duration("2m").unwrap(), Duration::from_secs(120));
+        assert_eq!(parse_duration("0.5").unwrap(), Duration::from_millis(500));
+        assert_eq!(parse_duration(" 10 ms ").unwrap(), Duration::from_millis(10));
+        assert!(parse_duration("abc").is_err());
+        assert!(parse_duration("5h").is_err());
+        assert!(parse_duration("-3s").is_err());
+        let a = parse(&["--duration", "3s"]);
+        assert_eq!(a.duration_or("duration", Duration::ZERO).unwrap(), Duration::from_secs(3));
+        assert_eq!(a.duration_or("missing", Duration::from_secs(7)).unwrap(), Duration::from_secs(7));
+        a.finish().unwrap();
     }
 }

@@ -1,0 +1,241 @@
+//! Integration tests for the framed-TCP serving front-end
+//! (`inference::net`) and its closed-loop load generator
+//! (`inference::loadgen`): the over-the-wire determinism contract
+//! (served logits bit-identical to a local `Engine::forward`), the
+//! error taxonomy (wrong-length, overloaded, engine-error,
+//! shutting-down, bad-frame), bounded admission instead of unbounded
+//! queueing, and graceful shutdown that drains in-flight requests.
+//!
+//! Every server binds `127.0.0.1:0` (ephemeral port), so the tests run
+//! concurrently without colliding.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use proxcomp::inference::loadgen::{self, LoadConfig};
+use proxcomp::inference::net::OP_STATS;
+use proxcomp::inference::{BatchConfig, Engine, ErrorCode, NetClient, NetConfig, NetServer, WeightMode};
+use proxcomp::runtime::{Manifest, ParamBundle};
+use proxcomp::sparse::prox;
+use proxcomp::tensor::Tensor;
+use proxcomp::util::json;
+use proxcomp::util::rng::Rng;
+
+/// The same deterministic synthetic engine `proxcomp serve` builds:
+/// He-init from the native manifest, soft-threshold prune, CSR deploy.
+fn synthetic_engine(model: &str, seed: u64) -> (Arc<Engine>, (usize, usize, usize)) {
+    let manifest = Manifest::native();
+    let entry = manifest.model(model).unwrap();
+    let shape = (entry.input_shape[0], entry.input_shape[1], entry.input_shape[2]);
+    let mut bundle = ParamBundle::he_init(&entry.params, seed);
+    for (s, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+        if s.prunable {
+            prox::soft_threshold_inplace(v, 0.05);
+        }
+    }
+    (Arc::new(Engine::from_bundle_mode(model, &bundle, WeightMode::Csr).unwrap()), shape)
+}
+
+fn start_server(model: &str, seed: u64, batch_cfg: BatchConfig, net_cfg: NetConfig) -> (NetServer, Arc<Engine>) {
+    let (engine, _) = synthetic_engine(model, seed);
+    let server = NetServer::start(Arc::clone(&engine), batch_cfg, net_cfg).unwrap();
+    (server, engine)
+}
+
+fn ephemeral() -> NetConfig {
+    NetConfig { addr: "127.0.0.1:0".to_string(), ..NetConfig::default() }
+}
+
+fn connect(server: &NetServer) -> NetClient {
+    NetClient::connect(&server.local_addr().to_string(), Duration::from_secs(5)).unwrap()
+}
+
+#[test]
+fn served_logits_bit_identical_to_engine_forward() {
+    // lenet-s exercises the conv path end to end over the wire.
+    let batch = BatchConfig::new(4, Duration::from_millis(2), (1, 16, 16));
+    let (mut server, engine) = start_server("lenet-s", 1, batch, ephemeral());
+    let mut client = connect(&server);
+    let mut rng = Rng::new(7);
+    for _ in 0..12 {
+        let sample = rng.normal_vec(256, 1.0);
+        let logits = client.infer(&sample).unwrap().unwrap();
+        let x = Tensor::new(vec![1, 1, 16, 16], sample);
+        let want = engine.forward(&x).unwrap().data;
+        assert_eq!(want.len(), logits.len());
+        for (a, b) in want.iter().zip(logits.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "served logits diverged from local forward");
+        }
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 12);
+    assert!(stats.p99_latency_us >= stats.p50_latency_us);
+    server.shutdown();
+}
+
+#[test]
+fn wrong_length_is_recoverable_on_the_same_connection() {
+    let batch = BatchConfig::new(4, Duration::from_millis(2), (1, 28, 28));
+    let (mut server, _) = start_server("mlp-s", 2, batch, ephemeral());
+    let mut client = connect(&server);
+    let (code, msg) = client.infer(&[0.5; 10]).unwrap().unwrap_err();
+    assert_eq!(code, ErrorCode::WrongLength);
+    assert!(msg.contains("784"), "message should name the expected length: {msg}");
+    // The connection survives a recoverable error.
+    let logits = client.infer(&[0.25; 784]).unwrap().unwrap();
+    assert_eq!(logits.len(), 10);
+    assert_eq!(server.net_counters().wrong_length, 1);
+    server.shutdown();
+}
+
+#[test]
+fn overloaded_server_rejects_instead_of_queueing() {
+    // max_inflight = 1 and a long coalescing window: the first request
+    // is admitted and parks in the open batch, so the second must be
+    // rejected with `overloaded` — bounded admission, not a deep queue.
+    let batch = BatchConfig::new(8, Duration::from_millis(500), (1, 28, 28));
+    let net = NetConfig { max_inflight: 1, ..ephemeral() };
+    let (mut server, _) = start_server("mlp-s", 3, batch, net);
+    let mut held = connect(&server);
+    held.send_infer(&[0.5; 784]).unwrap();
+    // Let the handler admit the held request before offering more load.
+    std::thread::sleep(Duration::from_millis(150));
+    let mut probe = connect(&server);
+    let (code, msg) = probe.infer(&[0.5; 784]).unwrap().unwrap_err();
+    assert_eq!(code, ErrorCode::Overloaded, "{msg}");
+    // The held request completes once the batch window closes…
+    let (status, body) = held.recv_response().unwrap();
+    assert_eq!(status, 0);
+    assert_eq!(body.len(), 10 * 4);
+    // …and the rejected client succeeds on retry: backpressure, not loss.
+    let logits = probe.infer(&[0.5; 784]).unwrap().unwrap();
+    assert_eq!(logits.len(), 10);
+    assert!(server.net_counters().overloaded >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn connection_cap_rejects_with_overloaded_frame() {
+    let batch = BatchConfig::new(4, Duration::from_millis(2), (1, 28, 28));
+    let net = NetConfig { max_conns: 1, ..ephemeral() };
+    let (mut server, _) = start_server("mlp-s", 4, batch, net);
+    let mut first = connect(&server);
+    first.ping().unwrap(); // round trip ⇒ the accept loop registered it
+    let mut second = connect(&server);
+    let (status, body) = second.recv_response().unwrap();
+    assert_eq!(ErrorCode::from_u8(status), Some(ErrorCode::Overloaded));
+    assert!(String::from_utf8_lossy(&body).contains("connections"));
+    assert_eq!(server.net_counters().rejected_conns, 1);
+    // The admitted connection is unaffected.
+    first.ping().unwrap();
+    server.shutdown();
+}
+
+#[test]
+fn engine_error_crosses_the_wire_and_keeps_the_connection() {
+    // The batch config lies about the model (8 floats vs mlp-s's 784):
+    // the forward blows up inside a kernel assert, the BatchServer fans
+    // the panic back as an error, and the wire reports `engine-error`
+    // without dropping the connection.
+    let batch = BatchConfig::new(2, Duration::from_millis(2), (1, 1, 8));
+    let (mut server, _) = start_server("mlp-s", 5, batch, ephemeral());
+    let mut client = connect(&server);
+    for _ in 0..2 {
+        let (code, msg) = client.infer(&[0.5; 8]).unwrap().unwrap_err();
+        assert_eq!(code, ErrorCode::EngineError, "{msg}");
+        assert!(msg.contains("engine forward"), "{msg}");
+    }
+    assert_eq!(server.net_counters().engine_error, 2);
+    server.shutdown();
+}
+
+#[test]
+fn stats_ping_and_bad_frame() {
+    let batch = BatchConfig::new(4, Duration::from_millis(2), (1, 28, 28));
+    let (mut server, _) = start_server("mlp-s", 6, batch, ephemeral());
+    let mut client = connect(&server);
+    client.ping().unwrap();
+    client.infer(&[0.1; 784]).unwrap().unwrap();
+    let stats = json::parse(&client.stats_json().unwrap()).unwrap();
+    assert_eq!(stats.get("serving").unwrap().get("requests").unwrap().as_usize(), Some(1));
+    assert!(stats.get("net").is_some());
+    // An unknown opcode is a protocol violation: bad-frame, then close.
+    let mut bad = connect(&server);
+    bad.send_request(0xEE, &[]).unwrap();
+    let (status, _) = bad.recv_response().unwrap();
+    assert_eq!(ErrorCode::from_u8(status), Some(ErrorCode::BadFrame));
+    assert!(bad.ping().is_err(), "connection must be closed after a protocol violation");
+    // STATS with a body is also a violation.
+    let mut bad2 = connect(&server);
+    bad2.send_request(OP_STATS, &[1, 2, 3]).unwrap();
+    let (status, _) = bad2.recv_response().unwrap();
+    assert_eq!(ErrorCode::from_u8(status), Some(ErrorCode::BadFrame));
+    server.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_then_rejects() {
+    // A request parks in the 400 ms batch window; a second client sends
+    // SHUTDOWN. The parked request must still be answered (drained),
+    // and the next request on the old connection must see
+    // `shutting-down`, not a hang or silent drop.
+    let batch = BatchConfig::new(8, Duration::from_millis(400), (1, 28, 28));
+    let (mut server, engine) = start_server("mlp-s", 8, batch, ephemeral());
+    let mut worker = connect(&server);
+    let sample = vec![0.75f32; 784];
+    worker.send_infer(&sample).unwrap();
+    std::thread::sleep(Duration::from_millis(100)); // admission, not just accept
+    let mut admin = connect(&server);
+    admin.shutdown_server().unwrap();
+    assert!(server.shutdown_requested());
+    let (status, body) = worker.recv_response().unwrap();
+    assert_eq!(status, 0, "in-flight request must be drained, not dropped");
+    let x = Tensor::new(vec![1, 1, 28, 28], sample);
+    let want = engine.forward(&x).unwrap().data;
+    let got: Vec<f32> = body.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+    assert_eq!(want.len(), got.len());
+    for (a, b) in want.iter().zip(got.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // The draining server refuses new work on the surviving connection.
+    match worker.infer(&[0.5; 784]) {
+        Ok(Err((code, _))) => assert_eq!(code, ErrorCode::ShuttingDown),
+        Ok(Ok(_)) => panic!("draining server accepted new work"),
+        Err(_) => {} // the handler may already have closed the socket
+    }
+    server.shutdown();
+    assert_eq!(server.stats().requests, 1);
+}
+
+#[test]
+fn loadgen_closed_loop_reports_and_verifies() {
+    let batch = BatchConfig::new(8, Duration::from_millis(1), (1, 28, 28));
+    let (mut server, engine) = start_server("mlp-s", 9, batch, ephemeral());
+    let cfg = LoadConfig {
+        addr: server.local_addr().to_string(),
+        clients: 8,
+        duration: Duration::from_millis(400),
+        input_shape: (1, 28, 28),
+        seed: 42,
+        connect_timeout: Duration::from_secs(5),
+        verify: Some(engine),
+        fetch_server_stats: true,
+    };
+    let report = loadgen::run(&cfg).unwrap();
+    assert!(report.ok > 0, "closed loop completed no requests");
+    assert_eq!(report.mismatches, 0, "wire responses diverged from local forward");
+    assert_eq!(report.verified, report.ok);
+    assert!(report.throughput_rps > 0.0);
+    assert!(report.p50_latency_us > 0.0);
+    assert!(report.p99_latency_us >= report.p50_latency_us);
+    let server_stats = report.server_stats.as_ref().expect("server stats fetched");
+    let serving = server_stats.get("serving").unwrap();
+    assert!(serving.get("requests").unwrap().as_usize().unwrap() >= report.ok as usize);
+    assert!(serving.get("p99_latency_us").is_some(), "server-side percentiles in the artifact");
+    // The report JSON carries the full taxonomy table.
+    let j = report.to_json();
+    for code in ErrorCode::all() {
+        assert!(j.get("errors").unwrap().get(code.name()).is_some(), "missing {}", code.name());
+    }
+    server.shutdown();
+}
