@@ -83,7 +83,7 @@ fn synthetic_sparse_mlp(seed: u64, rate: f64) -> ParamBundle {
 fn serving_sweeps() -> anyhow::Result<()> {
     let mut rng = Rng::new(400);
     let bundle = synthetic_sparse_mlp(401, 0.97);
-    let engine = Arc::new(Engine::from_bundle_mode("mlp", &bundle, WeightMode::Csr)?);
+    let engine = Arc::new(Engine::builder("mlp").bundle(&bundle).mode(WeightMode::Csr).build()?);
 
     common::section("serving sweep: PROXCOMP_THREADS × batch (97% sparse MLP, CSR engine)");
     let saved_threads = std::env::var("PROXCOMP_THREADS").ok();
@@ -166,9 +166,9 @@ fn main() -> anyhow::Result<()> {
     let params = train_compressed_lenet(&mut rt, &manifest)?;
     println!("trained LeNet-5 at compression rate {:.4}", params.compression_rate());
 
-    let dense = Engine::from_bundle("lenet", &params, false)?;
-    let sparse = Engine::from_bundle("lenet", &params, true)?;
-    let auto = Engine::from_bundle_mode("lenet", &params, WeightMode::Auto)?;
+    let dense = Engine::builder("lenet").bundle(&params).mode(WeightMode::Dense).build()?;
+    let sparse = Engine::builder("lenet").bundle(&params).mode(WeightMode::Csr).build()?;
+    let auto = Engine::builder("lenet").bundle(&params).mode(WeightMode::Auto).build()?;
 
     // --- model size row
     println!("\nmodel size:");

@@ -70,7 +70,7 @@ impl Checkpoint {
     }
 
     /// Reassemble the quantized model for bit-faithful serving
-    /// (`Engine::from_quantized`): tag-2 leaves keep their stored
+    /// (`Engine::builder(..).quantized(..)`): tag-2 leaves keep their stored
     /// codebooks, everything else rides along as dense f32.
     pub fn to_quantized_model(&self) -> QuantizedModel {
         let leaves = self

@@ -225,8 +225,9 @@ mod tests {
                 prox::hard_threshold_inplace(v, t);
             }
         }
-        let csr = Engine::from_bundle_mode("mlp-s", &bundle, WeightMode::Csr).unwrap();
-        let quant = Engine::from_bundle_mode("mlp-s", &bundle, WeightMode::Quantized).unwrap();
+        let csr = Engine::builder("mlp-s").bundle(&bundle).mode(WeightMode::Csr).build().unwrap();
+        let quant =
+            Engine::builder("mlp-s").bundle(&bundle).mode(WeightMode::Quantized).build().unwrap();
         let wc = csr.work_profile(1, 1, 20, 20);
         let wq = quant.work_profile(1, 1, 20, 20);
         assert_eq!(wc.len(), wq.len());

@@ -14,6 +14,10 @@ use crate::runtime::{ParamBundle, ParamSpec};
 use crate::sparse::{ops, CsrMatrix, DynSparseMatrix};
 use crate::tensor::{self, ConvSpec, Tensor};
 
+/// Batch-norm epsilon shared by the engine's BN layers and the native
+/// training backend — one value so trained running stats serve exactly.
+pub const BN_EPS: f32 = 1e-5;
+
 /// How the engine stores prunable weights.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WeightMode {
@@ -25,8 +29,8 @@ pub enum WeightMode {
     Auto,
     /// Codebook-quantized CSR (`quant::QcsMatrix`) — lossy: each leaf's
     /// nonzeros collapse onto a per-leaf k-means codebook
-    /// (`QuantConfig::default()`; use [`Engine::from_quantized`] to
-    /// serve an already-quantized model's exact codebooks).
+    /// (`QuantConfig::default()`; use `Engine::builder(..).quantized(..)`
+    /// to serve an already-quantized model's exact codebooks).
     Quantized,
 }
 
@@ -99,7 +103,14 @@ enum Layer {
     GlobalAvgPool,
     Flatten,
     Relu,
+    /// Batch-statistics normalization: mean/var computed from the batch
+    /// at forward time. Couples samples across the batch, so serving
+    /// pins `max_batch = 1` (see [`Engine::uses_batch_stats`]).
     BatchNorm { scale: Vec<f32>, bias: Vec<f32> },
+    /// Inference-mode batch norm: folded *running* stats, purely
+    /// elementwise — batch-composition independent, so it coalesces
+    /// freely in the batch server.
+    BatchNormInference { scale: Vec<f32>, bias: Vec<f32>, mean: Vec<f32>, var: Vec<f32> },
     /// Residual block marker ops.
     SaveResidual,
     AddResidual { relu: bool },
@@ -122,37 +133,137 @@ pub struct Engine {
     pub num_classes: usize,
 }
 
-impl Engine {
-    /// Build from a parameter bundle. `sparse = true` stores prunable
-    /// weights CSR (compressed deployment); `false` keeps dense.
-    pub fn from_bundle(model: &str, bundle: &ParamBundle, sparse: bool) -> anyhow::Result<Engine> {
-        Self::from_bundle_mode(model, bundle, if sparse { WeightMode::Csr } else { WeightMode::Dense })
+/// What an [`EngineBuilder`] deploys from.
+enum EngineSource<'a> {
+    None,
+    Bundle(&'a ParamBundle),
+    Quantized(&'a QuantizedModel),
+    Checkpoint(std::path::PathBuf),
+}
+
+/// The one way to construct an [`Engine`]: pick a source (parameter
+/// bundle, quantized model, or checkpoint path) and a [`WeightMode`],
+/// then `build()`.
+///
+/// ```text
+/// Engine::builder("lenet-s").bundle(&params).build()?                  // CSR (default)
+/// Engine::builder("mlp-s").bundle(&params).mode(WeightMode::Auto).build()?
+/// Engine::builder("mlp-s").quantized(&qm).build()?                     // bit-faithful codebooks
+/// Engine::builder("").checkpoint("runs/lenet-s.pxcp").build()?         // model id from meta
+/// ```
+///
+/// A quantized source always serves its stored codebooks bit-faithfully
+/// (no re-clustering); `mode` then governs only the non-quantized
+/// prunable leaves. A checkpoint source auto-detects v2 quantized
+/// payloads and serves them the same way; an empty `model` falls back
+/// to the checkpoint's `meta.model` field.
+pub struct EngineBuilder<'a> {
+    model: String,
+    mode: WeightMode,
+    source: EngineSource<'a>,
+}
+
+impl<'a> EngineBuilder<'a> {
+    /// Deploy from an in-memory parameter bundle.
+    pub fn bundle(mut self, bundle: &'a ParamBundle) -> Self {
+        self.source = EngineSource::Bundle(bundle);
+        self
     }
 
-    /// Build with an explicit weight-storage mode. `WeightMode::Auto`
-    /// stores each prunable layer in the format `select_format` chose
-    /// for its structure instead of hard-coded CSR;
-    /// `WeightMode::Quantized` codebook-quantizes each prunable layer
-    /// with the default `QuantConfig`.
+    /// Deploy an already-quantized model bit-faithfully: quantized
+    /// leaves keep their stored codebooks/codes.
+    pub fn quantized(mut self, qm: &'a QuantizedModel) -> Self {
+        self.source = EngineSource::Quantized(qm);
+        self
+    }
+
+    /// Deploy from an on-disk checkpoint (v1 dense/CSR or v2 quantized,
+    /// auto-detected).
+    pub fn checkpoint(mut self, path: impl Into<std::path::PathBuf>) -> Self {
+        self.source = EngineSource::Checkpoint(path.into());
+        self
+    }
+
+    /// Storage mode for prunable weights (default [`WeightMode::Csr`],
+    /// the paper's deployment format).
+    pub fn mode(mut self, mode: WeightMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn build(self) -> anyhow::Result<Engine> {
+        match self.source {
+            EngineSource::None => anyhow::bail!(
+                "EngineBuilder needs a source: call .bundle(), .quantized(), or .checkpoint()"
+            ),
+            EngineSource::Bundle(bundle) => Engine::construct(&self.model, bundle, self.mode, None),
+            EngineSource::Quantized(qm) => {
+                let bundle = qm.to_bundle();
+                let map = qm.qcs_by_name();
+                Engine::construct(&self.model, &bundle, self.mode, Some(&map))
+            }
+            EngineSource::Checkpoint(path) => {
+                let ck = crate::checkpoint::load(&path)?;
+                let model = if self.model.is_empty() {
+                    ck.meta
+                        .get("model")
+                        .and_then(|j| j.as_str())
+                        .map(str::to_string)
+                        .ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "checkpoint {} carries no meta.model; pass the model id to Engine::builder",
+                                path.display()
+                            )
+                        })?
+                } else {
+                    self.model
+                };
+                if ck.is_quantized() {
+                    let qm = ck.to_quantized_model();
+                    let bundle = qm.to_bundle();
+                    let map = qm.qcs_by_name();
+                    Engine::construct(&model, &bundle, self.mode, Some(&map))
+                } else {
+                    Engine::construct(&model, &ck.params, self.mode, None)
+                }
+            }
+        }
+    }
+}
+
+impl Engine {
+    /// Start building an engine for `model`. An empty model id is only
+    /// valid with a checkpoint source (the id then comes from the
+    /// checkpoint's metadata).
+    pub fn builder<'a>(model: &str) -> EngineBuilder<'a> {
+        EngineBuilder { model: model.to_string(), mode: WeightMode::Csr, source: EngineSource::None }
+    }
+
+    /// Build from a parameter bundle. `sparse = true` stores prunable
+    /// weights CSR (compressed deployment); `false` keeps dense.
+    #[deprecated(note = "use Engine::builder(model).bundle(b).mode(..).build()")]
+    pub fn from_bundle(model: &str, bundle: &ParamBundle, sparse: bool) -> anyhow::Result<Engine> {
+        let mode = if sparse { WeightMode::Csr } else { WeightMode::Dense };
+        Engine::builder(model).bundle(bundle).mode(mode).build()
+    }
+
+    /// Build with an explicit weight-storage mode.
+    #[deprecated(note = "use Engine::builder(model).bundle(b).mode(mode).build()")]
     pub fn from_bundle_mode(
         model: &str,
         bundle: &ParamBundle,
         mode: WeightMode,
     ) -> anyhow::Result<Engine> {
-        Self::build(model, bundle, mode, None)
+        Engine::builder(model).bundle(bundle).mode(mode).build()
     }
 
-    /// Serve an already-quantized model bit-faithfully: quantized leaves
-    /// keep their stored codebooks/codes (no re-clustering), everything
-    /// else deploys as in `WeightMode::Csr` — the checkpoint-v2 serving
-    /// path (`proxcomp infer --quantized`, `pipeline --quantize`).
+    /// Serve an already-quantized model bit-faithfully.
+    #[deprecated(note = "use Engine::builder(model).quantized(qm).build()")]
     pub fn from_quantized(model: &str, qm: &QuantizedModel) -> anyhow::Result<Engine> {
-        let bundle = qm.to_bundle();
-        let map = qm.qcs_by_name();
-        Self::build(model, &bundle, WeightMode::Csr, Some(&map))
+        Engine::builder(model).quantized(qm).build()
     }
 
-    fn build(
+    fn construct(
         model: &str,
         bundle: &ParamBundle,
         mode: WeightMode,
@@ -222,7 +333,24 @@ impl Engine {
         let bn = |layers: &mut Vec<Layer>, name: &str| -> anyhow::Result<()> {
             let (_, s) = value(&format!("{name}_scale"))?;
             let (_, b) = value(&format!("{name}_bias"))?;
-            layers.push(Layer::BatchNorm { scale: s.clone(), bias: b.clone() });
+            // With running stats in the bundle (natively trained
+            // checkpoints) deploy inference-mode BN: folded stats,
+            // elementwise, batch-coalescing safe. Scale/bias-only
+            // bundles keep the legacy batch-statistics layer.
+            if leaves.contains_key(format!("{name}_mean").as_str())
+                && leaves.contains_key(format!("{name}_var").as_str())
+            {
+                let (_, mean) = value(&format!("{name}_mean"))?;
+                let (_, var) = value(&format!("{name}_var"))?;
+                layers.push(Layer::BatchNormInference {
+                    scale: s.clone(),
+                    bias: b.clone(),
+                    mean: mean.clone(),
+                    var: var.clone(),
+                });
+            } else {
+                layers.push(Layer::BatchNorm { scale: s.clone(), bias: b.clone() });
+            }
             Ok(())
         };
 
@@ -296,7 +424,11 @@ impl Engine {
                 fc(&mut layers, "fc2", true)?;
                 fc(&mut layers, "fc3", false)?;
             }
-            "resnet_s" => {
+            // The ResNet family ("resnet_s", "resnet-s", …): stem conv +
+            // BN, then residual blocks reconstructed from the
+            // conv{stage}-{block}-{idx} leaf names, global average pool,
+            // FC head.
+            m if m.starts_with("resnet") => {
                 conv(&mut layers, "conv1", 1, 1, false)?;
                 bn(&mut layers, "bn1")?;
                 layers.push(Layer::Relu);
@@ -343,10 +475,12 @@ impl Engine {
     }
 
     /// True when the forward pass mixes information *across* the batch
-    /// (batch-statistics `BatchNorm`, i.e. `resnet_s`): per-sample logits
-    /// then depend on batch composition, so the serving path must not
-    /// coalesce requests for this engine (`BatchServer` checks this and
-    /// pins its micro-batch size to 1).
+    /// (batch-statistics `BatchNorm`): per-sample logits then depend on
+    /// batch composition, so the serving path must not coalesce
+    /// requests for this engine (`BatchServer` checks this and pins its
+    /// micro-batch size to 1). Inference-mode BN (folded running stats,
+    /// the path natively trained resnet checkpoints deploy through) is
+    /// elementwise and does *not* trip this.
     pub fn uses_batch_stats(&self) -> bool {
         self.layers.iter().any(|l| matches!(l, Layer::BatchNorm { .. }))
     }
@@ -396,6 +530,9 @@ impl Engine {
                 }
                 Layer::ProjectResidual { w, bias, .. } => w.storage_bytes() + bias.len() * 4,
                 Layer::BatchNorm { scale, bias } => (scale.len() + bias.len()) * 4,
+                Layer::BatchNormInference { scale, bias, mean, var } => {
+                    (scale.len() + bias.len() + mean.len() + var.len()) * 4
+                }
                 _ => 0,
             })
             .sum()
@@ -446,7 +583,11 @@ impl Engine {
                 }
                 Layer::BatchNorm { scale, bias } => {
                     name = "bn".into();
-                    h = tensor::batch_norm(&h, scale, bias, 1e-5);
+                    h = tensor::batch_norm(&h, scale, bias, BN_EPS);
+                }
+                Layer::BatchNormInference { scale, bias, mean, var } => {
+                    name = "bn".into();
+                    h = tensor::batch_norm_inference(&h, scale, bias, mean, var, BN_EPS);
                 }
                 Layer::SaveResidual => {
                     name = "save".into();
@@ -721,7 +862,7 @@ mod tests {
     fn engine_wires_lenet_family_by_name_prefix() {
         let bundle = lenet_family_bundle(3);
         for name in ["lenet", "lenet-s", "lenet-custom"] {
-            let engine = Engine::from_bundle_mode(name, &bundle, WeightMode::Dense).unwrap();
+            let engine = Engine::builder(name).bundle(&bundle).mode(WeightMode::Dense).build().unwrap();
             assert_eq!(engine.num_classes, 2);
             // conv1, conv2, fc1, fc2 weight layers reported in order.
             let formats = engine.layer_formats();
@@ -745,10 +886,10 @@ mod tests {
         }
         let mut rng = Rng::new(41);
         let x = Tensor::new(vec![3, 1, 10, 10], rng.normal_vec(300, 1.0));
-        let dense = Engine::from_bundle_mode("lenet-s", &bundle, WeightMode::Dense).unwrap();
+        let dense = Engine::builder("lenet-s").bundle(&bundle).mode(WeightMode::Dense).build().unwrap();
         let want = dense.forward(&x).unwrap();
         for mode in [WeightMode::Csr, WeightMode::Auto] {
-            let engine = Engine::from_bundle_mode("lenet-s", &bundle, mode).unwrap();
+            let engine = Engine::builder("lenet-s").bundle(&bundle).mode(mode).build().unwrap();
             let got = engine.forward(&x).unwrap();
             assert_close(&got, &want, &format!("{mode:?}"));
             assert!(engine.model_size_bytes() > 0);
@@ -782,8 +923,8 @@ mod tests {
         let bundle = sparse_mlp_bundle(6);
         let mut rng = Rng::new(43);
         let x = Tensor::new(vec![3, 1, 10, 10], rng.normal_vec(300, 1.0));
-        let csr = Engine::from_bundle_mode("mlp-s", &bundle, WeightMode::Csr).unwrap();
-        let quant = Engine::from_bundle_mode("mlp-s", &bundle, WeightMode::Quantized).unwrap();
+        let csr = Engine::builder("mlp-s").bundle(&bundle).build().unwrap();
+        let quant = Engine::builder("mlp-s").bundle(&bundle).mode(WeightMode::Quantized).build().unwrap();
         assert!(quant.layer_formats().iter().all(|(_, f)| *f == "QCS"), "{:?}", quant.layer_formats());
         assert!(
             quant.model_size_bytes() < csr.model_size_bytes(),
@@ -808,9 +949,9 @@ mod tests {
         let bundle = sparse_mlp_bundle(7);
         let (qm, reports) = crate::quant::quantize_bundle(&bundle, &crate::quant::QuantConfig::default());
         assert!(reports.iter().any(|r| r.quantized), "nothing quantized");
-        let qeng = Engine::from_quantized("mlp-s", &qm).unwrap();
+        let qeng = Engine::builder("mlp-s").quantized(&qm).build().unwrap();
         let deq = qm.to_bundle();
-        let ceng = Engine::from_bundle_mode("mlp-s", &deq, WeightMode::Csr).unwrap();
+        let ceng = Engine::builder("mlp-s").bundle(&deq).build().unwrap();
         let mut rng = Rng::new(47);
         for b in [1usize, 4] {
             let x = Tensor::new(vec![b, 1, 10, 10], rng.normal_vec(b * 100, 1.0));
@@ -821,5 +962,113 @@ mod tests {
             );
         }
         assert!(qeng.model_size_bytes() < ceng.model_size_bytes());
+    }
+
+    #[test]
+    fn builder_requires_a_source() {
+        let err = Engine::builder("mlp-s").build().unwrap_err().to_string();
+        assert!(err.contains("needs a source"), "{err}");
+    }
+
+    #[test]
+    fn builder_checkpoint_source_roundtrips() {
+        let bundle = sparse_mlp_bundle(11);
+        let dir = std::env::temp_dir().join("proxcomp_engine_builder_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mlp.pxcp");
+        let mut meta = crate::util::json::Json::obj();
+        meta.set("model", crate::util::json::Json::from("mlp-s"));
+        crate::checkpoint::save(&path, &bundle, &meta).unwrap();
+        // Empty model id: the builder takes it from the checkpoint meta.
+        let from_ck = Engine::builder("").checkpoint(&path).build().unwrap();
+        assert_eq!(from_ck.model, "mlp-s");
+        let from_bundle = Engine::builder("mlp-s").bundle(&bundle).build().unwrap();
+        let x = Tensor::new(vec![2, 1, 10, 10], Rng::new(13).normal_vec(200, 1.0));
+        assert_eq!(from_ck.forward(&x).unwrap().data, from_bundle.forward(&x).unwrap().data);
+        // Quantized checkpoints auto-detect and serve their codebooks.
+        let cfg = crate::quant::QuantConfig { min_quant_nnz: 8, ..crate::quant::QuantConfig::default() };
+        let (qm, _) = crate::quant::quantize_bundle(&bundle, &cfg);
+        let qpath = dir.join("mlp_quant.pxcp");
+        crate::checkpoint::save_quantized(&qpath, &qm, &meta).unwrap();
+        let qck = Engine::builder("").checkpoint(&qpath).build().unwrap();
+        let qmem = Engine::builder("mlp-s").quantized(&qm).build().unwrap();
+        assert_eq!(qck.forward(&x).unwrap().data, qmem.forward(&x).unwrap().data);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_constructors_delegate_to_builder() {
+        let bundle = sparse_mlp_bundle(12);
+        let x = Tensor::new(vec![1, 1, 10, 10], Rng::new(14).normal_vec(100, 1.0));
+        let want = Engine::builder("mlp-s").bundle(&bundle).build().unwrap().forward(&x).unwrap();
+        let shim = Engine::from_bundle("mlp-s", &bundle, true).unwrap().forward(&x).unwrap();
+        assert_eq!(want.data, shim.data);
+        let shim = Engine::from_bundle_mode("mlp-s", &bundle, WeightMode::Csr).unwrap().forward(&x).unwrap();
+        assert_eq!(want.data, shim.data);
+    }
+
+    /// A tiny resnet-family bundle: stem conv + BN, one residual block,
+    /// FC head. `with_stats` adds bn running mean/var leaves (the
+    /// natively trained layout ⇒ inference-mode BN).
+    fn resnet_family_bundle(seed: u64, with_stats: bool) -> ParamBundle {
+        let p = |name: &str, kind: &str, shape: Vec<usize>, prunable: bool| {
+            crate::runtime::ParamSpec::new(name, kind, shape, prunable)
+        };
+        let mut specs = Vec::new();
+        for (conv, bn, ci) in [("conv1", "bn1", 1usize), ("conv1-1-1", "bn1-1-1", 4), ("conv1-1-2", "bn1-1-2", 4)] {
+            specs.push(p(&format!("{conv}_w"), "conv_w", vec![4, ci, 3, 3], true));
+            specs.push(p(&format!("{conv}_b"), "conv_b", vec![4], false));
+            specs.push(p(&format!("{bn}_scale"), "bn_scale", vec![4], false));
+            specs.push(p(&format!("{bn}_bias"), "bn_bias", vec![4], false));
+            if with_stats {
+                specs.push(p(&format!("{bn}_mean"), "bn_mean", vec![4], false));
+                specs.push(p(&format!("{bn}_var"), "bn_var", vec![4], false));
+            }
+        }
+        specs.push(p("fc1_w", "fc_w", vec![2, 4], true));
+        specs.push(p("fc1_b", "fc_b", vec![2], false));
+        let mut bundle = ParamBundle::he_init(&specs, seed);
+        if with_stats {
+            // Nudge the stats off their init so the folded affine is
+            // nontrivial in the parity check.
+            let mut rng = Rng::new(seed ^ 0xBEEF);
+            for (s, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+                if s.kind == "bn_mean" {
+                    *v = rng.normal_vec(v.len(), 0.2);
+                } else if s.kind == "bn_var" {
+                    for x in v.iter_mut() {
+                        *x = 1.0 + rng.normal_vec(1, 0.1)[0].abs();
+                    }
+                }
+            }
+        }
+        bundle
+    }
+
+    #[test]
+    fn bn_layers_pick_inference_mode_when_stats_present() {
+        let frozen = resnet_family_bundle(21, true);
+        let engine = Engine::builder("resnet-s").bundle(&frozen).build().unwrap();
+        assert!(
+            !engine.uses_batch_stats(),
+            "running-stats BN must not pin serving to max_batch=1"
+        );
+        // Batched forward is bit-identical to per-sample forwards:
+        // inference BN is elementwise, nothing crosses the batch.
+        let mut rng = Rng::new(22);
+        let samples: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(64, 1.0)).collect();
+        let batched = engine
+            .forward(&Tensor::new(vec![3, 1, 8, 8], samples.concat()))
+            .unwrap();
+        for (i, s) in samples.iter().enumerate() {
+            let one = engine.forward(&Tensor::new(vec![1, 1, 8, 8], s.clone())).unwrap();
+            for (a, b) in one.data.iter().zip(&batched.data[i * 2..(i + 1) * 2]) {
+                assert_eq!(a.to_bits(), b.to_bits(), "sample {i} diverged under batching");
+            }
+        }
+        // Legacy scale/bias-only bundles still use batch statistics.
+        let legacy = resnet_family_bundle(21, false);
+        let engine = Engine::builder("resnet-s").bundle(&legacy).build().unwrap();
+        assert!(engine.uses_batch_stats());
     }
 }

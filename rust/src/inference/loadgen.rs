@@ -3,23 +3,37 @@
 //! the device with a request stream" story.
 //!
 //! `run` drives `clients` concurrent synthetic clients against a served
-//! engine for a fixed wall-clock duration. Each client is *closed-loop*:
-//! it keeps exactly one request in flight (send → wait → send), so total
-//! concurrency equals the client count and the measured throughput at a
-//! high client count is the server's saturation throughput — more offered
-//! load at that point only grows latency, not completions.
+//! engine fleet for a fixed wall-clock duration. Each client is
+//! *closed-loop*: it keeps exactly one request in flight (send → wait →
+//! send), so total concurrency equals the client count and the measured
+//! throughput at a high client count is the server's saturation
+//! throughput — more offered load at that point only grows latency, not
+//! completions.
+//!
+//! A run targets one or more models ([`LoadTarget`]): single-target runs
+//! send versionless wire-v1 `INFER` frames, and a mixed-fleet run names
+//! each model with wire-v2 `INFER_MODEL` frames, cycling targets
+//! round-robin per request (offset by client index, so the instantaneous
+//! mix stays even).
+//!
+//! `overloaded` is backpressure, not failure: each client retries the
+//! same sample with exponential backoff up to
+//! [`LoadConfig::retry_budget`] times before giving up and counting the
+//! error. Retries are reported separately — a healthy saturated run
+//! shows retries, not `overloaded` errors.
 //!
 //! Every client draws its samples from a deterministic per-client stream
-//! (`Rng::new(seed).fork(client_index)`). When `verify` carries an
-//! engine, each OK response is bit-compared (`f32::to_bits`) against a
-//! local `Engine::forward` of the same sample — the over-the-wire
-//! determinism contract: serving through accept loop, batch coalescing,
-//! and frame encode/decode must not perturb a single bit of the logits.
+//! (`Rng::new(seed).fork(client_index)`). When a target carries a
+//! `verify` engine, each OK response is bit-compared (`f32::to_bits`)
+//! against a local `Engine::forward` of the same sample — the
+//! over-the-wire determinism contract: serving through accept loop,
+//! model routing, batch coalescing, and frame encode/decode must not
+//! perturb a single bit of the logits.
 //!
 //! The report combines the client-side view (latency histogram,
-//! per-error-code counts, achieved throughput) with the server's own
-//! STATS response, so server-reported percentiles land in the same JSON
-//! artifact CI uploads.
+//! per-error-code counts, per-model tallies, achieved throughput) with
+//! the server's own STATS response, so server-reported percentiles land
+//! in the same JSON artifact CI uploads.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -31,6 +45,35 @@ use crate::tensor::Tensor;
 use crate::util::json::{self, Json};
 use crate::util::rng::Rng;
 
+/// One model a load run drives traffic at.
+#[derive(Clone)]
+pub struct LoadTarget {
+    /// `Some(id)` sends wire-v2 `INFER_MODEL` frames for that model;
+    /// `None` sends versionless v1 `INFER` (the server's default model).
+    pub model: Option<String>,
+    /// Per-sample input shape (C, H, W) — must match the served model.
+    pub input_shape: (usize, usize, usize),
+    /// Local twin of the served engine for bit-exactness checking;
+    /// `None` skips verification (pure throughput mode).
+    pub verify: Option<Arc<Engine>>,
+}
+
+impl LoadTarget {
+    pub fn new(model: Option<&str>, input_shape: (usize, usize, usize), verify: Option<Arc<Engine>>) -> LoadTarget {
+        LoadTarget { model: model.map(str::to_string), input_shape, verify }
+    }
+
+    pub fn sample_len(&self) -> usize {
+        let (c, h, w) = self.input_shape;
+        c * h * w
+    }
+
+    /// Display name for reports.
+    fn label(&self) -> &str {
+        self.model.as_deref().unwrap_or("(default)")
+    }
+}
+
 /// Knobs for one load-generation run.
 #[derive(Clone)]
 pub struct LoadConfig {
@@ -40,37 +83,60 @@ pub struct LoadConfig {
     pub clients: usize,
     /// Wall-clock run length.
     pub duration: Duration,
-    /// Per-sample input shape (C, H, W) — must match the served model.
-    pub input_shape: (usize, usize, usize),
+    /// Models to drive, cycled round-robin per request. One target with
+    /// `model: None` reproduces the single-model v1 behaviour.
+    pub targets: Vec<LoadTarget>,
     /// Base seed; client `i` uses the forked stream `i`.
     pub seed: u64,
     /// How long each client retries its initial connect (covers the
     /// serve-process startup race in scripts and CI).
     pub connect_timeout: Duration,
-    /// Local twin of the served engine for bit-exactness checking;
-    /// `None` skips verification (pure throughput mode).
-    pub verify: Option<Arc<Engine>>,
+    /// How many times a client re-sends a sample answered `overloaded`
+    /// before counting it as an error. 0 disables retries.
+    pub retry_budget: u32,
+    /// Backoff before retry `n` is `retry_base << n` (exponential).
+    pub retry_base: Duration,
     /// Fetch the server's STATS JSON into the report after the run.
     pub fetch_server_stats: bool,
 }
 
-impl LoadConfig {
-    pub fn sample_len(&self) -> usize {
-        let (c, h, w) = self.input_shape;
-        c * h * w
-    }
+/// What one client accumulated for one target.
+#[derive(Default, Clone)]
+struct TargetTally {
+    ok: u64,
+    verified: u64,
+    mismatches: u64,
+    retries: u64,
 }
 
 /// What one client accumulated; merged across clients into [`LoadReport`].
-#[derive(Default)]
 struct ClientOutcome {
-    ok: u64,
+    per_target: Vec<TargetTally>,
     /// Per-[`ErrorCode`] counts, indexed by `code as u8 - 1`.
-    errors: [u64; 6],
+    errors: [u64; 7],
     transport_errors: u64,
     latency: LatencyHistogram,
-    verified: u64,
-    mismatches: u64,
+}
+
+impl ClientOutcome {
+    fn new(targets: usize) -> ClientOutcome {
+        ClientOutcome {
+            per_target: vec![TargetTally::default(); targets],
+            errors: [0; 7],
+            transport_errors: 0,
+            latency: LatencyHistogram::new(),
+        }
+    }
+}
+
+/// Per-model slice of an aggregated load report.
+pub struct ModelReport {
+    /// The target's model id (`None` for versionless v1 traffic).
+    pub model: Option<String>,
+    pub ok: u64,
+    pub verified: u64,
+    pub mismatches: u64,
+    pub retries: u64,
 }
 
 /// Aggregated result of a load run.
@@ -79,8 +145,10 @@ pub struct LoadReport {
     pub clients: usize,
     pub elapsed_secs: f64,
     pub ok: u64,
-    pub errors: [u64; 6],
+    pub errors: [u64; 7],
     pub transport_errors: u64,
+    /// `overloaded` responses absorbed by backoff-and-retry (not errors).
+    pub retries: u64,
     pub throughput_rps: f64,
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
@@ -89,8 +157,11 @@ pub struct LoadReport {
     pub max_latency_us: f64,
     pub verified: u64,
     pub mismatches: u64,
-    /// The server's own STATS response (`{"serving": ..., "net": ...}`),
-    /// when fetched — server-side percentiles live in here.
+    /// One row per target, in `LoadConfig::targets` order.
+    pub per_model: Vec<ModelReport>,
+    /// The server's own STATS response (`{"serving": ..., "net": ...,
+    /// "models": ...}`), when fetched — server-side percentiles and
+    /// per-model registry counters live in here.
     pub server_stats: Option<Json>,
 }
 
@@ -119,6 +190,19 @@ impl LoadReport {
         verify
             .set("checked", Json::from(self.verified as usize))
             .set("mismatches", Json::from(self.mismatches as usize));
+        let per_model: Vec<Json> = self
+            .per_model
+            .iter()
+            .map(|m| {
+                let mut row = Json::obj();
+                row.set("model", Json::from(m.model.as_deref().unwrap_or("(default)")))
+                    .set("requests_ok", Json::from(m.ok as usize))
+                    .set("verified", Json::from(m.verified as usize))
+                    .set("mismatches", Json::from(m.mismatches as usize))
+                    .set("retries", Json::from(m.retries as usize));
+                row
+            })
+            .collect();
         let mut j = Json::obj();
         j.set("addr", Json::from(self.addr.as_str()))
             .set("clients", Json::from(self.clients))
@@ -126,9 +210,11 @@ impl LoadReport {
             .set("requests_ok", Json::from(self.ok as usize))
             .set("errors", errors)
             .set("transport_errors", Json::from(self.transport_errors as usize))
+            .set("retries", Json::from(self.retries as usize))
             .set("throughput_rps", Json::from(self.throughput_rps))
             .set("latency", latency)
             .set("verify", verify)
+            .set("per_model", Json::Arr(per_model))
             .set("server", self.server_stats.clone().unwrap_or(Json::Null));
         j
     }
@@ -139,28 +225,41 @@ impl LoadReport {
 /// to reach the server at all (every client) errors out.
 pub fn run(cfg: &LoadConfig) -> anyhow::Result<LoadReport> {
     anyhow::ensure!(cfg.clients >= 1, "loadgen needs at least one client");
-    anyhow::ensure!(cfg.sample_len() > 0, "loadgen input shape is empty");
+    anyhow::ensure!(!cfg.targets.is_empty(), "loadgen needs at least one target model");
+    for t in &cfg.targets {
+        anyhow::ensure!(t.sample_len() > 0, "loadgen target {} has an empty input shape", t.label());
+    }
     let deadline = Instant::now() + cfg.duration;
     let t0 = Instant::now();
     let outcomes: Vec<ClientOutcome> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..cfg.clients).map(|i| s.spawn(move || client_loop(cfg, i as u64, deadline))).collect();
-        handles.into_iter().map(|h| h.join().unwrap_or_default()).collect()
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| ClientOutcome::new(cfg.targets.len())))
+            .collect()
     });
     let elapsed_secs = t0.elapsed().as_secs_f64();
 
-    let mut total = ClientOutcome::default();
+    let mut total = ClientOutcome::new(cfg.targets.len());
     for o in &outcomes {
-        total.ok += o.ok;
+        for (t, c) in total.per_target.iter_mut().zip(o.per_target.iter()) {
+            t.ok += c.ok;
+            t.verified += c.verified;
+            t.mismatches += c.mismatches;
+            t.retries += c.retries;
+        }
         for (t, e) in total.errors.iter_mut().zip(o.errors.iter()) {
             *t += e;
         }
         total.transport_errors += o.transport_errors;
         total.latency.merge(&o.latency);
-        total.verified += o.verified;
-        total.mismatches += o.mismatches;
     }
+    let ok: u64 = total.per_target.iter().map(|t| t.ok).sum();
+    let verified: u64 = total.per_target.iter().map(|t| t.verified).sum();
+    let mismatches: u64 = total.per_target.iter().map(|t| t.mismatches).sum();
+    let retries: u64 = total.per_target.iter().map(|t| t.retries).sum();
     anyhow::ensure!(
-        total.ok + total.errors.iter().sum::<u64>() > 0,
+        ok + total.errors.iter().sum::<u64>() > 0,
         "no client completed a single request against {} ({} transport errors)",
         cfg.addr,
         total.transport_errors
@@ -177,23 +276,36 @@ pub fn run(cfg: &LoadConfig) -> anyhow::Result<LoadReport> {
         addr: cfg.addr.clone(),
         clients: cfg.clients,
         elapsed_secs,
-        ok: total.ok,
+        ok,
         errors: total.errors,
         transport_errors: total.transport_errors,
-        throughput_rps: if elapsed_secs > 0.0 { total.ok as f64 / elapsed_secs } else { 0.0 },
+        retries,
+        throughput_rps: if elapsed_secs > 0.0 { ok as f64 / elapsed_secs } else { 0.0 },
         mean_latency_us: total.latency.mean_us(),
         p50_latency_us: total.latency.percentile(0.50),
         p90_latency_us: total.latency.percentile(0.90),
         p99_latency_us: total.latency.percentile(0.99),
         max_latency_us: total.latency.max_us(),
-        verified: total.verified,
-        mismatches: total.mismatches,
+        verified,
+        mismatches,
+        per_model: cfg
+            .targets
+            .iter()
+            .zip(total.per_target.iter())
+            .map(|(t, c)| ModelReport {
+                model: t.model.clone(),
+                ok: c.ok,
+                verified: c.verified,
+                mismatches: c.mismatches,
+                retries: c.retries,
+            })
+            .collect(),
         server_stats,
     })
 }
 
 fn client_loop(cfg: &LoadConfig, index: u64, deadline: Instant) -> ClientOutcome {
-    let mut out = ClientOutcome::default();
+    let mut out = ClientOutcome::new(cfg.targets.len());
     let mut client = match NetClient::connect(&cfg.addr, cfg.connect_timeout) {
         Ok(c) => c,
         Err(_) => {
@@ -202,45 +314,67 @@ fn client_loop(cfg: &LoadConfig, index: u64, deadline: Instant) -> ClientOutcome
         }
     };
     let mut rng = Rng::new(cfg.seed).fork(index);
-    let (c, h, w) = cfg.input_shape;
+    let mut request_no = 0usize;
     while Instant::now() < deadline {
-        let sample = rng.normal_vec(cfg.sample_len(), 1.0);
-        let sent = Instant::now();
-        match client.infer(&sample) {
-            Ok(Ok(logits)) => {
-                out.latency.record(sent.elapsed().as_secs_f64() * 1e6);
-                out.ok += 1;
-                if let Some(engine) = &cfg.verify {
-                    out.verified += 1;
-                    let x = Tensor::new(vec![1, c, h, w], sample);
-                    let want = match engine.forward(&x) {
-                        Ok(t) => t.data,
-                        Err(_) => {
-                            out.mismatches += 1;
-                            continue;
+        // Round-robin over targets, offset by client index so the
+        // instantaneous mix across clients stays even.
+        let ti = (request_no + index as usize) % cfg.targets.len();
+        request_no += 1;
+        let target = &cfg.targets[ti];
+        let (c, h, w) = target.input_shape;
+        let sample = rng.normal_vec(target.sample_len(), 1.0);
+        let mut attempt = 0u32;
+        loop {
+            let sent = Instant::now();
+            let resp = match &target.model {
+                Some(id) => client.infer_model(id, &sample),
+                None => client.infer(&sample),
+            };
+            match resp {
+                Ok(Ok(logits)) => {
+                    out.latency.record(sent.elapsed().as_secs_f64() * 1e6);
+                    let tally = &mut out.per_target[ti];
+                    tally.ok += 1;
+                    if let Some(engine) = &target.verify {
+                        tally.verified += 1;
+                        let x = Tensor::new(vec![1, c, h, w], sample.clone());
+                        let want = match engine.forward(&x) {
+                            Ok(t) => t.data,
+                            Err(_) => {
+                                tally.mismatches += 1;
+                                break;
+                            }
+                        };
+                        let same = want.len() == logits.len()
+                            && want.iter().zip(logits.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
+                        if !same {
+                            tally.mismatches += 1;
                         }
-                    };
-                    let same = want.len() == logits.len()
-                        && want.iter().zip(logits.iter()).all(|(a, b)| a.to_bits() == b.to_bits());
-                    if !same {
-                        out.mismatches += 1;
                     }
+                    break;
                 }
-            }
-            Ok(Err((code, _msg))) => {
-                out.errors[code as u8 as usize - 1] += 1;
-                match code {
-                    // Backpressure: the server told this client to back
-                    // off; yield briefly so the retry isn't a busy spin.
-                    ErrorCode::Overloaded => std::thread::sleep(Duration::from_micros(200)),
+                // Backpressure: re-send the same sample after an
+                // exponential backoff, burning one retry from the
+                // budget. Only past the budget does it count as an
+                // error — transient saturation is expected at the
+                // loads this harness exists to generate.
+                Ok(Err((ErrorCode::Overloaded, _))) if attempt < cfg.retry_budget => {
+                    out.per_target[ti].retries += 1;
+                    std::thread::sleep(cfg.retry_base * (1u32 << attempt.min(10)));
+                    attempt += 1;
+                }
+                Ok(Err((code, _msg))) => {
+                    out.errors[code as u8 as usize - 1] += 1;
                     // The server is draining — no more work will land.
-                    ErrorCode::ShuttingDown => return out,
-                    _ => {}
+                    if code == ErrorCode::ShuttingDown {
+                        return out;
+                    }
+                    break;
                 }
-            }
-            Err(_) => {
-                out.transport_errors += 1;
-                return out;
+                Err(_) => {
+                    out.transport_errors += 1;
+                    return out;
+                }
             }
         }
     }

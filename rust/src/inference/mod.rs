@@ -2,9 +2,10 @@
 //!
 //! Runs a trained model forward entirely in Rust with weights stored
 //! dense, CSR (the paper's deployment scenario, Section 4.5),
-//! dispatch-chosen per layer, or codebook-quantized
-//! (`quant::QcsMatrix`, `WeightMode::Quantized` /
-//! [`Engine::from_quantized`]): fully-connected layers multiply
+//! dispatch-chosen per layer, or codebook-quantized (`quant::QcsMatrix`).
+//! [`Engine::builder`] is the one construction surface: pick a source
+//! (param bundle, quantized bundle, or checkpoint path) and a
+//! [`WeightMode`], then `build()`. Fully-connected layers multiply
 //! activations against the compressed weights with the Figure-2
 //! `dense×compressed'` kernel; conv layers run im2col and then the same
 //! kernel against the (O, I·KH·KW) view. Per-layer timings feed the
@@ -14,17 +15,26 @@
 //! coalesces single-sample requests into micro-batches over one shared
 //! [`Engine`] and reports throughput/latency via `metrics::ServingStats`.
 //!
-//! `net` puts that server on the wire: a framed-TCP front-end
+//! `registry` scales that to a fleet: a [`ModelRegistry`] routes
+//! requests by model id across per-model batch pools, lazily loads
+//! engines through deterministic factories, and evicts
+//! least-recently-used models under a byte-accounted memory budget —
+//! draining, never dropping.
+//!
+//! `net` puts the registry on the wire: a framed-TCP front-end
 //! ([`NetServer`]/[`NetClient`]) with bounded admission (explicit
 //! `overloaded` backpressure), per-request deadlines, a hardened frame
-//! decoder, and graceful drain-then-close shutdown. `loadgen` is its
-//! closed-loop measurement harness (`proxcomp loadtest`).
+//! decoder, model-routed v2 `INFER_MODEL` frames (v1 `INFER` routes to
+//! the default model), and graceful drain-then-close shutdown. `loadgen`
+//! is its closed-loop measurement harness (`proxcomp loadtest`).
 
 pub mod engine;
 pub mod loadgen;
 pub mod net;
+pub mod registry;
 pub mod server;
 
-pub use engine::{Engine, LayerTiming, WeightMode, WeightStore};
+pub use engine::{Engine, EngineBuilder, LayerTiming, WeightMode, WeightStore};
 pub use net::{ErrorCode, NetClient, NetConfig, NetServer};
+pub use registry::{EngineFactory, ModelRegistry, ModelSpec, RegistryConfig};
 pub use server::{BatchConfig, BatchServer, Pending, WaitOutcome};

@@ -1,5 +1,5 @@
-//! Framed-TCP wire protocol over [`BatchServer`] — the network serving
-//! front-end.
+//! Framed-TCP wire protocol over a [`ModelRegistry`] — the network
+//! serving front-end.
 //!
 //! EIE's (Han et al., 2016) throughput story only counts if a request
 //! *stream* can reach the compressed engine; in-process coalescing alone
@@ -9,8 +9,9 @@
 //! byte, hard caps before any allocation), applies admission control
 //! (bounded in-flight requests — when full the caller gets an explicit
 //! `overloaded` rejection instead of unbounded queueing), enforces a
-//! per-request deadline, and drains in-flight requests before closing on
-//! graceful shutdown.
+//! per-request deadline, routes each request to its model's
+//! [`crate::inference::BatchServer`] pool, and drains in-flight requests
+//! before closing on graceful shutdown.
 //!
 //! # Wire format
 //!
@@ -24,20 +25,29 @@
 //!
 //! Request opcodes:
 //!
-//! | op | name     | body                                   |
-//! |----|----------|----------------------------------------|
-//! | 1  | INFER    | `sample_len` f32 LE values             |
-//! | 2  | STATS    | empty → JSON body (serving + net stats)|
-//! | 3  | SHUTDOWN | empty → begins graceful shutdown       |
-//! | 4  | PING     | empty → empty OK                       |
+//! | op | name        | body                                          |
+//! |----|-------------|-----------------------------------------------|
+//! | 1  | INFER       | `sample_len` f32 LE values (v1: default model)|
+//! | 2  | STATS       | empty → JSON body (serving + net + per-model) |
+//! | 3  | SHUTDOWN    | empty → begins graceful shutdown              |
+//! | 4  | PING        | empty → empty OK                              |
+//! | 5  | INFER_MODEL | `id_len:u8  id:utf-8  sample f32 LE` (v2)     |
 //!
-//! Response status 0 is OK (body: logits f32 LE for INFER, JSON for
-//! STATS, empty otherwise); nonzero is an [`ErrorCode`] with a UTF-8
-//! message body. Connections are persistent: a client may pipeline many
-//! INFER frames over one socket. Recoverable request errors
-//! (wrong-length, overloaded, deadline-exceeded, engine-error) keep the
-//! connection open; protocol violations (bad-frame) close it, because a
-//! mis-framed stream can never be re-synchronized.
+//! `INFER_MODEL` is the model-routed v2 of `INFER`: the body leads with
+//! a one-byte id length and the UTF-8 model id, then the sample floats.
+//! Plain `INFER` stays fully supported and routes to the registry's
+//! default model, so v1 clients keep working against a fleet server
+//! unchanged. Requests naming an unregistered id are answered
+//! `unknown-model` — recoverable, the connection stays open.
+//!
+//! Response status 0 is OK (body: logits f32 LE for INFER/INFER_MODEL,
+//! JSON for STATS, empty otherwise); nonzero is an [`ErrorCode`] with a
+//! UTF-8 message body. Connections are persistent: a client may pipeline
+//! many INFER frames over one socket. Recoverable request errors
+//! (wrong-length, overloaded, deadline-exceeded, engine-error,
+//! unknown-model) keep the connection open; protocol violations
+//! (bad-frame) close it, because a mis-framed stream can never be
+//! re-synchronized.
 //!
 //! Determinism contract: the server is a transparent transport. Logits
 //! that cross the wire are the bytes `Engine::forward` produced —
@@ -51,8 +61,9 @@ use std::sync::{Arc, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::inference::registry::{ModelRegistry, SubmitError};
 use crate::inference::server::WaitOutcome;
-use crate::inference::{BatchConfig, BatchServer, Engine};
+use crate::inference::{BatchConfig, Engine};
 use crate::metrics::ServingStats;
 use crate::util::json::Json;
 
@@ -65,6 +76,8 @@ pub const OP_INFER: u8 = 1;
 pub const OP_STATS: u8 = 2;
 pub const OP_SHUTDOWN: u8 = 3;
 pub const OP_PING: u8 = 4;
+/// Model-routed inference (wire v2): `id_len:u8 | id utf-8 | sample`.
+pub const OP_INFER_MODEL: u8 = 5;
 
 /// The serving error taxonomy — every non-OK response status byte.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -85,6 +98,10 @@ pub enum ErrorCode {
     ShuttingDown = 5,
     /// The per-request deadline elapsed before the batch completed.
     DeadlineExceeded = 6,
+    /// INFER_MODEL named a model the registry does not know (or a v1
+    /// INFER arrived with no default model configured). Recoverable —
+    /// the client may go on to name a registered model.
+    UnknownModel = 7,
 }
 
 impl ErrorCode {
@@ -96,6 +113,7 @@ impl ErrorCode {
             ErrorCode::EngineError => "engine-error",
             ErrorCode::ShuttingDown => "shutting-down",
             ErrorCode::DeadlineExceeded => "deadline-exceeded",
+            ErrorCode::UnknownModel => "unknown-model",
         }
     }
 
@@ -107,12 +125,13 @@ impl ErrorCode {
             4 => Some(ErrorCode::EngineError),
             5 => Some(ErrorCode::ShuttingDown),
             6 => Some(ErrorCode::DeadlineExceeded),
+            7 => Some(ErrorCode::UnknownModel),
             _ => None,
         }
     }
 
     /// All codes, for table-driven reporting.
-    pub fn all() -> [ErrorCode; 6] {
+    pub fn all() -> [ErrorCode; 7] {
         [
             ErrorCode::BadFrame,
             ErrorCode::WrongLength,
@@ -120,6 +139,7 @@ impl ErrorCode {
             ErrorCode::EngineError,
             ErrorCode::ShuttingDown,
             ErrorCode::DeadlineExceeded,
+            ErrorCode::UnknownModel,
         ]
     }
 }
@@ -169,6 +189,7 @@ pub struct NetCounters {
     pub engine_error: u64,
     pub shutting_down: u64,
     pub deadline_exceeded: u64,
+    pub unknown_model: u64,
 }
 
 impl NetCounters {
@@ -180,6 +201,7 @@ impl NetCounters {
             ErrorCode::EngineError => self.engine_error += 1,
             ErrorCode::ShuttingDown => self.shutting_down += 1,
             ErrorCode::DeadlineExceeded => self.deadline_exceeded += 1,
+            ErrorCode::UnknownModel => self.unknown_model += 1,
         }
     }
 
@@ -193,7 +215,8 @@ impl NetCounters {
             .set("overloaded", Json::from(self.overloaded as usize))
             .set("engine_error", Json::from(self.engine_error as usize))
             .set("shutting_down", Json::from(self.shutting_down as usize))
-            .set("deadline_exceeded", Json::from(self.deadline_exceeded as usize));
+            .set("deadline_exceeded", Json::from(self.deadline_exceeded as usize))
+            .set("unknown_model", Json::from(self.unknown_model as usize));
         j
     }
 }
@@ -201,9 +224,8 @@ impl NetCounters {
 /// Shared state between the accept loop, connection handlers, and the
 /// owning [`NetServer`] handle.
 struct Shared {
-    server: BatchServer,
+    registry: Arc<ModelRegistry>,
     cfg: NetConfig,
-    sample_len: usize,
     shutting_down: AtomicBool,
     inflight: AtomicUsize,
     conns: AtomicUsize,
@@ -215,16 +237,21 @@ impl Shared {
         self.counters.lock().unwrap_or_else(PoisonError::into_inner)
     }
 
-    /// Request-frame cap: opcode byte + the model's sample, with floor
-    /// room for control frames. (Responses are bounded by the engine's
-    /// output size, checked against [`MAX_FRAME_BYTES`] on write.)
+    /// Request-frame cap: opcode byte + id-length byte + a maximal id +
+    /// the largest registered model's sample, with floor room for
+    /// control frames. (Responses are bounded by the engine's output
+    /// size, checked against [`MAX_FRAME_BYTES`] on write.)
     fn request_cap(&self) -> usize {
-        (1 + self.sample_len * 4).clamp(64, MAX_FRAME_BYTES)
+        (2 + u8::MAX as usize + self.registry.max_sample_len() * 4).clamp(64, MAX_FRAME_BYTES)
     }
 
+    /// The STATS body: aggregate serving roll-up, wire counters, and
+    /// the per-model registry table.
     fn stats_json(&self) -> Json {
         let mut j = Json::obj();
-        j.set("serving", self.server.stats().to_json()).set("net", self.counters().clone().to_json());
+        j.set("serving", self.registry.aggregate_stats().to_json())
+            .set("net", self.counters().clone().to_json())
+            .set("models", self.registry.stats_json());
         j
     }
 }
@@ -249,20 +276,29 @@ pub struct NetServer {
 }
 
 impl NetServer {
-    /// Bind `cfg.addr` and start serving `engine` through a
-    /// [`BatchServer`] built from `batch_cfg`.
+    /// Bind `cfg.addr` and serve one `engine` through a [`BatchServer`]
+    /// built from `batch_cfg` — the single-model front-end, now a thin
+    /// wrapper over a one-entry [`ModelRegistry`] whose default model is
+    /// the engine itself.
     pub fn start(engine: Arc<Engine>, batch_cfg: BatchConfig, cfg: NetConfig) -> anyhow::Result<NetServer> {
+        anyhow::ensure!(batch_cfg.sample_len() > 0, "batch config has an empty input shape");
+        let id = engine.model.clone();
+        let registry = Arc::new(ModelRegistry::single(&id, engine, batch_cfg));
+        NetServer::start_registry(registry, cfg)
+    }
+
+    /// Bind `cfg.addr` and serve every model in `registry`. v1 `INFER`
+    /// frames route to the registry's default model; v2 `INFER_MODEL`
+    /// frames route by id.
+    pub fn start_registry(registry: Arc<ModelRegistry>, cfg: NetConfig) -> anyhow::Result<NetServer> {
         anyhow::ensure!(cfg.max_inflight >= 1, "max_inflight must be at least 1");
         anyhow::ensure!(cfg.max_conns >= 1, "max_conns must be at least 1");
+        anyhow::ensure!(!registry.model_ids().is_empty(), "registry has no models to serve");
         let listener = TcpListener::bind(&cfg.addr).map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
         let addr = listener.local_addr().map_err(|e| anyhow::anyhow!("local_addr: {e}"))?;
-        let sample_len = batch_cfg.sample_len();
-        anyhow::ensure!(sample_len > 0, "batch config has an empty input shape");
-        let server = BatchServer::start(engine, batch_cfg);
         let shared = Arc::new(Shared {
-            server,
+            registry,
             cfg,
-            sample_len,
             shutting_down: AtomicBool::new(false),
             inflight: AtomicUsize::new(0),
             conns: AtomicUsize::new(0),
@@ -295,9 +331,16 @@ impl NetServer {
         }
     }
 
-    /// Server-side serving stats (percentiles included).
+    /// Server-side serving stats (percentiles included) — the fleet
+    /// aggregate when multiple models are registered.
     pub fn stats(&self) -> ServingStats {
-        self.shared.server.stats()
+        self.shared.registry.aggregate_stats()
+    }
+
+    /// The registry this front-end routes into (per-model stats,
+    /// add/remove/evict while serving).
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.shared.registry
     }
 
     /// Wire-level counters.
@@ -305,7 +348,7 @@ impl NetServer {
         self.shared.counters().clone()
     }
 
-    /// The STATS response body: `{"serving": ..., "net": ...}`.
+    /// The STATS response body: `{"serving": ..., "net": ..., "models": ...}`.
     pub fn stats_json(&self) -> Json {
         self.shared.stats_json()
     }
@@ -325,7 +368,7 @@ impl NetServer {
         for h in handles {
             let _ = h.join();
         }
-        self.shared.server.shutdown();
+        self.shared.registry.shutdown();
     }
 }
 
@@ -415,7 +458,16 @@ fn handle_request(payload: &[u8], stream: &mut TcpStream, shared: &Shared) -> bo
     // `read_frame` already rejected empty payloads.
     let (op, body) = (payload[0], &payload[1..]);
     match op {
-        OP_INFER => handle_infer(body, stream, shared),
+        OP_INFER => handle_infer(None, body, stream, shared),
+        OP_INFER_MODEL => match parse_infer_model_body(body) {
+            Ok((id, sample)) => handle_infer(Some(id), sample, stream, shared),
+            Err(msg) => {
+                // A malformed id header means the frame layout itself is
+                // wrong — protocol violation, close like any bad frame.
+                let _ = write_error(stream, ErrorCode::BadFrame, &msg, shared);
+                false
+            }
+        },
         OP_STATS => {
             if !body.is_empty() {
                 let _ = write_error(stream, ErrorCode::BadFrame, "STATS takes no body", shared);
@@ -442,17 +494,46 @@ fn handle_request(payload: &[u8], stream: &mut TcpStream, shared: &Shared) -> bo
     }
 }
 
-fn handle_infer(body: &[u8], stream: &mut TcpStream, shared: &Shared) -> bool {
+/// Split an INFER_MODEL body into `(model_id, sample_bytes)`. Errors are
+/// frame-layout violations (the caller answers `bad-frame`).
+fn parse_infer_model_body(body: &[u8]) -> Result<(&str, &[u8]), String> {
+    let (&id_len, rest) = body
+        .split_first()
+        .ok_or_else(|| "INFER_MODEL body is empty (wants id_len | id | sample)".to_string())?;
+    if id_len == 0 {
+        return Err("INFER_MODEL id length is 0".to_string());
+    }
+    if rest.len() < id_len as usize {
+        return Err(format!(
+            "INFER_MODEL id length {id_len} exceeds the remaining {} body bytes",
+            rest.len()
+        ));
+    }
+    let (id_bytes, sample) = rest.split_at(id_len as usize);
+    let id = std::str::from_utf8(id_bytes).map_err(|_| "INFER_MODEL id is not UTF-8".to_string())?;
+    Ok((id, sample))
+}
+
+/// Serve one inference request: `model` is `None` for v1 INFER (routes
+/// to the default model) or the id carried by a v2 INFER_MODEL frame.
+fn handle_infer(model: Option<&str>, body: &[u8], stream: &mut TcpStream, shared: &Shared) -> bool {
     if shared.shutting_down.load(Ordering::SeqCst) {
         let _ = write_error(stream, ErrorCode::ShuttingDown, "server is shutting down", shared);
         return false;
     }
-    let want = shared.sample_len * 4;
+    // Resolve the per-model sample length first: naming an unregistered
+    // model is a recoverable request error, not a connection fault.
+    let sample_len = match shared.registry.sample_len(model) {
+        Ok(n) => n,
+        Err(e) => return write_error(stream, ErrorCode::UnknownModel, &format!("{e}"), shared),
+    };
+    let want = sample_len * 4;
     if body.len() != want {
+        let target = model.map(|m| format!("model {m:?}")).unwrap_or_else(|| "the model".to_string());
         return write_error(
             stream,
             ErrorCode::WrongLength,
-            &format!("INFER body is {} bytes; the model wants {} f32s = {want} bytes", body.len(), shared.sample_len),
+            &format!("INFER body is {} bytes; {target} wants {sample_len} f32s = {want} bytes", body.len()),
             shared,
         );
     }
@@ -470,13 +551,21 @@ fn handle_infer(body: &[u8], stream: &mut TcpStream, shared: &Shared) -> bool {
         );
     }
     let _permit = InflightPermit(shared);
-    let mut sample = Vec::with_capacity(shared.sample_len);
+    let mut sample = Vec::with_capacity(sample_len);
     for c in body.chunks_exact(4) {
         sample.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
     }
-    let pending = match shared.server.submit(&sample) {
+    let pending = match shared.registry.submit(model, &sample) {
         Ok(p) => p,
-        Err(e) => {
+        // A model can disappear (remove_model) between the length check
+        // and the submit — still recoverable for the connection.
+        Err(e @ SubmitError::UnknownModel(_)) => {
+            return write_error(stream, ErrorCode::UnknownModel, &format!("{e}"), shared)
+        }
+        Err(e @ SubmitError::LoadFailed(_)) | Err(e @ SubmitError::Rejected(_)) => {
+            return write_error(stream, ErrorCode::EngineError, &format!("{e}"), shared)
+        }
+        Err(e @ SubmitError::ShuttingDown) => {
             let _ = write_error(stream, ErrorCode::ShuttingDown, &format!("{e}"), shared);
             return false;
         }
@@ -601,6 +690,20 @@ fn read_full(
     Ok(())
 }
 
+/// Build an INFER_MODEL body: `id_len:u8 | id utf-8 | sample f32 LE`.
+/// Fails on ids the one-byte length cannot carry.
+pub fn encode_infer_model_body(model: &str, sample: &[f32]) -> anyhow::Result<Vec<u8>> {
+    anyhow::ensure!(!model.is_empty(), "model id must be non-empty");
+    anyhow::ensure!(model.len() <= u8::MAX as usize, "model id {:?} is {} bytes; the wire caps ids at 255", model, model.len());
+    let mut body = Vec::with_capacity(1 + model.len() + sample.len() * 4);
+    body.push(model.len() as u8);
+    body.extend_from_slice(model.as_bytes());
+    for v in sample {
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+    Ok(body)
+}
+
 /// Blocking client for the frame protocol — what `proxcomp loadtest`
 /// drives and what remote integrations copy.
 pub struct NetClient {
@@ -663,11 +766,14 @@ impl NetClient {
         self.send_request(OP_INFER, &body)
     }
 
-    /// One round trip: `Ok(Ok(logits))`, or `Ok(Err((code, message)))`
-    /// for a server-reported error; `Err` only for transport failures.
+    /// Send a model-routed (wire v2) INFER_MODEL frame without waiting.
+    pub fn send_infer_model(&mut self, model: &str, sample: &[f32]) -> anyhow::Result<()> {
+        self.send_request(OP_INFER_MODEL, &encode_infer_model_body(model, sample)?)
+    }
+
+    /// Decode the response to an INFER/INFER_MODEL round trip.
     #[allow(clippy::type_complexity)]
-    pub fn infer(&mut self, sample: &[f32]) -> anyhow::Result<Result<Vec<f32>, (ErrorCode, String)>> {
-        self.send_infer(sample)?;
+    fn recv_infer_response(&mut self) -> anyhow::Result<Result<Vec<f32>, (ErrorCode, String)>> {
         let (status, body) = self.recv_response()?;
         if status == 0 {
             anyhow::ensure!(body.len() % 4 == 0, "OK INFER body of {} bytes is not whole f32s", body.len());
@@ -679,6 +785,22 @@ impl NetClient {
                 ErrorCode::from_u8(status).ok_or_else(|| anyhow::anyhow!("unknown response status byte {status}"))?;
             Ok(Err((code, String::from_utf8_lossy(&body).into_owned())))
         }
+    }
+
+    /// One round trip: `Ok(Ok(logits))`, or `Ok(Err((code, message)))`
+    /// for a server-reported error; `Err` only for transport failures.
+    #[allow(clippy::type_complexity)]
+    pub fn infer(&mut self, sample: &[f32]) -> anyhow::Result<Result<Vec<f32>, (ErrorCode, String)>> {
+        self.send_infer(sample)?;
+        self.recv_infer_response()
+    }
+
+    /// One model-routed round trip (wire v2). `unknown-model` comes back
+    /// through the `Ok(Err(..))` arm like any recoverable request error.
+    #[allow(clippy::type_complexity)]
+    pub fn infer_model(&mut self, model: &str, sample: &[f32]) -> anyhow::Result<Result<Vec<f32>, (ErrorCode, String)>> {
+        self.send_infer_model(model, sample)?;
+        self.recv_infer_response()
     }
 
     /// Fetch the server's stats JSON text (`{"serving": ..., "net": ...}`).
@@ -776,5 +898,37 @@ mod tests {
         let mut out = Vec::new();
         write_frame(&mut out, ErrorCode::Overloaded as u8, b"x").unwrap();
         assert_eq!(out[4], ErrorCode::Overloaded as u8);
+    }
+
+    #[test]
+    fn infer_model_body_roundtrip() {
+        let sample = [1.0f32, -2.5];
+        let body = encode_infer_model_body("lenet-s", &sample).unwrap();
+        // id_len | id | floats, byte-exact.
+        assert_eq!(body[0], 7);
+        assert_eq!(&body[1..8], b"lenet-s");
+        assert_eq!(body.len(), 1 + 7 + 8);
+        let (id, raw) = parse_infer_model_body(&body).unwrap();
+        assert_eq!(id, "lenet-s");
+        let floats: Vec<f32> =
+            raw.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect();
+        assert_eq!(floats, sample);
+    }
+
+    #[test]
+    fn infer_model_body_rejects_malformed() {
+        // Encoder-side: empty and over-long ids cannot be framed.
+        assert!(encode_infer_model_body("", &[]).is_err());
+        assert!(encode_infer_model_body(&"m".repeat(256), &[]).is_err());
+        // Decoder-side: empty body, zero id length, id longer than the
+        // body, and non-UTF-8 ids are all layout violations.
+        assert!(parse_infer_model_body(&[]).is_err());
+        assert!(parse_infer_model_body(&[0]).is_err());
+        assert!(parse_infer_model_body(&[5, b'a', b'b']).is_err());
+        assert!(parse_infer_model_body(&[2, 0xFF, 0xFE]).is_err());
+        // An id with no sample bytes parses (the length check happens
+        // at the routing layer, against the resolved model).
+        let (id, rest) = parse_infer_model_body(&[2, b'o', b'k']).unwrap();
+        assert_eq!((id, rest.len()), ("ok", 0));
     }
 }

@@ -1,0 +1,781 @@
+//! Multi-model fleet registry: route requests by model id across
+//! per-model [`BatchServer`] pools, under one byte-accounted memory
+//! budget.
+//!
+//! The paper targets embedded deployments, where the interesting serving
+//! problem is rarely one model — it is a *fleet* of compressed models
+//! (per-task heads, A/B variants, quantized and sparse flavours of the
+//! same net) sharing a device whose memory cannot hold all of them at
+//! once. Compression is exactly what makes that viable: a 30×-compressed
+//! checkpoint is cheap to keep warm and cheap to re-deploy. The
+//! [`ModelRegistry`] leans on that:
+//!
+//! - Models are registered as [`ModelSpec`]s — an id, a deterministic
+//!   [`EngineFactory`] that (re)builds the engine from its checkpoint,
+//!   and the coalescing [`BatchConfig`] for its pool.
+//! - Loading is **lazy**: the first request for a model invokes its
+//!   factory, accounts the engine's exact byte footprint
+//!   (`Engine::model_size_bytes`), and spins up a [`BatchServer`].
+//! - A non-zero [`RegistryConfig::memory_budget_bytes`] caps the sum of
+//!   resident-model bytes. Loading past the budget evicts the
+//!   least-recently-used *other* model first (the model just touched is
+//!   never its own victim); a single model larger than the whole budget
+//!   still serves — the budget bounds the fleet, not one model.
+//! - Eviction is **graceful**: the victim's pool is drained
+//!   ([`BatchServer::shutdown`] answers everything already queued), so
+//!   an eviction in the middle of a traffic burst drops zero requests.
+//!   A submitter that raced the eviction simply re-resolves, which
+//!   hot-reloads the model through its factory — deterministically, so
+//!   logits before eviction and after reload are bit-identical.
+//! - [`ModelRegistry::add_model`] / [`ModelRegistry::remove_model`] are
+//!   atomic with respect to in-flight traffic: the registry lock covers
+//!   only map surgery; draining happens outside it.
+//!
+//! Stats semantics: per-model [`crate::metrics::ServingStats`] snapshots
+//! come from the *current* server incarnation; request/batch counts from
+//! evicted incarnations are retired into running totals (so
+//! `requests_total` never goes backwards), but latency percentiles reset
+//! on reload — they describe the live pool, which is what an operator
+//! watches. The aggregate roll-up sums counts and takes the max of
+//! percentile fields across resident models: a coarse fleet ceiling,
+//! not a merged distribution.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+use crate::inference::server::{BatchConfig, BatchServer, Pending};
+use crate::inference::Engine;
+use crate::metrics::ServingStats;
+use crate::util::json::Json;
+
+/// Builds (or rebuilds, after eviction) a model's engine. Factories must
+/// be deterministic — a hot-reloaded model is expected to answer
+/// bit-identically to its pre-eviction incarnation — and cheap enough to
+/// call on a request path (they gate the *first* request after a load,
+/// not every request).
+pub type EngineFactory = Arc<dyn Fn() -> anyhow::Result<Arc<Engine>> + Send + Sync>;
+
+/// Everything the registry needs to serve one model.
+pub struct ModelSpec {
+    /// Routing key carried by wire-v2 `INFER_MODEL` frames. At most 255
+    /// bytes (the wire encodes its length in one byte).
+    pub id: String,
+    pub factory: EngineFactory,
+    /// Coalescing knobs for this model's pool (the batch-statistics pin
+    /// in [`BatchServer::start`] still applies on top).
+    pub batch: BatchConfig,
+}
+
+impl ModelSpec {
+    pub fn new(id: &str, factory: EngineFactory, batch: BatchConfig) -> ModelSpec {
+        ModelSpec { id: id.to_string(), factory, batch }
+    }
+}
+
+/// Registry-wide knobs.
+#[derive(Debug, Clone, Default)]
+pub struct RegistryConfig {
+    /// Ceiling on the summed byte footprint of resident engines; 0 means
+    /// unlimited. Enforced by LRU eviction at load time.
+    pub memory_budget_bytes: usize,
+    /// Where versionless (wire-v1 `INFER`) requests route. When unset
+    /// and exactly one model is registered, that model is the default.
+    pub default_model: Option<String>,
+}
+
+/// Why a submission was refused. The wire front-end maps these onto its
+/// error taxonomy (`unknown-model` is recoverable; the rest follow the
+/// single-model semantics).
+#[derive(Debug)]
+pub enum SubmitError {
+    /// No registered model under this id (`"(default)"` when a
+    /// versionless request arrived and no default is configured).
+    UnknownModel(String),
+    /// The model's factory failed — checkpoint missing, decode error.
+    LoadFailed(String),
+    /// The registry is shutting down.
+    ShuttingDown,
+    /// The resolved pool refused the sample (wrong sample length, or a
+    /// shutdown race that outlasted the retry budget).
+    Rejected(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownModel(id) => write!(f, "unknown model {id:?}"),
+            SubmitError::LoadFailed(msg) => write!(f, "model load failed: {msg}"),
+            SubmitError::ShuttingDown => write!(f, "registry is shutting down"),
+            SubmitError::Rejected(msg) => write!(f, "request rejected: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Per-model bookkeeping. `server` is `Some` while resident; counts from
+/// evicted incarnations accumulate in the `retired_*` fields.
+struct ModelState {
+    spec: ModelSpec,
+    server: Option<Arc<BatchServer>>,
+    bytes: usize,
+    last_used: u64,
+    loads: u64,
+    evictions: u64,
+    retired_requests: usize,
+    retired_batches: usize,
+}
+
+struct Inner {
+    /// BTreeMap so ids iterate in a stable order (stats JSON, victim
+    /// scans) regardless of insertion history.
+    models: BTreeMap<String, ModelState>,
+    /// Logical LRU clock: bumped per successful resolve, copied into the
+    /// touched model's `last_used`.
+    clock: u64,
+    resident_bytes: usize,
+    shutting_down: bool,
+}
+
+/// A detached victim: map surgery already done under the lock, draining
+/// still owed (outside it).
+type DrainTicket = (String, Arc<BatchServer>);
+
+/// Multi-model serving registry. All methods take `&self`; share it with
+/// connection handlers via `Arc`.
+pub struct ModelRegistry {
+    cfg: RegistryConfig,
+    inner: Mutex<Inner>,
+}
+
+impl ModelRegistry {
+    pub fn new(cfg: RegistryConfig) -> ModelRegistry {
+        ModelRegistry {
+            cfg,
+            inner: Mutex::new(Inner {
+                models: BTreeMap::new(),
+                clock: 0,
+                resident_bytes: 0,
+                shutting_down: false,
+            }),
+        }
+    }
+
+    /// Build a registry and register `specs` in order.
+    pub fn with_models(cfg: RegistryConfig, specs: Vec<ModelSpec>) -> anyhow::Result<ModelRegistry> {
+        let reg = ModelRegistry::new(cfg);
+        for spec in specs {
+            reg.add_model(spec)?;
+        }
+        Ok(reg)
+    }
+
+    /// Wrap one already-built engine as a single-model registry — the
+    /// adapter the single-model `NetServer::start` front-end uses.
+    pub fn single(id: &str, engine: Arc<Engine>, batch: BatchConfig) -> ModelRegistry {
+        let reg = ModelRegistry::new(RegistryConfig {
+            memory_budget_bytes: 0,
+            default_model: Some(id.to_string()),
+        });
+        reg.add_model(ModelSpec::new(id, Arc::new(move || Ok(Arc::clone(&engine))), batch))
+            .expect("a fresh registry accepts its first model");
+        reg
+    }
+
+    /// Recover the inner lock from poisoning: registry state is counters
+    /// and maps — worst case a half-applied bookkeeping update, never
+    /// unsafety — and serving must outlive one panicking handler.
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Register a model (lazily loaded on first use). Fails on duplicate
+    /// ids, empty or over-long (> 255 byte) ids, and empty input shapes.
+    pub fn add_model(&self, spec: ModelSpec) -> anyhow::Result<()> {
+        anyhow::ensure!(!spec.id.is_empty(), "model id must be non-empty");
+        anyhow::ensure!(
+            spec.id.len() <= u8::MAX as usize,
+            "model id {:?} is {} bytes; the wire caps ids at 255",
+            spec.id,
+            spec.id.len()
+        );
+        anyhow::ensure!(
+            spec.batch.sample_len() > 0,
+            "model {:?} has an empty input shape {:?}",
+            spec.id,
+            spec.batch.input_shape
+        );
+        let mut guard = self.lock();
+        anyhow::ensure!(!guard.shutting_down, "registry is shutting down");
+        anyhow::ensure!(
+            !guard.models.contains_key(&spec.id),
+            "model {:?} is already registered",
+            spec.id
+        );
+        let id = spec.id.clone();
+        guard.models.insert(
+            id,
+            ModelState {
+                spec,
+                server: None,
+                bytes: 0,
+                last_used: 0,
+                loads: 0,
+                evictions: 0,
+                retired_requests: 0,
+                retired_batches: 0,
+            },
+        );
+        Ok(())
+    }
+
+    /// Deregister a model. Its pool (if resident) is drained — queued
+    /// requests are still answered — and its stats disappear with it.
+    pub fn remove_model(&self, id: &str) -> anyhow::Result<()> {
+        let state = {
+            let mut guard = self.lock();
+            let inner = &mut *guard;
+            let state = inner
+                .models
+                .remove(id)
+                .ok_or_else(|| anyhow::anyhow!("unknown model {id:?}"))?;
+            if state.server.is_some() {
+                inner.resident_bytes = inner.resident_bytes.saturating_sub(state.bytes);
+            }
+            state
+        };
+        if let Some(server) = state.server {
+            server.shutdown();
+        }
+        Ok(())
+    }
+
+    /// Evict a model's resident engine without deregistering it (the
+    /// next request reloads through the factory). Returns whether it was
+    /// resident; errors on unknown ids.
+    pub fn evict(&self, id: &str) -> anyhow::Result<bool> {
+        let victim = {
+            let mut guard = self.lock();
+            let inner = &mut *guard;
+            anyhow::ensure!(inner.models.contains_key(id), "unknown model {id:?}");
+            if inner.models[id].server.is_some() {
+                Some(Self::detach(inner, id))
+            } else {
+                None
+            }
+        };
+        match victim {
+            Some(v) => {
+                self.drain(vec![v]);
+                Ok(true)
+            }
+            None => Ok(false),
+        }
+    }
+
+    /// Take a resident model's server out of the map (under the lock);
+    /// the caller owes [`ModelRegistry::drain`] on the returned ticket.
+    fn detach(inner: &mut Inner, id: &str) -> DrainTicket {
+        let state = inner.models.get_mut(id).expect("detach only on present models");
+        let server = state.server.take().expect("detach only on resident models");
+        inner.resident_bytes = inner.resident_bytes.saturating_sub(state.bytes);
+        state.evictions += 1;
+        (id.to_string(), server)
+    }
+
+    /// Drain detached victims outside the lock: shutdown answers every
+    /// queued request, then the incarnation's counts are retired.
+    fn drain(&self, victims: Vec<DrainTicket>) {
+        for (id, server) in victims {
+            server.shutdown();
+            let s = server.stats();
+            let mut guard = self.lock();
+            if let Some(state) = guard.models.get_mut(&id) {
+                state.retired_requests += s.requests;
+                state.retired_batches += s.batches;
+            }
+        }
+    }
+
+    /// The id versionless requests route to: the configured default, or
+    /// the only model when exactly one is registered.
+    fn default_id(&self, inner: &Inner) -> Option<String> {
+        self.cfg.default_model.clone().or_else(|| {
+            if inner.models.len() == 1 {
+                inner.models.keys().next().cloned()
+            } else {
+                None
+            }
+        })
+    }
+
+    pub fn default_model(&self) -> Option<String> {
+        let guard = self.lock();
+        self.default_id(&guard)
+    }
+
+    /// Registered ids in stable (sorted) order.
+    pub fn model_ids(&self) -> Vec<String> {
+        self.lock().models.keys().cloned().collect()
+    }
+
+    /// Ids currently holding a resident engine.
+    pub fn resident_models(&self) -> Vec<String> {
+        self.lock()
+            .models
+            .iter()
+            .filter(|(_, st)| st.server.is_some())
+            .map(|(id, _)| id.clone())
+            .collect()
+    }
+
+    /// Floats per sample for a model (`None` resolves the default) —
+    /// available without loading, from the registered batch config.
+    pub fn sample_len(&self, id: Option<&str>) -> Result<usize, SubmitError> {
+        let guard = self.lock();
+        let id = match id {
+            Some(s) => s.to_string(),
+            None => self
+                .default_id(&guard)
+                .ok_or_else(|| SubmitError::UnknownModel("(default)".to_string()))?,
+        };
+        guard
+            .models
+            .get(&id)
+            .map(|st| st.spec.batch.sample_len())
+            .ok_or(SubmitError::UnknownModel(id))
+    }
+
+    /// Largest per-sample float count across registered models — the
+    /// wire front-end sizes its frame cap from this.
+    pub fn max_sample_len(&self) -> usize {
+        self.lock().models.values().map(|st| st.spec.batch.sample_len()).max().unwrap_or(0)
+    }
+
+    /// Summed byte footprint of resident engines.
+    pub fn resident_bytes(&self) -> usize {
+        self.lock().resident_bytes
+    }
+
+    /// Resolve an id to its (possibly freshly loaded) pool and bump the
+    /// LRU clock. Returns drain tickets for any models the load evicted.
+    fn resolve(&self, id: Option<&str>) -> Result<(Arc<BatchServer>, Vec<DrainTicket>), SubmitError> {
+        let mut guard = self.lock();
+        let inner = &mut *guard;
+        if inner.shutting_down {
+            return Err(SubmitError::ShuttingDown);
+        }
+        let id = match id {
+            Some(s) => s.to_string(),
+            None => self
+                .default_id(inner)
+                .ok_or_else(|| SubmitError::UnknownModel("(default)".to_string()))?,
+        };
+        if !inner.models.contains_key(&id) {
+            return Err(SubmitError::UnknownModel(id));
+        }
+        let mut victims = Vec::new();
+        if inner.models[&id].server.is_none() {
+            // Lazy (re)load. The factory runs under the registry lock:
+            // concurrent first requests load once, and add/remove stay
+            // atomic against the load. Engines are compressed — loads
+            // are short next to the traffic they unblock.
+            let state = inner.models.get_mut(&id).expect("checked above");
+            let engine = (state.spec.factory)()
+                .map_err(|e| SubmitError::LoadFailed(format!("model {id:?}: {e:#}")))?;
+            let bytes = engine.model_size_bytes();
+            let server = Arc::new(BatchServer::start(engine, state.spec.batch.clone()));
+            state.server = Some(server);
+            state.bytes = bytes;
+            state.loads += 1;
+            inner.resident_bytes += bytes;
+            // Enforce the budget by evicting LRU residents — never the
+            // model just loaded, so one oversized model still serves.
+            while self.cfg.memory_budget_bytes > 0
+                && inner.resident_bytes > self.cfg.memory_budget_bytes
+            {
+                let victim = inner
+                    .models
+                    .iter()
+                    .filter(|(vid, st)| vid.as_str() != id && st.server.is_some())
+                    .min_by_key(|(_, st)| st.last_used)
+                    .map(|(vid, _)| vid.clone());
+                match victim {
+                    Some(vid) => victims.push(Self::detach(inner, &vid)),
+                    None => break,
+                }
+            }
+        }
+        inner.clock += 1;
+        let clock = inner.clock;
+        let state = inner.models.get_mut(&id).expect("checked above");
+        state.last_used = clock;
+        let server = Arc::clone(state.server.as_ref().expect("loaded above"));
+        Ok((server, victims))
+    }
+
+    /// Queue one sample for `id` (`None` routes to the default model),
+    /// lazily loading and budget-evicting as needed. A submitter that
+    /// catches a pool mid-eviction re-resolves — which hot-reloads the
+    /// model — so evictions never drop requests.
+    pub fn submit(&self, id: Option<&str>, sample: &[f32]) -> Result<Pending, SubmitError> {
+        let mut last_err: Option<anyhow::Error> = None;
+        for _ in 0..4 {
+            let (server, victims) = self.resolve(id)?;
+            self.drain(victims);
+            match server.submit(sample) {
+                Ok(pending) => return Ok(pending),
+                // Either a wrong-length sample (re-resolving returns the
+                // same live pool and the same error) or an eviction race
+                // (re-resolving reloads); the bounded loop serves both.
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(SubmitError::Rejected(
+            last_err.map(|e| e.to_string()).unwrap_or_else(|| "no pool accepted the request".into()),
+        ))
+    }
+
+    /// Submit and block for the logits — the in-process convenience path
+    /// (tests, benchmarks).
+    pub fn infer(&self, id: Option<&str>, sample: &[f32]) -> anyhow::Result<Vec<f32>> {
+        self.submit(id, sample).map_err(|e| anyhow::anyhow!("{e}"))?.wait()
+    }
+
+    /// Per-model counters: residency, byte footprint, load/eviction
+    /// counts, lifetime request totals, and the live incarnation's
+    /// serving snapshot (zeros while evicted).
+    pub fn stats_json(&self) -> Json {
+        // Snapshot (id, server?) pairs under the lock, read pool stats
+        // outside it (stats() takes the pool's own mutex).
+        let rows: Vec<(String, Option<Arc<BatchServer>>, usize, u64, u64, usize, usize)> = {
+            let guard = self.lock();
+            guard
+                .models
+                .iter()
+                .map(|(id, st)| {
+                    (
+                        id.clone(),
+                        st.server.clone(),
+                        st.bytes,
+                        st.loads,
+                        st.evictions,
+                        st.retired_requests,
+                        st.retired_batches,
+                    )
+                })
+                .collect()
+        };
+        let mut j = Json::obj();
+        for (id, server, bytes, loads, evictions, retired_req, _retired_batches) in rows {
+            let serving = server.as_ref().map(|s| s.stats()).unwrap_or_default();
+            let mut m = Json::obj();
+            m.set("resident", Json::from(server.is_some()))
+                .set("bytes", Json::from(bytes))
+                .set("loads", Json::from(loads as usize))
+                .set("evictions", Json::from(evictions as usize))
+                .set("requests_total", Json::from(retired_req + serving.requests))
+                .set("serving", serving.to_json());
+            j.set(&id, m);
+        }
+        j
+    }
+
+    /// Fleet roll-up in the single-model `ServingStats` shape: counts
+    /// (including retired incarnations) sum; `mean_*` weight by resident
+    /// request/batch counts; percentile fields take the max across
+    /// resident pools — a ceiling, not a merged distribution.
+    pub fn aggregate_stats(&self) -> ServingStats {
+        let rows: Vec<(Option<Arc<BatchServer>>, usize, usize)> = {
+            let guard = self.lock();
+            guard
+                .models
+                .values()
+                .map(|st| (st.server.clone(), st.retired_requests, st.retired_batches))
+                .collect()
+        };
+        let mut agg = ServingStats::default();
+        let (mut lat_weight, mut fwd_weight) = (0.0f64, 0.0f64);
+        for (server, retired_req, retired_batches) in rows {
+            agg.requests += retired_req;
+            agg.batches += retired_batches;
+            let Some(server) = server else { continue };
+            let s = server.stats();
+            agg.requests += s.requests;
+            agg.batches += s.batches;
+            agg.max_batch = agg.max_batch.max(s.max_batch);
+            agg.mean_latency_us += s.mean_latency_us * s.requests as f64;
+            lat_weight += s.requests as f64;
+            agg.mean_forward_us += s.mean_forward_us * s.batches as f64;
+            fwd_weight += s.batches as f64;
+            agg.throughput_rps += s.throughput_rps;
+            agg.p50_latency_us = agg.p50_latency_us.max(s.p50_latency_us);
+            agg.p90_latency_us = agg.p90_latency_us.max(s.p90_latency_us);
+            agg.p99_latency_us = agg.p99_latency_us.max(s.p99_latency_us);
+            agg.max_latency_us = agg.max_latency_us.max(s.max_latency_us);
+        }
+        if lat_weight > 0.0 {
+            agg.mean_latency_us /= lat_weight;
+        }
+        if fwd_weight > 0.0 {
+            agg.mean_forward_us /= fwd_weight;
+        }
+        if agg.batches > 0 {
+            agg.mean_batch = agg.requests as f64 / agg.batches as f64;
+        }
+        agg
+    }
+
+    /// Stop routing, drain every resident pool (queued requests are
+    /// answered), and leave the registry refusing new work.
+    pub fn shutdown(&self) {
+        let victims: Vec<DrainTicket> = {
+            let mut guard = self.lock();
+            let inner = &mut *guard;
+            inner.shutting_down = true;
+            let ids: Vec<String> = inner
+                .models
+                .iter()
+                .filter(|(_, st)| st.server.is_some())
+                .map(|(id, _)| id.clone())
+                .collect();
+            ids.iter().map(|id| Self::detach(inner, id)).collect()
+        };
+        self.drain(victims);
+    }
+}
+
+impl Drop for ModelRegistry {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::inference::WeightMode;
+    use crate::runtime::{ParamBundle, ParamSpec};
+    use crate::sparse::prox;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    /// Deterministic tiny MLP engine: same (width, seed) → bit-identical
+    /// weights, which is the factory contract hot-reload relies on.
+    fn tiny_engine(width: usize, seed: u64) -> Arc<Engine> {
+        let specs = vec![
+            ParamSpec::new("fc1_w", "fc_w", vec![width, 64], true),
+            ParamSpec::new("fc1_b", "fc_b", vec![width], false),
+            ParamSpec::new("fc2_w", "fc_w", vec![8, width], true),
+            ParamSpec::new("fc2_b", "fc_b", vec![8], false),
+        ];
+        let mut bundle = ParamBundle::he_init(&specs, seed);
+        for (s, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+            if s.prunable {
+                prox::soft_threshold_inplace(v, 0.05);
+            }
+        }
+        Arc::new(Engine::builder("mlp").bundle(&bundle).mode(WeightMode::Csr).build().unwrap())
+    }
+
+    fn spec(id: &str, width: usize, seed: u64) -> ModelSpec {
+        ModelSpec::new(
+            id,
+            Arc::new(move || Ok(tiny_engine(width, seed))),
+            BatchConfig::new(4, Duration::from_millis(1), (1, 8, 8)),
+        )
+    }
+
+    fn sample(seed: u64) -> Vec<f32> {
+        Rng::new(seed).normal_vec(64, 1.0)
+    }
+
+    #[test]
+    fn routes_by_id_and_default() {
+        let reg = ModelRegistry::with_models(
+            RegistryConfig { memory_budget_bytes: 0, default_model: Some("a".into()) },
+            vec![spec("a", 16, 1), spec("b", 16, 2)],
+        )
+        .unwrap();
+        let x = sample(10);
+        let ya = reg.infer(Some("a"), &x).unwrap();
+        let yb = reg.infer(Some("b"), &x).unwrap();
+        assert_ne!(ya, yb, "different seeds must serve different logits");
+        // Versionless requests land on the default.
+        assert_eq!(reg.infer(None, &x).unwrap(), ya);
+        // And the engines agree with a direct forward.
+        let direct = tiny_engine(16, 1)
+            .forward(&Tensor::new(vec![1, 1, 8, 8], x.clone()))
+            .unwrap();
+        assert_eq!(ya, direct.data);
+    }
+
+    #[test]
+    fn single_model_registry_defaults_without_config() {
+        let reg = ModelRegistry::with_models(RegistryConfig::default(), vec![spec("only", 16, 3)])
+            .unwrap();
+        assert_eq!(reg.default_model().as_deref(), Some("only"));
+        assert_eq!(reg.infer(None, &sample(11)).unwrap().len(), 8);
+    }
+
+    #[test]
+    fn unknown_model_and_missing_default_are_typed() {
+        let reg = ModelRegistry::with_models(
+            RegistryConfig::default(),
+            vec![spec("a", 16, 1), spec("b", 16, 2)],
+        )
+        .unwrap();
+        let x = sample(12);
+        assert!(matches!(reg.submit(Some("ghost"), &x), Err(SubmitError::UnknownModel(_))));
+        // Two models, no configured default: versionless has nowhere to go.
+        assert!(matches!(reg.submit(None, &x), Err(SubmitError::UnknownModel(_))));
+    }
+
+    #[test]
+    fn lazy_load_and_lru_eviction_under_budget() {
+        let bytes = tiny_engine(16, 1).model_size_bytes();
+        assert!(bytes > 0);
+        // Budget fits exactly two of the three identical-size models.
+        let reg = ModelRegistry::with_models(
+            RegistryConfig { memory_budget_bytes: 2 * bytes, default_model: None },
+            vec![spec("a", 16, 1), spec("b", 16, 2), spec("c", 16, 3)],
+        )
+        .unwrap();
+        assert!(reg.resident_models().is_empty(), "loading is lazy");
+        let x = sample(13);
+        reg.infer(Some("a"), &x).unwrap();
+        reg.infer(Some("b"), &x).unwrap();
+        assert_eq!(reg.resident_models(), vec!["a".to_string(), "b".to_string()]);
+        // Loading c exceeds the budget → evict the LRU resident (a).
+        reg.infer(Some("c"), &x).unwrap();
+        assert_eq!(reg.resident_models(), vec!["b".to_string(), "c".to_string()]);
+        // Touch b, then reload a: the LRU victim is now c.
+        reg.infer(Some("b"), &x).unwrap();
+        reg.infer(Some("a"), &x).unwrap();
+        assert_eq!(reg.resident_models(), vec!["a".to_string(), "b".to_string()]);
+        assert!(reg.resident_bytes() <= 2 * bytes);
+    }
+
+    #[test]
+    fn eviction_then_hot_reload_is_bit_identical() {
+        let reg =
+            ModelRegistry::with_models(RegistryConfig::default(), vec![spec("m", 24, 7)]).unwrap();
+        let x = sample(14);
+        let before = reg.infer(Some("m"), &x).unwrap();
+        assert!(reg.evict("m").unwrap());
+        assert!(reg.resident_models().is_empty());
+        // Next request lazily reloads through the deterministic factory.
+        let after = reg.infer(Some("m"), &x).unwrap();
+        assert_eq!(before, after);
+        // Counters saw both incarnations.
+        let stats = reg.stats_json().to_string_compact();
+        assert!(stats.contains("\"loads\": 2") || stats.contains("\"loads\":2"), "{stats}");
+        assert!(stats.contains("\"requests_total\": 2") || stats.contains("\"requests_total\":2"), "{stats}");
+    }
+
+    #[test]
+    fn eviction_mid_traffic_drops_nothing() {
+        let reg =
+            ModelRegistry::with_models(RegistryConfig::default(), vec![spec("m", 16, 5)]).unwrap();
+        let x = sample(15);
+        let want = reg.infer(Some("m"), &x).unwrap();
+        // Hammer the model from four threads while the main thread
+        // evicts it repeatedly: every request must come back with the
+        // same logits — reload races surface as Rejected/dropped errors.
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..50 {
+                        let got = reg.infer(Some("m"), &x).unwrap();
+                        assert_eq!(got, want);
+                    }
+                });
+            }
+            for _ in 0..10 {
+                reg.evict("m").unwrap();
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        });
+    }
+
+    #[test]
+    fn add_remove_while_serving() {
+        let reg = ModelRegistry::with_models(
+            RegistryConfig { memory_budget_bytes: 0, default_model: Some("a".into()) },
+            vec![spec("a", 16, 1)],
+        )
+        .unwrap();
+        let x = sample(16);
+        reg.infer(Some("a"), &x).unwrap();
+        reg.add_model(spec("late", 16, 9)).unwrap();
+        assert_eq!(reg.infer(Some("late"), &x).unwrap().len(), 8);
+        // Duplicate and malformed registrations are refused.
+        assert!(reg.add_model(spec("late", 16, 9)).is_err());
+        assert!(reg
+            .add_model(ModelSpec::new(
+                "",
+                Arc::new(|| Ok(tiny_engine(16, 1))),
+                BatchConfig::new(1, Duration::from_millis(1), (1, 8, 8)),
+            ))
+            .is_err());
+        reg.remove_model("late").unwrap();
+        assert!(matches!(reg.submit(Some("late"), &x), Err(SubmitError::UnknownModel(_))));
+        assert!(reg.remove_model("late").is_err());
+        // The surviving model is untouched.
+        reg.infer(Some("a"), &x).unwrap();
+    }
+
+    #[test]
+    fn load_failure_is_reported_not_cached() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let attempts2 = Arc::clone(&attempts);
+        let flaky: EngineFactory = Arc::new(move || {
+            // First attempt fails (checkpoint not there yet), later ones
+            // succeed — the registry must retry the factory per request.
+            if attempts2.fetch_add(1, Ordering::SeqCst) == 0 {
+                anyhow::bail!("checkpoint missing")
+            }
+            Ok(tiny_engine(16, 4))
+        });
+        let reg = ModelRegistry::with_models(
+            RegistryConfig::default(),
+            vec![ModelSpec::new(
+                "m",
+                flaky,
+                BatchConfig::new(2, Duration::from_millis(1), (1, 8, 8)),
+            )],
+        )
+        .unwrap();
+        let x = sample(17);
+        match reg.submit(Some("m"), &x) {
+            Err(SubmitError::LoadFailed(msg)) => assert!(msg.contains("checkpoint missing"), "{msg}"),
+            other => panic!("expected LoadFailed, got {:?}", other.map(|_| ())),
+        }
+        reg.infer(Some("m"), &x).unwrap();
+        assert_eq!(attempts.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn aggregate_and_shutdown() {
+        let reg = ModelRegistry::with_models(
+            RegistryConfig::default(),
+            vec![spec("a", 16, 1), spec("b", 16, 2)],
+        )
+        .unwrap();
+        let x = sample(18);
+        for _ in 0..3 {
+            reg.infer(Some("a"), &x).unwrap();
+        }
+        reg.infer(Some("b"), &x).unwrap();
+        let agg = reg.aggregate_stats();
+        assert_eq!(agg.requests, 4);
+        assert!(agg.batches >= 2);
+        assert!(agg.mean_latency_us > 0.0);
+        reg.shutdown();
+        assert!(matches!(reg.submit(Some("a"), &x), Err(SubmitError::ShuttingDown)));
+        // Retired counts survive shutdown in the roll-up.
+        assert_eq!(reg.aggregate_stats().requests, 4);
+    }
+}

@@ -17,9 +17,12 @@
 //! logits are bit-identical whether it was served alone or inside any
 //! micro-batch (`tests/property.rs::prop_batch_server_matches_per_sample_forward`).
 //! The one exception is models whose forward uses *batch statistics*
-//! (the `resnet_s` batch-norm path): their logits depend on batch
-//! composition, so [`BatchServer::start`] pins `max_batch` to 1 for them
-//! (`Engine::uses_batch_stats`) instead of trusting the caller.
+//! (legacy batch-norm bundles without running-stat leaves): their logits
+//! depend on batch composition, so [`BatchServer::start`] pins
+//! `max_batch` to 1 for them (`Engine::uses_batch_stats`) instead of
+//! trusting the caller. Checkpoints carrying folded running stats wire
+//! inference-mode BN, which is elementwise — `resnet-s` trained by the
+//! native backend coalesces like any other model.
 //!
 //! Failure isolation: one bad batch must never take the server down. A
 //! forward that returns an error — or panics, or hands back a tensor
@@ -159,8 +162,10 @@ pub struct BatchServer {
 impl BatchServer {
     /// Spawn the coalescing worker around a shared engine. For engines
     /// whose forward uses batch statistics (`Engine::uses_batch_stats`,
-    /// the `resnet_s` batch-norm path) the micro-batch size is pinned to
-    /// 1 — coalescing would silently change per-sample logits.
+    /// legacy BN bundles without running stats) the micro-batch size is
+    /// pinned to 1 — coalescing would silently change per-sample logits.
+    /// Inference-mode BN folds running stats per element, so those
+    /// engines keep the configured ceiling.
     pub fn start(engine: Arc<Engine>, cfg: BatchConfig) -> BatchServer {
         let mut cfg = cfg;
         if engine.uses_batch_stats() {
@@ -373,7 +378,7 @@ mod tests {
                 prox::soft_threshold_inplace(v, 0.05);
             }
         }
-        Engine::from_bundle_mode("mlp", &bundle, WeightMode::Csr).unwrap()
+        Engine::builder("mlp").bundle(&bundle).mode(WeightMode::Csr).build().unwrap()
     }
 
     #[test]

@@ -9,8 +9,8 @@
 //! proxcomp quantize --checkpoint ckpt.pxcp [--out q.pxcp] [--codebook-size 16]
 //! proxcomp infer    --checkpoint ckpt.pxcp [--sparse|--quantized] [--batch 64]
 //! proxcomp report   --checkpoint ckpt.pxcp        # layer table + size
-//! proxcomp serve    --model lenet-s --addr 127.0.0.1:7733   # framed-TCP server
-//! proxcomp loadtest --model lenet-s --clients 100 --duration 10s
+//! proxcomp serve    --models mlp-s,lenet-s --addr 127.0.0.1:7733  # framed-TCP fleet
+//! proxcomp loadtest --mix mlp-s,lenet-s --clients 100 --duration 10s
 //! proxcomp bench-compare --baseline BENCH_BASELINE.json \
 //!                   --current reports/bench_kernels.json  # CI perf gate
 //! proxcomp info                                   # manifest summary
@@ -304,8 +304,11 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         None
     };
     let engine = Arc::new(match &quant_model {
-        Some(qm) => Engine::from_quantized(&cfg.model, qm)?,
-        None => Engine::from_bundle_mode(&cfg.model, &trainer.state.params, WeightMode::Auto)?,
+        Some(qm) => Engine::builder(&cfg.model).quantized(qm).build()?,
+        None => Engine::builder(&cfg.model)
+            .bundle(&trainer.state.params)
+            .mode(WeightMode::Auto)
+            .build()?,
     });
     let formats = engine.layer_formats();
     let formats_text =
@@ -469,8 +472,10 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     // Trained quantization (per-code gradient descent on the centroids)
     // needs the native backend's graph families.
     if finetune_steps > 0 {
-        let native_family =
-            model.as_deref().map(|m| m.starts_with("mlp") || m.starts_with("lenet")).unwrap_or(false);
+        let native_family = model
+            .as_deref()
+            .map(|m| m.starts_with("mlp") || m.starts_with("lenet") || m.starts_with("resnet"))
+            .unwrap_or(false);
         if native_family {
             let data = data::generate(&dataset_name, examples, seed)?;
             let rep = quant::finetune_codebooks(&mut qm, &data, finetune_steps, batch, finetune_lr, seed)?;
@@ -479,7 +484,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
                 rep.steps, rep.loss_first, rep.loss_last
             );
         } else {
-            println!("\n[skip] codebook fine-tune needs a native model family (mlp*/lenet*)");
+            println!("\n[skip] codebook fine-tune needs a native model family (mlp*/lenet*/resnet*)");
         }
     }
 
@@ -487,8 +492,9 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     // engine-servable model.
     if let Some(model) = &model {
         let dataset = data::generate(&dataset_name, examples, seed ^ 0x7E57_DA7A)?;
-        let base = Engine::from_bundle(model, &ck.params, true)?;
-        let qeng = Engine::from_quantized(model, &qm)?;
+        use proxcomp::inference::WeightMode;
+        let base = Engine::builder(model).bundle(&ck.params).mode(WeightMode::Csr).build()?;
+        let qeng = Engine::builder(model).quantized(&qm).build()?;
         let acc_f32 = base.accuracy(&dataset, 64)?;
         let acc_q = qeng.accuracy(&dataset, 64)?;
         println!(
@@ -537,9 +543,11 @@ fn cmd_infer(args: &Args) -> Result<()> {
             ck.is_quantized(),
             "--quantized needs a quantized (v2) checkpoint; run `proxcomp quantize` first"
         );
-        Engine::from_quantized(&model, &ck.to_quantized_model())?
+        Engine::builder(&model).quantized(&ck.to_quantized_model()).build()?
     } else {
-        Engine::from_bundle(&model, &ck.params, sparse)?
+        use proxcomp::inference::WeightMode;
+        let mode = if sparse { WeightMode::Csr } else { WeightMode::Dense };
+        Engine::builder(&model).bundle(&ck.params).mode(mode).build()?
     };
     let dataset = data::generate(&dataset_name, examples, 0x7E57_DA7A)?;
     info!(
@@ -607,7 +615,7 @@ fn synthetic_engine(model: &str, seed: u64, prune: f32) -> Result<(Engine, (usiz
             prox::soft_threshold_inplace(v, prune);
         }
     }
-    let engine = Engine::from_bundle_mode(model, &bundle, WeightMode::Csr)?;
+    let engine = Engine::builder(model).bundle(&bundle).mode(WeightMode::Csr).build()?;
     Ok((engine, shape))
 }
 
@@ -616,13 +624,23 @@ fn model_input_shape(shape: &[usize]) -> Result<(usize, usize, usize)> {
     Ok((shape[0], shape[1], shape[2]))
 }
 
-/// Serve a synthetic compressed engine over the framed-TCP protocol
+/// Serve synthetic compressed engines over the framed-TCP protocol
 /// (`inference::net`) until a client sends a SHUTDOWN frame, then drain
 /// in-flight requests and print/write the final serving stats.
+///
+/// `--models a,b,c` serves a fleet through a `ModelRegistry` (the first
+/// id is the v1-protocol default; clients route with v2 `INFER_MODEL`
+/// frames); `--model x` is shorthand for a single-model fleet. With
+/// `--memory-budget N` (bytes), engines load lazily on first request and
+/// the least-recently-used model is drained and evicted when the
+/// resident set would exceed the budget.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use proxcomp::inference::{BatchConfig, NetConfig, NetServer};
+    use proxcomp::inference::{
+        BatchConfig, EngineFactory, ModelRegistry, ModelSpec, NetConfig, NetServer, RegistryConfig,
+    };
     use std::sync::Arc;
     use std::time::Duration;
+    let models_arg = args.get_str("models");
     let model = args.str_or("model", "lenet-s");
     let seed = args.u64_or("seed", 1)?;
     let prune = args.f32_or("prune", 0.05)?;
@@ -632,18 +650,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let max_conns = args.usize_or("max-conns", 256)?;
     let max_inflight = args.usize_or("max-inflight", 512)?;
     let request_timeout = args.duration_or("request-timeout", Duration::from_secs(5))?;
+    let memory_budget = args.usize_or("memory-budget", 0)?;
     let stats_out = args.get_str("stats-out");
     args.finish()?;
 
-    let (engine, shape) = synthetic_engine(&model, seed, prune)?;
-    let batch_cfg = BatchConfig::new(max_batch, max_wait, shape);
+    let ids: Vec<String> = match &models_arg {
+        Some(list) => {
+            list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+        }
+        None => vec![model.clone()],
+    };
+    anyhow::ensure!(!ids.is_empty(), "--models needs at least one model id");
+    let registry = Arc::new(ModelRegistry::new(RegistryConfig {
+        memory_budget_bytes: memory_budget,
+        default_model: Some(ids[0].clone()),
+    }));
+    let manifest = Manifest::native();
+    for id in &ids {
+        let shape = model_input_shape(&manifest.model(id)?.input_shape)?;
+        let id2 = id.clone();
+        let factory: EngineFactory = Arc::new(move || {
+            let (engine, _) = synthetic_engine(&id2, seed, prune)?;
+            Ok(Arc::new(engine))
+        });
+        registry.add_model(ModelSpec::new(
+            id,
+            factory,
+            BatchConfig::new(max_batch, max_wait, shape),
+        ))?;
+    }
     let net_cfg = NetConfig { addr, max_conns, max_inflight, request_timeout, ..NetConfig::default() };
-    let mut server = NetServer::start(Arc::new(engine), batch_cfg, net_cfg)?;
+    let mut server = NetServer::start_registry(Arc::clone(&registry), net_cfg)?;
     println!(
-        "[serve] {model} (seed {seed}, prune {prune}) on {} — {} f32s/sample, max_batch {max_batch}, \
-         max_inflight {max_inflight}; a SHUTDOWN frame (`loadtest --stop-server`) drains and exits",
+        "[serve] {} (seed {seed}, prune {prune}, default {}) on {} — max_batch {max_batch}, \
+         max_inflight {max_inflight}, memory budget {}; a SHUTDOWN frame \
+         (`loadtest --stop-server`) drains and exits",
+        ids.join(", "),
+        ids[0],
         server.local_addr(),
-        shape.0 * shape.1 * shape.2
+        if memory_budget == 0 { "unlimited".to_string() } else { format!("{memory_budget} B") }
     );
     server.wait_shutdown_requested();
     server.shutdown();
@@ -657,6 +702,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         stats.p99_latency_us,
         stats.max_latency_us
     );
+    let models_json = registry.stats_json();
+    if let Some(rows) = models_json.as_obj() {
+        for (id, row) in rows {
+            let n = |k: &str| row.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+            println!(
+                "  model {id:<12} requests {} loads {} evictions {}",
+                n("requests_total") as u64,
+                n("loads") as u64,
+                n("evictions") as u64
+            );
+        }
+    }
     if let Some(path) = stats_out {
         std::fs::write(&path, server.stats_json().to_string_pretty())
             .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
@@ -670,12 +727,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// per-error-code counts, and (unless `--no-verify`) a bit-exactness
 /// check of every served response against a local twin engine. Exits
 /// nonzero on any bit mismatch — the determinism contract over the wire.
+///
+/// `--mix a,b,c` drives a multi-model fleet: each client round-robins
+/// v2 `INFER_MODEL` requests across the listed models (each verified
+/// against its own local twin); without `--mix` it sends v1 `INFER`
+/// frames to the server's default model. `overloaded` responses are
+/// retried in place with exponential backoff up to `--retries` per
+/// request (reported as retries, not errors).
 fn cmd_loadtest(args: &Args) -> Result<()> {
-    use proxcomp::inference::loadgen::{self, LoadConfig};
+    use proxcomp::inference::loadgen::{self, LoadConfig, LoadTarget};
     use proxcomp::inference::{ErrorCode, NetClient};
     use std::sync::Arc;
     use std::time::Duration;
     let addr = args.str_or("addr", "127.0.0.1:7733");
+    let mix = args.get_str("mix");
     let model = args.str_or("model", "lenet-s");
     let seed = args.u64_or("seed", 1)?;
     let prune = args.f32_or("prune", 0.05)?;
@@ -683,38 +748,65 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     let duration = args.duration_or("duration", Duration::from_secs(10))?;
     let load_seed = args.u64_or("load-seed", 42)?;
     let connect_timeout = args.duration_or("connect-timeout", Duration::from_secs(10))?;
+    let retries = args.usize_or("retries", 8)? as u32;
     let no_verify = args.flag("no-verify");
     let stop_server = args.flag("stop-server");
     let out = args.get_str("out");
     args.finish()?;
 
-    let (verify, shape) = if no_verify {
-        let manifest = Manifest::native();
-        (None, model_input_shape(&manifest.model(&model)?.input_shape)?)
-    } else {
-        let (engine, shape) = synthetic_engine(&model, seed, prune)?;
-        (Some(Arc::new(engine)), shape)
+    let manifest = Manifest::native();
+    let target_for = |id: &str, routed: bool| -> Result<LoadTarget> {
+        let (verify, shape) = if no_verify {
+            (None, model_input_shape(&manifest.model(id)?.input_shape)?)
+        } else {
+            let (engine, shape) = synthetic_engine(id, seed, prune)?;
+            (Some(Arc::new(engine)), shape)
+        };
+        Ok(LoadTarget::new(if routed { Some(id) } else { None }, shape, verify))
+    };
+    let (targets, label) = match &mix {
+        Some(list) => {
+            let ids: Vec<&str> =
+                list.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+            anyhow::ensure!(!ids.is_empty(), "--mix needs at least one model id");
+            let targets =
+                ids.iter().map(|id| target_for(id, true)).collect::<Result<Vec<_>>>()?;
+            (targets, "mix".to_string())
+        }
+        None => (vec![target_for(&model, false)?], model.clone()),
     };
     let cfg = LoadConfig {
         addr: addr.clone(),
         clients,
         duration,
-        input_shape: shape,
+        targets,
         seed: load_seed,
         connect_timeout,
-        verify,
+        retry_budget: retries,
+        retry_base: Duration::from_micros(200),
         fetch_server_stats: true,
     };
     println!(
-        "[loadtest] {clients} closed-loop clients × {:.1}s against {addr} ({model}, {} f32s/sample)",
+        "[loadtest] {clients} closed-loop clients × {:.1}s against {addr} ({} target(s), \
+         retry budget {retries})",
         duration.as_secs_f64(),
-        shape.0 * shape.1 * shape.2
+        cfg.targets.len()
     );
     let report = loadgen::run(&cfg)?;
     println!(
-        "  ok {} in {:.1}s -> saturation throughput {:.1} req/s",
-        report.ok, report.elapsed_secs, report.throughput_rps
+        "  ok {} in {:.1}s -> saturation throughput {:.1} req/s ({} overloaded retries)",
+        report.ok, report.elapsed_secs, report.throughput_rps, report.retries
     );
+    for m in &report.per_model {
+        println!(
+            "  model {:<12} ok {} verified {} mismatches {} retries {}",
+            m.model.as_deref().unwrap_or("(default)"),
+            m.ok,
+            m.verified,
+            m.mismatches,
+            m.retries
+        );
+    }
     println!(
         "  latency  mean {:.0}µs  p50 {:.0}µs  p90 {:.0}µs  p99 {:.0}µs  max {:.0}µs",
         report.mean_latency_us,
@@ -745,7 +837,7 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
             println!("  wrote {path}");
         }
         None => {
-            let p = metrics::write_json_report(&format!("loadtest_{model}.json"), &json)?;
+            let p = metrics::write_json_report(&format!("loadtest_{label}.json"), &json)?;
             println!("  wrote {}", p.display());
         }
     }
@@ -860,20 +952,28 @@ SUBCOMMANDS
   infer    run a checkpoint through the rust inference engine
            --checkpoint F [--sparse | --quantized] [--batch N]
   report   layer-wise compression table for a checkpoint
-  serve    framed-TCP inference server over BatchServer (see README
-           \"Network serving\" for the wire format + error taxonomy)
-           --model lenet-s --seed 1 --prune 0.05 --addr 127.0.0.1:7733
-           --max-batch 8 --max-wait 2ms --max-conns 256
-           --max-inflight 512 --request-timeout 5s [--stats-out F]
+  serve    framed-TCP multi-model inference fleet over ModelRegistry
+           (see README \"Multi-model serving\" for the wire format +
+           error taxonomy)
+           --models mlp-s,lenet-s,resnet-s (first id is the v1 default;
+           --model x is shorthand for one model) --seed 1 --prune 0.05
+           --addr 127.0.0.1:7733 --max-batch 8 --max-wait 2ms
+           --max-conns 256 --max-inflight 512 --request-timeout 5s
+           --memory-budget N (bytes; 0 = unlimited — lazy-loads engines
+           and LRU-evicts over budget) [--stats-out F]
            runs until a client sends SHUTDOWN, then drains in-flight
-           requests and reports p50/p99 latency from the server side
+           requests and reports per-model + aggregate serving stats
   loadtest closed-loop load generator against a live serve
            --addr 127.0.0.1:7733 --clients 100 --duration 10s
-           --model lenet-s --seed 1 --prune 0.05 (must match serve so
-           the bit-exactness verify can rebuild the same engine;
-           --no-verify skips it) [--out F] [--stop-server]
-           reports p50/p99 latency, saturation throughput, and
-           per-error-code counts; exits nonzero on any bit mismatch
+           --mix mlp-s,lenet-s,resnet-s (v2 model-routed round-robin) or
+           --model lenet-s (v1 default-model frames)
+           --seed 1 --prune 0.05 (must match serve so the bit-exactness
+           verify can rebuild the same engines; --no-verify skips it)
+           --retries 8 (per-request overloaded retry budget with
+           exponential backoff) [--out F] [--stop-server]
+           reports p50/p99 latency, saturation throughput, retries, and
+           per-model + per-error-code counts; exits nonzero on any bit
+           mismatch
   bench-compare  CI perf gate: compare a bench_kernels JSON against the
            committed baseline (calibration-normalized per-group geomean)
            --baseline BENCH_BASELINE.json --current reports/bench_kernels.json

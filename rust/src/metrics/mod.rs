@@ -349,6 +349,10 @@ mod tests {
             mean_latency_us: 120.0,
             mean_forward_us: 90.0,
             throughput_rps: 5000.0,
+            p50_latency_us: 110.0,
+            p90_latency_us: 200.0,
+            p99_latency_us: 240.0,
+            max_latency_us: 250.0,
         };
         let text = s.to_json().to_string_compact();
         assert!(text.contains("\"requests\""));

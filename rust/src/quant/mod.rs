@@ -46,7 +46,7 @@ pub enum QuantLeaf {
 }
 
 /// A model with codebook-quantized prunable leaves — what checkpoint v2
-/// persists and `Engine::from_quantized` serves.
+/// persists and `Engine::builder(..).quantized(..)` serves.
 #[derive(Debug, Clone)]
 pub struct QuantizedModel {
     pub specs: Vec<ParamSpec>,

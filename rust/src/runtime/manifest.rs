@@ -13,7 +13,9 @@ use crate::util::json::{self, Json};
 #[derive(Debug, Clone)]
 pub struct ParamSpec {
     pub name: String,
-    /// "conv_w" | "conv_b" | "fc_w" | "fc_b" | "bn_scale" | "bn_bias".
+    /// "conv_w" | "conv_b" | "fc_w" | "fc_b" | "bn_scale" | "bn_bias" |
+    /// "bn_mean" | "bn_var" (the last two are running stats: not
+    /// gradient-trained, EMA-updated by the native backend).
     pub kind: String,
     pub shape: Vec<usize>,
     pub prunable: bool,
@@ -179,7 +181,11 @@ impl Manifest {
     ///   backing the conv rows of Table 3 / Figs. 6-8 offline;
     /// * `lenet-s` — a downscaled LeNet (conv 6@3×3 → pool → conv
     ///   12@3×3 → pool → fc 48→32→10) on the 16×16 `synth-blobs16`
-    ///   set, the conv twin of `mlp-s` for e2e tests and CI smoke.
+    ///   set, the conv twin of `mlp-s` for e2e tests and CI smoke;
+    /// * `resnet-s` — a downscaled residual net (3×3 stem conv + BN,
+    ///   one 8-channel residual block with inference-mode batch norm,
+    ///   global average pool, fc 8→10) on `synth-blobs16` — the
+    ///   batch-norm/residual twin for multi-model serving tests.
     pub fn native() -> Manifest {
         use crate::runtime::native;
         let mut models = BTreeMap::new();
@@ -216,6 +222,10 @@ impl Manifest {
                 16,
                 32,
             ),
+        );
+        models.insert(
+            "resnet-s".to_string(),
+            native::resnet_entry("resnet-s", &[1, 16, 16], 8, 1, 10, "synth-blobs16", 16, 32),
         );
         Manifest { dir: PathBuf::from("native"), models }
     }

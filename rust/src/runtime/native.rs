@@ -32,8 +32,13 @@
 //!
 //! The executor reconstructs the network from the literals themselves
 //! (4-D leaves are conv filter banks, 2-D leaves fc weights, the 1-D
-//! leaf after each is its bias), so any geometry registered by the
-//! native manifest works without recompilation.
+//! leaf after each is its bias; a batch-norm quadruple after a conv
+//! bias switches the graph to the engine's residual `resnet` wiring —
+//! same-convs, frozen-stats batch norm, save/add residual markers and
+//! a global-average-pool head), so any geometry registered by the
+//! native manifest works without recompilation. Batch-norm running
+//! stats are stop-gradient: they skip every optimizer and move only
+//! through the [`BN_MOMENTUM`] EMA after each training step.
 
 use std::path::{Path, PathBuf};
 
@@ -54,6 +59,11 @@ pub const EPS: f32 = 1e-8;
 pub const RMS_RHO: f32 = 0.9;
 /// SGD-momentum coefficient for the MM L-step.
 pub const MM_MOMENTUM: f32 = 0.9;
+/// EMA momentum for batch-norm running statistics: after each training
+/// step, `stat ← (1 − m)·stat + m·batch_stat`. The stats are *frozen*
+/// in the gradient path (stop-gradient, zero grads) — they only move
+/// through this EMA, and inference folds them as constants.
+pub const BN_MOMENTUM: f32 = 0.1;
 
 /// All step names the native backend registers and executes.
 pub const NATIVE_STEPS: [&str; 7] =
@@ -123,6 +133,49 @@ pub fn lenet_entry(
         c = o;
     }
     push_fc_params(&mut params, c * h * w, hidden, num_classes);
+    entry_from_params(name, dataset, input_shape, num_classes, train_batch, eval_batch, params)
+}
+
+/// Build a native-backend residual conv model entry with the `resnet`
+/// stage structure the serving engine wires: a 3×3 same-conv stem
+/// (stride 1, pad 1) with batch norm and ReLU, then `blocks` two-conv
+/// residual blocks at a constant `width`, then global average pooling
+/// and a linear head. Every conv carries a batch-norm quadruple
+/// (`{bn}_scale/bias/mean/var`, all 1-D of length `width`); the running
+/// mean/var leaves are EMA statistics, not gradient-trained (see
+/// [`BN_MOMENTUM`]). Leaf names follow the engine's resnet wiring:
+/// stem `conv1`/`bn1`, block `bi` leaves `conv1-{bi}-{1,2}` /
+/// `bn1-{bi}-{1,2}`, head `fc1`. Conv filters and the fc head are
+/// prunable; biases and BN leaves are not.
+pub fn resnet_entry(
+    name: &str,
+    input_shape: &[usize],
+    width: usize,
+    blocks: usize,
+    num_classes: usize,
+    dataset: &str,
+    train_batch: usize,
+    eval_batch: usize,
+) -> ModelEntry {
+    assert_eq!(input_shape.len(), 3, "conv input shape must be (C, H, W)");
+    assert!(blocks >= 1, "resnet needs at least one residual block");
+    let mut params = Vec::new();
+    let unit = |params: &mut Vec<ParamSpec>, conv: &str, bn: &str, ci: usize| {
+        params.push(ParamSpec::new(&format!("{conv}_w"), "conv_w", vec![width, ci, 3, 3], true));
+        params.push(ParamSpec::new(&format!("{conv}_b"), "conv_b", vec![width], false));
+        for (suffix, kind) in
+            [("scale", "bn_scale"), ("bias", "bn_bias"), ("mean", "bn_mean"), ("var", "bn_var")]
+        {
+            params.push(ParamSpec::new(&format!("{bn}_{suffix}"), kind, vec![width], false));
+        }
+    };
+    unit(&mut params, "conv1", "bn1", input_shape[0]);
+    for bi in 1..=blocks {
+        unit(&mut params, &format!("conv1-{bi}-1"), &format!("bn1-{bi}-1"), width);
+        unit(&mut params, &format!("conv1-{bi}-2"), &format!("bn1-{bi}-2"), width);
+    }
+    params.push(ParamSpec::new("fc1_w", "fc_w", vec![num_classes, width], true));
+    params.push(ParamSpec::new("fc1_b", "fc_b", vec![num_classes], false));
     entry_from_params(name, dataset, input_shape, num_classes, train_batch, eval_batch, params)
 }
 
@@ -576,21 +629,39 @@ pub const POOL: usize = 2;
 /// wiring: valid convolution, unit stride).
 const CONV_SPEC: ConvSpec = ConvSpec { stride: 1, pad: 0 };
 
-/// One executable stage decoded from the leaf shapes: a 4-D leaf is a
-/// conv filter bank (its 1-D bias follows; a 2×2 max-pool follows the
-/// conv, per the engine's `lenet` graph), a 2-D leaf a fully-connected
-/// weight (ReLU after every fc but the head). `w`/`b` index the flat
-/// leaf list.
+/// One executable stage decoded from the leaf shapes. In the `lenet`
+/// family a 4-D leaf is a conv filter bank (its 1-D bias follows; a
+/// 2×2 max-pool follows the conv) and a 2-D leaf a fully-connected
+/// weight (ReLU after every fc but the head). When a conv's bias is
+/// followed by a batch-norm quadruple (four 1-D leaves of the conv's
+/// output width: scale, bias, mean, var) the leaf list describes the
+/// engine's `resnet` graph instead: same-convs without pooling, explicit
+/// BatchNorm/Relu stages, residual save/add markers around each two-conv
+/// block and a global-average-pool before the head. All fields index the
+/// flat leaf list.
 #[derive(Debug, Clone, Copy)]
 enum Stage {
-    Conv { w: usize, b: usize, o: usize, c: usize, kh: usize, kw: usize },
+    Conv { w: usize, b: usize, o: usize, c: usize, kh: usize, kw: usize, spec: ConvSpec, pool: bool },
+    BatchNorm { scale: usize, bias: usize, mean: usize, var: usize, c: usize },
+    Relu,
+    SaveResidual,
+    AddResidual,
+    GlobalAvgPool,
     Fc { w: usize, b: usize, out: usize, inp: usize },
 }
 
-/// Pair `(weight, bias)` leaves into the conv/pool/fc stage list.
+/// One `(weight, bias[, bn quadruple])` unit scanned from the leaf list.
+struct LeafUnit {
+    w: usize,
+    conv: bool,
+    bn: Option<[usize; 4]>,
+}
+
+/// Pair `(weight, bias)` leaves into the conv/pool/fc stage list — or,
+/// when batch-norm quadruples are present, the residual stage graph.
 fn build_stages(leaves: &[Leaf]) -> anyhow::Result<Vec<Stage>> {
-    let mut stages = Vec::new();
-    let mut seen_fc = false;
+    // Scan the flat leaf list into structural units first.
+    let mut units: Vec<LeafUnit> = Vec::new();
     let mut i = 0;
     while i < leaves.len() {
         let w = &leaves[i];
@@ -602,28 +673,101 @@ fn build_stages(leaves: &[Leaf]) -> anyhow::Result<Vec<Stage>> {
             i + 1,
             b.shape
         );
-        match w.shape.len() {
-            4 => {
-                anyhow::ensure!(!seen_fc, "leaf {i}: conv leaf after an fc leaf");
-                stages.push(Stage::Conv {
-                    w: i,
-                    b: i + 1,
-                    o: w.shape[0],
-                    c: w.shape[1],
-                    kh: w.shape[2],
-                    kw: w.shape[3],
-                });
-            }
-            2 => {
-                seen_fc = true;
-                stages.push(Stage::Fc { w: i, b: i + 1, out, inp: w.shape[1] });
-            }
+        let conv = match w.shape.len() {
+            4 => true,
+            2 => false,
             other => anyhow::bail!("leaf {i}: expected a 2-D fc or 4-D conv weight, got rank {other}"),
-        }
-        i += 2;
+        };
+        // A conv bias followed by four 1-D leaves of the output width is
+        // a batch-norm quadruple (scale, bias, mean, var) — legacy
+        // models never put 1-D leaves there (the next leaf is always the
+        // next stage's 2-D/4-D weight).
+        let bn = if conv
+            && i + 5 < leaves.len()
+            && (2..6).all(|k| leaves[i + k].shape.len() == 1 && leaves[i + k].shape[0] == out)
+        {
+            Some([i + 2, i + 3, i + 4, i + 5])
+        } else {
+            None
+        };
+        units.push(LeafUnit { w: i, conv, bn });
+        i += if bn.is_some() { 6 } else { 2 };
     }
-    anyhow::ensure!(!stages.is_empty(), "no parameter leaves");
-    anyhow::ensure!(matches!(stages.last(), Some(Stage::Fc { .. })), "model head must be fully-connected");
+    anyhow::ensure!(!units.is_empty(), "no parameter leaves");
+    let first_fc = units.iter().position(|u| !u.conv).unwrap_or(units.len());
+    for (ui, u) in units.iter().enumerate() {
+        anyhow::ensure!(!(u.conv && ui > first_fc), "leaf {}: conv leaf after an fc leaf", u.w);
+    }
+    anyhow::ensure!(!units.last().unwrap().conv, "model head must be fully-connected");
+
+    let has_bn = units.iter().any(|u| u.bn.is_some());
+    let mut stages = Vec::new();
+    if has_bn {
+        // Residual (resnet) graph: stem conv/bn/relu, then two-conv
+        // residual blocks, then global-average-pool and the fc chain.
+        let conv_units = &units[..first_fc];
+        anyhow::ensure!(
+            conv_units.iter().all(|u| u.bn.is_some()),
+            "batch-norm models require a bn quadruple on every conv leaf"
+        );
+        anyhow::ensure!(
+            conv_units.len() % 2 == 1,
+            "residual graph needs an odd conv count (stem + 2·blocks), got {}",
+            conv_units.len()
+        );
+        let stem_o = leaves[conv_units[0].w].shape[0];
+        for (ui, u) in conv_units.iter().enumerate() {
+            let ws = &leaves[u.w].shape;
+            let (o, c, kh, kw) = (ws[0], ws[1], ws[2], ws[3]);
+            anyhow::ensure!(kh == kw && kh % 2 == 1, "leaf {}: resnet convs must be odd square kernels", u.w);
+            anyhow::ensure!(o == stem_o, "leaf {}: resnet conv width {o} != stem width {stem_o}", u.w);
+            if ui > 0 {
+                anyhow::ensure!(c == stem_o, "leaf {}: resnet conv fan-in {c} != width {stem_o}", u.w);
+            }
+            let [scale, bias, mean, var] = u.bn.unwrap();
+            // Residual blocks start on every odd unit (stem is unit 0).
+            if ui % 2 == 1 {
+                stages.push(Stage::SaveResidual);
+            }
+            stages.push(Stage::Conv {
+                w: u.w,
+                b: u.w + 1,
+                o,
+                c,
+                kh,
+                kw,
+                spec: ConvSpec { stride: 1, pad: (kh - 1) / 2 },
+                pool: false,
+            });
+            stages.push(Stage::BatchNorm { scale, bias, mean, var, c: o });
+            if ui == 0 || ui % 2 == 1 {
+                // Stem and each block's first conv: plain ReLU. Each
+                // block's second conv ReLUs inside AddResidual instead.
+                stages.push(Stage::Relu);
+            } else {
+                stages.push(Stage::AddResidual);
+            }
+        }
+        stages.push(Stage::GlobalAvgPool);
+    } else {
+        for u in &units[..first_fc] {
+            let ws = &leaves[u.w].shape;
+            stages.push(Stage::Conv {
+                w: u.w,
+                b: u.w + 1,
+                o: ws[0],
+                c: ws[1],
+                kh: ws[2],
+                kw: ws[3],
+                spec: CONV_SPEC,
+                pool: true,
+            });
+        }
+    }
+    for u in &units[first_fc..] {
+        let ws = &leaves[u.w].shape;
+        stages.push(Stage::Fc { w: u.w, b: u.w + 1, out: ws[0], inp: ws[1] });
+    }
     for pair in stages.windows(2) {
         match (pair[0], pair[1]) {
             (Stage::Fc { out, .. }, Stage::Fc { inp, .. }) => {
@@ -646,6 +790,20 @@ fn head_classes(stages: &[Stage]) -> usize {
         Some(Stage::Fc { out, .. }) => *out,
         _ => 0,
     }
+}
+
+/// Leaf indices of batch-norm running statistics (mean/var): frozen in
+/// the gradient path, excluded from every optimizer and the MM pull,
+/// EMA-updated instead (see [`BN_MOMENTUM`]).
+fn stat_leaf_indices(stages: &[Stage]) -> std::collections::HashSet<usize> {
+    stages
+        .iter()
+        .filter_map(|s| match s {
+            Stage::BatchNorm { mean, var, .. } => Some([*mean, *var]),
+            _ => None,
+        })
+        .flatten()
+        .collect()
 }
 
 /// Per-conv-stage tensors cached by forward for the backward pass.
@@ -705,10 +863,11 @@ fn forward(stages: &[Stage], leaves: &[Leaf], x: &Leaf, threads: usize) -> anyho
     let mut h = Tensor::new(x.shape.clone(), x.data.clone());
     let mut acts: Vec<Tensor> = Vec::with_capacity(stages.len() + 1);
     let mut caches: Vec<Option<ConvCache>> = Vec::with_capacity(stages.len());
+    let mut residual: Option<Tensor> = None;
     let last = stages.len() - 1;
     for (s, stage) in stages.iter().enumerate() {
         match *stage {
-            Stage::Conv { w: wi, b: bi, o, c, kh, kw } => {
+            Stage::Conv { w: wi, b: bi, o, c, kh, kw, spec, pool } => {
                 anyhow::ensure!(
                     h.rank() == 4 && h.shape[1] == c,
                     "conv stage {s} expects (B, {c}, H, W) input, got {:?}",
@@ -716,13 +875,15 @@ fn forward(stages: &[Stage], leaves: &[Leaf], x: &Leaf, threads: usize) -> anyho
                 );
                 let (ih, iw) = (h.shape[2], h.shape[3]);
                 anyhow::ensure!(ih >= kh && iw >= kw, "conv stage {s}: {kh}x{kw} kernel exceeds {ih}x{iw} input");
-                let oh = tensor::out_dim(ih, kh, CONV_SPEC.stride, CONV_SPEC.pad);
-                let ow = tensor::out_dim(iw, kw, CONV_SPEC.stride, CONV_SPEC.pad);
-                anyhow::ensure!(
-                    oh >= POOL && ow >= POOL,
-                    "conv stage {s}: {oh}x{ow} output smaller than the {POOL}x{POOL} pool"
-                );
-                let cols = tensor::im2col(&h, kh, kw, CONV_SPEC);
+                let oh = tensor::out_dim(ih, kh, spec.stride, spec.pad);
+                let ow = tensor::out_dim(iw, kw, spec.stride, spec.pad);
+                if pool {
+                    anyhow::ensure!(
+                        oh >= POOL && ow >= POOL,
+                        "conv stage {s}: {oh}x{ow} output smaller than the {POOL}x{POOL} pool"
+                    );
+                }
+                let cols = tensor::im2col(&h, kh, kw, spec);
                 let y = fc_forward(
                     &cols.data,
                     batch * oh * ow,
@@ -733,9 +894,62 @@ fn forward(stages: &[Stage], leaves: &[Leaf], x: &Leaf, threads: usize) -> anyho
                     threads,
                 );
                 let conv_out = nchw_from_rows(&y, batch, o, oh, ow);
-                let pooled = tensor::max_pool(&conv_out, POOL, POOL);
-                acts.push(std::mem::replace(&mut h, pooled));
+                let next = if pool { tensor::max_pool(&conv_out, POOL, POOL) } else { conv_out.clone() };
+                acts.push(std::mem::replace(&mut h, next));
                 caches.push(Some(ConvCache { cols, conv_out }));
+            }
+            Stage::BatchNorm { scale, bias, mean, var, c } => {
+                anyhow::ensure!(
+                    h.rank() == 4 && h.shape[1] == c,
+                    "bn stage {s} expects (B, {c}, H, W) input, got {:?}",
+                    h.shape
+                );
+                let out = tensor::batch_norm_inference(
+                    &h,
+                    &leaves[scale].data,
+                    &leaves[bias].data,
+                    &leaves[mean].data,
+                    &leaves[var].data,
+                    crate::inference::engine::BN_EPS,
+                );
+                acts.push(std::mem::replace(&mut h, out));
+                caches.push(None);
+            }
+            Stage::Relu => {
+                let mut out = h.clone();
+                for v in out.data.iter_mut() {
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                acts.push(std::mem::replace(&mut h, out));
+                caches.push(None);
+            }
+            Stage::SaveResidual => {
+                residual = Some(h.clone());
+                acts.push(h.clone());
+                caches.push(None);
+            }
+            Stage::AddResidual => {
+                let r = residual
+                    .take()
+                    .ok_or_else(|| anyhow::anyhow!("add-residual stage {s} without a saved residual"))?;
+                anyhow::ensure!(r.shape == h.shape, "residual shape {:?} != main path {:?}", r.shape, h.shape);
+                let mut out = h.clone();
+                for (v, &rv) in out.data.iter_mut().zip(&r.data) {
+                    *v += rv;
+                    if *v < 0.0 {
+                        *v = 0.0;
+                    }
+                }
+                acts.push(std::mem::replace(&mut h, out));
+                caches.push(None);
+            }
+            Stage::GlobalAvgPool => {
+                anyhow::ensure!(h.rank() == 4, "global-avg-pool stage {s} expects NCHW input, got {:?}", h.shape);
+                let out = tensor::global_avg_pool(&h);
+                acts.push(std::mem::replace(&mut h, out));
+                caches.push(None);
             }
             Stage::Fc { w: wi, b: bi, out, inp } => {
                 if h.rank() != 2 {
@@ -773,6 +987,7 @@ fn backward(stages: &[Stage], leaves: &[Leaf], fwd: &ForwardPass, dlogits: Vec<f
     let bsz = fwd.batch;
     let mut grads: Vec<Vec<f32>> = leaves.iter().map(|_| Vec::new()).collect();
     let mut dz = Tensor::new(vec![bsz, head_classes(stages)], dlogits);
+    let mut residual_grad: Option<Tensor> = None;
     for s in (0..stages.len()).rev() {
         match stages[s] {
             Stage::Fc { w: wi, b: bi, out, inp } => {
@@ -786,7 +1001,8 @@ fn backward(stages: &[Stage], leaves: &[Leaf], fwd: &ForwardPass, dlogits: Vec<f
                 if matches!(stages[s - 1], Stage::Fc { .. }) {
                     // ReLU gate: the stored activation is max(z, 0), so a
                     // zero activation means a blocked gradient. A conv
-                    // stage ends in a max-pool, not a ReLU — no gate.
+                    // stage ends in a max-pool and a global-avg-pool is
+                    // linear — no gate for either.
                     for (d, &a) in dx.iter_mut().zip(&input.data) {
                         if a <= 0.0 {
                             *d = 0.0;
@@ -795,14 +1011,18 @@ fn backward(stages: &[Stage], leaves: &[Leaf], fwd: &ForwardPass, dlogits: Vec<f
                 }
                 dz = Tensor::new(vec![bsz, inp], dx);
             }
-            Stage::Conv { w: wi, b: bi, o, c, kh, kw } => {
+            Stage::Conv { w: wi, b: bi, o, c, kh, kw, spec, pool } => {
                 let cache = fwd.caches[s].as_ref().expect("conv stage has a forward cache");
                 let (oh, ow) = (cache.conv_out.shape[2], cache.conv_out.shape[3]);
-                let ph = tensor::out_dim(oh, POOL, POOL, 0);
-                let pw = tensor::out_dim(ow, POOL, POOL, 0);
-                let d_pool = dz.reshape(vec![bsz, o, ph, pw]);
-                let d_conv = tensor::max_pool_backward(&cache.conv_out, &d_pool, POOL, POOL);
-                let dy = rows_from_nchw(&d_conv);
+                let dy = if pool {
+                    let ph = tensor::out_dim(oh, POOL, POOL, 0);
+                    let pw = tensor::out_dim(ow, POOL, POOL, 0);
+                    let d_pool = dz.reshape(vec![bsz, o, ph, pw]);
+                    let d_conv = tensor::max_pool_backward(&cache.conv_out, &d_pool, POOL, POOL);
+                    rows_from_nchw(&d_conv)
+                } else {
+                    rows_from_nchw(&dz.reshape(vec![bsz, o, oh, ow]))
+                };
                 let (rows, k) = (bsz * oh * ow, c * kh * kw);
                 grads[wi] = fc_grad_w(&dy, rows, o, &cache.cols.data, k, threads);
                 grads[bi] = fc_grad_b(&dy, rows, o);
@@ -812,7 +1032,79 @@ fn backward(stages: &[Stage], leaves: &[Leaf], fwd: &ForwardPass, dlogits: Vec<f
                 let dcols = fc_grad_x(&dy, rows, o, &leaves[wi].data, k, threads);
                 let input = &fwd.acts[s];
                 let (ih, iw) = (input.shape[2], input.shape[3]);
-                dz = tensor::col2im(&Tensor::new(vec![rows, k], dcols), bsz, c, ih, iw, kh, kw, CONV_SPEC);
+                dz = tensor::col2im(&Tensor::new(vec![rows, k], dcols), bsz, c, ih, iw, kh, kw, spec);
+            }
+            Stage::BatchNorm { scale, bias, mean, var, c } => {
+                // Inference-mode BN with frozen running stats is a
+                // per-channel affine: dx = dy·g, dscale = Σ dy·x̂,
+                // dbias = Σ dy (ascending b,h,w order — deterministic).
+                // The running mean/var are stop-gradient: zero-filled
+                // grads keep the leaf alignment the optimizer indexes.
+                let x = &fwd.acts[s];
+                let hw = x.shape[2] * x.shape[3];
+                let (sv, mv, vv) = (&leaves[scale].data, &leaves[mean].data, &leaves[var].data);
+                let mut dscale = vec![0.0f32; c];
+                let mut dbias = vec![0.0f32; c];
+                for ci in 0..c {
+                    let inv = (vv[ci] + crate::inference::engine::BN_EPS).sqrt().recip();
+                    let g = sv[ci] * inv;
+                    for bi in 0..bsz {
+                        let base = (bi * c + ci) * hw;
+                        for j in base..base + hw {
+                            let dyv = dz.data[j];
+                            dscale[ci] += dyv * (x.data[j] - mv[ci]) * inv;
+                            dbias[ci] += dyv;
+                            dz.data[j] = dyv * g;
+                        }
+                    }
+                }
+                grads[scale] = dscale;
+                grads[bias] = dbias;
+                grads[mean] = vec![0.0; c];
+                grads[var] = vec![0.0; c];
+            }
+            Stage::Relu => {
+                let x = &fwd.acts[s];
+                for (d, &a) in dz.data.iter_mut().zip(&x.data) {
+                    if a <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+            }
+            Stage::AddResidual => {
+                // Gate through the fused ReLU (acts[s + 1] is this
+                // stage's output), then branch the gradient: one copy
+                // rides to the matching SaveResidual, one continues down
+                // the conv path.
+                let out = &fwd.acts[s + 1];
+                for (d, &a) in dz.data.iter_mut().zip(&out.data) {
+                    if a <= 0.0 {
+                        *d = 0.0;
+                    }
+                }
+                residual_grad = Some(dz.clone());
+            }
+            Stage::SaveResidual => {
+                let r = residual_grad.take().expect("save-residual has a pending residual gradient");
+                for (d, &g) in dz.data.iter_mut().zip(&r.data) {
+                    *d += g;
+                }
+            }
+            Stage::GlobalAvgPool => {
+                let x = &fwd.acts[s];
+                let (c, hh, ww) = (x.shape[1], x.shape[2], x.shape[3]);
+                let inv = 1.0 / (hh * ww) as f32;
+                let mut dx = vec![0.0f32; x.numel()];
+                for bi in 0..bsz {
+                    for ci in 0..c {
+                        let g = dz.data[bi * c + ci] * inv;
+                        let base = (bi * c + ci) * hh * ww;
+                        for v in dx[base..base + hh * ww].iter_mut() {
+                            *v = g;
+                        }
+                    }
+                }
+                dz = Tensor::new(x.shape.clone(), dx);
             }
         }
     }
@@ -964,8 +1256,13 @@ fn train_step(kind: StepKind, inputs: &[xla::Literal], threads: usize) -> anyhow
         }
     }
     // MM L-step (augmented Lagrangian pull): g += μ(w − θ) − λ_mult.
+    // BN running stats are not decision variables — no pull.
+    let stat_leaves = stat_leaf_indices(&stages);
     if let (Some(theta), Some(lagrange)) = (&theta, &lagrange) {
         for i in 0..params.len() {
+            if stat_leaves.contains(&i) {
+                continue;
+            }
             let (w, th, lg) = (&params[i].data, &theta[i].data, &lagrange[i].data);
             let g = &mut grads[i];
             for j in 0..g.len() {
@@ -976,6 +1273,10 @@ fn train_step(kind: StepKind, inputs: &[xla::Literal], threads: usize) -> anyhow
 
     let t_out = t_in + 1.0;
     for (i, leaf) in params.iter_mut().enumerate() {
+        // BN running stats bypass the optimizer entirely (EMA below).
+        if stat_leaves.contains(&i) {
+            continue;
+        }
         // Weight leaves (2-D fc; 4-D conv, i.e. the filters on their
         // flattened (O, C·KH·KW) view — the prox is elementwise, so the
         // view is exactly the CSR matrix the engine serves) see the
@@ -1007,6 +1308,33 @@ fn train_step(kind: StepKind, inputs: &[xla::Literal], threads: usize) -> anyhow
         if let Some(masks) = &masks {
             for (w, &mi) in leaf.data.iter_mut().zip(&masks[i].data) {
                 *w *= mi;
+            }
+        }
+    }
+
+    // BN running stats: EMA toward this minibatch's per-channel moments,
+    // computed with the same f64 accumulation and ascending scan order
+    // as `tensor::batch_norm` — deterministic for any thread count.
+    for (si, stage) in stages.iter().enumerate() {
+        if let Stage::BatchNorm { mean, var, c, .. } = *stage {
+            let x = &fwd.acts[si];
+            let hw = x.shape[2] * x.shape[3];
+            let n = (batch * hw) as f64;
+            for ci in 0..c {
+                let (mut sum, mut sq) = (0.0f64, 0.0f64);
+                for bi in 0..batch {
+                    let base = (bi * c + ci) * hw;
+                    for &v in &x.data[base..base + hw] {
+                        sum += v as f64;
+                        sq += (v as f64) * (v as f64);
+                    }
+                }
+                let bmean = (sum / n) as f32;
+                let bvar = (sq / n) as f32 - bmean * bmean;
+                let m = &mut params[mean].data[ci];
+                *m = (1.0 - BN_MOMENTUM) * *m + BN_MOMENTUM * bmean;
+                let v = &mut params[var].data[ci];
+                *v = (1.0 - BN_MOMENTUM) * *v + BN_MOMENTUM * bvar;
             }
         }
     }
@@ -1112,8 +1440,22 @@ pub fn gradient_check(entry: &ModelEntry, seed: u64, batch: usize) -> anyhow::Re
     let numel: usize = leaves.iter().map(|l| l.data.len()).sum();
     let h = 1e-2f32 / (numel as f32).sqrt();
     let mut ok = 0;
+    // BN running stats are stop-gradient (zero analytic grads, but the
+    // loss *does* depend on them) — perturbing them would corrupt the
+    // finite difference, so their direction entries stay zero.
+    let stat_leaves = stat_leaf_indices(&stages);
     for _ in 0..FD_DIRECTIONS {
-        let dirs: Vec<Vec<f32>> = leaves.iter().map(|l| rng.normal_vec(l.data.len(), 1.0)).collect();
+        let dirs: Vec<Vec<f32>> = leaves
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                if stat_leaves.contains(&i) {
+                    vec![0.0; l.data.len()]
+                } else {
+                    rng.normal_vec(l.data.len(), 1.0)
+                }
+            })
+            .collect();
         let analytic: f32 =
             grads.iter().zip(&dirs).map(|(g, d)| g.iter().zip(d).map(|(a, b)| a * b).sum::<f32>()).sum();
         let shifted = |sign: f32| -> Vec<Leaf> {
@@ -1521,5 +1863,145 @@ mod tests {
         assert!(backend.execute(Path::new("native/m/train_prox_adam"), &lits).is_err());
         assert!(backend.execute(Path::new("native/m/bogus_step"), &lits).is_err());
         assert!(backend.execute(Path::new("artifacts/m.hlo.txt"), &lits).is_err());
+    }
+
+    /// A residual net small enough for exhaustive checks: 1×6×6 input,
+    /// stem + one two-conv block at width 4, GAP, fc 4→3.
+    fn tiny_resnet_entry() -> ModelEntry {
+        resnet_entry("resnet-t", &[1, 6, 6], 4, 1, 3, "synth-blobs", 4, 4)
+    }
+
+    #[test]
+    fn resnet_entry_matches_engine_wiring_geometry() {
+        let entry = tiny_resnet_entry();
+        // Three conv/bn units of 6 leaves each + the fc head pair.
+        assert_eq!(entry.params.len(), 20);
+        assert_eq!(entry.params[0].name, "conv1_w");
+        assert_eq!(entry.params[0].shape, vec![4, 1, 3, 3]);
+        assert_eq!(entry.params[2].kind, "bn_scale");
+        assert_eq!(entry.params[4].name, "bn1_mean");
+        assert_eq!(entry.params[6].name, "conv1-1-1_w");
+        assert_eq!(entry.params[6].shape, vec![4, 4, 3, 3]);
+        assert_eq!(entry.params[12].name, "conv1-1-2_w");
+        assert_eq!(entry.params[18].name, "fc1_w");
+        assert_eq!(entry.params[18].shape, vec![3, 4]);
+        assert!(entry.params[0].prunable && entry.params[18].prunable);
+        assert!(!entry.params[2].prunable && !entry.params[4].prunable);
+        // Prunable weights: 36 + 144 + 144 conv + 12 fc.
+        assert_eq!(entry.num_weights, 336);
+        let adam = entry.artifact("train_prox_adam").unwrap();
+        assert_eq!(adam.inputs.len(), 3 * 20 + 5);
+        // BN running stats init: unit variance, zero mean.
+        let bundle = crate::runtime::params::ParamBundle::he_init(&entry.params, 1);
+        assert!(bundle.values[5].iter().all(|&v| v == 1.0));
+        assert!(bundle.values[4].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn resnet_forward_matches_serving_engine() {
+        let entry = tiny_resnet_entry();
+        let mut bundle = crate::runtime::params::ParamBundle::he_init(&entry.params, 21);
+        // Nudge running stats off their init so the BN affine is
+        // non-trivial in both backends.
+        let mut rng = Rng::new(21 ^ 0xBEEF);
+        for (spec, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+            match spec.kind.as_str() {
+                "bn_mean" => *v = rng.normal_vec(v.len(), 0.2),
+                "bn_var" => {
+                    for (x, n) in v.iter_mut().zip(rng.normal_vec(v.len(), 0.1)) {
+                        *x = 1.0 + n.abs();
+                    }
+                }
+                _ => {}
+            }
+        }
+        let leaves: Vec<Leaf> = bundle
+            .specs
+            .iter()
+            .zip(&bundle.values)
+            .map(|(s, v)| Leaf { shape: s.shape.clone(), data: v.clone() })
+            .collect();
+        let stages = build_stages(&leaves).unwrap();
+        let batch = 3;
+        let mut xrng = Rng::new(77);
+        let x = Leaf { shape: vec![batch, 1, 6, 6], data: xrng.normal_vec(batch * 36, 1.0) };
+        let fwd = forward(&stages, &leaves, &x, 1).unwrap();
+        let native_logits = &fwd.acts.last().unwrap().data;
+
+        let engine =
+            crate::inference::engine::Engine::builder("resnet-t").bundle(&bundle).build().unwrap();
+        // Folded running stats, not batch stats: batchable at serve time.
+        assert!(!engine.uses_batch_stats());
+        let out = engine.forward(&Tensor::new(vec![batch, 1, 6, 6], x.data.clone())).unwrap();
+        assert_eq!(out.shape, vec![batch, 3]);
+        for (a, b) in native_logits.iter().zip(&out.data) {
+            assert!((a - b).abs() < 1e-4, "native {a} vs engine {b}");
+        }
+    }
+
+    #[test]
+    fn resnet_backward_passes_gradient_check() {
+        let (ok, total) = gradient_check(&tiny_resnet_entry(), 9, 4).unwrap();
+        assert!(ok >= FD_MIN_AGREE, "{ok}/{total}");
+    }
+
+    #[test]
+    fn resnet_forward_backward_bit_identical_across_thread_counts() {
+        let entry = tiny_resnet_entry();
+        let mut rng = Rng::new(87);
+        let leaves = he_leaves(&entry, 13);
+        let stages = build_stages(&leaves).unwrap();
+        let batch = 5;
+        let x = Leaf { shape: vec![batch, 1, 6, 6], data: rng.normal_vec(batch * 36, 1.0) };
+        let y: Vec<i32> = (0..batch).map(|i| (i % 3) as i32).collect();
+        let run = |threads: usize| {
+            let fwd = forward(&stages, &leaves, &x, threads).unwrap();
+            let logits = fwd.acts.last().unwrap().data.clone();
+            let (_, dlogits) = softmax_ce(&logits, &y, batch, 3);
+            (logits, backward(&stages, &leaves, &fwd, dlogits, threads))
+        };
+        let (logits1, grads1) = run(1);
+        for threads in [2usize, 4, 8] {
+            let (logits_t, grads_t) = run(threads);
+            assert_eq!(logits1, logits_t, "resnet forward diverged at t={threads}");
+            assert_eq!(grads1, grads_t, "resnet backward diverged at t={threads}");
+        }
+    }
+
+    #[test]
+    fn executor_resnet_step_freezes_stats_in_optimizer_and_moves_ema() {
+        let entry = tiny_resnet_entry();
+        let bundle = crate::runtime::params::ParamBundle::he_init(&entry.params, 15);
+        let leaves: Vec<(Vec<usize>, Vec<f32>)> =
+            bundle.specs.iter().zip(&bundle.values).map(|(s, v)| (s.shape.clone(), v.clone())).collect();
+        let mut lits = Vec::new();
+        lits.extend(leaf_literals(&leaves));
+        for _ in 0..2 {
+            let zeros: Vec<(Vec<usize>, Vec<f32>)> =
+                entry.params.iter().map(|s| (s.shape.clone(), vec![0.0; s.numel()])).collect();
+            lits.extend(leaf_literals(&zeros));
+        }
+        let mut rng = Rng::new(93);
+        lits.push(client::literal_f32(&[], &[0.0]).unwrap()); // t
+        lits.push(client::literal_f32(&[4, 1, 6, 6], &rng.normal_vec(4 * 36, 1.0)).unwrap());
+        lits.push(client::literal_i32(&[4], &[0, 1, 2, 0]).unwrap());
+        lits.push(client::literal_f32(&[], &[0.0]).unwrap()); // λ
+        lits.push(client::literal_f32(&[], &[0.01]).unwrap()); // lr
+        let mut backend = NativeBackend::new();
+        let out = backend.execute(Path::new("native/resnet-t/train_prox_adam"), &lits).unwrap();
+        assert_eq!(out.len(), 3 * 20 + 2);
+        assert!(out[out.len() - 1].scalar().unwrap().is_finite());
+        // Leaves 4/5 are bn1_mean/bn1_var: the EMA must move them off
+        // their zero/unit init toward the minibatch moments…
+        assert_ne!(out[4].as_f32().unwrap(), &leaves[4].1[..]);
+        assert_ne!(out[5].as_f32().unwrap(), &leaves[5].1[..]);
+        // …while their ADAM state stays untouched (stats skip the
+        // optimizer entirely), unlike the bn scale/bias next door.
+        assert!(out[20 + 4].as_f32().unwrap().iter().all(|&v| v == 0.0));
+        assert!(out[20 + 5].as_f32().unwrap().iter().all(|&v| v == 0.0));
+        assert!(out[20 + 2].as_f32().unwrap().iter().any(|&v| v != 0.0));
+        // Conv weights and the fc head train normally.
+        assert_ne!(out[0].as_f32().unwrap(), &leaves[0].1[..]);
+        assert_ne!(out[18].as_f32().unwrap(), &leaves[18].1[..]);
     }
 }

@@ -18,14 +18,15 @@ pub struct ParamBundle {
 }
 
 impl ParamBundle {
-    /// He-initialize weights (zero biases, unit BN scales) from the spec.
+    /// He-initialize weights (zero biases, unit BN scales and running
+    /// variances, zero running means) from the spec.
     pub fn he_init(specs: &[ParamSpec], seed: u64) -> ParamBundle {
         let mut rng = Rng::new(seed ^ 0x4865_496e_6974); // "HeInit" salt
         let values = specs
             .iter()
             .map(|s| match s.kind.as_str() {
                 "conv_w" | "fc_w" => rng.he_normal(s.numel(), s.fan_in()),
-                "bn_scale" => vec![1.0; s.numel()],
+                "bn_scale" | "bn_var" => vec![1.0; s.numel()],
                 _ => vec![0.0; s.numel()],
             })
             .collect();

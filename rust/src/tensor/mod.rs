@@ -400,6 +400,40 @@ pub fn batch_norm(x: &Tensor, scale: &[f32], bias: &[f32], eps: f32) -> Tensor {
     out
 }
 
+/// Inference-mode batch norm: per-channel affine from *folded running
+/// stats* instead of batch statistics. Each element maps through
+/// `(x − mean[c]) · g[c] + bias[c]` with `g[c] = scale[c] /
+/// √(var[c] + eps)` — purely elementwise in the batch dimension, so a
+/// batched forward is bit-identical to per-sample forwards (the
+/// property that lets `BatchServer` coalesce requests for BN models).
+/// Shared by the serving engine and the native training backend so the
+/// frozen-stats forward is one arithmetic everywhere.
+pub fn batch_norm_inference(
+    x: &Tensor,
+    scale: &[f32],
+    bias: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+) -> Tensor {
+    let (b, c, hw) = (x.shape[0], x.shape[1], x.shape[2..].iter().product::<usize>());
+    assert_eq!(scale.len(), c);
+    assert_eq!(bias.len(), c);
+    assert_eq!(mean.len(), c);
+    assert_eq!(var.len(), c);
+    let mut out = x.clone();
+    for ci in 0..c {
+        let g = scale[ci] * (var[ci] + eps).sqrt().recip();
+        for bi in 0..b {
+            let plane = &mut out.data[(bi * c + ci) * hw..(bi * c + ci + 1) * hw];
+            for v in plane.iter_mut() {
+                *v = (*v - mean[ci]) * g + bias[ci];
+            }
+        }
+    }
+    out
+}
+
 /// Per-row softmax of a (B, N) tensor.
 pub fn softmax(x: &Tensor) -> Tensor {
     let (b, n) = (x.shape[0], x.shape[1]);

@@ -308,8 +308,9 @@ fn engine_matches_xla_logits_dense_and_sparse() {
         // Conv stacks accumulate more rounding (im2col vs XLA's fused
         // convolutions; BN rsqrt), so their tolerance is looser.
         let tol = if model == "mlp" { 5e-3 } else { 2e-2 };
-        for sparse in [false, true] {
-            let engine = Engine::from_bundle(model, &trainer.state.params, sparse).unwrap();
+        for mode in [proxcomp::inference::WeightMode::Dense, proxcomp::inference::WeightMode::Csr] {
+            let engine =
+                Engine::builder(model).bundle(&trainer.state.params).mode(mode).build().unwrap();
             let logits = engine.forward(&x).unwrap();
             let max_diff = xla
                 .iter()
@@ -318,7 +319,7 @@ fn engine_matches_xla_logits_dense_and_sparse() {
                 .fold(0.0f32, f32::max);
             assert!(
                 max_diff < tol,
-                "{model} sparse={sparse}: engine/XLA max diff {max_diff}"
+                "{model} mode={mode:?}: engine/XLA max diff {max_diff}"
             );
         }
     }
@@ -347,12 +348,11 @@ fn spc_smoke_loss_decreases_and_formats_deploy() {
     for _ in 0..10 {
         trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
     }
-    let auto = Engine::from_bundle_mode(
-        "mlp",
-        &trainer.state.params,
-        proxcomp::inference::WeightMode::Auto,
-    )
-    .unwrap();
+    let auto = Engine::builder("mlp")
+        .bundle(&trainer.state.params)
+        .mode(proxcomp::inference::WeightMode::Auto)
+        .build()
+        .unwrap();
     let formats = auto.layer_formats();
     assert!(!formats.is_empty(), "layer_formats() report is empty");
     assert!(formats.iter().all(|(_, f)| *f != "dense"), "{formats:?}");
@@ -374,7 +374,13 @@ fn batch_server_serves_trained_model() {
     for _ in 0..10 {
         trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
     }
-    let engine = Arc::new(Engine::from_bundle("mlp", &trainer.state.params, true).unwrap());
+    let engine = Arc::new(
+        Engine::builder("mlp")
+            .bundle(&trainer.state.params)
+            .mode(proxcomp::inference::WeightMode::Csr)
+            .build()
+            .unwrap(),
+    );
     let server = BatchServer::start(
         Arc::clone(&engine),
         BatchConfig::new(8, Duration::from_millis(20), (1, 28, 28)),
@@ -415,7 +421,11 @@ fn checkpoint_roundtrip_through_trained_model() {
     let ck = proxcomp::checkpoint::load(&path).unwrap();
     assert_eq!(ck.params.values, trainer.state.params.values);
     // Engine accepts the loaded bundle.
-    let engine = Engine::from_bundle("mlp", &ck.params, true).unwrap();
+    let engine = Engine::builder("mlp")
+        .bundle(&ck.params)
+        .mode(proxcomp::inference::WeightMode::Csr)
+        .build()
+        .unwrap();
     assert!(engine.model_size_bytes() > 0);
 }
 

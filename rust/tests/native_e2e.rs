@@ -257,7 +257,13 @@ fn native_batch_server_serves_trained_model() {
     for _ in 0..10 {
         trainer.step(&mut rt, "train_prox_adam", scalars).unwrap();
     }
-    let engine = Arc::new(Engine::from_bundle("mlp-s", &trainer.state.params, true).unwrap());
+    let engine = Arc::new(
+        Engine::builder("mlp-s")
+            .bundle(&trainer.state.params)
+            .mode(WeightMode::Csr)
+            .build()
+            .unwrap(),
+    );
     let server = BatchServer::start(
         Arc::clone(&engine),
         BatchConfig::new(8, Duration::from_millis(20), (1, 28, 28)),
@@ -297,7 +303,8 @@ fn native_checkpoint_roundtrip_through_trained_model() {
     let ck = proxcomp::checkpoint::load(&path).unwrap();
     assert_eq!(ck.params.values, trainer.state.params.values);
     // The engine accepts the loaded bundle (mlp family by name prefix).
-    let engine = Engine::from_bundle("mlp-s", &ck.params, true).unwrap();
+    let engine =
+        Engine::builder("mlp-s").bundle(&ck.params).mode(WeightMode::Csr).build().unwrap();
     assert!(engine.model_size_bytes() > 0);
 }
 
@@ -372,8 +379,13 @@ fn native_lenet_pipeline_spc_debias_compress_serve() {
         compress::finish_run(&mut rt, &mut trainer, "SpC(Retrain)", cfg.lambda as f64, t0).unwrap();
     assert!(result.times_factor() > 1.0, "compression factor {} not > 1", result.times_factor());
 
-    let engine =
-        Arc::new(Engine::from_bundle_mode("lenet-s", &trainer.state.params, WeightMode::Auto).unwrap());
+    let engine = Arc::new(
+        Engine::builder("lenet-s")
+            .bundle(&trainer.state.params)
+            .mode(WeightMode::Auto)
+            .build()
+            .unwrap(),
+    );
     let formats = engine.layer_formats();
     assert!(!formats.is_empty(), "layer_formats() report is empty");
     assert_eq!(formats.len(), 4, "conv1/conv2/fc1/fc2 expected: {formats:?}");
@@ -496,8 +508,13 @@ fn native_full_pipeline_spc_debias_compress_serve() {
     assert!(result.times_factor() > 1.0, "compression factor {} not > 1", result.times_factor());
     assert!(result.compression_rate > 0.5);
 
-    let engine =
-        Arc::new(Engine::from_bundle_mode("mlp-s", &trainer.state.params, WeightMode::Auto).unwrap());
+    let engine = Arc::new(
+        Engine::builder("mlp-s")
+            .bundle(&trainer.state.params)
+            .mode(WeightMode::Auto)
+            .build()
+            .unwrap(),
+    );
     let formats = engine.layer_formats();
     assert!(!formats.is_empty(), "layer_formats() report is empty");
     assert!(formats.iter().all(|(_, f)| *f != "dense"), "dense leak in deployment: {formats:?}");
@@ -565,7 +582,7 @@ fn native_quantized_pipeline_spc_debias_quantize_serve() {
 
     // Quantized serving: accuracy within a generous tolerance of the
     // debiased f32 model (k=16 codebooks on a trained sparse net).
-    let qengine = Arc::new(Engine::from_quantized("mlp-s", &qm).unwrap());
+    let qengine = Arc::new(Engine::builder("mlp-s").quantized(&qm).build().unwrap());
     let quant_acc = qengine.accuracy(&trainer.test_data, 64).unwrap();
     assert!(
         quant_acc >= eval_debias.accuracy - 0.1,
@@ -578,7 +595,7 @@ fn native_quantized_pipeline_spc_debias_quantize_serve() {
     // checkpoint equal the in-memory quantized engine's exactly.
     let ck = proxcomp::checkpoint::load(&dir.join("quant.pxcp")).unwrap();
     assert!(ck.is_quantized());
-    let reloaded = Engine::from_quantized("mlp-s", &ck.to_quantized_model()).unwrap();
+    let reloaded = Engine::builder("mlp-s").quantized(&ck.to_quantized_model()).build().unwrap();
     for i in 0..8 {
         let sample = trainer.test_data.image(i).to_vec();
         let x = Tensor::new(vec![1, 1, 28, 28], sample);

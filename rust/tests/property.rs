@@ -457,9 +457,9 @@ fn prop_engine_auto_matches_dense_and_csr() {
                 prox::soft_threshold_inplace(v, t);
             }
         }
-        let dense = Engine::from_bundle_mode("mlp", &bundle, WeightMode::Dense).unwrap();
-        let csr = Engine::from_bundle_mode("mlp", &bundle, WeightMode::Csr).unwrap();
-        let auto = Engine::from_bundle_mode("mlp", &bundle, WeightMode::Auto).unwrap();
+        let dense = Engine::builder("mlp").bundle(&bundle).mode(WeightMode::Dense).build().unwrap();
+        let csr = Engine::builder("mlp").bundle(&bundle).mode(WeightMode::Csr).build().unwrap();
+        let auto = Engine::builder("mlp").bundle(&bundle).mode(WeightMode::Auto).build().unwrap();
         // Every weight layer got a concrete sparse format.
         for (layer, fmt) in auto.layer_formats() {
             assert_ne!(fmt, "dense", "{layer} not compressed in Auto mode");
@@ -894,7 +894,7 @@ fn prop_engine_forward_bit_identical_across_env_thread_counts() {
         }
     }
     for mode in [WeightMode::Csr, WeightMode::Auto] {
-        let engine = Engine::from_bundle_mode("mlp", &bundle, mode).unwrap();
+        let engine = Engine::builder("mlp").bundle(&bundle).mode(mode).build().unwrap();
         for b in [1usize, 3] {
             let x = Tensor::new(vec![b, 1, 28, 28], rng.normal_vec(b * 784, 1.0));
             std::env::set_var("PROXCOMP_THREADS", "1");
@@ -923,7 +923,8 @@ fn prop_batch_server_matches_per_sample_forward() {
             prox::soft_threshold_inplace(v, 0.04);
         }
     }
-    let engine = Arc::new(Engine::from_bundle_mode("mlp", &bundle, WeightMode::Csr).unwrap());
+    let engine =
+        Arc::new(Engine::builder("mlp").bundle(&bundle).mode(WeightMode::Csr).build().unwrap());
     // max_batch 16 lets coalesced forwards cross SPMM_MIN_BATCH into the
     // column-major CSR path, so the equality also proves that path keeps
     // the per-row reduction order of the single-sample scalar path.
@@ -1036,7 +1037,7 @@ fn prop_edge_case_matrices_multiply_and_roundtrip() {
 
 #[test]
 fn prop_engine_dense_sparse_parity_random_weights() {
-    use proxcomp::inference::Engine;
+    use proxcomp::inference::{Engine, WeightMode};
     let mut rng = Rng::new(113);
     for _ in 0..6 {
         // Random sparse MLP bundle at the manifest shapes.
@@ -1048,8 +1049,8 @@ fn prop_engine_dense_sparse_parity_random_weights() {
                 prox::soft_threshold_inplace(v, t);
             }
         }
-        let dense = Engine::from_bundle("mlp", &bundle, false).unwrap();
-        let sparse = Engine::from_bundle("mlp", &bundle, true).unwrap();
+        let dense = Engine::builder("mlp").bundle(&bundle).mode(WeightMode::Dense).build().unwrap();
+        let sparse = Engine::builder("mlp").bundle(&bundle).mode(WeightMode::Csr).build().unwrap();
         let x = Tensor::new(vec![3, 1, 28, 28], rng.normal_vec(3 * 784, 1.0));
         let a = dense.forward(&x).unwrap();
         let b = sparse.forward(&x).unwrap();

@@ -12,7 +12,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use proxcomp::inference::loadgen::{self, LoadConfig};
+use proxcomp::inference::loadgen::{self, LoadConfig, LoadTarget};
 use proxcomp::inference::net::OP_STATS;
 use proxcomp::inference::{BatchConfig, Engine, ErrorCode, NetClient, NetConfig, NetServer, WeightMode};
 use proxcomp::runtime::{Manifest, ParamBundle};
@@ -33,7 +33,7 @@ fn synthetic_engine(model: &str, seed: u64) -> (Arc<Engine>, (usize, usize, usiz
             prox::soft_threshold_inplace(v, 0.05);
         }
     }
-    (Arc::new(Engine::from_bundle_mode(model, &bundle, WeightMode::Csr).unwrap()), shape)
+    (Arc::new(Engine::builder(model).bundle(&bundle).mode(WeightMode::Csr).build().unwrap()), shape)
 }
 
 fn start_server(model: &str, seed: u64, batch_cfg: BatchConfig, net_cfg: NetConfig) -> (NetServer, Arc<Engine>) {
@@ -215,10 +215,11 @@ fn loadgen_closed_loop_reports_and_verifies() {
         addr: server.local_addr().to_string(),
         clients: 8,
         duration: Duration::from_millis(400),
-        input_shape: (1, 28, 28),
+        targets: vec![LoadTarget::new(None, (1, 28, 28), Some(engine))],
         seed: 42,
         connect_timeout: Duration::from_secs(5),
-        verify: Some(engine),
+        retry_budget: 8,
+        retry_base: Duration::from_micros(200),
         fetch_server_stats: true,
     };
     let report = loadgen::run(&cfg).unwrap();

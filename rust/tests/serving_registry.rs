@@ -1,0 +1,220 @@
+//! Integration tests for multi-model fleet serving: the
+//! [`proxcomp::inference::ModelRegistry`] behind the framed-TCP
+//! front-end, wire-v2 `INFER_MODEL` routing, lazy loading with
+//! byte-budgeted LRU eviction, and the acceptance contract of the fleet
+//! redesign — mixed traffic across three model families answers
+//! bit-identically to local twin engines while a model is evicted and
+//! hot-reloaded mid-run, with zero dropped non-`overloaded` requests.
+//!
+//! Every server binds `127.0.0.1:0` (ephemeral port), so the tests run
+//! concurrently without colliding.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use proxcomp::inference::{
+    BatchConfig, BatchServer, Engine, EngineFactory, ErrorCode, ModelRegistry, ModelSpec,
+    NetClient, NetConfig, NetServer, RegistryConfig, WeightMode,
+};
+use proxcomp::runtime::{Manifest, ParamBundle};
+use proxcomp::sparse::prox;
+use proxcomp::tensor::Tensor;
+use proxcomp::util::rng::Rng;
+
+const SEED: u64 = 21;
+const PRUNE: f32 = 0.05;
+
+/// The same deterministic synthetic engine `proxcomp serve --models`
+/// builds for each id: He-init at the manifest shapes, soft-threshold
+/// prune, CSR deploy. Same (model, SEED) → bit-identical weights — the
+/// factory determinism hot-reload relies on.
+fn synthetic_engine(model: &str) -> (Arc<Engine>, (usize, usize, usize)) {
+    let manifest = Manifest::native();
+    let entry = manifest.model(model).unwrap();
+    let shape = (entry.input_shape[0], entry.input_shape[1], entry.input_shape[2]);
+    let mut bundle = ParamBundle::he_init(&entry.params, SEED);
+    for (s, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+        if s.prunable {
+            prox::soft_threshold_inplace(v, PRUNE);
+        }
+    }
+    (Arc::new(Engine::builder(model).bundle(&bundle).mode(WeightMode::Csr).build().unwrap()), shape)
+}
+
+fn factory(model: &'static str) -> EngineFactory {
+    Arc::new(move || Ok(synthetic_engine(model).0))
+}
+
+/// A registry over synthetic engines; the first id is the v1 default.
+fn fleet_registry(models: &[&'static str], budget: usize, max_batch: usize) -> Arc<ModelRegistry> {
+    let reg = ModelRegistry::new(RegistryConfig {
+        memory_budget_bytes: budget,
+        default_model: Some(models[0].to_string()),
+    });
+    let manifest = Manifest::native();
+    for m in models {
+        let entry = manifest.model(m).unwrap();
+        let shape = (entry.input_shape[0], entry.input_shape[1], entry.input_shape[2]);
+        reg.add_model(ModelSpec::new(
+            m,
+            factory(m),
+            BatchConfig::new(max_batch, Duration::from_millis(1), shape),
+        ))
+        .unwrap();
+    }
+    Arc::new(reg)
+}
+
+fn ephemeral() -> NetConfig {
+    NetConfig { addr: "127.0.0.1:0".to_string(), ..NetConfig::default() }
+}
+
+fn connect(server: &NetServer) -> NetClient {
+    NetClient::connect(&server.local_addr().to_string(), Duration::from_secs(5)).unwrap()
+}
+
+#[test]
+fn mixed_fleet_bit_exact_while_evicting_and_hot_reloading() {
+    const MODELS: [&str; 3] = ["mlp-s", "lenet-s", "resnet-s"];
+    const REQUESTS: usize = 40;
+    let registry = fleet_registry(&MODELS, 0, 4);
+    let mut server = NetServer::start_registry(Arc::clone(&registry), ephemeral()).unwrap();
+    let addr = server.local_addr().to_string();
+    let retries = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for (mi, model) in MODELS.iter().enumerate() {
+            let (twin, shape) = synthetic_engine(model);
+            let addr = addr.clone();
+            let retries = &retries;
+            scope.spawn(move || {
+                let mut client = NetClient::connect(&addr, Duration::from_secs(5)).unwrap();
+                let n = shape.0 * shape.1 * shape.2;
+                let mut rng = Rng::new(100 + mi as u64);
+                for req in 0..REQUESTS {
+                    let sample = rng.normal_vec(n, 1.0);
+                    // Explicit backpressure is the only tolerated refusal;
+                    // a drop, unknown-model, or engine error mid-eviction
+                    // breaks the fleet contract.
+                    let logits = loop {
+                        match client.infer_model(model, &sample).unwrap() {
+                            Ok(l) => break l,
+                            Err((ErrorCode::Overloaded, _)) => {
+                                retries.fetch_add(1, Ordering::Relaxed);
+                                std::thread::sleep(Duration::from_millis(1));
+                            }
+                            Err((code, msg)) => panic!("{model} req {req}: {code:?} {msg}"),
+                        }
+                    };
+                    let x = Tensor::new(vec![1, shape.0, shape.1, shape.2], sample);
+                    let want = twin.forward(&x).unwrap().data;
+                    assert_eq!(want.len(), logits.len(), "{model} req {req}");
+                    for (a, b) in want.iter().zip(&logits) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "{model} req {req}: bit mismatch");
+                    }
+                }
+            });
+        }
+        // Meanwhile: evict lenet-s repeatedly. Requests racing the
+        // eviction must hot-reload through the factory, not drop.
+        for _ in 0..6 {
+            std::thread::sleep(Duration::from_millis(3));
+            registry.evict("lenet-s").unwrap();
+        }
+    });
+    let stats = server.registry().stats_json();
+    let lenet = stats.get("lenet-s").unwrap();
+    let count = |k: &str| lenet.get(k).unwrap().as_f64().unwrap() as u64;
+    assert!(count("loads") >= 2, "lenet-s never hot-reloaded: {}", stats.to_string_compact());
+    assert!(count("evictions") >= 1, "{}", stats.to_string_compact());
+    // Retired incarnations keep counting: every request is accounted.
+    assert_eq!(count("requests_total"), REQUESTS as u64);
+    // v1 (versionless) INFER still routes to the default model.
+    let (twin, shape) = synthetic_engine(MODELS[0]);
+    let mut v1 = connect(&server);
+    let sample = Rng::new(7).normal_vec(shape.0 * shape.1 * shape.2, 1.0);
+    let logits = v1.infer(&sample).unwrap().unwrap();
+    let want =
+        twin.forward(&Tensor::new(vec![1, shape.0, shape.1, shape.2], sample)).unwrap().data;
+    assert_eq!(want, logits);
+    server.shutdown();
+}
+
+#[test]
+fn memory_budget_lru_eviction_over_the_wire() {
+    let bytes_mlp = synthetic_engine("mlp-s").0.model_size_bytes();
+    let bytes_lenet = synthetic_engine("lenet-s").0.model_size_bytes();
+    // The budget fits either model alone but never both at once.
+    let budget = bytes_mlp.max(bytes_lenet);
+    assert!(budget < bytes_mlp + bytes_lenet);
+    let registry = fleet_registry(&["mlp-s", "lenet-s"], budget, 4);
+    let mut server = NetServer::start_registry(Arc::clone(&registry), ephemeral()).unwrap();
+    let mut client = connect(&server);
+    let s_mlp = Rng::new(1).normal_vec(784, 1.0);
+    let s_lenet = Rng::new(2).normal_vec(256, 1.0);
+    assert!(registry.resident_models().is_empty(), "loads must be lazy");
+    client.infer_model("mlp-s", &s_mlp).unwrap().unwrap();
+    assert_eq!(registry.resident_models(), vec!["mlp-s".to_string()]);
+    // Loading the second model forces the first out (LRU under budget).
+    client.infer_model("lenet-s", &s_lenet).unwrap().unwrap();
+    assert_eq!(registry.resident_models(), vec!["lenet-s".to_string()]);
+    assert!(registry.resident_bytes() <= budget);
+    // Swapping back hot-reloads deterministically: repeated answers are
+    // bit-identical to each other and to a local twin forward.
+    let a = client.infer_model("mlp-s", &s_mlp).unwrap().unwrap();
+    let b = client.infer_model("mlp-s", &s_mlp).unwrap().unwrap();
+    assert_eq!(a, b);
+    let twin = synthetic_engine("mlp-s").0;
+    assert_eq!(a, twin.forward(&Tensor::new(vec![1, 1, 28, 28], s_mlp)).unwrap().data);
+    server.shutdown();
+}
+
+#[test]
+fn unknown_model_is_recoverable_on_the_same_connection() {
+    let registry = fleet_registry(&["mlp-s"], 0, 4);
+    let mut server = NetServer::start_registry(Arc::clone(&registry), ephemeral()).unwrap();
+    let mut client = connect(&server);
+    let sample = Rng::new(3).normal_vec(784, 1.0);
+    let (code, msg) = client.infer_model("ghost", &sample).unwrap().unwrap_err();
+    assert_eq!(code, ErrorCode::UnknownModel, "{msg}");
+    assert!(msg.contains("ghost"), "the error should name the model: {msg}");
+    // The connection survives a recoverable error.
+    assert_eq!(client.infer_model("mlp-s", &sample).unwrap().unwrap().len(), 10);
+    assert_eq!(server.net_counters().unknown_model, 1);
+    server.shutdown();
+}
+
+#[test]
+fn resnet_s_serves_coalesced_batches_bit_exactly() {
+    let (engine, shape) = synthetic_engine("resnet-s");
+    // Inference-mode BN folds the running statistics into an elementwise
+    // transform, so nothing pins the pool to single-sample batches.
+    assert!(!engine.uses_batch_stats(), "resnet-s must deploy inference-mode BN");
+    let server = BatchServer::start(
+        Arc::clone(&engine),
+        BatchConfig::new(8, Duration::from_millis(50), shape),
+    );
+    assert!(server.config().max_batch > 1, "the batch-statistics pin must not trigger");
+    let mut rng = Rng::new(4);
+    let n = shape.0 * shape.1 * shape.2;
+    let pending: Vec<_> = (0..8)
+        .map(|_| {
+            let sample = rng.normal_vec(n, 1.0);
+            let p = server.submit(&sample).unwrap();
+            (sample, p)
+        })
+        .collect();
+    for (sample, p) in pending {
+        let got = p.wait().unwrap();
+        let x = Tensor::new(vec![1, shape.0, shape.1, shape.2], sample);
+        let want = engine.forward(&x).unwrap().data;
+        assert_eq!(want.len(), got.len());
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits(), "coalesced resnet logits diverge");
+        }
+    }
+    let stats = server.stats();
+    assert_eq!(stats.requests, 8);
+    assert!(stats.max_batch > 1, "requests were never coalesced into a real batch");
+    server.shutdown();
+}
