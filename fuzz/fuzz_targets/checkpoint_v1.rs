@@ -1,0 +1,12 @@
+//! Whole-file checkpoint decode: the fuzzer owns every byte, from the
+//! magic onward. Exercises magic/version/header-length validation, the
+//! JSON header parser (including its recursion-depth cap), and the v1
+//! dense/CSR leaf decoders. Any input must produce `Ok` or `Err` —
+//! never a panic, abort, or unbounded allocation.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+fuzz_target!(|data: &[u8]| {
+    let _ = proxcomp::checkpoint::decode(data);
+});

@@ -1,0 +1,21 @@
+//! Leaf-body checkpoint decode: wrap the fuzzer's bytes in a valid
+//! v2 envelope (magic | version | header for one prunable 2×3 leaf)
+//! so every execution reaches the per-leaf tag dispatch — dense,
+//! CSR, and the v2-only quantized-CSR (tag 2) path with its codebook
+//! and packed 4-bit codes. The whole-file target rarely gets past the
+//! header; this one starts there.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+
+const HEADER: &str = r#"{"meta":{},"specs":[{"name":"fc1_w","kind":"fc_w","shape":[2,3],"prunable":true,"layer":"fc1"}]}"#;
+
+fuzz_target!(|data: &[u8]| {
+    let mut bytes = Vec::with_capacity(16 + HEADER.len() + data.len());
+    bytes.extend_from_slice(b"PXCP");
+    bytes.extend_from_slice(&2u32.to_le_bytes());
+    bytes.extend_from_slice(&(HEADER.len() as u64).to_le_bytes());
+    bytes.extend_from_slice(HEADER.as_bytes());
+    bytes.extend_from_slice(data);
+    let _ = proxcomp::checkpoint::decode(&bytes);
+});

@@ -1,0 +1,16 @@
+//! INFER_MODEL body parse: `id_len:u8 | id utf-8 | sample f32 LE`.
+//! The id length must be bounded by the remaining body before the id
+//! slice is taken, and non-UTF-8 ids must be a parse error, not a
+//! panic in a later `str` consumer.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use proxcomp::inference::net::parse_infer_model_body;
+
+fuzz_target!(|data: &[u8]| {
+    if let Ok((id, sample)) = parse_infer_model_body(data) {
+        // Parsed output must uphold the layout invariants.
+        assert!(!id.is_empty() && id.len() <= u8::MAX as usize);
+        assert_eq!(1 + id.len() + sample.len(), data.len());
+    }
+});

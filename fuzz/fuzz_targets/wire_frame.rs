@@ -1,0 +1,15 @@
+//! Wire frame decode: the pure twin of the serving loop's streaming
+//! frame reader. The length-prefix cap guard must reject oversized
+//! declarations before any allocation; truncation must be a clean
+//! `FrameErr::Bad`, never a panic or over-read.
+#![no_main]
+
+use libfuzzer_sys::fuzz_target;
+use proxcomp::inference::net::{decode_frame, MAX_FRAME_BYTES};
+
+fuzz_target!(|data: &[u8]| {
+    // The serving cap (MAX_FRAME_BYTES) and a small cap: the latter
+    // makes the cap-rejection branch reachable with tiny inputs.
+    let _ = decode_frame(data, MAX_FRAME_BYTES);
+    let _ = decode_frame(data, 64);
+});

@@ -1,0 +1,144 @@
+#!/usr/bin/env python3
+"""Regenerate the committed fuzz corpora under fuzz/corpus/.
+
+Two kinds of files:
+  valid_*  — well-formed seeds that let the fuzzer start from deep
+             program states instead of rediscovering the format.
+  repro_*  — minimized reproducers for decode bugs found by fuzzing /
+             adversarial review. Each is pinned by a named unit test
+             (see rust/src/checkpoint/mod.rs and rust/tests/fuzz_smoke.rs)
+             and MUST decode to Err on fixed code; on pre-fix code each
+             one aborted, panicked, or silently mis-loaded.
+
+Layout notes (must stay in sync with rust/src/checkpoint/mod.rs):
+  file   = "PXCP" | u32 version | u64 header_len | header JSON | leaves
+  dense  = tag 0 | u64 n | f32[n]
+  csr    = tag 1 | u64 rows, cols, nnz | u32 ptr[rows+1] | u32 idx[nnz] | f32[nnz]
+  qcs    = tag 2 | u64 rows, cols, nnz | u16 k | u8 code_bits | u8 index_bytes
+           | f32 codebook[k] | u32 ptr[rows+1] | idx[nnz] | packed codes
+The checkpoint_v2 target prepends the v2 envelope for a [2,3] spec
+itself, so its corpus files are leaf *bodies* only.
+"""
+
+import os
+import struct
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def u8(*vals):
+    return struct.pack("<" + "B" * len(vals), *vals)
+
+
+def u16(*vals):
+    return struct.pack("<" + "H" * len(vals), *vals)
+
+
+def u32(*vals):
+    return struct.pack("<" + "I" * len(vals), *vals)
+
+
+def u64(*vals):
+    return struct.pack("<" + "Q" * len(vals), *vals)
+
+
+def f32(*vals):
+    return struct.pack("<" + "f" * len(vals), *vals)
+
+
+def header(shape, version=1):
+    spec = (
+        '{"meta":{},"specs":[{"name":"fc1_w","kind":"fc_w",'
+        f'"shape":{shape},"prunable":true,"layer":"fc1"}}]}}'
+    ).encode()
+    return b"PXCP" + u32(version) + u64(len(spec)) + spec
+
+
+def write(target, name, data):
+    d = os.path.join(HERE, "corpus", target)
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, name), "wb") as f:
+        f.write(data)
+    print(f"{target}/{name}: {len(data)} bytes")
+
+
+# ---- checkpoint_v1: whole files ------------------------------------------
+
+write("checkpoint_v1", "valid_dense_v1.pxcp",
+      header("[2,3]") + u8(0) + u64(6) + f32(1.0, -2.0, 0.0, 0.5, 0.0, 3.0))
+
+write("checkpoint_v1", "valid_csr_v1.pxcp",
+      header("[2,3]") + u8(1) + u64(2, 3, 2) + u32(0, 1, 2) + u32(0, 2)
+      + f32(1.5, -0.5))
+
+write("checkpoint_v1", "valid_qcs_v2.pxcp",
+      header("[2,3]", version=2) + u8(2) + u64(2, 3, 2) + u16(2) + u8(4, 2)
+      + f32(0.5, -1.0) + u32(0, 1, 2) + u16(0, 2) + u8(0x10))
+
+# Bug: `nnz as u32` truncated nnz=2^32 to 0, so the ptr consistency
+# check passed against a zeroed pointer array and the decoder went on
+# to allocate nnz (2^32) column indices — a 16 GiB allocation from a
+# ~150-byte file. Fixed: u32::try_from(nnz) rejects before any read.
+write("checkpoint_v1", "repro_nnz_u32_truncation.pxcp",
+      header("[4294967296,1]") + u8(1) + u64(2**32, 1, 2**32))
+
+# Bug: a sparse leaf's dense expansion (`to_dense`) was unbounded — a
+# tiny file declaring a 4 × 2^60 CSR leaf with nnz=0 passed every
+# byte-level bound, then aborted allocating the dense buffer. Fixed:
+# MAX_DECODE_NUMEL caps the expansion at 2^28 elements.
+write("checkpoint_v1", "repro_sparse_expansion_oom.pxcp",
+      header("[4,1152921504606846976]") + u8(1)
+      + u64(4, 2**60, 0) + u32(0, 0, 0, 0, 0))
+
+# Bug: matrix_view returned (0,0) for rank-1 specs, and the geometry
+# check multiplied through it — a CSR leaf attached to a 1-D spec was
+# silently accepted with fabricated 2×3 geometry. Fixed: sparse leaves
+# on specs with no 2-D view are rejected explicitly.
+write("checkpoint_v1", "repro_sparse_on_1d_spec.pxcp",
+      header("[6]") + u8(1) + u64(2, 3, 0) + u32(0, 0, 0))
+
+write("checkpoint_v1", "bad_magic.pxcp", b"NOPE" + u32(1) + u64(0))
+write("checkpoint_v1", "bad_version.pxcp", b"PXCP" + u32(99) + u64(0))
+write("checkpoint_v1", "huge_header_len.pxcp",
+      b"PXCP" + u32(1) + u64(2**63))
+write("checkpoint_v1", "deep_json_header.pxcp",
+      b"PXCP" + u32(1) + u64(400) + b"[" * 200 + b"]" * 200)
+
+# ---- checkpoint_v2: leaf bodies (envelope added by the target) -----------
+
+write("checkpoint_v2", "valid_dense_body.bin",
+      u8(0) + u64(6) + f32(0.0, 1.0, 2.0, 3.0, 4.0, 5.0))
+write("checkpoint_v2", "valid_csr_body.bin",
+      u8(1) + u64(2, 3, 2) + u32(0, 1, 2) + u32(0, 2) + f32(1.5, -0.5))
+write("checkpoint_v2", "valid_qcs_body.bin",
+      u8(2) + u64(2, 3, 2) + u16(2) + u8(4, 2) + f32(0.5, -1.0)
+      + u32(0, 1, 2) + u16(0, 2) + u8(0x10))
+
+# Bug: the rows×cols geometry check used an unchecked multiply, so in
+# release builds rows=2^63+3, cols=2 wrapped to exactly 6 (the spec's
+# numel) and the decoder proceeded to allocate rows+1 row pointers —
+# a capacity-overflow panic. Fixed: cursor::checked_mul + exact match
+# against the spec's matrix view.
+write("checkpoint_v2", "repro_dim_product_wrap.bin",
+      u8(1) + u64(2**63 + 3, 2, 0))
+
+# Truncation right before the row-pointer array: must be a bounded
+# "truncated checkpoint" error, never an allocation of the declared size.
+write("checkpoint_v2", "repro_truncated_ptr.bin", u8(1) + u64(2, 3, 2))
+
+# ---- wire_frame: length-prefixed frames ----------------------------------
+
+write("wire_frame", "valid_ping.bin", u32(1) + u8(4))
+write("wire_frame", "valid_infer_model.bin",
+      u32(1 + 1 + 2 + 4) + u8(5) + u8(2) + b"ok" + f32(0.5))
+write("wire_frame", "zero_len.bin", u32(0))
+write("wire_frame", "oversized_1gib.bin", u32(2**30))
+write("wire_frame", "truncated_payload.bin", u32(8) + u8(1, 2, 3))
+
+# ---- infer_model_body: id_len | id | sample ------------------------------
+
+write("infer_model_body", "valid_body.bin", u8(7) + b"lenet-s" + f32(1.0, -2.5))
+write("infer_model_body", "zero_id.bin", u8(0))
+write("infer_model_body", "id_overrun.bin", u8(5) + b"ab")
+write("infer_model_body", "bad_utf8.bin", u8(2, 0xFF, 0xFE))
+write("infer_model_body", "max_id.bin", u8(255) + b"m" * 255 + f32(0.5))

@@ -24,16 +24,22 @@
 //! `model_size_bytes` on the result is the paper's Table-3 "Model Size"
 //! quantity.
 //!
-//! Loading is defensive: bad magic, unknown versions, truncated
+//! Loading is defensive: decoding runs entirely on
+//! [`crate::util::cursor::BoundedReader`], the shared hardened cursor,
+//! so every header-declared size is bounded against the remaining input
+//! *before* any allocation, all dimension arithmetic is
+//! overflow-checked, and bad magic, unknown versions, truncated
 //! payloads, and ptr/nnz inconsistencies all fail with explicit errors
-//! (the corrupt-bytes unit tests below pin each message).
+//! (the corrupt-bytes unit tests below and the `fuzz/` targets pin
+//! this).
 
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 use crate::quant::{QuantLeaf, QuantizedModel};
 use crate::runtime::{ParamBundle, ParamSpec};
 use crate::sparse::CsrMatrix;
+use crate::util::cursor::{self, BoundedReader};
 use crate::util::json::{self, Json};
 
 const MAGIC: &[u8; 4] = b"PXCP";
@@ -44,6 +50,13 @@ const MAGIC: &[u8; 4] = b"PXCP";
 const VERSION: u32 = 2;
 /// Sanity cap on the header JSON (a corrupt length field must not OOM).
 const MAX_HEADER_LEN: usize = 16 << 20;
+/// Per-leaf element cap for decoding. Sparse leaves are expanded to a
+/// dense `rows × cols` buffer on load, so a kilobyte file declaring a
+/// terabyte shape would OOM *after* passing every byte-level bound;
+/// this caps the expansion at 2²⁸ elements (1 GiB of f32 per leaf) —
+/// an order of magnitude above the largest Deep-Compression-era layer
+/// (VGG-16 fc6, ~102 M weights).
+const MAX_DECODE_NUMEL: usize = 1 << 28;
 /// Store CSR when at least this fraction of a leaf is zero (below this
 /// the index overhead exceeds the dense payload).
 pub const CSR_THRESHOLD: f64 = 0.5;
@@ -116,8 +129,12 @@ fn write_header(f: &mut impl Write, version: u32, specs: &[ParamSpec], meta: &Js
 fn write_f32_leaf(f: &mut impl Write, spec: &ParamSpec, values: &[f32]) -> anyhow::Result<usize> {
     let zero_frac =
         values.iter().filter(|&&v| v == 0.0).count() as f64 / values.len().max(1) as f64;
-    let (rows, cols) = matrix_view(spec);
-    if spec.prunable && zero_frac >= CSR_THRESHOLD && rows > 0 {
+    let csr_view = if spec.prunable && zero_frac >= CSR_THRESHOLD {
+        matrix_view(spec).filter(|&(rows, _)| rows > 0)
+    } else {
+        None
+    };
+    if let Some((rows, cols)) = csr_view {
         let csr = CsrMatrix::from_dense(values, rows, cols);
         f.write_all(&[1u8])?;
         f.write_all(&(csr.rows as u64).to_le_bytes())?;
@@ -217,23 +234,29 @@ pub fn save_quantized(path: &Path, qm: &QuantizedModel, meta: &Json) -> anyhow::
 /// Load a checkpoint back into a dense `ParamBundle` (+ the stored
 /// quantized leaves when present).
 pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
-    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
-    let mut magic = [0u8; 4];
-    read_exactly(&mut f, &mut magic, "magic")?;
-    anyhow::ensure!(&magic == MAGIC, "not a proxcomp checkpoint (bad magic {magic:02x?})");
-    let version = read_u32(&mut f, "version")?;
+    decode(&std::fs::read(path)?)
+}
+
+/// Decode a checkpoint from raw bytes — the untrusted-input core that
+/// [`load`] wraps and the `fuzz/` targets drive directly. Every
+/// declared size is bounded by the remaining input before allocation;
+/// every dimension product is overflow-checked.
+pub fn decode(bytes: &[u8]) -> anyhow::Result<Checkpoint> {
+    let mut r = BoundedReader::new(bytes, "checkpoint");
+    let magic = r.take(4, "magic")?;
+    anyhow::ensure!(magic == &MAGIC[..], "not a proxcomp checkpoint (bad magic {magic:02x?})");
+    let version = r.read_u32("version")?;
     anyhow::ensure!(
         (1..=VERSION).contains(&version),
         "unsupported checkpoint version {version} (this build reads 1..={VERSION})"
     );
-    let header_len = read_u64(&mut f, "header length")? as usize;
+    let header_len = r.read_u64("header length")?;
     anyhow::ensure!(
-        header_len <= MAX_HEADER_LEN,
+        header_len <= MAX_HEADER_LEN as u64,
         "implausible header length {header_len} (corrupt checkpoint?)"
     );
-    let mut header_bytes = vec![0u8; header_len];
-    read_exactly(&mut f, &mut header_bytes, "header")?;
-    let header = json::parse(std::str::from_utf8(&header_bytes)?)?;
+    let header_bytes = r.take(header_len as usize, "header")?;
+    let header = json::parse(std::str::from_utf8(header_bytes)?)?;
     let meta = header.req("meta")?.clone();
     let specs: Vec<ParamSpec> = header
         .req("specs")?
@@ -250,45 +273,43 @@ pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
             })
         })
         .collect::<anyhow::Result<Vec<_>>>()?;
+    // Per-spec element counts with overflow-checked shape products: the
+    // shape is header-declared, so a crafted `[2^32, 2^32]` must fail
+    // here, not wrap to something small inside a later size guard.
+    let mut cells = Vec::with_capacity(specs.len());
+    for spec in &specs {
+        let mut n = 1usize;
+        for &d in &spec.shape {
+            n = cursor::checked_mul(n, d, &format!("leaf {} shape {:?}", spec.name, spec.shape))?;
+        }
+        cells.push(n);
+    }
 
     let mut values = Vec::with_capacity(specs.len());
     let mut quantized: Vec<Option<crate::quant::QcsMatrix>> = Vec::with_capacity(specs.len());
     let mut payload = 0usize;
-    for spec in &specs {
-        let mut enc = [0u8; 1];
-        read_exactly(&mut f, &mut enc, "leaf encoding tag")?;
-        match enc[0] {
+    for (spec, &numel) in specs.iter().zip(&cells) {
+        match r.read_u8("leaf encoding tag")? {
             0 => {
-                let n = read_u64(&mut f, "dense leaf length")? as usize;
-                anyhow::ensure!(n == spec.numel(), "dense leaf size mismatch for {}", spec.name);
-                let mut data = vec![0.0f32; n];
-                read_f32s(&mut f, &mut data, "dense leaf values")?;
+                let n = r.read_len_u64("dense leaf length")?;
+                anyhow::ensure!(n == numel, "dense leaf size mismatch for {}", spec.name);
+                let data = r.read_f32s(n, "dense leaf values")?;
                 payload += 1 + 8 + n * 4;
                 values.push(data);
                 quantized.push(None);
             }
             1 => {
-                let rows = read_u64(&mut f, "csr rows")? as usize;
-                let cols = read_u64(&mut f, "csr cols")? as usize;
-                let nnz = read_u64(&mut f, "csr nnz")? as usize;
-                anyhow::ensure!(rows * cols == spec.numel(), "csr leaf shape mismatch for {}", spec.name);
+                let (rows, cols, nnz, nnz32) = read_sparse_dims(&mut r, spec, numel, "csr")?;
+                let ptr_len = cursor::checked_add(rows, 1, "csr row-pointer count")?;
+                let ptr = r.read_u32s(ptr_len, "csr row pointers")?;
                 anyhow::ensure!(
-                    nnz <= rows * cols,
-                    "csr leaf {}: nnz {nnz} exceeds {rows}×{cols}",
-                    spec.name
-                );
-                let mut ptr = vec![0u32; rows + 1];
-                read_u32s(&mut f, &mut ptr, "csr row pointers")?;
-                anyhow::ensure!(
-                    ptr.last().copied() == Some(nnz as u32),
+                    ptr.last().copied() == Some(nnz32),
                     "csr leaf {}: ptr/nnz inconsistency (last ptr {} != nnz {nnz})",
                     spec.name,
                     ptr.last().copied().unwrap_or(0)
                 );
-                let mut indices = vec![0u32; nnz];
-                read_u32s(&mut f, &mut indices, "csr column indices")?;
-                let mut data = vec![0.0f32; nnz];
-                read_f32s(&mut f, &mut data, "csr values")?;
+                let indices = r.read_u32s(nnz, "csr column indices")?;
+                let data = r.read_f32s(nnz, "csr values")?;
                 let csr = CsrMatrix {
                     rows,
                     cols,
@@ -302,18 +323,9 @@ pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
                 quantized.push(None);
             }
             2 => {
-                let rows = read_u64(&mut f, "qcs rows")? as usize;
-                let cols = read_u64(&mut f, "qcs cols")? as usize;
-                let nnz = read_u64(&mut f, "qcs nnz")? as usize;
-                anyhow::ensure!(rows * cols == spec.numel(), "qcs leaf shape mismatch for {}", spec.name);
-                anyhow::ensure!(
-                    nnz <= rows * cols,
-                    "qcs leaf {}: nnz {nnz} exceeds {rows}×{cols}",
-                    spec.name
-                );
-                let k = read_u16(&mut f, "qcs codebook length")? as usize;
-                let mut small = [0u8; 2];
-                read_exactly(&mut f, &mut small, "qcs packing descriptor")?;
+                let (rows, cols, nnz, nnz32) = read_sparse_dims(&mut r, spec, numel, "qcs")?;
+                let k = r.read_u16("qcs codebook length")? as usize;
+                let small = r.take(2, "qcs packing descriptor")?;
                 let (code_bits, idx_bytes) = (small[0] as usize, small[1] as usize);
                 anyhow::ensure!(
                     (code_bits == 4 || code_bits == 8) && (idx_bytes == 2 || idx_bytes == 4),
@@ -325,33 +337,25 @@ pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
                     "qcs leaf {}: codebook length {k} does not fit {code_bits}-bit codes",
                     spec.name
                 );
-                let mut codebook = vec![0.0f32; k];
-                read_f32s(&mut f, &mut codebook, "qcs codebook")?;
-                let mut ptr = vec![0u32; rows + 1];
-                read_u32s(&mut f, &mut ptr, "qcs row pointers")?;
+                let codebook = r.read_f32s(k, "qcs codebook")?;
+                let ptr_len = cursor::checked_add(rows, 1, "qcs row-pointer count")?;
+                let ptr = r.read_u32s(ptr_len, "qcs row pointers")?;
                 anyhow::ensure!(
-                    ptr.last().copied() == Some(nnz as u32),
+                    ptr.last().copied() == Some(nnz32),
                     "qcs leaf {}: ptr/nnz inconsistency (last ptr {} != nnz {nnz})",
                     spec.name,
                     ptr.last().copied().unwrap_or(0)
                 );
                 let indices: Vec<u32> = if idx_bytes == 2 {
-                    let mut idx = vec![0u16; nnz];
-                    read_u16s(&mut f, &mut idx, "qcs column indices")?;
-                    idx.into_iter().map(|i| i as u32).collect()
+                    r.read_u16s(nnz, "qcs column indices")?.into_iter().map(|i| i as u32).collect()
                 } else {
-                    let mut idx = vec![0u32; nnz];
-                    read_u32s(&mut f, &mut idx, "qcs column indices")?;
-                    idx
+                    r.read_u32s(nnz, "qcs column indices")?
                 };
                 let codes: Vec<u8> = if code_bits == 4 {
-                    let mut packed = vec![0u8; nnz.div_ceil(2)];
-                    read_exactly(&mut f, &mut packed, "qcs packed codes")?;
+                    let packed = r.take(nnz.div_ceil(2), "qcs packed codes")?;
                     (0..nnz).map(|j| (packed[j / 2] >> ((j % 2) * 4)) & 0xF).collect()
                 } else {
-                    let mut raw = vec![0u8; nnz];
-                    read_exactly(&mut f, &mut raw, "qcs codes")?;
-                    raw
+                    r.read_bytes(nnz, "qcs codes")?
                 };
                 let q = crate::quant::QcsMatrix::from_parts(
                     rows,
@@ -368,6 +372,7 @@ pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
             other => anyhow::bail!("unknown leaf encoding {other}"),
         }
     }
+    r.expect_empty("the last leaf")?;
     Ok(Checkpoint {
         params: ParamBundle { specs, values },
         meta,
@@ -376,70 +381,63 @@ pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
     })
 }
 
+/// Shared CSR/QCS dimension header: `rows | cols | nnz`, every value
+/// validated with checked arithmetic against the header-declared spec
+/// *before* anything downstream allocates. Returns
+/// `(rows, cols, nnz, nnz_as_u32)`.
+fn read_sparse_dims(
+    r: &mut BoundedReader<'_>,
+    spec: &ParamSpec,
+    numel: usize,
+    kind: &str,
+) -> anyhow::Result<(usize, usize, usize, u32)> {
+    let rows = r.read_len_u64(&format!("{kind} rows"))?;
+    let cols = r.read_len_u64(&format!("{kind} cols"))?;
+    let nnz = r.read_len_u64(&format!("{kind} nnz"))?;
+    // Sparse leaves must view as a matrix: reject non-2-D/4-D specs
+    // explicitly instead of letting a zero-sized fallback view slide
+    // into CSR construction.
+    let (vr, vc) = matrix_view(spec).ok_or_else(|| {
+        anyhow::anyhow!(
+            "{kind} leaf {}: spec shape {:?} has no 2-D matrix view (rank must be 2 or 4)",
+            spec.name,
+            spec.shape
+        )
+    })?;
+    anyhow::ensure!(
+        rows == vr && cols == vc,
+        "{kind} leaf {}: declared {rows}×{cols} does not match the spec's {vr}×{vc} view",
+        spec.name
+    );
+    let cells = cursor::checked_mul(rows, cols, &format!("{kind} leaf {} dimensions", spec.name))?;
+    anyhow::ensure!(cells == numel, "{kind} leaf shape mismatch for {}", spec.name);
+    anyhow::ensure!(nnz <= cells, "{kind} leaf {}: nnz {nnz} exceeds {rows}×{cols}", spec.name);
+    // The on-disk row pointers are u32: an nnz the encoding cannot even
+    // represent must fail here, not silently truncate in a comparison.
+    let nnz32 = u32::try_from(nnz).map_err(|_| {
+        anyhow::anyhow!("{kind} leaf {}: nnz {nnz} does not fit the u32 row-pointer encoding", spec.name)
+    })?;
+    anyhow::ensure!(
+        cells <= MAX_DECODE_NUMEL,
+        "{kind} leaf {}: {rows}×{cols} is implausibly large to expand (cap {MAX_DECODE_NUMEL} elements)",
+        spec.name
+    );
+    Ok((rows, cols, nnz, nnz32))
+}
+
 /// 2-D view used for CSR storage: fc (N, K); conv (O, I·KH·KW).
-pub fn matrix_view(spec: &ParamSpec) -> (usize, usize) {
+/// `None` for shapes with no matrix view (rank ≠ 2/4, or a 4-D fan-in
+/// product that overflows) — callers must reject or fall back to dense
+/// explicitly.
+pub fn matrix_view(spec: &ParamSpec) -> Option<(usize, usize)> {
     match spec.shape.len() {
-        2 => (spec.shape[0], spec.shape[1]),
-        4 => (spec.shape[0], spec.shape[1] * spec.shape[2] * spec.shape[3]),
-        _ => (0, 0),
-    }
-}
-
-/// `read_exact` with a truncation-aware error: every payload read names
-/// what it was reading when the file ran out.
-fn read_exactly(f: &mut impl Read, buf: &mut [u8], what: &str) -> anyhow::Result<()> {
-    f.read_exact(buf).map_err(|e| {
-        if e.kind() == std::io::ErrorKind::UnexpectedEof {
-            anyhow::anyhow!("truncated checkpoint while reading {what}")
-        } else {
-            anyhow::anyhow!("read error while reading {what}: {e}")
+        2 => Some((spec.shape[0], spec.shape[1])),
+        4 => {
+            let fan = spec.shape[1].checked_mul(spec.shape[2])?.checked_mul(spec.shape[3])?;
+            Some((spec.shape[0], fan))
         }
-    })
-}
-
-fn read_u16(f: &mut impl Read, what: &str) -> anyhow::Result<u16> {
-    let mut b = [0u8; 2];
-    read_exactly(f, &mut b, what)?;
-    Ok(u16::from_le_bytes(b))
-}
-
-fn read_u32(f: &mut impl Read, what: &str) -> anyhow::Result<u32> {
-    let mut b = [0u8; 4];
-    read_exactly(f, &mut b, what)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn read_u64(f: &mut impl Read, what: &str) -> anyhow::Result<u64> {
-    let mut b = [0u8; 8];
-    read_exactly(f, &mut b, what)?;
-    Ok(u64::from_le_bytes(b))
-}
-
-fn read_u16s(f: &mut impl Read, out: &mut [u16], what: &str) -> anyhow::Result<()> {
-    let mut bytes = vec![0u8; out.len() * 2];
-    read_exactly(f, &mut bytes, what)?;
-    for (i, chunk) in bytes.chunks_exact(2).enumerate() {
-        out[i] = u16::from_le_bytes(chunk.try_into().unwrap());
+        _ => None,
     }
-    Ok(())
-}
-
-fn read_u32s(f: &mut impl Read, out: &mut [u32], what: &str) -> anyhow::Result<()> {
-    let mut bytes = vec![0u8; out.len() * 4];
-    read_exactly(f, &mut bytes, what)?;
-    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
-        out[i] = u32::from_le_bytes(chunk.try_into().unwrap());
-    }
-    Ok(())
-}
-
-fn read_f32s(f: &mut impl Read, out: &mut [f32], what: &str) -> anyhow::Result<()> {
-    let mut bytes = vec![0u8; out.len() * 4];
-    read_exactly(f, &mut bytes, what)?;
-    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
-        out[i] = f32::from_le_bytes(chunk.try_into().unwrap());
-    }
-    Ok(())
 }
 
 #[cfg(test)]
@@ -680,8 +678,152 @@ mod tests {
     #[test]
     fn matrix_views() {
         let b = test_bundle(false);
-        assert_eq!(matrix_view(&b.specs[0]), (4, 18));
-        assert_eq!(matrix_view(&b.specs[1]), (0, 0)); // 1-D → no CSR view
-        assert_eq!(matrix_view(&b.specs[2]), (10, 72));
+        assert_eq!(matrix_view(&b.specs[0]), Some((4, 18)));
+        assert_eq!(matrix_view(&b.specs[1]), None); // 1-D → no CSR view
+        assert_eq!(matrix_view(&b.specs[2]), Some((10, 72)));
+        // A 4-D fan-in product that overflows has no view either.
+        let huge = ParamSpec {
+            name: "conv_x".into(),
+            kind: "conv_w".into(),
+            shape: vec![2, usize::MAX, 2, 2],
+            prunable: true,
+            layer: "conv_x".into(),
+        };
+        assert_eq!(matrix_view(&huge), None);
+    }
+
+    /// Header + one-leaf body builder for hand-crafted corrupt files.
+    fn crafted(shape: &str, body: &[u8]) -> Vec<u8> {
+        let header = format!(
+            r#"{{"meta":{{}},"specs":[{{"name":"fc1_w","kind":"fc_w","shape":{shape},"prunable":true,"layer":"fc1"}}]}}"#
+        );
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        bytes.extend_from_slice(body);
+        bytes
+    }
+
+    // --- fuzz-found regression pins -------------------------------------
+    // Each test below is a minimized corrupt-bytes reproducer (also
+    // committed under fuzz/corpus/) that crashed or mis-validated on the
+    // pre-cursor decoder; the bounded-cursor rewrite must answer each
+    // with an explicit error — never an allocation abort or a wrap.
+
+    #[test]
+    fn rejects_header_declared_sizes_beyond_file() {
+        // A legitimate-looking 1 M × 16 CSR leaf whose row-pointer array
+        // alone would be 4 MB — but the file ends right after the dims.
+        // The old decoder allocated `vec![0u32; rows + 1]` first and hit
+        // EOF later; the bounded cursor must reject on arithmetic alone.
+        let mut body = vec![1u8];
+        body.extend_from_slice(&(1u64 << 20).to_le_bytes()); // rows
+        body.extend_from_slice(&16u64.to_le_bytes()); // cols
+        body.extend_from_slice(&0u64.to_le_bytes()); // nnz
+        let bytes = crafted("[1048576,16]", &body);
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("truncated checkpoint while reading csr row pointers"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrapping_dimension_products() {
+        // rows = 2^63 + 3, cols = 2: the unchecked release-build product
+        // wraps to 6 and used to sail past `rows * cols == numel` on a
+        // [2,3] spec — after which `rows + 1` row pointers aborts the
+        // allocator. Both multiplies must be checked now.
+        let mut body = vec![1u8];
+        body.extend_from_slice(&((1u64 << 63) + 3).to_le_bytes()); // rows
+        body.extend_from_slice(&2u64.to_le_bytes()); // cols
+        body.extend_from_slice(&6u64.to_le_bytes()); // nnz
+        let bytes = crafted("[2,3]", &body);
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(
+            err.contains("does not match the spec's") || err.contains("overflows"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn rejects_shape_product_overflow() {
+        // The spec shape itself is attacker-controlled JSON: [2^32, 2^32]
+        // must fail in the checked shape-product pass, not wrap to 0.
+        let bytes = crafted("[4294967296,4294967296]", &[1u8]);
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("overflows"), "{err}");
+    }
+
+    #[test]
+    fn rejects_nnz_beyond_u32_encoding() {
+        // nnz = 2^32 passes `nnz <= rows×cols` on a 65536² spec, then
+        // `nnz as u32` silently truncated to 0 and matched an all-zero
+        // ptr array. Must be rejected by `u32::try_from` instead.
+        let mut body = vec![1u8];
+        body.extend_from_slice(&65536u64.to_le_bytes()); // rows
+        body.extend_from_slice(&65536u64.to_le_bytes()); // cols
+        body.extend_from_slice(&(1u64 << 32).to_le_bytes()); // nnz
+        let bytes = crafted("[65536,65536]", &body);
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("does not fit the u32 row-pointer encoding"), "{err}");
+    }
+
+    #[test]
+    fn rejects_implausibly_large_sparse_expansion() {
+        // 65536×65536 with a tiny nnz passes every byte-level bound (the
+        // file really does hold one row pointer per row) — but expanding
+        // it to dense would allocate 16 GiB. The numel cap must refuse.
+        let mut body = vec![1u8];
+        body.extend_from_slice(&65536u64.to_le_bytes()); // rows
+        body.extend_from_slice(&65536u64.to_le_bytes()); // cols
+        body.extend_from_slice(&0u64.to_le_bytes()); // nnz
+        let bytes = crafted("[65536,65536]", &body);
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("implausibly large to expand"), "{err}");
+    }
+
+    #[test]
+    fn rejects_sparse_leaf_on_non_matrix_spec() {
+        // A 1-D [6] spec has no matrix view; the old loader accepted a
+        // 2×3 CSR leaf for it because 2×3 == numel — routing a spec the
+        // engine would later view as (0,0) into CSR construction.
+        let mut body = vec![1u8];
+        body.extend_from_slice(&2u64.to_le_bytes()); // rows
+        body.extend_from_slice(&3u64.to_le_bytes()); // cols
+        body.extend_from_slice(&2u64.to_le_bytes()); // nnz
+        for p in [0u32, 1, 2] {
+            body.extend_from_slice(&p.to_le_bytes());
+        }
+        for i in [0u32, 2] {
+            body.extend_from_slice(&i.to_le_bytes());
+        }
+        for v in [1.0f32, 2.0] {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        let bytes = crafted("[6]", &body);
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("no 2-D matrix view"), "{err}");
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let b = test_bundle(true);
+        let path = tmp("trailing.pxcp");
+        save(&path, &b, &Json::obj()).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0u8; 4]);
+        let err = decode(&bytes).unwrap_err().to_string();
+        assert!(err.contains("trailing bytes"), "{err}");
+    }
+
+    #[test]
+    fn decode_matches_load() {
+        let b = test_bundle(true);
+        let path = tmp("decode_twin.pxcp");
+        save(&path, &b, &Json::obj()).unwrap();
+        let via_load = load(&path).unwrap();
+        let via_decode = decode(&std::fs::read(&path).unwrap()).unwrap();
+        assert_eq!(via_load.params.values, via_decode.params.values);
+        assert_eq!(via_load.payload_bytes, via_decode.payload_bytes);
     }
 }

@@ -91,9 +91,9 @@ pub fn deployed_formats(params: &ParamBundle) -> Vec<(String, SparseFormat, usiz
         .zip(&params.values)
         .filter(|(s, _)| s.prunable)
         .filter_map(|(s, v)| {
-            let (rows, cols) = crate::checkpoint::matrix_view(s);
+            let (rows, cols) = crate::checkpoint::matrix_view(s)?; // not 2-D-viewable → skip
             if rows == 0 {
-                return None; // not 2-D-viewable
+                return None;
             }
             let m = DynSparseMatrix::from_dense(v, rows, cols);
             Some((s.layer.clone(), m.format(), m.storage_bytes()))

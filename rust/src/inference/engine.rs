@@ -284,7 +284,17 @@ impl Engine {
         };
         let store = |name: &str| -> anyhow::Result<WeightStore> {
             let (s, v) = value(name)?;
-            let (rows, cols) = crate::checkpoint::matrix_view(s);
+            // Weight leaves must view as a matrix; a crafted checkpoint
+            // header with a 1-D/3-D weight shape is rejected here
+            // explicitly instead of flowing a zero-sized view into CSR
+            // construction.
+            let (rows, cols) = crate::checkpoint::matrix_view(s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "weight leaf {} has non-matrix shape {:?} (rank must be 2 or 4)",
+                    s.name,
+                    s.shape
+                )
+            })?;
             if s.prunable {
                 if let Some(q) = qcs.and_then(|m| m.get(name)) {
                     return Ok(WeightStore::Quantized(q.clone()));

@@ -65,6 +65,7 @@ use crate::inference::registry::{ModelRegistry, SubmitError};
 use crate::inference::server::WaitOutcome;
 use crate::inference::{BatchConfig, Engine};
 use crate::metrics::ServingStats;
+use crate::util::cursor::{self, BoundedReader};
 use crate::util::json::Json;
 
 /// Absolute frame-size cap (either direction): no peer can make the
@@ -455,8 +456,18 @@ fn handle_conn(mut stream: TcpStream, shared: Arc<Shared>) {
 /// Serve one decoded request frame. Returns false when the connection
 /// should close (protocol violation, shutdown, or write failure).
 fn handle_request(payload: &[u8], stream: &mut TcpStream, shared: &Shared) -> bool {
-    // `read_frame` already rejected empty payloads.
-    let (op, body) = (payload[0], &payload[1..]);
+    // `read_frame` already rejected empty payloads; split `op | body`
+    // on the shared bounded cursor anyway so there is no bare indexing
+    // into untrusted bytes.
+    let mut r = BoundedReader::new(payload, "frame");
+    let op = match r.read_u8("opcode") {
+        Ok(op) => op,
+        Err(_) => {
+            let _ = write_error(stream, ErrorCode::BadFrame, "empty request frame", shared);
+            return false;
+        }
+    };
+    let body = r.take_rest();
     match op {
         OP_INFER => handle_infer(None, body, stream, shared),
         OP_INFER_MODEL => match parse_infer_model_body(body) {
@@ -494,24 +505,24 @@ fn handle_request(payload: &[u8], stream: &mut TcpStream, shared: &Shared) -> bo
     }
 }
 
-/// Split an INFER_MODEL body into `(model_id, sample_bytes)`. Errors are
-/// frame-layout violations (the caller answers `bad-frame`).
-fn parse_infer_model_body(body: &[u8]) -> Result<(&str, &[u8]), String> {
-    let (&id_len, rest) = body
-        .split_first()
-        .ok_or_else(|| "INFER_MODEL body is empty (wants id_len | id | sample)".to_string())?;
+/// Split an INFER_MODEL body into `(model_id, sample_bytes)` on the
+/// shared bounded cursor. Errors are frame-layout violations (the
+/// caller answers `bad-frame`). Public because the `fuzz/` body target
+/// drives it directly.
+pub fn parse_infer_model_body(body: &[u8]) -> Result<(&str, &[u8]), String> {
+    let mut r = BoundedReader::new(body, "INFER_MODEL body");
+    let id_len = r
+        .read_u8("id length")
+        .map_err(|_| "INFER_MODEL body is empty (wants id_len | id | sample)".to_string())?
+        as usize;
     if id_len == 0 {
         return Err("INFER_MODEL id length is 0".to_string());
     }
-    if rest.len() < id_len as usize {
-        return Err(format!(
-            "INFER_MODEL id length {id_len} exceeds the remaining {} body bytes",
-            rest.len()
-        ));
-    }
-    let (id_bytes, sample) = rest.split_at(id_len as usize);
+    let id_bytes = r.take(id_len, "model id").map_err(|_| {
+        format!("INFER_MODEL id length {id_len} exceeds the remaining {} body bytes", body.len() - 1)
+    })?;
     let id = std::str::from_utf8(id_bytes).map_err(|_| "INFER_MODEL id is not UTF-8".to_string())?;
-    Ok((id, sample))
+    Ok((id, r.take_rest()))
 }
 
 /// Serve one inference request: `model` is `None` for v1 INFER (routes
@@ -609,8 +620,10 @@ fn write_frame(stream: &mut impl Write, status: u8, body: &[u8]) -> std::io::Res
     stream.flush()
 }
 
-/// Why a frame read ended without a frame.
-enum FrameErr {
+/// Why a frame read ended without a frame. Public so the `fuzz/` wire
+/// target can pattern-match [`decode_frame`] outcomes.
+#[derive(Debug)]
+pub enum FrameErr {
     /// Hardened-decoding rejection: oversized/empty/truncated/stalled
     /// frame. The byte stream can no longer be re-synchronized.
     Bad(String),
@@ -627,16 +640,40 @@ enum FrameErr {
 fn read_frame(stream: &mut impl Read, cap: usize, shutting: &AtomicBool, stall: Duration) -> Result<Vec<u8>, FrameErr> {
     let mut header = [0u8; 4];
     read_full(stream, &mut header, true, shutting, stall)?;
-    let len = u32::from_le_bytes(header) as usize;
-    if len == 0 {
-        return Err(FrameErr::Bad("empty frame (length prefix 0)".to_string()));
-    }
-    if len > cap {
-        return Err(FrameErr::Bad(format!("frame of {len} bytes exceeds this endpoint's {cap}-byte cap")));
-    }
+    let len = frame_payload_len(header, cap)?;
     let mut payload = vec![0u8; len];
     read_full(stream, &mut payload, false, shutting, stall)?;
     Ok(payload)
+}
+
+/// Validate a frame's length prefix against `cap` — the shared
+/// declared-size-before-allocation guard, used by both the streaming
+/// reader and the pure [`decode_frame`] twin.
+fn frame_payload_len(header: [u8; 4], cap: usize) -> Result<usize, FrameErr> {
+    let len = u32::from_le_bytes(header);
+    if len == 0 {
+        return Err(FrameErr::Bad("empty frame (length prefix 0)".to_string()));
+    }
+    cursor::claimed_len(u64::from(len), cap, "frame", "payload").map_err(|e| FrameErr::Bad(e.to_string()))
+}
+
+/// Decode one frame from an in-memory byte buffer — the pure twin of
+/// the streaming [`read_frame`] loop, built on the shared
+/// [`BoundedReader`] and driven directly by the `fuzz/` wire target.
+/// Returns the first frame's payload; bytes past it are ignored (on a
+/// stream they would belong to the next frame).
+pub fn decode_frame(bytes: &[u8], cap: usize) -> Result<Vec<u8>, FrameErr> {
+    let mut r = BoundedReader::new(bytes, "frame");
+    if r.is_empty() {
+        // EOF at a frame boundary: the stream analogue is a clean close.
+        return Err(FrameErr::Closed);
+    }
+    let header: [u8; 4] = match r.take(4, "length prefix") {
+        Ok(b) => [b[0], b[1], b[2], b[3]],
+        Err(e) => return Err(FrameErr::Bad(e.to_string())),
+    };
+    let len = frame_payload_len(header, cap)?;
+    r.read_bytes(len, "payload").map_err(|e| FrameErr::Bad(format!("peer closed mid-frame: {e}")))
 }
 
 /// Fill `buf`, treating read-timeout ticks as poll points. `idle_ok`
@@ -749,9 +786,9 @@ impl NetClient {
     pub fn recv_response(&mut self) -> anyhow::Result<(u8, Vec<u8>)> {
         let mut header = [0u8; 4];
         self.stream.read_exact(&mut header).map_err(|e| anyhow::anyhow!("recv header: {e}"))?;
-        let len = u32::from_le_bytes(header) as usize;
+        let len = u32::from_le_bytes(header);
         anyhow::ensure!(len >= 1, "empty response frame");
-        anyhow::ensure!(len <= MAX_FRAME_BYTES, "response frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte cap");
+        let len = cursor::claimed_len(u64::from(len), MAX_FRAME_BYTES, "response frame", "payload")?;
         let mut payload = vec![0u8; len];
         self.stream.read_exact(&mut payload).map_err(|e| anyhow::anyhow!("recv body: {e}"))?;
         let body = payload.split_off(1);
@@ -930,5 +967,54 @@ mod tests {
         // at the routing layer, against the resolved model).
         let (id, rest) = parse_infer_model_body(&[2, b'o', b'k']).unwrap();
         assert_eq!((id, rest.len()), ("ok", 0));
+    }
+
+    #[test]
+    fn infer_model_body_id_length_extremes() {
+        // 255 is the largest id u8 can frame: encode and parse byte-exact.
+        let id = "m".repeat(255);
+        let body = encode_infer_model_body(&id, &[0.5f32]).unwrap();
+        assert_eq!(body[0], 255);
+        let (got, raw) = parse_infer_model_body(&body).unwrap();
+        assert_eq!((got, raw.len()), (id.as_str(), 4));
+        // A 255 length prefix with a body one byte short is truncation,
+        // not a read past the slice.
+        let mut short = vec![255u8];
+        short.extend_from_slice(&vec![b'x'; 254]);
+        assert!(parse_infer_model_body(&short).is_err());
+    }
+
+    #[test]
+    fn decode_frame_matches_streaming_reader() {
+        // The pure twin agrees with read_frame on the good path...
+        let bytes = frame_bytes(&[OP_PING]);
+        assert_eq!(decode_frame(&bytes, 64).unwrap(), vec![OP_PING]);
+        // ...ignores bytes past the first frame (the next frame's turf)...
+        let mut two = frame_bytes(&[OP_PING]);
+        two.extend_from_slice(&frame_bytes(&[OP_STATS]));
+        assert_eq!(decode_frame(&two, 64).unwrap(), vec![OP_PING]);
+        // ...and mirrors its error taxonomy.
+        assert!(matches!(decode_frame(&[], 64), Err(FrameErr::Closed)));
+        assert!(matches!(decode_frame(&[1, 0], 64), Err(FrameErr::Bad(_))));
+        assert!(matches!(decode_frame(&0u32.to_le_bytes(), 64), Err(FrameErr::Bad(_))));
+        match decode_frame(&(1u32 << 30).to_le_bytes(), 64) {
+            Err(FrameErr::Bad(msg)) => assert!(msg.contains("cap"), "{msg}"),
+            other => panic!("oversized frame accepted: {other:?}"),
+        }
+        let mut truncated = 8u32.to_le_bytes().to_vec();
+        truncated.extend_from_slice(&[1, 2, 3]);
+        match decode_frame(&truncated, 64) {
+            Err(FrameErr::Bad(msg)) => assert!(msg.contains("mid-frame"), "{msg}"),
+            other => panic!("truncated frame accepted: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_frame_accepts_payload_exactly_at_cap() {
+        let cap = 64usize;
+        let payload = vec![0xABu8; cap];
+        assert_eq!(decode_frame(&frame_bytes(&payload), cap).unwrap(), payload);
+        let over = vec![0xABu8; cap + 1];
+        assert!(matches!(decode_frame(&frame_bytes(&over), cap), Err(FrameErr::Bad(_))));
     }
 }

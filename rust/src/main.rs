@@ -401,10 +401,11 @@ fn print_leaf_sizes(params: &proxcomp::runtime::ParamBundle, engine: &Engine) {
     use proxcomp::sparse::CsrMatrix;
     let mut base = std::collections::HashMap::new();
     for (spec, v) in params.specs.iter().zip(&params.values) {
-        let (rows, cols) = checkpoint::matrix_view(spec);
-        if spec.prunable && rows > 0 {
-            let csr = CsrMatrix::from_dense(v, rows, cols);
-            base.insert(spec.layer.clone(), (v.len() * 4, csr.storage_bytes()));
+        if let Some((rows, cols)) = checkpoint::matrix_view(spec) {
+            if spec.prunable && rows > 0 {
+                let csr = CsrMatrix::from_dense(v, rows, cols);
+                base.insert(spec.layer.clone(), (v.len() * 4, csr.storage_bytes()));
+            }
         }
     }
     println!("[pipeline] per-leaf storage (dense → CSR → deployed):");

@@ -110,7 +110,7 @@ pub fn quantize_bundle(bundle: &ParamBundle, cfg: &QuantConfig) -> (QuantizedMod
     let mut leaves = Vec::with_capacity(bundle.specs.len());
     let mut reports = Vec::with_capacity(bundle.specs.len());
     for (spec, values) in bundle.specs.iter().zip(&bundle.values) {
-        let (rows, cols) = crate::checkpoint::matrix_view(spec);
+        let (rows, cols) = crate::checkpoint::matrix_view(spec).unwrap_or((0, 0));
         let nnz = values.iter().filter(|&&v| v != 0.0).count();
         let dense_bytes = values.len() * 4;
         let viewable = spec.prunable && rows > 0;

@@ -1,0 +1,282 @@
+//! Hardened bounded cursor — the one place untrusted lengths meet
+//! allocations.
+//!
+//! Both untrusted parsers in this crate (checkpoint decode in
+//! `checkpoint::decode` and the framed-TCP wire protocol in
+//! `inference::net`) read attacker-controllable length fields and then
+//! materialize buffers of that declared size. [`BoundedReader`] makes
+//! the safe pattern the only expressible one:
+//!
+//! * every read states *what* it is reading, so truncation errors name
+//!   the field that ran out ("truncated checkpoint while reading csr
+//!   row pointers");
+//! * every declared element count is bounded against the cursor's
+//!   **remaining input bytes** *before* any allocation — a 16-byte file
+//!   claiming 2⁶¹ rows is rejected by arithmetic, it never reaches the
+//!   allocator;
+//! * all size arithmetic goes through [`checked_mul`]/[`checked_add`],
+//!   so release-build wraparound cannot sneak a huge claim past a
+//!   plausibility guard.
+//!
+//! For streaming endpoints (the TCP frame reader cannot know its
+//! remaining bytes), [`claimed_len`] is the shared declared-size-vs-cap
+//! guard applied before the single bounded allocation.
+
+/// Bounds-checked cursor over an untrusted in-memory byte buffer.
+///
+/// `ctx` is the error-message noun for the input as a whole
+/// (`"checkpoint"`, `"frame"`, …): truncation reads as
+/// "truncated {ctx} while reading {what}".
+pub struct BoundedReader<'a> {
+    /// Unread remainder of the input.
+    buf: &'a [u8],
+    /// Bytes consumed so far (error offsets, payload accounting).
+    consumed: usize,
+    ctx: &'static str,
+}
+
+impl<'a> BoundedReader<'a> {
+    pub fn new(buf: &'a [u8], ctx: &'static str) -> BoundedReader<'a> {
+        BoundedReader { buf, consumed: 0, ctx }
+    }
+
+    /// Unread bytes — the hard ceiling on any further declared size.
+    pub fn remaining(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Bytes consumed so far.
+    pub fn consumed(&self) -> usize {
+        self.consumed
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// The core guard: hand out the next `n` bytes, or fail with a
+    /// truncation error naming `what`. No allocation ever happens
+    /// before this check succeeds.
+    pub fn take(&mut self, n: usize, what: &str) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.buf.len(),
+            "truncated {} while reading {what} ({n} bytes declared, {} remain at offset {})",
+            self.ctx,
+            self.buf.len(),
+            self.consumed
+        );
+        let (head, tail) = self.buf.split_at(n);
+        self.buf = tail;
+        self.consumed += n;
+        Ok(head)
+    }
+
+    /// Everything left (the "rest of body is payload" pattern).
+    pub fn take_rest(&mut self) -> &'a [u8] {
+        let rest = self.buf;
+        self.consumed += rest.len();
+        self.buf = &[];
+        rest
+    }
+
+    /// Fail unless the input was consumed exactly.
+    pub fn expect_empty(&self, what: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(self.buf.is_empty(), "{} has {} trailing bytes after {what}", self.ctx, self.buf.len());
+        Ok(())
+    }
+
+    pub fn read_u8(&mut self, what: &str) -> anyhow::Result<u8> {
+        Ok(self.take(1, what)?[0])
+    }
+
+    pub fn read_u16(&mut self, what: &str) -> anyhow::Result<u16> {
+        let b = self.take(2, what)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    pub fn read_u32(&mut self, what: &str) -> anyhow::Result<u32> {
+        let b = self.take(4, what)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn read_u64(&mut self, what: &str) -> anyhow::Result<u64> {
+        let b = self.take(8, what)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn read_f32(&mut self, what: &str) -> anyhow::Result<f32> {
+        Ok(f32::from_bits(self.read_u32(what)?))
+    }
+
+    /// A u64 length field that must index in-memory data: rejects
+    /// values a `usize` cannot hold (32-bit targets) with an explicit
+    /// error instead of an `as` truncation.
+    pub fn read_len_u64(&mut self, what: &str) -> anyhow::Result<usize> {
+        let v = self.read_u64(what)?;
+        usize::try_from(v)
+            .map_err(|_| anyhow::anyhow!("{} {what} {v} does not fit this platform's usize", self.ctx))
+    }
+
+    /// `n` raw bytes as an owned buffer; the allocation is bounded by
+    /// `take`'s remaining-input guard.
+    pub fn read_bytes(&mut self, n: usize, what: &str) -> anyhow::Result<Vec<u8>> {
+        Ok(self.take(n, what)?.to_vec())
+    }
+
+    /// `n` little-endian u16s. `n × 2` is checked against the remaining
+    /// input before the output vector is allocated.
+    pub fn read_u16s(&mut self, n: usize, what: &str) -> anyhow::Result<Vec<u16>> {
+        let bytes = self.take(checked_mul(n, 2, what)?, what)?;
+        Ok(bytes.chunks_exact(2).map(|c| u16::from_le_bytes([c[0], c[1]])).collect())
+    }
+
+    /// `n` little-endian u32s, remaining-input-bounded before allocation.
+    pub fn read_u32s(&mut self, n: usize, what: &str) -> anyhow::Result<Vec<u32>> {
+        let bytes = self.take(checked_mul(n, 4, what)?, what)?;
+        Ok(bytes.chunks_exact(4).map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    /// `n` little-endian f32s, remaining-input-bounded before allocation.
+    pub fn read_f32s(&mut self, n: usize, what: &str) -> anyhow::Result<Vec<f32>> {
+        let bytes = self.take(checked_mul(n, 4, what)?, what)?;
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+}
+
+/// Overflow-rejecting multiply for dimension/size arithmetic on
+/// untrusted values. Release builds wrap on `*`; this fails loudly.
+pub fn checked_mul(a: usize, b: usize, what: &str) -> anyhow::Result<usize> {
+    a.checked_mul(b).ok_or_else(|| anyhow::anyhow!("{what}: size arithmetic overflows ({a} × {b})"))
+}
+
+/// Overflow-rejecting add (the `rows + 1` row-pointer count).
+pub fn checked_add(a: usize, b: usize, what: &str) -> anyhow::Result<usize> {
+    a.checked_add(b).ok_or_else(|| anyhow::anyhow!("{what}: size arithmetic overflows ({a} + {b})"))
+}
+
+/// The streaming-endpoint guard: validate a declared frame/payload
+/// length against a hard cap *before* the caller allocates its receive
+/// buffer. Returns the length as `usize` on success.
+pub fn claimed_len(len: u64, cap: usize, ctx: &str, what: &str) -> anyhow::Result<usize> {
+    anyhow::ensure!(len <= cap as u64, "{ctx} {what} of {len} bytes exceeds the {cap}-byte cap");
+    // Safe: `cap` is a usize, so `len <= cap` fits.
+    Ok(len as usize)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_reads_and_offsets() {
+        let mut bytes = Vec::new();
+        bytes.push(0xABu8);
+        bytes.extend_from_slice(&0x1234u16.to_le_bytes());
+        bytes.extend_from_slice(&0xDEADBEEFu32.to_le_bytes());
+        bytes.extend_from_slice(&0x0123456789ABCDEFu64.to_le_bytes());
+        bytes.extend_from_slice(&1.5f32.to_le_bytes());
+        let mut r = BoundedReader::new(&bytes, "test");
+        assert_eq!(r.read_u8("a").unwrap(), 0xAB);
+        assert_eq!(r.read_u16("b").unwrap(), 0x1234);
+        assert_eq!(r.read_u32("c").unwrap(), 0xDEADBEEF);
+        assert_eq!(r.read_u64("d").unwrap(), 0x0123456789ABCDEF);
+        assert_eq!(r.read_f32("e").unwrap(), 1.5);
+        assert_eq!(r.consumed(), bytes.len());
+        assert_eq!(r.remaining(), 0);
+        r.expect_empty("the payload").unwrap();
+    }
+
+    #[test]
+    fn truncation_at_every_field_boundary() {
+        // A layout of one field of each width: cutting the input at
+        // every possible byte offset must yield an explicit truncation
+        // error naming the field that ran out — never a panic.
+        let mut bytes = Vec::new();
+        bytes.push(7u8);
+        bytes.extend_from_slice(&1u16.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&3u64.to_le_bytes());
+        bytes.extend_from_slice(&[9u8; 5]);
+        let parse = |input: &[u8]| -> anyhow::Result<()> {
+            let mut r = BoundedReader::new(input, "test");
+            r.read_u8("tag")?;
+            r.read_u16("count")?;
+            r.read_u32("word")?;
+            r.read_u64("length")?;
+            r.read_bytes(5, "blob")?;
+            Ok(())
+        };
+        parse(&bytes).unwrap();
+        for cut in 0..bytes.len() {
+            let err = parse(&bytes[..cut]).unwrap_err().to_string();
+            assert!(err.contains("truncated test while reading"), "cut {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn element_reads_are_bounded_before_allocation() {
+        // 8 bytes of input; a declared count of 2^61 u32s must fail on
+        // the bound (and on the multiply), not attempt a 2^63-byte
+        // allocation.
+        let bytes = [0u8; 8];
+        let mut r = BoundedReader::new(&bytes, "test");
+        let err = r.read_u32s(1usize << 61, "giant array").unwrap_err().to_string();
+        assert!(err.contains("truncated test") || err.contains("overflows"), "{err}");
+        // The cursor is unchanged after a failed read.
+        assert_eq!(r.remaining(), 8);
+        assert_eq!(r.read_u32s(2, "pair").unwrap(), vec![0, 0]);
+    }
+
+    #[test]
+    fn element_count_multiply_overflow_is_rejected() {
+        let bytes = [0u8; 16];
+        let mut r = BoundedReader::new(&bytes, "test");
+        // usize::MAX elements × 4 bytes wraps in release; must error.
+        let err = r.read_f32s(usize::MAX, "values").unwrap_err().to_string();
+        assert!(err.contains("overflows"), "{err}");
+        let mut r = BoundedReader::new(&bytes, "test");
+        let err = r.read_u16s(usize::MAX, "values").unwrap_err().to_string();
+        assert!(err.contains("overflows"), "{err}");
+    }
+
+    #[test]
+    fn take_rest_and_expect_empty() {
+        let bytes = [1u8, 2, 3, 4];
+        let mut r = BoundedReader::new(&bytes, "test");
+        r.read_u8("tag").unwrap();
+        assert_eq!(r.take_rest(), &[2, 3, 4]);
+        assert!(r.is_empty());
+        r.expect_empty("the tail").unwrap();
+
+        let mut r = BoundedReader::new(&bytes, "test");
+        r.read_u8("tag").unwrap();
+        let err = r.expect_empty("the tag").unwrap_err().to_string();
+        assert!(err.contains("3 trailing bytes"), "{err}");
+    }
+
+    #[test]
+    fn zero_length_reads_are_fine() {
+        let mut r = BoundedReader::new(&[], "test");
+        assert_eq!(r.read_bytes(0, "nothing").unwrap(), Vec::<u8>::new());
+        assert_eq!(r.read_u32s(0, "nothing").unwrap(), Vec::<u32>::new());
+        assert_eq!(r.take_rest(), &[] as &[u8]);
+    }
+
+    #[test]
+    fn checked_arithmetic_helpers() {
+        assert_eq!(checked_mul(3, 4, "x").unwrap(), 12);
+        assert!(checked_mul(usize::MAX, 2, "x").is_err());
+        assert_eq!(checked_add(usize::MAX - 1, 1, "x").unwrap(), usize::MAX);
+        assert!(checked_add(usize::MAX, 1, "x").is_err());
+    }
+
+    #[test]
+    fn claimed_len_guard() {
+        assert_eq!(claimed_len(64, 1024, "frame", "payload").unwrap(), 64);
+        assert_eq!(claimed_len(1024, 1024, "frame", "payload").unwrap(), 1024);
+        let err = claimed_len(1 << 30, 1024, "frame", "payload").unwrap_err().to_string();
+        assert!(err.contains("cap"), "{err}");
+        // u64 lengths beyond usize range never reach the cast.
+        assert!(claimed_len(u64::MAX, usize::MAX, "frame", "payload").is_ok() || cfg!(target_pointer_width = "32"));
+    }
+}

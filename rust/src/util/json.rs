@@ -266,6 +266,11 @@ impl From<BTreeMap<String, Json>> for Json {
 // Parser
 // ---------------------------------------------------------------------------
 
+/// Recursive-descent nesting cap. The parser consumes untrusted input
+/// (checkpoint headers are attacker-controlled bytes), so a document of
+/// a few KB of `[[[[…` must fail with an error, not overflow the stack.
+const MAX_DEPTH: usize = 128;
+
 /// Parse a JSON document. Errors carry byte offsets for debuggability.
 pub fn parse(input: &str) -> anyhow::Result<Json> {
     let mut p = Parser {
@@ -273,7 +278,7 @@ pub fn parse(input: &str) -> anyhow::Result<Json> {
         pos: 0,
     };
     p.skip_ws();
-    let v = p.value()?;
+    let v = p.value(0)?;
     p.skip_ws();
     if p.pos != p.bytes.len() {
         anyhow::bail!("trailing data at byte {}", p.pos);
@@ -318,11 +323,14 @@ impl<'a> Parser<'a> {
         Ok(())
     }
 
-    fn value(&mut self) -> anyhow::Result<Json> {
+    fn value(&mut self, depth: usize) -> anyhow::Result<Json> {
+        if depth > MAX_DEPTH {
+            anyhow::bail!("nesting deeper than {MAX_DEPTH} at byte {}", self.pos);
+        }
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
@@ -341,7 +349,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn object(&mut self) -> anyhow::Result<Json> {
+    fn object(&mut self, depth: usize) -> anyhow::Result<Json> {
         self.expect(b'{')?;
         let mut pairs = Vec::new();
         self.skip_ws();
@@ -354,7 +362,7 @@ impl<'a> Parser<'a> {
             let key = self.string()?;
             self.skip_ws();
             self.expect(b':')?;
-            let value = self.value()?;
+            let value = self.value(depth + 1)?;
             pairs.push((key, value));
             self.skip_ws();
             match self.bump()? {
@@ -365,7 +373,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn array(&mut self) -> anyhow::Result<Json> {
+    fn array(&mut self, depth: usize) -> anyhow::Result<Json> {
         self.expect(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
@@ -374,7 +382,7 @@ impl<'a> Parser<'a> {
             return Ok(Json::Arr(items));
         }
         loop {
-            items.push(self.value()?);
+            items.push(self.value(depth + 1)?);
             self.skip_ws();
             match self.bump()? {
                 b',' => continue,
@@ -513,6 +521,21 @@ mod tests {
         let arr = j.get("a").unwrap().as_arr().unwrap();
         assert_eq!(arr.len(), 3);
         assert_eq!(arr[2].get("b"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn parse_rejects_pathological_nesting() {
+        // Fuzz-found: a few KB of `[[[[…` used to overflow the
+        // recursive-descent stack. Depth past MAX_DEPTH must error.
+        let deep_arr = "[".repeat(10_000);
+        let err = parse(&deep_arr).unwrap_err().to_string();
+        assert!(err.contains("nesting deeper than"), "{err}");
+        let deep_obj = "{\"k\":".repeat(10_000);
+        let err = parse(&deep_obj).unwrap_err().to_string();
+        assert!(err.contains("nesting deeper than"), "{err}");
+        // Depth at the cap still parses.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(parse(&ok).is_ok());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! (DESIGN.md §5).
 
 pub mod cli;
+pub mod cursor;
 pub mod json;
 pub mod logger;
 pub mod pool;

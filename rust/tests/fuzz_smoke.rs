@@ -1,0 +1,203 @@
+//! Deterministic fuzz-lite for the untrusted-bytes parsers, running
+//! under plain `cargo test -q` with no cargo-fuzz / nightly toolchain.
+//!
+//! Two halves:
+//!   1. The committed corpora under `fuzz/corpus/` — every `valid_*`
+//!      seed must decode, every `repro_*` / `bad_*` / malformed seed
+//!      must be a clean `Err` (these are the minimized reproducers for
+//!      the decode bugs this PR fixed; on pre-fix code they aborted,
+//!      panicked, or silently mis-loaded).
+//!   2. A seeded-RNG mutation sweep: byte flips, truncations, and
+//!      length-field overwrites with adversarial values over valid
+//!      checkpoint / wire / body bytes. The only acceptable outcomes
+//!      are `Ok` or `Err` — a panic or abort fails the suite.
+//!
+//! The real coverage-guided fuzzing lives in `fuzz/` (CI `fuzz-smoke`
+//! job); this file is the offline regression floor.
+
+use proxcomp::checkpoint;
+use proxcomp::inference::net::{decode_frame, parse_infer_model_body, MAX_FRAME_BYTES};
+use proxcomp::util::rng::Rng;
+use std::path::{Path, PathBuf};
+
+fn corpus_dir(target: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../fuzz/corpus").join(target)
+}
+
+fn corpus_files(target: &str) -> Vec<(String, Vec<u8>)> {
+    let dir = corpus_dir(target);
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(&dir)
+        .unwrap_or_else(|e| panic!("missing committed corpus {}: {e}", dir.display()))
+    {
+        let path = entry.unwrap().path();
+        if path.is_file() {
+            let name = path.file_name().unwrap().to_string_lossy().into_owned();
+            out.push((name, std::fs::read(&path).unwrap()));
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    assert!(!out.is_empty(), "empty corpus at {}", dir.display());
+    out
+}
+
+/// The v2 envelope the `checkpoint_v2` fuzz target prepends to its
+/// leaf-body corpus (one prunable [2,3] leaf) — keep in sync with
+/// fuzz/fuzz_targets/checkpoint_v2.rs.
+fn v2_envelope(body: &[u8]) -> Vec<u8> {
+    let header = r#"{"meta":{},"specs":[{"name":"fc1_w","kind":"fc_w","shape":[2,3],"prunable":true,"layer":"fc1"}]}"#;
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"PXCP");
+    bytes.extend_from_slice(&2u32.to_le_bytes());
+    bytes.extend_from_slice(&(header.len() as u64).to_le_bytes());
+    bytes.extend_from_slice(header.as_bytes());
+    bytes.extend_from_slice(body);
+    bytes
+}
+
+#[test]
+fn checkpoint_corpus_valid_seeds_decode_and_repros_fail() {
+    for (name, bytes) in corpus_files("checkpoint_v1") {
+        let result = checkpoint::decode(&bytes);
+        if name.starts_with("valid_") {
+            assert!(result.is_ok(), "{name}: {}", result.unwrap_err());
+        } else {
+            assert!(result.is_err(), "{name}: corrupt seed decoded successfully");
+        }
+    }
+    for (name, body) in corpus_files("checkpoint_v2") {
+        let result = checkpoint::decode(&v2_envelope(&body));
+        if name.starts_with("valid_") {
+            assert!(result.is_ok(), "{name}: {}", result.unwrap_err());
+        } else {
+            assert!(result.is_err(), "{name}: corrupt seed decoded successfully");
+        }
+    }
+}
+
+#[test]
+fn wire_corpus_valid_seeds_decode_and_repros_fail() {
+    for (name, bytes) in corpus_files("wire_frame") {
+        let result = decode_frame(&bytes, MAX_FRAME_BYTES);
+        if name.starts_with("valid_") {
+            assert!(result.is_ok(), "{name}: {:?}", result.unwrap_err());
+        } else {
+            assert!(result.is_err(), "{name}: corrupt frame decoded successfully");
+        }
+    }
+    for (name, bytes) in corpus_files("infer_model_body") {
+        let result = parse_infer_model_body(&bytes);
+        if name.starts_with("valid_") || name.starts_with("max_") {
+            assert!(result.is_ok(), "{name}: {}", result.unwrap_err());
+        } else {
+            assert!(result.is_err(), "{name}: malformed body parsed successfully");
+        }
+    }
+}
+
+/// Named reproducers for this PR's decode bugs must stay in the
+/// corpus and stay red — each maps to a unit test next to the fix.
+#[test]
+fn named_bug_reproducers_are_present_and_rejected() {
+    let cases = [
+        ("checkpoint_v1", "repro_nnz_u32_truncation.pxcp", "u32 row-pointer encoding"),
+        ("checkpoint_v1", "repro_sparse_expansion_oom.pxcp", "implausibly large to expand"),
+        ("checkpoint_v1", "repro_sparse_on_1d_spec.pxcp", "no 2-D matrix view"),
+        ("checkpoint_v1", "deep_json_header.pxcp", "nesting deeper than"),
+    ];
+    for (target, name, needle) in cases {
+        let bytes = std::fs::read(corpus_dir(target).join(name))
+            .unwrap_or_else(|e| panic!("{target}/{name} missing from corpus: {e}"));
+        let err = checkpoint::decode(&bytes).expect_err(name).to_string();
+        assert!(err.contains(needle), "{name}: error {err:?} lacks {needle:?}");
+    }
+    let body_cases = [
+        ("repro_dim_product_wrap.bin", "does not match the spec's"),
+        ("repro_truncated_ptr.bin", "truncated checkpoint"),
+    ];
+    for (name, needle) in body_cases {
+        let body = std::fs::read(corpus_dir("checkpoint_v2").join(name))
+            .unwrap_or_else(|e| panic!("checkpoint_v2/{name} missing from corpus: {e}"));
+        let err = checkpoint::decode(&v2_envelope(&body)).expect_err(name).to_string();
+        assert!(err.contains(needle), "{name}: error {err:?} lacks {needle:?}");
+    }
+}
+
+/// One deterministic mutation step: flip bytes, truncate, or stamp an
+/// adversarial value over a little-endian length/dimension field.
+fn mutate(rng: &mut Rng, bytes: &mut Vec<u8>) {
+    const EXTREMES: [u64; 8] = [
+        0,
+        1,
+        u32::MAX as u64,
+        u32::MAX as u64 + 1,
+        u64::MAX,
+        u64::MAX / 2 + 3, // wraps small when doubled
+        1 << 40,
+        255,
+    ];
+    if bytes.is_empty() {
+        return;
+    }
+    match rng.below(4) {
+        // Flip 1-4 random bytes.
+        0 => {
+            for _ in 0..=rng.below(4) {
+                let i = rng.below(bytes.len());
+                bytes[i] ^= (rng.next_u64() & 0xFF) as u8;
+            }
+        }
+        // Truncate at a random boundary.
+        1 => bytes.truncate(rng.below(bytes.len())),
+        // Overwrite 8 bytes with an extreme length/dimension value.
+        2 if bytes.len() >= 8 => {
+            let v = EXTREMES[rng.below(EXTREMES.len())].to_le_bytes();
+            let at = rng.below(bytes.len() - 7);
+            bytes[at..at + 8].copy_from_slice(&v);
+        }
+        // Overwrite 4 bytes (u32 fields: frame length prefix, version…).
+        _ => {
+            let v = (EXTREMES[rng.below(EXTREMES.len())] as u32).to_le_bytes();
+            if bytes.len() >= 4 {
+                let at = rng.below(bytes.len() - 3);
+                bytes[at..at + 4].copy_from_slice(&v);
+            }
+        }
+    }
+}
+
+#[test]
+fn checkpoint_decode_survives_seeded_mutations() {
+    let seeds: Vec<Vec<u8>> = corpus_files("checkpoint_v1")
+        .into_iter()
+        .map(|(_, b)| b)
+        .chain(corpus_files("checkpoint_v2").into_iter().map(|(_, b)| v2_envelope(&b)))
+        .collect();
+    let mut rng = Rng::new(0x5EED_CAFE);
+    for round in 0..400 {
+        let mut bytes = seeds[round % seeds.len()].clone();
+        for _ in 0..=rng.below(3) {
+            mutate(&mut rng, &mut bytes);
+        }
+        // Ok or Err are both fine; panics/aborts/OOMs are the bug.
+        let _ = checkpoint::decode(&bytes);
+    }
+}
+
+#[test]
+fn wire_decode_survives_seeded_mutations() {
+    let frame_seeds: Vec<Vec<u8>> =
+        corpus_files("wire_frame").into_iter().map(|(_, b)| b).collect();
+    let body_seeds: Vec<Vec<u8>> =
+        corpus_files("infer_model_body").into_iter().map(|(_, b)| b).collect();
+    let mut rng = Rng::new(0xF00D_F00D);
+    for round in 0..400 {
+        let mut frame = frame_seeds[round % frame_seeds.len()].clone();
+        mutate(&mut rng, &mut frame);
+        let _ = decode_frame(&frame, MAX_FRAME_BYTES);
+        let _ = decode_frame(&frame, 64);
+        let mut body = body_seeds[round % body_seeds.len()].clone();
+        mutate(&mut rng, &mut body);
+        let _ = parse_infer_model_body(&body);
+    }
+}
