@@ -549,6 +549,55 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // --- telemetry overhead: the serving forward with per-layer
+    // profiling always on, structured tracing off vs on. The
+    // observability contract is "near-zero cost disabled, bounded cost
+    // enabled" — enforce the enabled side staying under 5% on the
+    // lenet-s conv forward (the shape `proxcomp serve` runs).
+    common::section("telemetry overhead: lenet-s forward B=4, tracing off vs on");
+    {
+        use proxcomp::inference::{Engine, WeightMode};
+        use proxcomp::runtime::{Manifest, ParamBundle};
+
+        let manifest = Manifest::native();
+        let entry = manifest
+            .model("lenet-s")
+            .ok_or_else(|| anyhow::anyhow!("native manifest lost lenet-s"))?;
+        let mut bundle = ParamBundle::he_init(&entry.params, 17);
+        for (s, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+            if s.prunable {
+                prox::soft_threshold_inplace(v, 0.05);
+            }
+        }
+        let engine = Engine::builder("lenet-s").bundle(&bundle).mode(WeightMode::Csr).build()?;
+        let (ci, h, w) = (entry.input_shape[0], entry.input_shape[1], entry.input_shape[2]);
+        let x = Tensor::new(vec![4, ci, h, w], rng.normal_vec(4 * ci * h * w, 1.0));
+
+        engine.forward(&x)?; // warm both arms through the same caches
+        let treps = reps.max(40); // medians tight enough for a 5% budget
+        let us_off = common::time_median_us(treps, || {
+            engine.forward(&x).unwrap();
+        });
+        let trace_path = std::env::temp_dir().join("proxcomp_bench_trace.jsonl");
+        proxcomp::telemetry::enable_trace(&trace_path)?;
+        let us_on = common::time_median_us(treps, || {
+            engine.forward(&x).unwrap();
+        });
+        let events = proxcomp::telemetry::disable_trace();
+        let _ = std::fs::remove_file(&trace_path);
+        let ratio = us_on / us_off;
+        println!(
+            "forward B=4: {us_off:.0} µs tracing off, {us_on:.0} µs on ({ratio:.3}×, {events} events)"
+        );
+        json.row("telemetry_overhead", "forward_trace_off", us_off, "ratio_vs_off", 1.0);
+        json.row("telemetry_overhead", "forward_trace_on", us_on, "ratio_vs_off", ratio);
+        anyhow::ensure!(
+            ratio < 1.05,
+            "tracing overhead {:.1}% exceeds the 5% budget ({us_off:.0} µs → {us_on:.0} µs)",
+            (ratio - 1.0) * 100.0
+        );
+    }
+
     // --- Figure-1 format storage comparison on a prox-trained-style matrix
     common::section("Figure 1 formats: storage on a 97%-sparse 500×800 weight matrix");
     let (dense, csr) = sparse_matrix(&mut rng, 500, 800, 0.97);
@@ -586,6 +635,7 @@ fn main() -> anyhow::Result<()> {
             "thread_sweep_b1",
             "blocked_kernels",
             "quant_kernels",
+            "telemetry_overhead",
         ],
     )?;
     Ok(())

@@ -7,11 +7,13 @@
 //! any width scaling flows through automatically.
 
 use std::collections::HashMap;
+use std::sync::{Mutex, PoisonError};
 use std::time::Instant;
 
 use crate::quant::{QcsMatrix, QuantConfig, QuantizedModel};
 use crate::runtime::{ParamBundle, ParamSpec};
 use crate::sparse::{ops, CsrMatrix, DynSparseMatrix};
+use crate::telemetry::{self, LayerProfile, LayerProfileAccum};
 use crate::tensor::{self, ConvSpec, Tensor};
 
 /// Batch-norm epsilon shared by the engine's BN layers and the native
@@ -131,6 +133,10 @@ pub struct Engine {
     pub sparse: bool,
     layers: Vec<Layer>,
     pub num_classes: usize,
+    /// Per-layer profile accumulators (one slot per layer, weight layers
+    /// and shape ops alike), folded once per forward under one brief
+    /// lock — interior-mutable because `forward` takes `&self`.
+    profiles: Mutex<Vec<LayerProfileAccum>>,
 }
 
 /// What an [`EngineBuilder`] deploys from.
@@ -481,7 +487,8 @@ impl Engine {
             Some(n) => n,
             None => anyhow::bail!("no FC head found"),
         };
-        Ok(Engine { model: model.to_string(), sparse, layers, num_classes })
+        let profiles = Mutex::new(vec![LayerProfileAccum::default(); layers.len()]);
+        Ok(Engine { model: model.to_string(), sparse, layers, num_classes, profiles })
     }
 
     /// True when the forward pass mixes information *across* the batch
@@ -550,9 +557,13 @@ impl Engine {
 
     /// Forward pass; returns (logits, per-layer timings).
     pub fn forward_timed(&self, x: &Tensor) -> anyhow::Result<(Tensor, Vec<LayerTiming>)> {
+        let t_forward = Instant::now();
         let mut h = x.clone();
         let mut residual: Option<Tensor> = None;
         let mut timings = Vec::new();
+        // Accumulated locally, folded into `self.profiles` under one
+        // lock after the pass (no per-layer locking on the hot path).
+        let mut profile_rows: Vec<(u64, u64, u64)> = Vec::with_capacity(self.layers.len());
         for layer in &self.layers {
             let t0 = Instant::now();
             let name;
@@ -624,13 +635,85 @@ impl Engine {
                     }
                 }
             }
-            timings.push(LayerTiming { name, micros: t0.elapsed().as_secs_f64() * 1e6 });
+            let micros = t0.elapsed().as_secs_f64() * 1e6;
+            profile_rows.push((micros as u64, telemetry::zero_count(&h.data), h.data.len() as u64));
+            timings.push(LayerTiming { name, micros });
+        }
+        {
+            let mut acc = self.profiles.lock().unwrap_or_else(PoisonError::into_inner);
+            for (slot, (us, zeros, elems)) in acc.iter_mut().zip(profile_rows) {
+                slot.record(us, zeros, elems);
+            }
+        }
+        if telemetry::trace_enabled() {
+            telemetry::event_label(
+                "engine.forward",
+                0,
+                &self.model,
+                &[("batch", x.shape.first().copied().unwrap_or(0) as f64),
+                    ("us", t_forward.elapsed().as_secs_f64() * 1e6)],
+            );
         }
         Ok((h, timings))
     }
 
     pub fn forward(&self, x: &Tensor) -> anyhow::Result<Tensor> {
         Ok(self.forward_timed(x)?.0)
+    }
+
+    /// Snapshot the per-layer profiles accumulated by every forward
+    /// since construction (or the last [`Engine::reset_profile`]):
+    /// kernel family, stored nnz/density, per-call wall time, and the
+    /// output-activation zero fraction — the measurement substrate for
+    /// an activation-sparsity-aware kernel crossover. Weight layers
+    /// carry their graph names; shape/activation ops are suffixed with
+    /// their layer index so every row labels uniquely.
+    pub fn profile(&self) -> Vec<LayerProfile> {
+        let acc = self.profiles.lock().unwrap_or_else(PoisonError::into_inner).clone();
+        self.layers
+            .iter()
+            .zip(acc)
+            .enumerate()
+            .map(|(idx, (layer, a))| {
+                let (name, w): (String, Option<&WeightStore>) = match layer {
+                    Layer::Conv { name, w, .. } | Layer::Fc { name, w, .. } => (name.clone(), Some(w)),
+                    Layer::ProjectResidual { w, .. } => (format!("proj@{idx}"), Some(w)),
+                    Layer::MaxPool { .. } => (format!("maxpool@{idx}"), None),
+                    Layer::GlobalAvgPool => (format!("avgpool@{idx}"), None),
+                    Layer::Flatten => (format!("flatten@{idx}"), None),
+                    Layer::Relu => (format!("relu@{idx}"), None),
+                    Layer::BatchNorm { .. } | Layer::BatchNormInference { .. } => (format!("bn@{idx}"), None),
+                    Layer::SaveResidual => (format!("save@{idx}"), None),
+                    Layer::AddResidual { .. } => (format!("add@{idx}"), None),
+                };
+                let (rows, cols, nnz, format) = match w {
+                    Some(w) => {
+                        let (r, c) = w.logical_shape();
+                        (r, c, w.nnz(), w.format_name().to_string())
+                    }
+                    None => (0, 0, 0, "op".to_string()),
+                };
+                LayerProfile {
+                    name,
+                    format,
+                    rows,
+                    cols,
+                    nnz,
+                    density: if rows * cols > 0 { nnz as f64 / (rows * cols) as f64 } else { 0.0 },
+                    calls: a.calls,
+                    total_us: a.total_us,
+                    mean_us: if a.calls > 0 { a.total_us as f64 / a.calls as f64 } else { 0.0 },
+                    out_zero_fraction: if a.out_elems > 0 { a.out_zeros as f64 / a.out_elems as f64 } else { 0.0 },
+                }
+            })
+            .collect()
+    }
+
+    /// Zero the profile accumulators (bench isolation between runs).
+    pub fn reset_profile(&self) {
+        for slot in self.profiles.lock().unwrap_or_else(PoisonError::into_inner).iter_mut() {
+            *slot = LayerProfileAccum::default();
+        }
     }
 
     /// Per-weight-layer work profile for the device cost model: walks the
@@ -948,6 +1031,37 @@ mod tests {
         let sizes = quant.layer_storage();
         assert_eq!(sizes.len(), 2);
         assert!(sizes.iter().all(|(_, f, bytes, _)| *f == "QCS" && *bytes > 0));
+    }
+
+    #[test]
+    fn profile_reports_sparsity_calls_and_activation_zeros() {
+        let bundle = sparse_mlp_bundle(9);
+        let engine = Engine::builder("mlp-s").bundle(&bundle).build().unwrap();
+        let mut rng = Rng::new(41);
+        for _ in 0..3 {
+            let x = Tensor::new(vec![2, 1, 10, 10], rng.normal_vec(200, 1.0));
+            engine.forward(&x).unwrap();
+        }
+        let profile = engine.profile();
+        // Every layer slot reports; weight layers carry their graph names.
+        let fc1 = profile.iter().find(|p| p.name == "fc1").expect("fc1 row");
+        let storage = engine.layer_storage();
+        let (_, _, _, fc1_nnz) = storage.iter().find(|(n, ..)| n == "fc1").unwrap().clone();
+        assert_eq!(fc1.format, "CSR");
+        assert_eq!(fc1.nnz, fc1_nnz, "profile nnz must equal stored nnz");
+        assert_eq!((fc1.rows, fc1.cols), (32, 100));
+        assert!((fc1.density - fc1.nnz as f64 / 3200.0).abs() < 1e-12);
+        assert_eq!(fc1.calls, 3);
+        // fc1 is ReLU-capped: its output has zeros a sparsity-aware
+        // next-layer kernel could skip.
+        assert!(fc1.out_zero_fraction > 0.0 && fc1.out_zero_fraction < 1.0, "{}", fc1.out_zero_fraction);
+        // The logits head has no ReLU: zero outputs are measure-zero.
+        let fc2 = profile.iter().find(|p| p.name == "fc2").expect("fc2 row");
+        assert_eq!(fc2.out_zero_fraction, 0.0);
+        // Non-weight ops report as `op` rows with indexed names.
+        assert!(profile.iter().any(|p| p.format == "op" && p.name.contains('@')));
+        engine.reset_profile();
+        assert!(engine.profile().iter().all(|p| p.calls == 0));
     }
 
     #[test]

@@ -107,6 +107,11 @@ struct TargetTally {
     verified: u64,
     mismatches: u64,
     retries: u64,
+    /// Per-[`ErrorCode`] counts for this target, indexed by `code as u8 - 1`.
+    errors: [u64; 7],
+    /// Wall-clock time this target's requests spent sleeping in retry
+    /// backoff (measured, not nominal).
+    backoff_us: u64,
 }
 
 /// What one client accumulated; merged across clients into [`LoadReport`].
@@ -137,6 +142,17 @@ pub struct ModelReport {
     pub verified: u64,
     pub mismatches: u64,
     pub retries: u64,
+    /// Per-[`ErrorCode`] counts for this target, indexed by `code as u8 - 1`.
+    pub errors: [u64; 7],
+    /// Total wall-clock time this target's requests spent in retry
+    /// backoff sleeps.
+    pub backoff_us: u64,
+}
+
+impl ModelReport {
+    pub fn error_count(&self, code: ErrorCode) -> u64 {
+        self.errors[code as u8 as usize - 1]
+    }
 }
 
 /// Aggregated result of a load run.
@@ -149,6 +165,9 @@ pub struct LoadReport {
     pub transport_errors: u64,
     /// `overloaded` responses absorbed by backoff-and-retry (not errors).
     pub retries: u64,
+    /// Total wall-clock time clients spent sleeping in retry backoff —
+    /// the cost the retry policy paid to absorb `overloaded` responses.
+    pub backoff_us: u64,
     pub throughput_rps: f64,
     pub mean_latency_us: f64,
     pub p50_latency_us: f64,
@@ -194,12 +213,18 @@ impl LoadReport {
             .per_model
             .iter()
             .map(|m| {
+                let mut errs = Json::obj();
+                for code in ErrorCode::all() {
+                    errs.set(code.name(), Json::from(m.error_count(code) as usize));
+                }
                 let mut row = Json::obj();
                 row.set("model", Json::from(m.model.as_deref().unwrap_or("(default)")))
                     .set("requests_ok", Json::from(m.ok as usize))
                     .set("verified", Json::from(m.verified as usize))
                     .set("mismatches", Json::from(m.mismatches as usize))
-                    .set("retries", Json::from(m.retries as usize));
+                    .set("retries", Json::from(m.retries as usize))
+                    .set("backoff_us", Json::from(m.backoff_us as usize))
+                    .set("errors", errs);
                 row
             })
             .collect();
@@ -211,6 +236,7 @@ impl LoadReport {
             .set("errors", errors)
             .set("transport_errors", Json::from(self.transport_errors as usize))
             .set("retries", Json::from(self.retries as usize))
+            .set("backoff_us", Json::from(self.backoff_us as usize))
             .set("throughput_rps", Json::from(self.throughput_rps))
             .set("latency", latency)
             .set("verify", verify)
@@ -247,6 +273,10 @@ pub fn run(cfg: &LoadConfig) -> anyhow::Result<LoadReport> {
             t.verified += c.verified;
             t.mismatches += c.mismatches;
             t.retries += c.retries;
+            t.backoff_us += c.backoff_us;
+            for (te, ce) in t.errors.iter_mut().zip(c.errors.iter()) {
+                *te += ce;
+            }
         }
         for (t, e) in total.errors.iter_mut().zip(o.errors.iter()) {
             *t += e;
@@ -258,6 +288,7 @@ pub fn run(cfg: &LoadConfig) -> anyhow::Result<LoadReport> {
     let verified: u64 = total.per_target.iter().map(|t| t.verified).sum();
     let mismatches: u64 = total.per_target.iter().map(|t| t.mismatches).sum();
     let retries: u64 = total.per_target.iter().map(|t| t.retries).sum();
+    let backoff_us: u64 = total.per_target.iter().map(|t| t.backoff_us).sum();
     anyhow::ensure!(
         ok + total.errors.iter().sum::<u64>() > 0,
         "no client completed a single request against {} ({} transport errors)",
@@ -280,6 +311,7 @@ pub fn run(cfg: &LoadConfig) -> anyhow::Result<LoadReport> {
         errors: total.errors,
         transport_errors: total.transport_errors,
         retries,
+        backoff_us,
         throughput_rps: if elapsed_secs > 0.0 { ok as f64 / elapsed_secs } else { 0.0 },
         mean_latency_us: total.latency.mean_us(),
         p50_latency_us: total.latency.percentile(0.50),
@@ -298,6 +330,8 @@ pub fn run(cfg: &LoadConfig) -> anyhow::Result<LoadReport> {
                 verified: c.verified,
                 mismatches: c.mismatches,
                 retries: c.retries,
+                errors: c.errors,
+                backoff_us: c.backoff_us,
             })
             .collect(),
         server_stats,
@@ -360,11 +394,14 @@ fn client_loop(cfg: &LoadConfig, index: u64, deadline: Instant) -> ClientOutcome
                 // loads this harness exists to generate.
                 Ok(Err((ErrorCode::Overloaded, _))) if attempt < cfg.retry_budget => {
                     out.per_target[ti].retries += 1;
+                    let t_sleep = Instant::now();
                     std::thread::sleep(cfg.retry_base * (1u32 << attempt.min(10)));
+                    out.per_target[ti].backoff_us += t_sleep.elapsed().as_micros() as u64;
                     attempt += 1;
                 }
                 Ok(Err((code, _msg))) => {
                     out.errors[code as u8 as usize - 1] += 1;
+                    out.per_target[ti].errors[code as u8 as usize - 1] += 1;
                     // The server is draining — no more work will land.
                     if code == ErrorCode::ShuttingDown {
                         return out;

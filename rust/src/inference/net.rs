@@ -32,6 +32,7 @@
 //! | 3  | SHUTDOWN    | empty → begins graceful shutdown              |
 //! | 4  | PING        | empty → empty OK                              |
 //! | 5  | INFER_MODEL | `id_len:u8  id:utf-8  sample f32 LE` (v2)     |
+//! | 6  | METRICS     | empty or `[0]` → versioned metrics JSON; `[1]` → Prometheus text |
 //!
 //! `INFER_MODEL` is the model-routed v2 of `INFER`: the body leads with
 //! a one-byte id length and the UTF-8 model id, then the sample floats.
@@ -65,6 +66,7 @@ use crate::inference::registry::{ModelRegistry, SubmitError};
 use crate::inference::server::WaitOutcome;
 use crate::inference::{BatchConfig, Engine};
 use crate::metrics::ServingStats;
+use crate::telemetry;
 use crate::util::cursor::{self, BoundedReader};
 use crate::util::json::Json;
 
@@ -79,6 +81,21 @@ pub const OP_SHUTDOWN: u8 = 3;
 pub const OP_PING: u8 = 4;
 /// Model-routed inference (wire v2): `id_len:u8 | id utf-8 | sample`.
 pub const OP_INFER_MODEL: u8 = 5;
+/// Metrics export: empty or `[METRICS_FORMAT_JSON]` body answers the
+/// versioned metrics JSON snapshot (serving roll-up, wire counters,
+/// per-model registry table, per-layer profiles);
+/// `[METRICS_FORMAT_PROMETHEUS]` answers Prometheus text exposition.
+pub const OP_METRICS: u8 = 6;
+
+/// METRICS body byte selecting the JSON snapshot (also the default for
+/// an empty body).
+pub const METRICS_FORMAT_JSON: u8 = 0;
+/// METRICS body byte selecting Prometheus text exposition format.
+pub const METRICS_FORMAT_PROMETHEUS: u8 = 1;
+
+/// Version stamp carried in the METRICS JSON snapshot (`"version"` key);
+/// bumped whenever the snapshot's shape changes incompatibly.
+pub const METRICS_VERSION: u64 = 1;
 
 /// The serving error taxonomy — every non-OK response status byte.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -253,6 +270,19 @@ impl Shared {
         j.set("serving", self.registry.aggregate_stats().to_json())
             .set("net", self.counters().clone().to_json())
             .set("models", self.registry.stats_json());
+        j
+    }
+
+    /// The METRICS body: the STATS snapshot plus a version stamp and the
+    /// per-layer profiles of resident models. This is the shape
+    /// [`crate::telemetry::prometheus_text`] renders from.
+    fn metrics_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("version", Json::from(METRICS_VERSION as usize))
+            .set("serving", self.registry.aggregate_stats().to_json())
+            .set("net", self.counters().clone().to_json())
+            .set("models", self.registry.stats_json())
+            .set("profiles", self.registry.profiles_json());
         j
     }
 }
@@ -486,6 +516,24 @@ fn handle_request(payload: &[u8], stream: &mut TcpStream, shared: &Shared) -> bo
             }
             write_ok(stream, shared.stats_json().to_string_pretty().as_bytes(), shared)
         }
+        OP_METRICS => match body {
+            [] | [METRICS_FORMAT_JSON] => {
+                write_ok(stream, shared.metrics_json().to_string_pretty().as_bytes(), shared)
+            }
+            [METRICS_FORMAT_PROMETHEUS] => {
+                let text = telemetry::prometheus_text(&shared.metrics_json());
+                write_ok(stream, text.as_bytes(), shared)
+            }
+            _ => {
+                let _ = write_error(
+                    stream,
+                    ErrorCode::BadFrame,
+                    "METRICS body must be empty, [0] (JSON), or [1] (Prometheus)",
+                    shared,
+                );
+                false
+            }
+        },
         OP_PING => {
             if !body.is_empty() {
                 let _ = write_error(stream, ErrorCode::BadFrame, "PING takes no body", shared);
@@ -562,11 +610,22 @@ fn handle_infer(model: Option<&str>, body: &[u8], stream: &mut TcpStream, shared
         );
     }
     let _permit = InflightPermit(shared);
+    // One trace id per admitted frame, threaded through the registry
+    // into the pool so admit/coalesce/reply events share it.
+    let trace_id = telemetry::next_trace_id();
+    if telemetry::trace_enabled() {
+        telemetry::event_label(
+            "net.request",
+            trace_id,
+            model.unwrap_or("(default)"),
+            &[("bytes", body.len() as f64)],
+        );
+    }
     let mut sample = Vec::with_capacity(sample_len);
     for c in body.chunks_exact(4) {
         sample.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
     }
-    let pending = match shared.registry.submit(model, &sample) {
+    let pending = match shared.registry.submit_traced(model, &sample, trace_id) {
         Ok(p) => p,
         // A model can disappear (remove_model) between the length check
         // and the submit — still recoverable for the connection.
@@ -581,7 +640,16 @@ fn handle_infer(model: Option<&str>, body: &[u8], stream: &mut TcpStream, shared
             return false;
         }
     };
-    match pending.wait_outcome(shared.cfg.request_timeout) {
+    let outcome = pending.wait_outcome(shared.cfg.request_timeout);
+    if telemetry::trace_enabled() {
+        let status = match &outcome {
+            WaitOutcome::Ready(Ok(_)) => 0u8,
+            WaitOutcome::Ready(Err(_)) | WaitOutcome::Dropped => ErrorCode::EngineError as u8,
+            WaitOutcome::TimedOut => ErrorCode::DeadlineExceeded as u8,
+        };
+        telemetry::event("net.reply", trace_id, &[("status", status as f64)]);
+    }
+    match outcome {
         WaitOutcome::Ready(Ok(logits)) => {
             let mut out = Vec::with_capacity(logits.len() * 4);
             for v in &logits {
@@ -845,6 +913,25 @@ impl NetClient {
         self.send_request(OP_STATS, &[])?;
         let (status, body) = self.recv_response()?;
         anyhow::ensure!(status == 0, "STATS answered with status {status}");
+        Ok(String::from_utf8_lossy(&body).into_owned())
+    }
+
+    /// Fetch the versioned METRICS JSON snapshot (stats + per-layer
+    /// profiles): `{"version": 1, "serving": ..., "net": ...,
+    /// "models": ..., "profiles": ...}`.
+    pub fn metrics_json(&mut self) -> anyhow::Result<String> {
+        self.send_request(OP_METRICS, &[METRICS_FORMAT_JSON])?;
+        let (status, body) = self.recv_response()?;
+        anyhow::ensure!(status == 0, "METRICS answered with status {status}");
+        Ok(String::from_utf8_lossy(&body).into_owned())
+    }
+
+    /// Fetch the METRICS snapshot rendered as Prometheus text
+    /// exposition format.
+    pub fn metrics_prometheus(&mut self) -> anyhow::Result<String> {
+        self.send_request(OP_METRICS, &[METRICS_FORMAT_PROMETHEUS])?;
+        let (status, body) = self.recv_response()?;
+        anyhow::ensure!(status == 0, "METRICS answered with status {status}");
         Ok(String::from_utf8_lossy(&body).into_owned())
     }
 

@@ -36,16 +36,19 @@
 //! evicted incarnations are retired into running totals (so
 //! `requests_total` never goes backwards), but latency percentiles reset
 //! on reload — they describe the live pool, which is what an operator
-//! watches. The aggregate roll-up sums counts and takes the max of
-//! percentile fields across resident models: a coarse fleet ceiling,
-//! not a merged distribution.
+//! watches. The aggregate roll-up sums counts and computes percentile
+//! fields from the **bucketwise-merged** latency histogram of resident
+//! pools — true fleet percentiles, since every pool shares one bucket
+//! layout. Only if a layout mismatch ever appears does it fall back to
+//! the old per-pool max ceiling.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 
 use crate::inference::server::{BatchConfig, BatchServer, Pending};
 use crate::inference::Engine;
-use crate::metrics::ServingStats;
+use crate::metrics::{LatencyHistogram, ServingStats};
+use crate::telemetry;
 use crate::util::json::Json;
 
 /// Builds (or rebuilds, after eviction) a model's engine. Factories must
@@ -280,6 +283,9 @@ impl ModelRegistry {
         let server = state.server.take().expect("detach only on resident models");
         inner.resident_bytes = inner.resident_bytes.saturating_sub(state.bytes);
         state.evictions += 1;
+        if telemetry::trace_enabled() {
+            telemetry::event_label("registry.evict", 0, id, &[("bytes", state.bytes as f64)]);
+        }
         (id.to_string(), server)
     }
 
@@ -389,6 +395,9 @@ impl ModelRegistry {
             state.bytes = bytes;
             state.loads += 1;
             inner.resident_bytes += bytes;
+            if telemetry::trace_enabled() {
+                telemetry::event_label("registry.load", 0, &id, &[("bytes", bytes as f64)]);
+            }
             // Enforce the budget by evicting LRU residents — never the
             // model just loaded, so one oversized model still serves.
             while self.cfg.memory_budget_bytes > 0
@@ -419,11 +428,23 @@ impl ModelRegistry {
     /// catches a pool mid-eviction re-resolves — which hot-reloads the
     /// model — so evictions never drop requests.
     pub fn submit(&self, id: Option<&str>, sample: &[f32]) -> Result<Pending, SubmitError> {
+        self.submit_traced(id, sample, telemetry::next_trace_id())
+    }
+
+    /// [`submit`](Self::submit) with a caller-supplied trace id, so the
+    /// wire front-end's per-frame id follows the request through the
+    /// resolved pool's admission/coalesce/reply events.
+    pub fn submit_traced(
+        &self,
+        id: Option<&str>,
+        sample: &[f32],
+        trace_id: u64,
+    ) -> Result<Pending, SubmitError> {
         let mut last_err: Option<anyhow::Error> = None;
         for _ in 0..4 {
             let (server, victims) = self.resolve(id)?;
             self.drain(victims);
-            match server.submit(sample) {
+            match server.submit_traced(sample, trace_id) {
                 Ok(pending) => return Ok(pending),
                 // Either a wrong-length sample (re-resolving returns the
                 // same live pool and the same error) or an eviction race
@@ -483,8 +504,14 @@ impl ModelRegistry {
 
     /// Fleet roll-up in the single-model `ServingStats` shape: counts
     /// (including retired incarnations) sum; `mean_*` weight by resident
-    /// request/batch counts; percentile fields take the max across
-    /// resident pools — a ceiling, not a merged distribution.
+    /// request/batch counts; percentile fields come from the
+    /// bucketwise-merged latency histogram across resident pools — true
+    /// fleet percentiles, not a per-pool max. Only if a pool ever
+    /// reports an incompatible bucket layout (impossible in-process
+    /// today; defensive against a future serialization path) do
+    /// percentiles fall back to the old per-pool max ceiling. The
+    /// `layers` field stays empty — per-layer profiles are a per-model
+    /// concept; see [`ModelRegistry::profiles_json`].
     pub fn aggregate_stats(&self) -> ServingStats {
         let rows: Vec<(Option<Arc<BatchServer>>, usize, usize)> = {
             let guard = self.lock();
@@ -496,6 +523,8 @@ impl ModelRegistry {
         };
         let mut agg = ServingStats::default();
         let (mut lat_weight, mut fwd_weight) = (0.0f64, 0.0f64);
+        let mut merged = LatencyHistogram::default();
+        let mut merged_ok = true;
         for (server, retired_req, retired_batches) in rows {
             agg.requests += retired_req;
             agg.batches += retired_batches;
@@ -509,10 +538,17 @@ impl ModelRegistry {
             agg.mean_forward_us += s.mean_forward_us * s.batches as f64;
             fwd_weight += s.batches as f64;
             agg.throughput_rps += s.throughput_rps;
+            merged_ok &= merged.try_merge(&server.latency_histogram());
             agg.p50_latency_us = agg.p50_latency_us.max(s.p50_latency_us);
             agg.p90_latency_us = agg.p90_latency_us.max(s.p90_latency_us);
             agg.p99_latency_us = agg.p99_latency_us.max(s.p99_latency_us);
             agg.max_latency_us = agg.max_latency_us.max(s.max_latency_us);
+        }
+        if merged_ok && merged.count() > 0 {
+            agg.p50_latency_us = merged.percentile(0.50);
+            agg.p90_latency_us = merged.percentile(0.90);
+            agg.p99_latency_us = merged.percentile(0.99);
+            agg.max_latency_us = merged.max_us();
         }
         if lat_weight > 0.0 {
             agg.mean_latency_us /= lat_weight;
@@ -524,6 +560,27 @@ impl ModelRegistry {
             agg.mean_batch = agg.requests as f64 / agg.batches as f64;
         }
         agg
+    }
+
+    /// Per-layer profiles of every *resident* model, keyed by model id:
+    /// `{id: [LayerProfile…]}`. Evicted models are omitted — their
+    /// accumulators left with the engine.
+    pub fn profiles_json(&self) -> Json {
+        let rows: Vec<(String, Arc<BatchServer>)> = {
+            let guard = self.lock();
+            guard
+                .models
+                .iter()
+                .filter_map(|(id, st)| st.server.clone().map(|s| (id.clone(), s)))
+                .collect()
+        };
+        let mut j = Json::obj();
+        for (id, server) in rows {
+            let layers: Vec<Json> =
+                server.engine().profile().iter().map(|p| p.to_json()).collect();
+            j.set(&id, Json::Arr(layers));
+        }
+        j
     }
 
     /// Stop routing, drain every resident pool (queued requests are
@@ -773,6 +830,15 @@ mod tests {
         assert_eq!(agg.requests, 4);
         assert!(agg.batches >= 2);
         assert!(agg.mean_latency_us > 0.0);
+        // Percentiles come from the merged histogram: ordered, positive,
+        // and bounded by the slowest recorded request.
+        assert!(agg.p50_latency_us > 0.0);
+        assert!(agg.p50_latency_us <= agg.p99_latency_us);
+        assert!(agg.p99_latency_us <= agg.max_latency_us);
+        // Per-layer profiles are exposed per resident model.
+        let profiles = reg.profiles_json();
+        let a_layers = profiles.get("a").and_then(|p| p.as_arr()).unwrap();
+        assert!(!a_layers.is_empty());
         reg.shutdown();
         assert!(matches!(reg.submit(Some("a"), &x), Err(SubmitError::ShuttingDown)));
         // Retired counts survive shutdown in the roll-up.

@@ -43,6 +43,7 @@ use std::time::{Duration, Instant};
 
 use crate::inference::Engine;
 use crate::metrics::{LatencyHistogram, ServingStats};
+use crate::telemetry;
 use crate::tensor::Tensor;
 
 /// Coalescing knobs for a [`BatchServer`].
@@ -78,6 +79,9 @@ impl BatchConfig {
 struct Request {
     data: Vec<f32>,
     submitted: Instant,
+    /// Telemetry trace id following the request admission→coalesce→
+    /// forward→reply (0 when tracing is disabled).
+    trace_id: u64,
     resp: Sender<Result<Vec<f32>, String>>,
 }
 
@@ -154,6 +158,7 @@ fn lock_stats(stats: &Mutex<StatsInner>) -> MutexGuard<'_, StatsInner> {
 /// down gracefully.
 pub struct BatchServer {
     cfg: BatchConfig,
+    engine: Arc<Engine>,
     tx: Mutex<Option<Sender<Request>>>,
     worker: Mutex<Option<JoinHandle<()>>>,
     stats: Arc<Mutex<StatsInner>>,
@@ -175,10 +180,11 @@ impl BatchServer {
         let stats = Arc::new(Mutex::new(StatsInner::default()));
         let worker = {
             let stats = Arc::clone(&stats);
+            let engine = Arc::clone(&engine);
             let cfg = cfg.clone();
             std::thread::spawn(move || worker_loop(engine, cfg, rx, stats))
         };
-        BatchServer { cfg, tx: Mutex::new(Some(tx)), worker: Mutex::new(Some(worker)), stats }
+        BatchServer { cfg, engine, tx: Mutex::new(Some(tx)), worker: Mutex::new(Some(worker)), stats }
     }
 
     /// The coalescing configuration actually in effect (after any
@@ -190,6 +196,13 @@ impl BatchServer {
     /// Queue one flattened sample; returns a [`Pending`] to wait on.
     /// Fails fast when the sample length does not match `input_shape`.
     pub fn submit(&self, sample: &[f32]) -> anyhow::Result<Pending> {
+        self.submit_traced(sample, telemetry::next_trace_id())
+    }
+
+    /// [`submit`](Self::submit) with a caller-supplied trace id, so a
+    /// front-end that already stamped the request (e.g. the TCP server)
+    /// keeps one id across admission, coalescing, forward, and reply.
+    pub fn submit_traced(&self, sample: &[f32], trace_id: u64) -> anyhow::Result<Pending> {
         anyhow::ensure!(
             sample.len() == self.cfg.sample_len(),
             "sample has {} values, input shape {:?} needs {}",
@@ -197,8 +210,11 @@ impl BatchServer {
             self.cfg.input_shape,
             self.cfg.sample_len()
         );
+        if telemetry::trace_enabled() {
+            telemetry::event_label("server.admit", trace_id, &self.engine.model, &[]);
+        }
         let (rtx, rrx) = channel();
-        let req = Request { data: sample.to_vec(), submitted: Instant::now(), resp: rtx };
+        let req = Request { data: sample.to_vec(), submitted: Instant::now(), trace_id, resp: rtx };
         self.tx
             .lock()
             .unwrap_or_else(PoisonError::into_inner)
@@ -232,7 +248,20 @@ impl BatchServer {
             p90_latency_us: s.latency.percentile(0.90),
             p99_latency_us: s.latency.percentile(0.99),
             max_latency_us: s.latency.max_us(),
+            layers: self.engine.profile(),
         }
+    }
+
+    /// Snapshot of the raw latency histogram, for fleet-level merging
+    /// (the registry adds resident servers' buckets together to get true
+    /// aggregate percentiles).
+    pub fn latency_histogram(&self) -> LatencyHistogram {
+        lock_stats(&self.stats).latency.clone()
+    }
+
+    /// The engine this server batches onto (for per-layer profiles).
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
     }
 
     /// Stop accepting requests, drain the queue, and join the worker
@@ -289,6 +318,11 @@ fn worker_loop(engine: Arc<Engine>, cfg: BatchConfig, rx: Receiver<Request>, sta
 
         let m = batch.len();
         let first_submitted = batch[0].submitted;
+        if telemetry::trace_enabled() {
+            for req in &batch {
+                telemetry::event("server.coalesce", req.trace_id, &[("batch", m as f64)]);
+            }
+        }
         let mut xs = Vec::with_capacity(m * sample_len);
         for req in &batch {
             xs.extend_from_slice(&req.data);
@@ -319,6 +353,16 @@ fn worker_loop(engine: Arc<Engine>, cfg: BatchConfig, rx: Receiver<Request>, sta
             }
             s.total_forward_us += forward_us;
             s.last_done = Some(done);
+        }
+        if telemetry::trace_enabled() {
+            for req in &batch {
+                let latency_us = done.duration_since(req.submitted).as_secs_f64() * 1e6;
+                telemetry::event(
+                    "server.reply",
+                    req.trace_id,
+                    &[("latency_us", latency_us), ("forward_us", forward_us), ("batch", m as f64)],
+                );
+            }
         }
 
         // Fan out. The per-sample row length is only trustworthy when

@@ -31,6 +31,7 @@ pub mod metrics;
 pub mod quant;
 pub mod runtime;
 pub mod sparse;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;
 pub mod xla_compat;

@@ -11,6 +11,7 @@
 //! proxcomp report   --checkpoint ckpt.pxcp        # layer table + size
 //! proxcomp serve    --models mlp-s,lenet-s --addr 127.0.0.1:7733  # framed-TCP fleet
 //! proxcomp loadtest --mix mlp-s,lenet-s --clients 100 --duration 10s
+//! proxcomp stats    --addr 127.0.0.1:7733 [--format json|prom] [--stop-server]
 //! proxcomp bench-compare --baseline BENCH_BASELINE.json \
 //!                   --current reports/bench_kernels.json  # CI perf gate
 //! proxcomp info                                   # manifest summary
@@ -45,8 +46,10 @@ fn run() -> Result<()> {
     if args.flag("verbose") {
         logger::set_level(logger::Level::Debug);
     }
+    // PROXCOMP_TRACE=path enables JSONL event tracing for any subcommand.
+    proxcomp::telemetry::init_trace_from_env();
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
-    match sub.as_str() {
+    let result = match sub.as_str() {
         "train" => cmd_train(&args),
         "sweep" => cmd_sweep(&args),
         "seeds" => cmd_seeds(&args),
@@ -56,13 +59,20 @@ fn run() -> Result<()> {
         "report" => cmd_report(&args),
         "serve" => cmd_serve(&args),
         "loadtest" => cmd_loadtest(&args),
+        "stats" => cmd_stats(&args),
         "bench-compare" => cmd_bench_compare(&args),
         "info" => cmd_info(&args),
         _ => {
             print_help();
             Ok(())
         }
+    };
+    // Flush any env-enabled trace so the JSONL is complete on exit.
+    let written = proxcomp::telemetry::disable_trace();
+    if written > 0 {
+        info!("trace: {written} events written");
     }
+    result
 }
 
 fn load_config(args: &Args) -> Result<RunConfig> {
@@ -220,9 +230,14 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let finetune_steps = args.usize_or("finetune-steps", 0)?;
     let finetune_lr = args.f32_or("finetune-lr", 1e-4)?;
     let quant_tol = args.f64_or("quant-tolerance", 0.05)?;
+    let telemetry_out = args.get_str("telemetry-out");
     cfg.apply_args(args)?;
     cfg.validate()?;
     args.finish()?;
+    let telemetry_path = match &telemetry_out {
+        Some(p) => std::path::PathBuf::from(p),
+        None => metrics::report_path(&format!("pipeline_{}_telemetry.jsonl", cfg.model)),
+    };
 
     let manifest = Manifest::load_or_native(&cfg.artifacts_dir)?;
     let mut rt = Runtime::native();
@@ -335,6 +350,14 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         stats.requests, stats.batches
     );
 
+    // Training-side telemetry JSONL: the per-step loss/compression curve
+    // plus the deployed per-layer formats/densities, uploaded by CI.
+    let (n_steps, n_layers) = write_training_telemetry(&telemetry_path, &result, &engine)?;
+    println!(
+        "[pipeline] wrote {} ({n_steps} step records, {n_layers} layer rows)",
+        telemetry_path.display()
+    );
+
     // The CI gate.
     anyhow::ensure!(
         result.loss < eval0.loss,
@@ -421,6 +444,54 @@ fn print_leaf_sizes(params: &proxcomp::runtime::ParamBundle, engine: &Engine) {
         );
     }
     println!("  {:<12} {td:>10} B {tc:>10} B {ts:>10} B", "total");
+}
+
+/// Training-side telemetry JSONL: one `train.step` line per recorded
+/// training step (loss, compression rate, accuracy when an eval ran),
+/// one `deploy.layer` line per engine layer (deployed format, nnz,
+/// density), and a closing `train.final` summary — the artifact CI
+/// uploads next to the pipeline logs. Returns (step records, layer rows).
+fn write_training_telemetry(
+    path: &std::path::Path,
+    result: &RunResult,
+    engine: &Engine,
+) -> Result<(usize, usize)> {
+    use std::io::Write;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for r in &result.history.records {
+        let mut j = Json::obj();
+        j.set("kind", Json::from("train.step"))
+            .set("step", Json::from(r.step))
+            .set("loss", Json::from(r.loss))
+            .set("compression_rate", Json::from(r.compression_rate))
+            .set("accuracy", Json::from(r.accuracy));
+        writeln!(f, "{}", j.to_string_compact())?;
+    }
+    let profiles = engine.profile();
+    for p in &profiles {
+        let mut j = Json::obj();
+        j.set("kind", Json::from("deploy.layer"))
+            .set("layer", Json::from(p.name.as_str()))
+            .set("format", Json::from(p.format.as_str()))
+            .set("nnz", Json::from(p.nnz))
+            .set("density", Json::from(p.density));
+        writeln!(f, "{}", j.to_string_compact())?;
+    }
+    let mut j = Json::obj();
+    j.set("kind", Json::from("train.final"))
+        .set("model", Json::from(result.model.as_str()))
+        .set("method", Json::from(result.method.as_str()))
+        .set("loss", Json::from(result.loss))
+        .set("accuracy", Json::from(result.accuracy))
+        .set("compression_rate", Json::from(result.compression_rate));
+    writeln!(f, "{}", j.to_string_compact())?;
+    f.flush()?;
+    Ok((result.history.records.len(), profiles.len()))
 }
 
 /// Codebook-quantize a trained checkpoint (Deep Compression stage):
@@ -653,7 +724,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let request_timeout = args.duration_or("request-timeout", Duration::from_secs(5))?;
     let memory_budget = args.usize_or("memory-budget", 0)?;
     let stats_out = args.get_str("stats-out");
+    let trace = args.get_str("trace");
     args.finish()?;
+
+    if let Some(path) = &trace {
+        proxcomp::telemetry::enable_trace(std::path::Path::new(path))?;
+        println!("[serve] tracing events to {path}");
+    }
 
     let ids: Vec<String> = match &models_arg {
         Some(list) => {
@@ -795,17 +872,30 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
     );
     let report = loadgen::run(&cfg)?;
     println!(
-        "  ok {} in {:.1}s -> saturation throughput {:.1} req/s ({} overloaded retries)",
-        report.ok, report.elapsed_secs, report.throughput_rps, report.retries
+        "  ok {} in {:.1}s -> saturation throughput {:.1} req/s ({} overloaded retries, \
+         {:.1}ms total backoff)",
+        report.ok,
+        report.elapsed_secs,
+        report.throughput_rps,
+        report.retries,
+        report.backoff_us as f64 / 1e3
     );
     for m in &report.per_model {
+        let errs = ErrorCode::all()
+            .iter()
+            .filter(|c| m.error_count(**c) > 0)
+            .map(|c| format!("{} {}", c.name(), m.error_count(*c)))
+            .collect::<Vec<_>>()
+            .join(", ");
         println!(
-            "  model {:<12} ok {} verified {} mismatches {} retries {}",
+            "  model {:<12} ok {} verified {} mismatches {} retries {} backoff {:.1}ms{}",
             m.model.as_deref().unwrap_or("(default)"),
             m.ok,
             m.verified,
             m.mismatches,
-            m.retries
+            m.retries,
+            m.backoff_us as f64 / 1e3,
+            if errs.is_empty() { String::new() } else { format!(" errors [{errs}]") }
         );
     }
     println!(
@@ -852,6 +942,47 @@ fn cmd_loadtest(args: &Args) -> Result<()> {
         report.mismatches,
         report.verified
     );
+    Ok(())
+}
+
+/// Scrape a live `proxcomp serve` through the METRICS opcode: the
+/// versioned JSON snapshot (serving roll-up + wire counters + per-model
+/// registry table + per-layer profiles) or Prometheus text exposition.
+/// `--stop-server` sends SHUTDOWN after the scrape — the CI pattern is
+/// loadtest (no stop) → stats --out snapshot.json --stop-server, so the
+/// scrape still sees the live counters.
+fn cmd_stats(args: &Args) -> Result<()> {
+    use proxcomp::inference::NetClient;
+    use std::time::Duration;
+    let addr = args.str_or("addr", "127.0.0.1:7733");
+    let format = args.str_or("format", "json");
+    let out = args.get_str("out");
+    let stop_server = args.flag("stop-server");
+    let connect_timeout = args.duration_or("connect-timeout", Duration::from_secs(5))?;
+    args.finish()?;
+
+    let mut client = NetClient::connect(&addr, connect_timeout)?;
+    let body = match format.as_str() {
+        "json" => client.metrics_json()?,
+        "prom" | "prometheus" => client.metrics_prometheus()?,
+        other => anyhow::bail!("--format must be json or prom, got {other:?}"),
+    };
+    match &out {
+        Some(path) => {
+            std::fs::write(path, &body).map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+            println!("[stats] wrote {path} ({} bytes, {format})", body.len());
+        }
+        None => {
+            print!("{body}");
+            if !body.ends_with('\n') {
+                println!();
+            }
+        }
+    }
+    if stop_server {
+        client.shutdown_server()?;
+        println!("[stats] sent SHUTDOWN; server is draining");
+    }
     Ok(())
 }
 
@@ -946,7 +1077,9 @@ SUBCOMMANDS
            quantization (--codebook-size 16, --finetune-steps 0,
            --finetune-lr 1e-4), QCS serving, and two extra gates —
            quantized accuracy within --quant-tolerance (0.05) of the
-           debiased model and a strictly smaller checkpoint than CSR
+           debiased model and a strictly smaller checkpoint than CSR.
+           --telemetry-out F writes the training telemetry JSONL
+           (default reports/pipeline_<model>_telemetry.jsonl)
   quantize codebook-quantize a trained checkpoint to format v2
            --checkpoint F [--out F] [--codebook-size 16]
            [--finetune-steps N --finetune-lr F] [--examples N]
@@ -961,7 +1094,9 @@ SUBCOMMANDS
            --addr 127.0.0.1:7733 --max-batch 8 --max-wait 2ms
            --max-conns 256 --max-inflight 512 --request-timeout 5s
            --memory-budget N (bytes; 0 = unlimited — lazy-loads engines
-           and LRU-evicts over budget) [--stats-out F]
+           and LRU-evicts over budget) [--stats-out F] [--trace F]
+           (--trace writes JSONL trace events; PROXCOMP_TRACE=path does
+           the same for any subcommand)
            runs until a client sends SHUTDOWN, then drains in-flight
            requests and reports per-model + aggregate serving stats
   loadtest closed-loop load generator against a live serve
@@ -972,9 +1107,13 @@ SUBCOMMANDS
            verify can rebuild the same engines; --no-verify skips it)
            --retries 8 (per-request overloaded retry budget with
            exponential backoff) [--out F] [--stop-server]
-           reports p50/p99 latency, saturation throughput, retries, and
-           per-model + per-error-code counts; exits nonzero on any bit
-           mismatch
+           reports p50/p99 latency, saturation throughput, retries,
+           total backoff time, and per-model + per-error-code counts;
+           exits nonzero on any bit mismatch
+  stats    scrape a live serve through the METRICS opcode
+           --addr 127.0.0.1:7733 --format json|prom [--out F]
+           [--stop-server] — JSON is the versioned snapshot (serving,
+           net, per-model, per-layer profiles); prom is Prometheus text
   bench-compare  CI perf gate: compare a bench_kernels JSON against the
            committed baseline (calibration-normalized per-group geomean)
            --baseline BENCH_BASELINE.json --current reports/bench_kernels.json

@@ -5,6 +5,7 @@ pub mod benchcmp;
 use std::io::Write;
 use std::path::{Path, PathBuf};
 
+use crate::telemetry::LayerProfile;
 use crate::util::json::Json;
 
 /// One recorded point on the training curve.
@@ -187,6 +188,32 @@ impl LatencyHistogram {
         }
     }
 
+    /// Bucket-layout descriptor: `(bucket count, geometric ratio)`. Two
+    /// histograms are mergeable iff their layouts match.
+    pub fn layout(&self) -> (usize, f64) {
+        (LATENCY_BUCKETS, LATENCY_RATIO)
+    }
+
+    /// [`merge`](Self::merge) guarded by a layout check: returns false
+    /// (and leaves `self` untouched) when the bucket layouts differ, so
+    /// fleet aggregation can fall back to its ceiling approximation
+    /// instead of adding apples to oranges. In-process both layouts are
+    /// the same compile-time constants, so this always merges today; the
+    /// guard exists for snapshots that cross a version boundary.
+    pub fn try_merge(&mut self, other: &LatencyHistogram) -> bool {
+        if self.layout() != other.layout() {
+            return false;
+        }
+        self.merge(other);
+        true
+    }
+
+    /// Raw per-bucket counts (the property tests compare these
+    /// bucketwise across interleavings and merge orders).
+    pub fn bucket_counts(&self) -> [u64; LATENCY_BUCKETS] {
+        self.counts
+    }
+
     pub fn count(&self) -> u64 {
         self.total
     }
@@ -242,6 +269,9 @@ pub struct ServingStats {
     pub p90_latency_us: f64,
     pub p99_latency_us: f64,
     pub max_latency_us: f64,
+    /// Per-layer kernel profiles from the serving engine (empty on the
+    /// fleet aggregate — layers are a per-model concept).
+    pub layers: Vec<LayerProfile>,
 }
 
 impl ServingStats {
@@ -258,6 +288,9 @@ impl ServingStats {
             .set("p90_latency_us", Json::from(self.p90_latency_us))
             .set("p99_latency_us", Json::from(self.p99_latency_us))
             .set("max_latency_us", Json::from(self.max_latency_us));
+        if !self.layers.is_empty() {
+            j.set("layers", Json::Arr(self.layers.iter().map(LayerProfile::to_json).collect()));
+        }
         j
     }
 }
@@ -353,6 +386,7 @@ mod tests {
             p90_latency_us: 200.0,
             p99_latency_us: 240.0,
             max_latency_us: 250.0,
+            layers: Vec::new(),
         };
         let text = s.to_json().to_string_compact();
         assert!(text.contains("\"requests\""));
@@ -419,5 +453,101 @@ mod tests {
         h.record(-3.0);
         assert_eq!(h.count(), 2);
         assert_eq!(h.percentile(0.5), 0.0); // clamped to observed max (0)
+    }
+
+    /// Deterministic latency stream `i` draws from — shared by the
+    /// concurrency property test's interleaved and sequential runs.
+    fn latency_stream(thread: u64, n: usize) -> Vec<f64> {
+        let mut state = thread.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(1);
+        (0..n)
+            .map(|_| {
+                // xorshift64*: cheap, deterministic, spreads across buckets.
+                state ^= state >> 12;
+                state ^= state << 25;
+                state ^= state >> 27;
+                let r = state.wrapping_mul(0x2545_F491_4F6C_DD1D);
+                1.0 + (r % 1_000_000) as f64 / 10.0 // 1 µs … 100 ms
+            })
+            .collect()
+    }
+
+    #[test]
+    fn concurrent_recording_matches_sequential_replay() {
+        // The serving path records under a mutex (StatsInner); the
+        // property: any interleaving of N threads' record() calls lands
+        // the same per-bucket totals as a sequential replay of the same
+        // observations — recording is order-independent.
+        const THREADS: u64 = 8;
+        const PER_THREAD: usize = 500;
+        let shared = std::sync::Mutex::new(LatencyHistogram::new());
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let shared = &shared;
+                s.spawn(move || {
+                    for us in latency_stream(t, PER_THREAD) {
+                        shared.lock().unwrap().record(us);
+                    }
+                });
+            }
+        });
+        let interleaved = shared.into_inner().unwrap();
+        let mut sequential = LatencyHistogram::new();
+        for t in 0..THREADS {
+            for us in latency_stream(t, PER_THREAD) {
+                sequential.record(us);
+            }
+        }
+        assert_eq!(interleaved.bucket_counts(), sequential.bucket_counts());
+        assert_eq!(interleaved.count(), sequential.count());
+        assert_eq!(interleaved.max_us(), sequential.max_us());
+        for p in [0.5, 0.9, 0.99] {
+            assert_eq!(interleaved.percentile(p), sequential.percentile(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_is_associative_and_commutative() {
+        let histo = |t: u64| {
+            let mut h = LatencyHistogram::new();
+            for us in latency_stream(t, 200) {
+                h.record(us);
+            }
+            h
+        };
+        let (a, b, c) = (histo(1), histo(2), histo(3));
+        // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left.bucket_counts(), right.bucket_counts());
+        assert_eq!(left.count(), right.count());
+        assert_eq!(left.max_us(), right.max_us());
+        assert!((left.mean_us() - right.mean_us()).abs() < 1e-9);
+        // a ⊕ b == b ⊕ a
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab.bucket_counts(), ba.bucket_counts());
+        assert_eq!(ab.count(), ba.count());
+        assert_eq!(ab.max_us(), ba.max_us());
+        for p in [0.5, 0.9, 0.99] {
+            assert_eq!(ab.percentile(p), ba.percentile(p), "p{p}");
+        }
+    }
+
+    #[test]
+    fn try_merge_checks_layout() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        b.record(10.0);
+        // Same compile-time layout: merge succeeds and folds counts.
+        assert!(a.try_merge(&b));
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.layout(), (LATENCY_BUCKETS, 1.35));
     }
 }

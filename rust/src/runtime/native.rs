@@ -1134,15 +1134,29 @@ impl NativeBackend {
     /// input literals; returns role-ordered host values, mirroring
     /// `PjRtLoadedExecutable::execute` + tuple unpacking.
     pub fn execute(&mut self, path: &Path, inputs: &[xla::Literal]) -> anyhow::Result<Vec<HostValue>> {
-        let (_model, step) = parse_path(path)?;
+        let (model, step) = parse_path(path)?;
         let kind = StepKind::parse(&step)?;
         self.steps_executed += 1;
         let threads = pool::max_threads();
-        match kind {
+        let t0 = std::time::Instant::now();
+        let result = match kind {
             StepKind::Eval => eval_step(inputs, threads),
             StepKind::Infer => infer_step(inputs, threads),
             _ => train_step(kind, inputs, threads),
+        };
+        if crate::telemetry::trace_enabled() {
+            crate::telemetry::event_label(
+                "native.step",
+                0,
+                &format!("{model}/{step}"),
+                &[
+                    ("us", t0.elapsed().as_secs_f64() * 1e6),
+                    ("ok", result.is_ok() as u8 as f64),
+                    ("n", self.steps_executed as f64),
+                ],
+            );
         }
+        result
     }
 }
 

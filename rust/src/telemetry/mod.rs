@@ -1,0 +1,519 @@
+//! End-to-end observability: structured event tracing and per-layer
+//! profiling types shared by training and serving.
+//!
+//! The paper's claim is quantitative — ℓ1 prox training drives
+//! per-layer sparsity that compressed kernels convert into speed — so
+//! the repo needs to *watch* that happen, not reconstruct it from bench
+//! JSON after the fact. This module provides the two substrates:
+//!
+//! * **Trace sink** — a process-global, lock-cheap event sink. Emitters
+//!   call [`event`]/[`event_label`]; when tracing is disabled (the
+//!   default) the only cost is one relaxed atomic load. When enabled
+//!   (`PROXCOMP_TRACE=path` or [`enable_trace`]), events buffer in a
+//!   fixed-capacity ring and flush to the path as JSONL — one object
+//!   per line with a monotonic `ts_us` timestamp and a `trace_id` that
+//!   follows a request admission→coalesce→forward→reply across the
+//!   serving stack (`net` assigns one id per frame and threads it
+//!   through `registry` and `server`).
+//!
+//! * **[`LayerProfile`]** — the per-layer measurement record the
+//!   ROADMAP's activation-sparsity item needs: kernel family chosen,
+//!   nnz/density of the stored weights, per-call wall time, and the
+//!   zero fraction of the layer's *output* activations (EIE's speedup
+//!   driver, PAPERS.md). `Engine::forward` accumulates these always —
+//!   the accumulation is a histogram-free running sum, cheap next to
+//!   the matmuls it measures — and `Engine::profile()` snapshots them.
+//!
+//! [`prometheus_text`] renders the METRICS wire snapshot (see
+//! `inference/net.rs`) as Prometheus exposition text so ordinary
+//! scrapers can ingest the same numbers.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock, PoisonError};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Environment knob: set to a file path to enable JSONL tracing
+/// process-wide (read by [`init_trace_from_env`], which `proxcomp`
+/// calls at startup).
+pub const TRACE_ENV: &str = "PROXCOMP_TRACE";
+
+/// Ring capacity: events buffered between flushes. Flushing is
+/// amortized — one file write per `RING_CAPACITY` events.
+const RING_CAPACITY: usize = 1024;
+
+/// Fixed per-event field slots (no per-event heap allocation for the
+/// numeric payload).
+pub const MAX_EVENT_FIELDS: usize = 4;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TRACE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// One buffered trace event. `label` is the only allocating field and
+/// is used sparingly (model ids, step names).
+#[derive(Clone)]
+struct Event {
+    ts_us: u64,
+    trace_id: u64,
+    kind: &'static str,
+    label: Option<String>,
+    fields: [(&'static str, f64); MAX_EVENT_FIELDS],
+    nfields: usize,
+}
+
+struct Sink {
+    ring: Vec<Event>,
+    out: BufWriter<File>,
+    path: PathBuf,
+    written: u64,
+    dropped: u64,
+}
+
+fn sink() -> &'static Mutex<Option<Sink>> {
+    static SINK: OnceLock<Mutex<Option<Sink>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(None))
+}
+
+fn lock_sink() -> MutexGuard<'static, Option<Sink>> {
+    sink().lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Monotonic microseconds since the process's first telemetry call —
+/// the `ts_us` every trace event carries.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// The disabled-path check: one relaxed atomic load. Emitters may use
+/// it to skip building labels/fields entirely.
+#[inline]
+pub fn trace_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// A fresh trace id (monotonic, process-global) when tracing is
+/// enabled; 0 when disabled, so untraced requests carry a sentinel
+/// instead of burning the counter.
+#[inline]
+pub fn next_trace_id() -> u64 {
+    if trace_enabled() {
+        NEXT_TRACE_ID.fetch_add(1, Ordering::Relaxed)
+    } else {
+        0
+    }
+}
+
+/// Read [`TRACE_ENV`] and enable tracing if it names a path. Errors
+/// (unwritable path) are reported, not fatal — observability must
+/// never take the service down.
+pub fn init_trace_from_env() {
+    if let Ok(path) = std::env::var(TRACE_ENV) {
+        if !path.is_empty() {
+            if let Err(e) = enable_trace(Path::new(&path)) {
+                eprintln!("warning: {TRACE_ENV}={path}: {e}");
+            }
+        }
+    }
+}
+
+/// Enable tracing to `path` (JSONL, truncated). Replaces and flushes
+/// any previously-installed sink.
+pub fn enable_trace(path: &Path) -> anyhow::Result<()> {
+    let file = File::create(path).map_err(|e| anyhow::anyhow!("creating trace file {}: {e}", path.display()))?;
+    let mut guard = lock_sink();
+    if let Some(old) = guard.as_mut() {
+        flush_locked(old);
+    }
+    *guard = Some(Sink {
+        ring: Vec::with_capacity(RING_CAPACITY),
+        out: BufWriter::new(file),
+        path: path.to_path_buf(),
+        written: 0,
+        dropped: 0,
+    });
+    ENABLED.store(true, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Flush and close the sink; subsequent [`event`] calls are no-ops
+/// again. Returns the number of events written over the sink's life.
+pub fn disable_trace() -> u64 {
+    ENABLED.store(false, Ordering::SeqCst);
+    let mut guard = lock_sink();
+    match guard.take() {
+        Some(mut s) => {
+            flush_locked(&mut s);
+            let _ = s.out.flush();
+            s.written
+        }
+        None => 0,
+    }
+}
+
+/// Force-flush buffered events to the trace file (tests and graceful
+/// shutdown; the ring otherwise flushes itself at capacity).
+pub fn flush_trace() {
+    if let Some(s) = lock_sink().as_mut() {
+        flush_locked(s);
+        let _ = s.out.flush();
+    }
+}
+
+/// The active trace path, if tracing is enabled.
+pub fn trace_path() -> Option<PathBuf> {
+    lock_sink().as_ref().map(|s| s.path.clone())
+}
+
+/// Emit a trace event. Near-free when tracing is disabled. Fields past
+/// [`MAX_EVENT_FIELDS`] are dropped (fixed slots, no allocation).
+#[inline]
+pub fn event(kind: &'static str, trace_id: u64, fields: &[(&'static str, f64)]) {
+    if !trace_enabled() {
+        return;
+    }
+    push_event(kind, trace_id, None, fields);
+}
+
+/// [`event`] with a string label (model id, step name). Allocates for
+/// the label, so callers on hot paths prefer plain [`event`].
+#[inline]
+pub fn event_label(kind: &'static str, trace_id: u64, label: &str, fields: &[(&'static str, f64)]) {
+    if !trace_enabled() {
+        return;
+    }
+    push_event(kind, trace_id, Some(label.to_string()), fields);
+}
+
+fn push_event(kind: &'static str, trace_id: u64, label: Option<String>, fields: &[(&'static str, f64)]) {
+    let ts_us = now_us();
+    let mut slots = [("", 0.0f64); MAX_EVENT_FIELDS];
+    let nfields = fields.len().min(MAX_EVENT_FIELDS);
+    slots[..nfields].copy_from_slice(&fields[..nfields]);
+    let mut guard = lock_sink();
+    let Some(s) = guard.as_mut() else {
+        return; // enabled flag raced a disable; drop silently
+    };
+    s.ring.push(Event { ts_us, trace_id, kind, label, fields: slots, nfields });
+    if s.ring.len() >= RING_CAPACITY {
+        flush_locked(s);
+    }
+}
+
+fn flush_locked(s: &mut Sink) {
+    for e in s.ring.drain(..) {
+        let mut j = Json::obj();
+        j.set("ts_us", Json::from(e.ts_us as usize)).set("kind", Json::from(e.kind));
+        if e.trace_id != 0 {
+            j.set("id", Json::from(e.trace_id as usize));
+        }
+        if let Some(label) = &e.label {
+            j.set("label", Json::from(label.as_str()));
+        }
+        for (k, v) in &e.fields[..e.nfields] {
+            j.set(k, Json::from(*v));
+        }
+        if writeln!(s.out, "{}", j.to_string_compact()).is_err() {
+            s.dropped += 1;
+        } else {
+            s.written += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-layer profiling
+// ---------------------------------------------------------------------------
+
+/// Running per-layer accumulator `Engine::forward` folds into on every
+/// call — sums only, so recording is O(1) beyond the one O(outputs)
+/// zero-count pass.
+#[derive(Debug, Default, Clone)]
+pub struct LayerProfileAccum {
+    /// Forward calls that executed this layer.
+    pub calls: u64,
+    /// Total wall time spent in this layer across those calls.
+    pub total_us: u64,
+    /// Zero output activations summed across calls.
+    pub out_zeros: u64,
+    /// Total output activations summed across calls.
+    pub out_elems: u64,
+}
+
+impl LayerProfileAccum {
+    pub fn record(&mut self, micros: u64, out_zeros: u64, out_elems: u64) {
+        self.calls += 1;
+        self.total_us += micros;
+        self.out_zeros += out_zeros;
+        self.out_elems += out_elems;
+    }
+}
+
+/// Snapshot of one layer's profile: the static facts (kernel family,
+/// stored nnz/density) joined with the runtime accumulator.
+#[derive(Debug, Clone)]
+pub struct LayerProfile {
+    /// Layer name as reported by per-layer timings (`fc1`, `conv2`, …).
+    pub name: String,
+    /// Kernel family serving the layer: `dense`, `CSR`, `QCS`, or a
+    /// dispatch-chosen sparse format name.
+    pub format: String,
+    /// Logical (rows, cols) of the layer's weight matrix view.
+    pub rows: usize,
+    pub cols: usize,
+    /// Stored nonzeros.
+    pub nnz: usize,
+    /// `nnz / (rows*cols)` — the weight density the prox training drove.
+    pub density: f64,
+    pub calls: u64,
+    pub total_us: u64,
+    /// `total_us / calls` (0 before the first call).
+    pub mean_us: f64,
+    /// Fraction of this layer's output activations that were exactly
+    /// zero — the activation-sparsity signal EIE exploits.
+    pub out_zero_fraction: f64,
+}
+
+impl LayerProfile {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("layer", Json::from(self.name.as_str()))
+            .set("format", Json::from(self.format.as_str()))
+            .set("rows", Json::from(self.rows))
+            .set("cols", Json::from(self.cols))
+            .set("nnz", Json::from(self.nnz))
+            .set("density", Json::from(self.density))
+            .set("calls", Json::from(self.calls as usize))
+            .set("total_us", Json::from(self.total_us as usize))
+            .set("mean_us", Json::from(self.mean_us))
+            .set("out_zero_fraction", Json::from(self.out_zero_fraction));
+        j
+    }
+}
+
+/// Count exactly-zero values — the output-activation sparsity probe.
+pub fn zero_count(data: &[f32]) -> u64 {
+    data.iter().filter(|v| **v == 0.0).count() as u64
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus exposition rendering
+// ---------------------------------------------------------------------------
+
+fn prom_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+fn prom_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render the METRICS JSON snapshot (`inference/net.rs`) as
+/// Prometheus exposition text. Tolerant of absent keys: each section
+/// renders from whatever the snapshot carries.
+pub fn prometheus_text(snapshot: &Json) -> String {
+    let mut out = String::new();
+    let num = |j: &Json, key: &str| j.get(key).and_then(Json::as_f64);
+
+    if let Some(serving) = snapshot.get("serving") {
+        out.push_str("# TYPE proxcomp_fleet_requests_total counter\n");
+        if let Some(v) = num(serving, "requests") {
+            out.push_str(&format!("proxcomp_fleet_requests_total {}\n", prom_num(v)));
+        }
+        out.push_str("# TYPE proxcomp_fleet_latency_us gauge\n");
+        for (q, key) in [("0.5", "p50_latency_us"), ("0.9", "p90_latency_us"), ("0.99", "p99_latency_us")] {
+            if let Some(v) = num(serving, key) {
+                out.push_str(&format!("proxcomp_fleet_latency_us{{quantile=\"{q}\"}} {}\n", prom_num(v)));
+            }
+        }
+        if let Some(v) = num(serving, "throughput_rps") {
+            out.push_str("# TYPE proxcomp_fleet_throughput_rps gauge\n");
+            out.push_str(&format!("proxcomp_fleet_throughput_rps {}\n", prom_num(v)));
+        }
+    }
+    if let Some(net) = snapshot.get("net").and_then(Json::as_obj) {
+        out.push_str("# TYPE proxcomp_net_responses_total counter\n");
+        for (k, v) in net {
+            if let Some(v) = v.as_f64() {
+                out.push_str(&format!("proxcomp_net_responses_total{{kind=\"{}\"}} {}\n", prom_escape(k), prom_num(v)));
+            }
+        }
+    }
+    if let Some(models) = snapshot.get("models").and_then(Json::as_obj) {
+        out.push_str("# TYPE proxcomp_model_requests_total counter\n");
+        out.push_str("# TYPE proxcomp_model_loads_total counter\n");
+        out.push_str("# TYPE proxcomp_model_evictions_total counter\n");
+        out.push_str("# TYPE proxcomp_model_bytes gauge\n");
+        for (id, row) in models {
+            let id = prom_escape(id);
+            for (metric, key) in [
+                ("proxcomp_model_requests_total", "requests_total"),
+                ("proxcomp_model_loads_total", "loads"),
+                ("proxcomp_model_evictions_total", "evictions"),
+                ("proxcomp_model_bytes", "bytes"),
+            ] {
+                if let Some(v) = row.get(key).and_then(Json::as_f64) {
+                    out.push_str(&format!("{metric}{{model=\"{id}\"}} {}\n", prom_num(v)));
+                }
+            }
+        }
+    }
+    if let Some(profiles) = snapshot.get("profiles").and_then(Json::as_obj) {
+        out.push_str("# TYPE proxcomp_layer_nnz gauge\n");
+        out.push_str("# TYPE proxcomp_layer_density gauge\n");
+        out.push_str("# TYPE proxcomp_layer_calls_total counter\n");
+        out.push_str("# TYPE proxcomp_layer_mean_us gauge\n");
+        out.push_str("# TYPE proxcomp_layer_out_zero_fraction gauge\n");
+        for (id, layers) in profiles {
+            let id = prom_escape(id);
+            let Some(layers) = layers.as_arr() else { continue };
+            for layer in layers {
+                let Some(name) = layer.get("layer").and_then(Json::as_str) else { continue };
+                let labels = format!("{{model=\"{id}\",layer=\"{}\"}}", prom_escape(name));
+                for (metric, key) in [
+                    ("proxcomp_layer_nnz", "nnz"),
+                    ("proxcomp_layer_density", "density"),
+                    ("proxcomp_layer_calls_total", "calls"),
+                    ("proxcomp_layer_mean_us", "mean_us"),
+                    ("proxcomp_layer_out_zero_fraction", "out_zero_fraction"),
+                ] {
+                    if let Some(v) = layer.get(key).and_then(Json::as_f64) {
+                        out.push_str(&format!("{metric}{labels} {}\n", prom_num(v)));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The sink is process-global, so every test that enables tracing
+    // serializes on this lock and disables before releasing it.
+    fn trace_test_lock() -> &'static Mutex<()> {
+        static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+        LOCK.get_or_init(|| Mutex::new(()))
+    }
+
+    fn unique_path(label: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("proxcomp_trace_{label}_{}.jsonl", std::process::id()))
+    }
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let _guard = trace_test_lock().lock().unwrap_or_else(PoisonError::into_inner);
+        assert!(!trace_enabled());
+        assert_eq!(next_trace_id(), 0);
+        // No sink: events vanish without error.
+        event("test.noop", 0, &[("x", 1.0)]);
+        flush_trace();
+    }
+
+    #[test]
+    fn events_round_trip_as_jsonl() {
+        let _guard = trace_test_lock().lock().unwrap_or_else(PoisonError::into_inner);
+        let path = unique_path("roundtrip");
+        enable_trace(&path).unwrap();
+        assert!(trace_enabled());
+        let id = next_trace_id();
+        assert!(id > 0);
+        event("test.plain", id, &[("batch", 4.0), ("us", 125.5)]);
+        event_label("test.labeled", id, "mlp-s", &[]);
+        // One field past the fixed slots is dropped, not an error.
+        event("test.overflow", id, &[("a", 1.0), ("b", 2.0), ("c", 3.0), ("d", 4.0), ("e", 5.0)]);
+        let written = disable_trace();
+        assert!(!trace_enabled());
+        assert_eq!(written, 3);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let first = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("kind").and_then(Json::as_str), Some("test.plain"));
+        assert_eq!(first.get("id").and_then(Json::as_f64), Some(id as f64));
+        assert_eq!(first.get("batch").and_then(Json::as_f64), Some(4.0));
+        let second = crate::util::json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("label").and_then(Json::as_str), Some("mlp-s"));
+        let third = crate::util::json::parse(lines[2]).unwrap();
+        assert!(third.get("d").is_some());
+        assert!(third.get("e").is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn trace_ids_are_monotonic_while_enabled() {
+        let _guard = trace_test_lock().lock().unwrap_or_else(PoisonError::into_inner);
+        let path = unique_path("ids");
+        enable_trace(&path).unwrap();
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert!(b > a);
+        disable_trace();
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn layer_profile_accum_and_json() {
+        let mut acc = LayerProfileAccum::default();
+        acc.record(100, 30, 100);
+        acc.record(200, 50, 100);
+        assert_eq!((acc.calls, acc.total_us, acc.out_zeros, acc.out_elems), (2, 300, 80, 200));
+        let p = LayerProfile {
+            name: "fc1".to_string(),
+            format: "CSR".to_string(),
+            rows: 10,
+            cols: 20,
+            nnz: 40,
+            density: 0.2,
+            calls: acc.calls,
+            total_us: acc.total_us,
+            mean_us: acc.total_us as f64 / acc.calls as f64,
+            out_zero_fraction: acc.out_zeros as f64 / acc.out_elems as f64,
+        };
+        let j = p.to_json();
+        assert_eq!(j.get("layer").and_then(Json::as_str), Some("fc1"));
+        assert_eq!(j.get("nnz").and_then(Json::as_f64), Some(40.0));
+        assert_eq!(j.get("out_zero_fraction").and_then(Json::as_f64), Some(0.4));
+    }
+
+    #[test]
+    fn zero_count_counts_exact_zeros() {
+        assert_eq!(zero_count(&[0.0, 1.0, -0.0, 2.0, 0.0]), 3);
+        assert_eq!(zero_count(&[]), 0);
+    }
+
+    #[test]
+    fn prometheus_rendering_from_snapshot() {
+        let text = r#"{
+            "version": 1,
+            "serving": {"requests": 12, "p50_latency_us": 100.0, "p90_latency_us": 200.0,
+                        "p99_latency_us": 300.0, "throughput_rps": 50.5},
+            "net": {"ok_responses": 12, "overloaded": 3},
+            "models": {"mlp-s": {"requests_total": 12, "loads": 1, "evictions": 0, "bytes": 4096}},
+            "profiles": {"mlp-s": [{"layer": "fc1", "format": "CSR", "nnz": 40, "density": 0.2,
+                                     "calls": 12, "mean_us": 80.0, "out_zero_fraction": 0.4}]}
+        }"#;
+        let snap = crate::util::json::parse(text).unwrap();
+        let prom = prometheus_text(&snap);
+        assert!(prom.contains("proxcomp_fleet_requests_total 12\n"), "{prom}");
+        assert!(prom.contains("proxcomp_fleet_latency_us{quantile=\"0.99\"} 300\n"), "{prom}");
+        assert!(prom.contains("proxcomp_net_responses_total{kind=\"overloaded\"} 3\n"), "{prom}");
+        assert!(prom.contains("proxcomp_model_requests_total{model=\"mlp-s\"} 12\n"), "{prom}");
+        assert!(prom.contains("proxcomp_layer_density{model=\"mlp-s\",layer=\"fc1\"} 0.2\n"), "{prom}");
+        assert!(prom.contains("proxcomp_layer_out_zero_fraction{model=\"mlp-s\",layer=\"fc1\"} 0.4\n"), "{prom}");
+    }
+}

@@ -1,0 +1,220 @@
+//! Integration tests for the METRICS export surface (wire opcode 6):
+//! the versioned JSON snapshot must agree with what the load generator
+//! observed from the outside (per-model `requests_total` == completed +
+//! engine-error + deadline-exceeded admissions), the per-layer profiles
+//! it carries must match the served engine's weight storage (nnz /
+//! density straight from the pruned checkpoint), and the Prometheus
+//! rendering must expose the same series.
+//!
+//! Every server binds `127.0.0.1:0` (ephemeral port), so the tests run
+//! concurrently without colliding.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use proxcomp::inference::loadgen::{self, LoadConfig, LoadTarget};
+use proxcomp::inference::{
+    BatchConfig, Engine, EngineFactory, ErrorCode, ModelRegistry, ModelSpec, NetClient,
+    NetConfig, NetServer, RegistryConfig, WeightMode,
+};
+use proxcomp::runtime::{Manifest, ParamBundle};
+use proxcomp::sparse::prox;
+use proxcomp::util::json::{self, Json};
+use proxcomp::util::rng::Rng;
+
+const SEED: u64 = 33;
+const PRUNE: f32 = 0.05;
+
+/// Deterministic synthetic engine (He-init at the manifest shapes,
+/// soft-threshold prune, CSR deploy) plus the pruned bundle it was
+/// built from — the ground truth for the profile-sparsity check.
+fn synthetic_engine(model: &str) -> (Arc<Engine>, ParamBundle, (usize, usize, usize)) {
+    let manifest = Manifest::native();
+    let entry = manifest.model(model).unwrap();
+    let shape = (entry.input_shape[0], entry.input_shape[1], entry.input_shape[2]);
+    let mut bundle = ParamBundle::he_init(&entry.params, SEED);
+    for (s, v) in bundle.specs.iter().zip(bundle.values.iter_mut()) {
+        if s.prunable {
+            prox::soft_threshold_inplace(v, PRUNE);
+        }
+    }
+    let engine =
+        Arc::new(Engine::builder(model).bundle(&bundle).mode(WeightMode::Csr).build().unwrap());
+    (engine, bundle, shape)
+}
+
+fn factory(model: &'static str) -> EngineFactory {
+    Arc::new(move || Ok(synthetic_engine(model).0))
+}
+
+fn fleet_registry(models: &[&'static str], max_batch: usize) -> Arc<ModelRegistry> {
+    let reg = ModelRegistry::new(RegistryConfig {
+        memory_budget_bytes: 0,
+        default_model: Some(models[0].to_string()),
+    });
+    let manifest = Manifest::native();
+    for m in models {
+        let entry = manifest.model(m).unwrap();
+        let shape = (entry.input_shape[0], entry.input_shape[1], entry.input_shape[2]);
+        reg.add_model(ModelSpec::new(
+            m,
+            factory(m),
+            BatchConfig::new(max_batch, Duration::from_millis(1), shape),
+        ))
+        .unwrap();
+    }
+    Arc::new(reg)
+}
+
+fn ephemeral() -> NetConfig {
+    NetConfig { addr: "127.0.0.1:0".to_string(), ..NetConfig::default() }
+}
+
+fn connect(server: &NetServer) -> NetClient {
+    NetClient::connect(&server.local_addr().to_string(), Duration::from_secs(5)).unwrap()
+}
+
+fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or_else(|| panic!("missing {key}")) as u64
+}
+
+/// Drive a two-model fleet with the load generator, then scrape METRICS
+/// and check the server's books against the client's: for every model,
+/// `requests_total` (admissions into the batch pool, across evictions)
+/// must equal the loadgen-observed completions plus the two error codes
+/// that are only raised *after* admission.
+#[test]
+fn metrics_counters_match_loadgen_report() {
+    const MODELS: [&str; 2] = ["mlp-s", "lenet-s"];
+    let registry = fleet_registry(&MODELS, 8);
+    let mut server = NetServer::start_registry(Arc::clone(&registry), ephemeral()).unwrap();
+    let targets: Vec<LoadTarget> = MODELS
+        .iter()
+        .map(|m| {
+            let (twin, _, shape) = synthetic_engine(m);
+            LoadTarget::new(Some(m), shape, Some(twin))
+        })
+        .collect();
+    let cfg = LoadConfig {
+        addr: server.local_addr().to_string(),
+        clients: 6,
+        duration: Duration::from_millis(400),
+        targets,
+        seed: 11,
+        connect_timeout: Duration::from_secs(5),
+        retry_budget: 8,
+        retry_base: Duration::from_micros(200),
+        fetch_server_stats: false,
+    };
+    let report = loadgen::run(&cfg).unwrap();
+    assert!(report.ok > 0, "closed loop completed no requests");
+    assert_eq!(report.mismatches, 0, "wire responses diverged from local forward");
+
+    let mut client = connect(&server);
+    let metrics = json::parse(&client.metrics_json().unwrap()).unwrap();
+    assert_eq!(metrics.get("version").and_then(|v| v.as_f64()), Some(1.0));
+    let models = metrics.get("models").expect("models table");
+    let mut total_admitted = 0u64;
+    for (mi, model) in MODELS.iter().enumerate() {
+        let row = models.get(model).unwrap_or_else(|| panic!("no models row for {model}"));
+        let admitted = get_u64(row, "requests_total");
+        total_admitted += admitted;
+        let m = &report.per_model[mi];
+        assert_eq!(m.model.as_deref(), Some(*model));
+        let expected = m.ok
+            + m.error_count(ErrorCode::EngineError)
+            + m.error_count(ErrorCode::DeadlineExceeded);
+        assert_eq!(
+            admitted, expected,
+            "{model}: server admitted {admitted}, loadgen observed {expected}"
+        );
+    }
+    // The fleet roll-up counts the same admissions.
+    let serving = metrics.get("serving").expect("serving roll-up");
+    assert_eq!(get_u64(serving, "requests"), total_admitted);
+    // Satellite: merged-histogram fleet percentiles are ordered and real.
+    let p50 = serving.get("p50_latency_us").and_then(|v| v.as_f64()).unwrap();
+    let p99 = serving.get("p99_latency_us").and_then(|v| v.as_f64()).unwrap();
+    let max = serving.get("max_latency_us").and_then(|v| v.as_f64()).unwrap();
+    assert!(p50 > 0.0 && p50 <= p99 && p99 <= max, "p50={p50} p99={p99} max={max}");
+    // The loadgen report JSON carries the new per-model breakdowns.
+    let rj = report.to_json();
+    assert!(rj.get("backoff_us").is_some());
+    let first = rj.get("per_model").and_then(|v| v.as_arr()).unwrap().first().unwrap();
+    assert!(first.get("errors").and_then(|e| e.get(ErrorCode::Overloaded.name())).is_some());
+    assert!(first.get("backoff_us").is_some());
+
+    // The Prometheus rendering exposes the same series.
+    let text = client.metrics_prometheus().unwrap();
+    assert!(text.contains("proxcomp_fleet_requests_total"), "{text}");
+    for model in MODELS {
+        assert!(
+            text.contains(&format!("proxcomp_model_requests_total{{model=\"{model}\"}}")),
+            "no per-model series for {model}:\n{text}"
+        );
+    }
+    assert!(text.contains("proxcomp_layer_nnz{"), "no per-layer series:\n{text}");
+    server.shutdown();
+}
+
+/// The per-layer profiles in the METRICS snapshot must mirror the served
+/// engine's storage exactly — and the weight rows' nnz must add up to
+/// the nonzeros of the pruned checkpoint bundle the engine was built
+/// from (profiles reflect checkpoint sparsity, not a re-measurement).
+#[test]
+fn metrics_profiles_match_checkpoint_sparsity() {
+    let (engine, bundle, shape) = synthetic_engine("mlp-s");
+    let batch = BatchConfig::new(4, Duration::from_millis(1), shape);
+    let mut server = NetServer::start(Arc::clone(&engine), batch, ephemeral()).unwrap();
+    let mut client = connect(&server);
+    let n = shape.0 * shape.1 * shape.2;
+    let mut rng = Rng::new(5);
+    for _ in 0..4 {
+        client.infer(&rng.normal_vec(n, 1.0)).unwrap().unwrap();
+    }
+    let metrics = json::parse(&client.metrics_json().unwrap()).unwrap();
+    let rows = metrics
+        .get("profiles")
+        .and_then(|p| p.get("mlp-s"))
+        .and_then(|p| p.as_arr())
+        .expect("profiles.mlp-s");
+    let local = engine.profile();
+    assert_eq!(rows.len(), local.len(), "wire profile dropped layers");
+    let mut wire_nnz = 0u64;
+    for (row, want) in rows.iter().zip(&local) {
+        assert_eq!(row.get("layer").and_then(|v| v.as_str()), Some(want.name.as_str()));
+        assert_eq!(row.get("format").and_then(|v| v.as_str()), Some(want.format.as_str()));
+        assert_eq!(get_u64(row, "rows"), want.rows as u64);
+        assert_eq!(get_u64(row, "cols"), want.cols as u64);
+        assert_eq!(get_u64(row, "nnz"), want.nnz as u64);
+        let density = row.get("density").and_then(|v| v.as_f64()).unwrap();
+        assert!((density - want.density).abs() < 1e-9);
+        if want.rows * want.cols > 0 {
+            wire_nnz += want.nnz as u64;
+            assert!(
+                (density - want.nnz as f64 / (want.rows * want.cols) as f64).abs() < 1e-9,
+                "{}: density {} inconsistent with nnz {}",
+                want.name,
+                density,
+                want.nnz
+            );
+            assert!(density < 1.0, "{}: pruned layer reported dense", want.name);
+        }
+        // Traffic flowed, so weight layers must show calls and timing.
+        if want.format != "op" {
+            assert!(get_u64(row, "calls") > 0, "{}: no forward calls recorded", want.name);
+            assert!(row.get("mean_us").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+        }
+    }
+    // Checkpoint ground truth: the engine stores exactly the pruned
+    // bundle's surviving weights.
+    let checkpoint_nnz: u64 = bundle
+        .specs
+        .iter()
+        .zip(&bundle.values)
+        .filter(|(s, _)| s.prunable)
+        .map(|(_, v)| v.iter().filter(|x| **x != 0.0).count() as u64)
+        .sum();
+    assert_eq!(wire_nnz, checkpoint_nnz, "profile nnz diverged from checkpoint sparsity");
+    server.shutdown();
+}
